@@ -1,0 +1,33 @@
+//! Bench: the aggregation phase (sparse Â·X) — the memory-bound half of
+//! GNN inference (§Perf L3 target).
+
+use a2q::graph::generate::preferential_attachment;
+use a2q::graph::norm::EdgeForm;
+use a2q::util::bench::{black_box, BenchRunner};
+use a2q::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(5);
+    let mut runner = BenchRunner::default();
+
+    for (n, f) in [(2708usize, 64usize), (12000, 64), (12000, 128)] {
+        let csr = preferential_attachment(&mut rng, n, 3);
+        let ef = EdgeForm::from_csr(&csr);
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal() as f32).collect();
+        runner.bench(&format!("aggregate/gcn_norm/n={n}/f={f}"), || {
+            black_box(ef.aggregate(&x, f, &ef.gcn_w));
+        });
+        let edges_per_sec = (ef.num_edges() * f) as f64;
+        runner.report_metric(
+            &format!("aggregate/workload/n={n}/f={f}"),
+            edges_per_sec / 1e6,
+            "M edge-floats per pass",
+        );
+    }
+
+    // edge-form construction (serving-path batch prep)
+    let csr = preferential_attachment(&mut rng, 12000, 3);
+    runner.bench("aggregate/edge_form_build/n=12000", || {
+        black_box(EdgeForm::from_csr(&csr));
+    });
+}

@@ -1,0 +1,69 @@
+//! Bench: coordinator pipeline throughput/latency with a mock executor —
+//! isolates router + batcher + worker overhead from model compute
+//! (§Perf L3: "L3 should not be the bottleneck").
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use a2q::coordinator::request::Payload;
+use a2q::coordinator::{BatcherConfig, Coordinator, MockExecutor};
+use a2q::util::bench::BenchRunner;
+
+fn main() {
+    let mut runner = BenchRunner::default();
+
+    for (label, exec_latency) in [("zero-cost-exec", 0u64), ("200us-exec", 200)] {
+        let mut coord = Coordinator::new();
+        coord.add_model(
+            "m",
+            Arc::new(MockExecutor {
+                out_dim: 8,
+                latency: Duration::from_micros(exec_latency),
+            }),
+            BatcherConfig {
+                node_budget: 4096,
+                graph_slots: 64,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 4096,
+            },
+        );
+        let coord = Arc::new(coord);
+
+        // closed-loop single client: per-request pipeline latency
+        runner.bench(&format!("coordinator/{label}/closed_loop"), || {
+            let _ = coord
+                .submit_blocking("m", Payload::ClassifyNodes(vec![1, 2, 3]))
+                .unwrap();
+        });
+
+        // open-loop burst from 4 clients: throughput under batching
+        let c2 = Arc::clone(&coord);
+        runner.bench(&format!("coordinator/{label}/burst_4x32"), || {
+            let mut joins = Vec::new();
+            for t in 0..4 {
+                let c = Arc::clone(&c2);
+                joins.push(std::thread::spawn(move || {
+                    let mut rxs = Vec::new();
+                    for i in 0..32u32 {
+                        rxs.push(
+                            c.submit("m", Payload::ClassifyNodes(vec![t * 32 + i]))
+                                .unwrap(),
+                        );
+                    }
+                    for rx in rxs {
+                        let _ = rx.recv().unwrap();
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+        let snap = coord.metrics();
+        runner.report_metric(
+            &format!("coordinator/{label}/mean_batch_size"),
+            snap.mean_batch_size,
+            "requests per execution",
+        );
+    }
+}

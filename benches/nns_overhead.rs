@@ -1,0 +1,79 @@
+//! Bench: Nearest-Neighbor-Strategy overhead (§5.4 / Table 6).
+//!
+//! The paper claims NNS adds ~0.95% latency.  Measures the rust runtime
+//! lookup (binary search over sorted q_max) against the full quantize cost,
+//! the binary-vs-linear-scan crossover over m, and the simulated cycle
+//! overhead.
+
+use a2q::accel::{simulate_model_cycles, AccelConfig, ModelWorkload, Simulator};
+use a2q::graph::generate::preferential_attachment;
+use a2q::quant::nns::NnsTable;
+use a2q::quant::uniform::fake_quantize_row;
+use a2q::util::bench::{black_box, BenchRunner};
+use a2q::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let mut runner = BenchRunner::default();
+
+    let f = 64usize;
+    let n = 1024usize;
+    let x: Vec<f32> = (0..n * f).map(|_| rng.normal() as f32).collect();
+
+    for m in [100usize, 400, 1000, 1500] {
+        let steps: Vec<f32> = (0..m).map(|_| rng.uniform(0.005, 0.4) as f32).collect();
+        let bits: Vec<u8> = (0..m).map(|_| rng.range(2, 9) as u8).collect();
+        let table = NnsTable::new(&steps, &bits, true);
+        runner.bench(&format!("nns/select_rows/m={m}"), || {
+            black_box(table.select_rows(&x, f));
+        });
+        runner.bench(&format!("nns/linear_scan/m={m}"), || {
+            for row in x.chunks_exact(f).take(64) {
+                let fmax = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                black_box(table.select_linear(fmax));
+            }
+        });
+    }
+
+    // NNS select+quantize vs plain quantize — the end-to-end overhead
+    let steps: Vec<f32> = (0..1000).map(|_| rng.uniform(0.005, 0.4) as f32).collect();
+    let bits: Vec<u8> = (0..1000).map(|_| rng.range(2, 9) as u8).collect();
+    let table = NnsTable::new(&steps, &bits, true);
+    let mut buf = x.clone();
+    runner.bench("nns/quantize_with_select", || {
+        buf.copy_from_slice(&x);
+        for row in buf.chunks_exact_mut(f) {
+            let fmax = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+            let (_, s, b) = table.select(fmax);
+            fake_quantize_row(row, s, b, true);
+        }
+        black_box(&buf);
+    });
+    runner.bench("nns/quantize_fixed_params", || {
+        buf.copy_from_slice(&x);
+        for row in buf.chunks_exact_mut(f) {
+            fake_quantize_row(row, 0.05, 4, true);
+        }
+        black_box(&buf);
+    });
+
+    // simulated cycle overhead (the paper's 0.95% claim)
+    let csr = preferential_attachment(&mut rng, 3000, 2);
+    let dims = vec![(64usize, 64usize); 4];
+    let wl_base = ModelWorkload {
+        matmuls: dims.clone(),
+        bits: vec![vec![4u8; 3000]; 4],
+        agg_dims: vec![64; 4],
+        nns_m: 0,
+    };
+    let mut wl_nns = wl_base.clone();
+    wl_nns.nns_m = 1000;
+    let sim = Simulator::new(AccelConfig::default());
+    let base = simulate_model_cycles(&sim, &csr, &wl_base).total_cycles();
+    let with = simulate_model_cycles(&sim, &csr, &wl_nns).total_cycles();
+    runner.report_metric(
+        "nns/simulated_cycle_overhead",
+        100.0 * (with as f64 / base as f64 - 1.0),
+        "% (paper: 0.95%)",
+    );
+}

@@ -1,0 +1,65 @@
+//! Bench: L3 quantization hot paths — per-node fake-quant, code extraction,
+//! bit packing, and the integer vs f32 matmul kernels (§Perf).
+
+use a2q::quant::mixed::NodeQuantParams;
+use a2q::quant::pack::pack_rows;
+use a2q::tensor::{matmul, matmul_i32, ops::rescale_outer, Matrix};
+use a2q::util::bench::{black_box, BenchRunner};
+use a2q::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(11);
+    let mut runner = BenchRunner::default();
+
+    // cora-shaped feature map: 2708 x 64 hidden
+    let n = 2708usize;
+    let f = 64usize;
+    let x: Vec<f32> = (0..n * f).map(|_| rng.normal() as f32).collect();
+    let steps: Vec<f32> = (0..n).map(|_| rng.uniform(0.01, 0.2) as f32).collect();
+    let bits: Vec<u8> = (0..n).map(|_| rng.range(1, 9) as u8).collect();
+    let params = NodeQuantParams::new(steps.clone(), bits.clone(), true).unwrap();
+
+    let mut buf = x.clone();
+    runner.bench("quant/fake_quantize_2708x64", || {
+        buf.copy_from_slice(&x);
+        params.fake_quantize(&mut buf, f);
+        black_box(&buf);
+    });
+
+    runner.bench("quant/codes_2708x64", || {
+        black_box(params.quantize_codes(&x, f));
+    });
+
+    let (codes, _) = params.quantize_codes(&x, f);
+    runner.bench("quant/pack_rows_2708x64", || {
+        black_box(pack_rows(&codes, &steps, &bits, f, true));
+    });
+
+    // update-phase matmul shapes (cora layer 1: 2708x16 @ 16x7 is tiny;
+    // use the arxiv-ish 2048x128 @ 128x64 shape for a meaningful number)
+    let (m, k, nn) = (2048usize, 128usize, 64usize);
+    let a_f = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.normal() as f32).collect()).unwrap();
+    let b_f = Matrix::from_vec(k, nn, (0..k * nn).map(|_| rng.normal() as f32).collect()).unwrap();
+    runner.bench("matmul/f32_2048x128x64", || {
+        black_box(matmul(&a_f, &b_f));
+    });
+
+    let a_i = Matrix::from_vec(
+        m,
+        k,
+        (0..m * k).map(|_| rng.range(0, 15) as i32 - 7).collect(),
+    )
+    .unwrap();
+    let b_i = Matrix::from_vec(
+        k,
+        nn,
+        (0..k * nn).map(|_| rng.range(0, 15) as i32 - 7).collect(),
+    )
+    .unwrap();
+    let sx: Vec<f32> = (0..m).map(|_| 0.05f32).collect();
+    let sw: Vec<f32> = (0..nn).map(|_| 0.05f32).collect();
+    runner.bench("matmul/i32_2048x128x64_with_rescale", || {
+        let acc = matmul_i32(&a_i, &b_i);
+        black_box(rescale_outer(&acc, &sx, &sw));
+    });
+}

@@ -1,0 +1,54 @@
+//! Bench: regenerates the Table 1 speedup column (cycle-accurate simulation
+//! of A²Q vs DQ-INT4 on the node-level datasets) and times the simulator.
+
+use a2q::accel::{compare::speedup_vs_dq, AccelConfig, ModelWorkload, Simulator};
+use a2q::harness::tables::representative_csr;
+use a2q::harness::ResultsStore;
+use a2q::quant::mixed::BitsFile;
+use a2q::util::bench::{black_box, BenchRunner};
+
+fn main() {
+    let artifacts = a2q::artifacts_dir();
+    let store = ResultsStore::load(&artifacts).unwrap_or_default();
+    let mut runner = BenchRunner::default();
+    let sim = Simulator::new(AccelConfig::default());
+
+    let rows = [
+        ("gcn", "synth-cora", 7usize),
+        ("gat", "synth-cora", 7),
+        ("gcn", "synth-citeseer", 6),
+        ("gin", "synth-citeseer", 6),
+        ("gat", "synth-pubmed", 3),
+        ("gcn", "synth-arxiv", 23),
+    ];
+    for (arch, dataset, out_dim) in rows {
+        let entries = store.find(dataset, arch, "a2q");
+        let Some(entry) = entries.iter().find(|e| e.bits_path().exists()) else {
+            eprintln!("{arch}-{dataset}: no bits.bin yet (run `make experiments`)");
+            continue;
+        };
+        let Ok(bf) = BitsFile::load(&entry.bits_path()) else {
+            continue;
+        };
+        let Ok(csr) = representative_csr(&artifacts, dataset) else {
+            continue;
+        };
+        let n_maps = bf.maps.len();
+        let matmuls: Vec<(usize, usize)> = bf
+            .maps
+            .iter()
+            .enumerate()
+            .map(|(i, (_b, dim))| (*dim, if i + 1 == n_maps { out_dim } else { 64 }))
+            .collect();
+        let workload = ModelWorkload::from_bits_file(&bf, matmuls, 0);
+        let speedup = speedup_vs_dq(&sim, &csr, &workload);
+        runner.report_metric(
+            &format!("table1/{arch}-{dataset}/speedup_vs_dq"),
+            speedup,
+            "x (paper: 1.28x-2.00x)",
+        );
+        runner.bench(&format!("table1/{arch}-{dataset}/simulate"), || {
+            black_box(speedup_vs_dq(&sim, &csr, &workload));
+        });
+    }
+}

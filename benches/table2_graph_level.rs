@@ -1,0 +1,64 @@
+//! Bench: Table 2 speedup column (graph-level tasks, NNS) + batch-packing
+//! throughput of the serving path.
+
+use a2q::accel::{compare::speedup_vs_dq, AccelConfig, ModelWorkload, Simulator};
+use a2q::graph::batch::GraphBatch;
+use a2q::graph::io::{load_named, Dataset};
+use a2q::harness::tables::representative_csr;
+use a2q::harness::ResultsStore;
+use a2q::quant::mixed::BitsFile;
+use a2q::util::bench::{black_box, BenchRunner};
+
+fn main() {
+    let artifacts = a2q::artifacts_dir();
+    let store = ResultsStore::load(&artifacts).unwrap_or_default();
+    let mut runner = BenchRunner::default();
+    let sim = Simulator::new(AccelConfig::default());
+
+    let rows = [
+        ("gcn", "synth-mnist", 10usize),
+        ("gin", "synth-mnist", 10),
+        ("gcn", "synth-cifar10", 10),
+        ("gat", "synth-cifar10", 10),
+        ("gcn", "synth-zinc", 1),
+        ("gin", "synth-reddit-b", 2),
+    ];
+    for (arch, dataset, out_dim) in rows {
+        let entries = store.find(dataset, arch, "a2q");
+        let Some(entry) = entries.iter().find(|e| e.bits_path().exists()) else {
+            eprintln!("{arch}-{dataset}: no bits.bin yet (run `make experiments`)");
+            continue;
+        };
+        let (Ok(bf), Ok(csr)) = (
+            BitsFile::load(&entry.bits_path()),
+            representative_csr(&artifacts, dataset),
+        ) else {
+            continue;
+        };
+        let n_maps = bf.maps.len();
+        let matmuls: Vec<(usize, usize)> = bf
+            .maps
+            .iter()
+            .enumerate()
+            .map(|(i, (_b, dim))| (*dim, if i + 1 == n_maps { out_dim } else { 64 }))
+            .collect();
+        let workload = ModelWorkload::from_bits_file(&bf, matmuls, 1000);
+        let speedup = speedup_vs_dq(&sim, &csr, &workload);
+        runner.report_metric(
+            &format!("table2/{arch}-{dataset}/speedup_vs_dq"),
+            speedup,
+            "x (paper: 1.07x-1.25x)",
+        );
+    }
+
+    // serving-path cost: block-diagonal packing of a 16-graph batch
+    if let Ok(Dataset::Graphs(gs)) = load_named(&artifacts, "synth-zinc") {
+        let refs: Vec<&a2q::graph::io::SmallGraph> = gs.graphs.iter().take(16).collect();
+        let total_n: usize = refs.iter().map(|g| g.num_nodes()).sum();
+        runner.bench("table2/zinc/pack_batch_16", || {
+            black_box(
+                GraphBatch::pack(&refs, gs.num_features, total_n + 64, 8192, 16).unwrap(),
+            );
+        });
+    }
+}

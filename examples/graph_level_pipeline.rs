@@ -1,0 +1,89 @@
+//! Graph-level pipeline: Nearest-Neighbor-Strategy serving of unseen
+//! molecule graphs (ZINC analogue) through the dynamic batcher.
+//!
+//! Demonstrates the paper's §3.3 scenario end to end: client-supplied
+//! graphs of varying node counts are packed into fixed-capacity batches and
+//! executed on the quantized GIN artifact; NNS selects each node's (s, b)
+//! at runtime inside the lowered model.
+//!
+//! ```bash
+//! cargo run --release --example graph_level_pipeline
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use a2q::coordinator::request::Payload;
+use a2q::coordinator::{BatcherConfig, Coordinator, PjrtExecutor};
+use a2q::graph::io::{load_named, Dataset};
+use a2q::runtime::{ArtifactIndex, EngineHandle};
+
+fn main() -> a2q::Result<()> {
+    let artifacts = a2q::artifacts_dir();
+    let index = ArtifactIndex::load(&artifacts)?;
+    let artifact = index.artifact("gin-synth-zinc-a2q")?;
+    let Dataset::Graphs(gs) = load_named(&artifacts, &artifact.dataset)? else {
+        unreachable!()
+    };
+
+    let engine = EngineHandle::spawn()?;
+    let exec = Arc::new(PjrtExecutor::new(engine, &artifact, None)?);
+    let mut coord = Coordinator::new();
+    coord.add_model(
+        &artifact.name,
+        exec,
+        BatcherConfig {
+            node_budget: artifact.num_nodes,
+            graph_slots: artifact.graph_capacity.max(1),
+            max_wait: Duration::from_millis(4),
+            queue_cap: 512,
+        },
+    );
+    let coord = Arc::new(coord);
+
+    // submit 64 held-out molecules from 2 client threads
+    let n_req = 64;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..2 {
+        let coord = Arc::clone(&coord);
+        let name = artifact.name.clone();
+        let graphs: Vec<_> = gs
+            .graphs
+            .iter()
+            .skip(1200 + c * n_req / 2)
+            .take(n_req / 2)
+            .cloned()
+            .collect();
+        let targets: Vec<f32> = graphs.iter().map(|g| g.target_value).collect();
+        joins.push(std::thread::spawn(move || {
+            let mut abs_err = 0.0f64;
+            let mut sizes = Vec::new();
+            for (g, t) in graphs.into_iter().zip(targets) {
+                sizes.push(g.num_nodes());
+                let resp = coord
+                    .submit_blocking(&name, Payload::PredictGraph(g))
+                    .expect("graph served");
+                let pred = resp.predictions[0].output[0];
+                abs_err += (pred - t).abs() as f64;
+            }
+            (abs_err, sizes)
+        }));
+    }
+    let mut abs_err = 0.0;
+    let mut sizes = Vec::new();
+    for j in joins {
+        let (e, s) = j.join().unwrap();
+        abs_err += e;
+        sizes.extend(s);
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics();
+    let min_n = sizes.iter().min().unwrap();
+    let max_n = sizes.iter().max().unwrap();
+    println!("served {n_req} molecule graphs ({min_n}–{max_n} nodes) in {wall:?}");
+    println!("metrics: {}", snap.render());
+    println!("regression MAE over served graphs: {:.4}", abs_err / n_req as f64);
+    println!("(recorded training MAE: {:.4})", -artifact.accuracy);
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: load the A²Q artifact, classify nodes through the PJRT
+//! runtime, and compare against the FP32 and DQ-INT4 baselines.
+//!
+//! Run after `make artifacts`:
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use a2q::coordinator::{BatchExecutor, PjrtExecutor};
+use a2q::graph::io::{load_named, Dataset};
+use a2q::runtime::{ArtifactIndex, EngineHandle};
+
+fn main() -> a2q::Result<()> {
+    let artifacts = a2q::artifacts_dir();
+    let index = ArtifactIndex::load(&artifacts)?;
+    let engine = EngineHandle::spawn()?;
+    println!("PJRT platform: {}\n", engine.platform()?);
+
+    println!(
+        "{:<28} {:>9} {:>12} {:>10} {:>10}",
+        "model", "avg bits", "compression", "recorded", "measured"
+    );
+    for name in ["gcn-synth-cora-fp32", "gcn-synth-cora-dq", "gcn-synth-cora-a2q"] {
+        let Ok(artifact) = index.artifact(name) else {
+            continue;
+        };
+        let dataset = load_named(&artifacts, &artifact.dataset)?;
+        let exec = PjrtExecutor::new(engine.clone(), &artifact, Some(&dataset))?;
+
+        // measure test accuracy through the runtime
+        let Dataset::Node(ds) = &dataset else { unreachable!() };
+        let ids: Vec<u32> = (0..ds.num_nodes() as u32).collect();
+        let outputs = exec.run_node_batch(&ids)?;
+        let mut good = 0usize;
+        let mut total = 0usize;
+        for v in 0..ds.num_nodes() {
+            if !ds.test_mask[v] {
+                continue;
+            }
+            let row = &outputs[v];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            total += 1;
+            if pred as i32 == ds.labels[v] {
+                good += 1;
+            }
+        }
+        println!(
+            "{:<28} {:>9.2} {:>11.1}x {:>9.2}% {:>9.2}%",
+            name,
+            artifact.avg_bits,
+            32.0 / artifact.avg_bits.max(0.01),
+            artifact.accuracy * 100.0,
+            100.0 * good as f64 / total as f64
+        );
+    }
+    println!("\nA²Q: FP32-level accuracy at a fraction of the bits (paper Table 1).");
+    Ok(())
+}

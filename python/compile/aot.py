@@ -1,0 +1,256 @@
+"""AOT export: trained quantized GNNs → HLO text + weights for the rust L3.
+
+This is the compile-path boundary of the three-layer stack.  For each model
+variant we emit into ``artifacts/models/``:
+
+* ``<variant>.hlo.txt``      — HLO **text** of the quantized inference
+  forward (jax → StableHLO → XlaComputation → text; serialized protos from
+  jax ≥ 0.5 carry 64-bit instruction ids that xla_extension 0.5.1 rejects);
+* ``<variant>.weights.bin``  — little-endian f32 flat tensors;
+* ``<variant>.manifest.json``— tensor table, quant params, dataset link,
+  expected-output test vector for the rust integration tests;
+* ``<variant>.bits.bin``     — per-node learned bitwidths (u8) per feature
+  map, consumed by the cycle-accurate accelerator simulator.
+
+Export signature (node-level):   f(x, src, dst, gcn_w, sum_w) -> logits
+Export signature (graph-level):  f(x, src, dst, gcn_w, sum_w, n2g, mask) -> preds
+Edge arrays are runtime inputs (never baked) so the rust coordinator feeds
+its own batches; weights are baked as HLO constants.
+
+``--pallas`` additionally exports a variant whose feature quantization runs
+through the L1 Pallas kernel (interpret mode) lowered into the same HLO —
+the §Perf ablation comparing kernelized vs XLA-fused quantization.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets as D
+from . import models as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Weights serialisation
+# ---------------------------------------------------------------------------
+
+
+def flatten_tree(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out.append((name, np.asarray(leaf, dtype=np.float32)))
+    return out
+
+
+def write_weights(tree, path: str):
+    tensors = []
+    offset = 0
+    with open(path, "wb") as fh:
+        for name, arr in flatten_tree(tree):
+            fh.write(arr.astype("<f4").tobytes())
+            tensors.append({"name": name, "shape": list(arr.shape), "offset": offset})
+            offset += arr.size
+    return tensors
+
+
+def write_bits_file(tree, mcfg, qcfg, path: str):
+    """Per-map learned bitwidths for the accelerator simulator (u8)."""
+    bits_list, dims = M.feature_bits_and_dims(tree["qp"], mcfg)
+    if qcfg.skip_input_quant and bits_list:
+        bits_list, dims = bits_list[1:], dims[1:]
+    with open(path, "wb") as fh:
+        fh.write(b"A2QB")
+        fh.write(struct.pack("<I", len(bits_list)))
+        for b, dim in zip(bits_list, dims):
+            br = np.asarray(jnp.round(jnp.clip(b, 1.0, 8.0))).astype(np.uint8)
+            fh.write(struct.pack("<II", br.shape[0], int(dim)))
+            fh.write(br.tobytes())
+    return len(bits_list)
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+
+def export_variant(
+    cfg: T.TrainConfig, out_dir: str, *, use_pallas: bool = False, suffix: str = ""
+) -> str:
+    """Train (or reuse cached) ``cfg`` and export the inference artifact."""
+    result, _ = T.train_any(cfg)  # ensures npz exists
+    tree, mcfg, qcfg, ds = T.rebuild_tree(cfg)
+    name = f"{cfg.arch}-{cfg.dataset}-{cfg.method}{suffix}"
+    os.makedirs(out_dir, exist_ok=True)
+
+    node_level = cfg.dataset in D.NODE_SPECS
+    if node_level:
+        sample_edges = M.build_edges(ds.indptr, ds.indices)
+        x_np = np.asarray(ds.features)
+        n_out = ds.num_nodes
+    else:
+        # serving shape: fixed batch capacity (nodes/edges/graph slots)
+        cap_g = 16
+        mean_n = int(np.mean([g.num_nodes for g in ds.graphs]))
+        cap_n = int(cap_g * mean_n * 2)
+        cap_e = int(cap_n * 6)
+        feats, sample_edges = M.pad_graph_batch(
+            [ds.graphs[i] for i in range(cap_g)], cap_n, cap_e, ds.num_features
+        )
+        x_np = feats
+        n_out = cap_g
+
+    impl = "pallas" if use_pallas else "jnp"
+
+    # Weights are passed as runtime PARAMETERS, not baked constants: the
+    # HLO *text* interchange elides large literals ("constant({...})"),
+    # which the text parser reloads as zeros.  The rust runtime appends the
+    # weights.bin tensors (manifest order == tree_flatten order) after the
+    # data inputs on every call.
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    n_data = 5 if node_level else 7
+
+    def infer(*args):
+        data = args[:n_data]
+        wtree = jax.tree_util.tree_unflatten(treedef, args[n_data:])
+        x, src, dst, gcn_w, sum_w = data[:5]
+        n2g = data[5] if not node_level else None
+        mask = data[6] if not node_level else None
+        e = M.EdgeData(
+            src=src, dst=dst, gcn_w=gcn_w, sum_w=sum_w,
+            num_nodes=x.shape[0], node2graph=n2g,
+            num_graphs=(sample_edges.num_graphs if not node_level else 1),
+            node_mask=mask,
+        )
+        out, _ = M.forward(
+            wtree["model"], wtree["qp"], x, e, mcfg, qcfg,
+            train=False,
+            prot_mask=jnp.zeros(x.shape[0]),
+            impl=impl,
+        )
+        return out
+
+    x = jnp.asarray(x_np)
+    args = (
+        x,
+        sample_edges.src,
+        sample_edges.dst,
+        sample_edges.gcn_w,
+        sample_edges.sum_w,
+    )
+    if not node_level:
+        args = args + (sample_edges.node2graph, sample_edges.node_mask)
+    args = args + tuple(leaves)
+
+    jitted = jax.jit(infer)
+    lowered = jitted.lower(*args)
+    # jax DCEs unused args before lowering; record which logical inputs
+    # survive (sorted = positional order of the HLO entry parameters).
+    kept = sorted(lowered._lowering.compile_args["kept_var_idx"])
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as fh:
+        fh.write(to_hlo_text(lowered))
+
+    # ground-truth logits for the rust integration test (first 8 rows)
+    expected = np.asarray(jitted(*args))
+    head = expected[: min(8, expected.shape[0])].reshape(-1)
+
+    weights_path = os.path.join(out_dir, f"{name}.weights.bin")
+    tensors = write_weights(tree, weights_path)
+    bits_path = os.path.join(out_dir, f"{name}.bits.bin")
+    n_maps = (
+        write_bits_file(tree, mcfg, qcfg, bits_path)
+        if tree["qp"] and "feat" in tree["qp"]
+        else 0
+    )
+
+    manifest = {
+        "name": name,
+        "arch": cfg.arch,
+        "dataset": cfg.dataset,
+        "method": cfg.method,
+        "impl": impl,
+        "layers": cfg.layers,
+        "hidden": cfg.hidden,
+        "heads": cfg.heads,
+        "node_level": node_level,
+        "num_data_inputs": n_data,
+        "param_map": kept,
+        "num_nodes": int(x_np.shape[0]),
+        "num_edges": int(sample_edges.src.shape[0]),
+        "in_dim": int(x_np.shape[1]),
+        "out_dim": int(expected.shape[1]),
+        "num_outputs": int(n_out),
+        "graph_capacity": (0 if node_level else sample_edges.num_graphs),
+        "hlo": os.path.basename(hlo_path),
+        "weights_bin": os.path.basename(weights_path),
+        "bits_bin": os.path.basename(bits_path) if n_maps else None,
+        "num_bit_maps": n_maps,
+        "tensors": tensors,
+        "accuracy": result["accuracy"],
+        "metric_name": result["metric_name"],
+        "avg_bits": result["avg_bits"],
+        "compression": result["compression"],
+        "expected_head": [float(v) for v in head],
+        "skip_input_quant": qcfg.skip_input_quant,
+    }
+    man_path = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(man_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"exported {name}: acc={result['accuracy']:.4f} bits={result['avg_bits']:.2f}")
+    return man_path
+
+
+QUICKSTART = [
+    T.TrainConfig(dataset="synth-cora", arch="gcn", method="a2q", epochs=200,
+                  hidden=16, lam=5.0, target_avg_bits=1.7),
+    T.TrainConfig(dataset="synth-cora", arch="gcn", method="fp32", epochs=200,
+                  hidden=16),
+    T.TrainConfig(dataset="synth-cora", arch="gcn", method="dq", epochs=200,
+                  hidden=16),
+    T.TrainConfig(dataset="synth-zinc", arch="gin", method="a2q", epochs=30,
+                  hidden=64, layers=4, lam=0.5, target_avg_bits=3.7,
+                  penalty_warmup=5, lr=0.005, batch_graphs=32),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="artifacts dir")
+    args = ap.parse_args()
+    root = args.out or os.path.join(T._repo_root(), "artifacts")
+    D.build_all(os.path.join(root, "data"))
+    models_dir = os.path.join(root, "models")
+    manifests = []
+    for cfg in QUICKSTART:
+        manifests.append(export_variant(cfg, models_dir))
+    # Pallas-kernelized twin of the headline variant (perf ablation)
+    manifests.append(
+        export_variant(QUICKSTART[0], models_dir, use_pallas=True, suffix="-pallas")
+    )
+    index = {"models": [os.path.basename(m).replace(".manifest.json", "") for m in manifests]}
+    with open(os.path.join(models_dir, "index.json"), "w") as fh:
+        json.dump(index, fh, indent=1)
+    print(f"wrote {len(manifests)} model artifacts to {models_dir}")
+
+
+if __name__ == "__main__":
+    main()

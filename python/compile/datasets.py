@@ -1,0 +1,465 @@
+"""Synthetic dataset generators standing in for the paper's benchmarks.
+
+Repro band = 0: Planetoid/OGB/TU/superpixel/ZINC downloads are unavailable in
+this environment, so we build synthetic analogues that preserve exactly the
+graph properties A²Q's mechanism depends on (DESIGN.md §3):
+
+1. **power-law in-degree** (preferential attachment) — drives Fig. 1/8 and
+   the "most nodes are low-bit" compression argument;
+2. **degree ↔ aggregated-feature-magnitude correlation** — the core
+   aggregation-aware observation;
+3. **tiny labeled fraction** for node-level semi-supervised tasks — drives
+   the Local Gradient motivation (Proof 1);
+4. **variable node counts** across graphs for graph-level tasks — drives the
+   Nearest Neighbor Strategy.
+
+Node/feature/class counts and label rates mirror Table 7 (ogbn-arxiv and
+PubMed analogues are scaled down for the single-core CI budget; scaling
+factors documented here and in EXPERIMENTS.md).
+
+Every dataset serialises to ``artifacts/data/<name>.bin`` in a little-endian
+binary format shared with the rust loader (``rust/src/graph/io.rs``):
+
+    magic  "A2QD" | version u32 | kind u32 (0 node-level, 1 graph-level)
+    node-level:  N u32 | F u32 | C u32 | nnz u32
+                 indptr  u32[N+1]   (CSR over *incoming* edges, dst-major)
+                 indices u32[nnz]   (source node of each incoming edge)
+                 feat    f32[N*F]
+                 labels  i32[N]
+                 train/val/test masks u8[N] each
+    graph-level: G u32 | F u32 | C u32 (0 ⇒ regression) then per graph:
+                 N u32 | nnz u32 | indptr u32[N+1] | indices u32[nnz]
+                 feat f32[N*F] | target (i32 label, or f32 if regression)
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+
+MAGIC = b"A2QD"
+VERSION = 1
+
+
+def _stable_hash(name: str) -> int:
+    """Process-independent name hash (python's ``hash()`` is randomized per
+    interpreter, which would give every process a different graph)."""
+    return zlib.crc32(name.encode()) & 0xFFFF
+
+
+# ---------------------------------------------------------------------------
+# Containers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class NodeDataset:
+    """A single graph with node labels and semi-supervised splits."""
+
+    name: str
+    indptr: np.ndarray  # [N+1] u32, CSR over incoming edges
+    indices: np.ndarray  # [nnz] u32 source ids
+    features: np.ndarray  # [N, F] f32
+    labels: np.ndarray  # [N] i32
+    train_mask: np.ndarray  # [N] bool
+    val_mask: np.ndarray
+    test_mask: np.ndarray
+    num_classes: int
+    binary_features: bool = False  # bag-of-words 0/1 (skip input quant)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.features.shape[0]
+
+    @property
+    def num_features(self) -> int:
+        return self.features.shape[1]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def in_degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    def edge_list(self):
+        """(src, dst) arrays; dst-major order matching the CSR."""
+        dst = np.repeat(np.arange(self.num_nodes, dtype=np.int64), self.in_degrees())
+        return self.indices.astype(np.int64), dst
+
+
+@dataclass
+class GraphDataset:
+    """A set of small graphs with per-graph targets (classif or regression)."""
+
+    name: str
+    graphs: list  # list[NodeDataset-like tuples]
+    num_features: int
+    num_classes: int  # 0 => regression
+    targets: np.ndarray  # [G] i64 labels or f32 regression targets
+
+    @property
+    def num_graphs(self) -> int:
+        return len(self.graphs)
+
+
+@dataclass
+class SmallGraph:
+    indptr: np.ndarray
+    indices: np.ndarray
+    features: np.ndarray
+
+    @property
+    def num_nodes(self) -> int:
+        return self.features.shape[0]
+
+    def in_degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    def edge_list(self):
+        dst = np.repeat(np.arange(self.num_nodes, dtype=np.int64), self.in_degrees())
+        return self.indices.astype(np.int64), dst
+
+
+# ---------------------------------------------------------------------------
+# Graph construction helpers
+# ---------------------------------------------------------------------------
+
+
+def _edges_to_csr(n: int, src: np.ndarray, dst: np.ndarray):
+    """Build an incoming-edge CSR (dst-major), deduplicated."""
+    key = dst.astype(np.int64) * n + src.astype(np.int64)
+    key = np.unique(key)
+    dst_u = (key // n).astype(np.int64)
+    src_u = (key % n).astype(np.int64)
+    counts = np.bincount(dst_u, minlength=n)
+    indptr = np.zeros(n + 1, dtype=np.uint32)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, src_u.astype(np.uint32)
+
+
+def _preferential_attachment(
+    rng: np.random.Generator,
+    n: int,
+    m: int,
+    labels: np.ndarray | None = None,
+    assort: float = 0.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Barabási–Albert-style undirected generator with optional class
+    assortativity: with probability ``assort`` the preferential choice is
+    restricted to same-class nodes (citation networks are homophilous)."""
+    src_l: list[int] = []
+    dst_l: list[int] = []
+    # start with a small clique
+    seed_n = max(m + 1, 3)
+    for i in range(seed_n):
+        for j in range(i):
+            src_l.append(i)
+            dst_l.append(j)
+    # repeated-endpoint trick gives preferential attachment in O(E)
+    endpoints = list(src_l) + list(dst_l)
+    for v in range(seed_n, n):
+        targets: set[int] = set()
+        attempts = 0
+        while len(targets) < m and attempts < 50 * m:
+            attempts += 1
+            u = endpoints[rng.integers(len(endpoints))]
+            if labels is not None and assort > 0.0 and rng.random() < assort:
+                if labels[u] != labels[v]:
+                    continue
+            if u != v:
+                targets.add(int(u))
+        for u in targets:
+            src_l.append(v)
+            dst_l.append(u)
+            endpoints.extend((v, u))
+    src = np.asarray(src_l, dtype=np.int64)
+    dst = np.asarray(dst_l, dtype=np.int64)
+    # undirected: both directions
+    return np.concatenate([src, dst]), np.concatenate([dst, src])
+
+
+def _bow_features(
+    rng: np.random.Generator, labels: np.ndarray, f: int, c: int, active: int
+) -> np.ndarray:
+    """Binary bag-of-words features with class-specific vocabularies,
+    mimicking Planetoid citation features (values ∈ {0,1})."""
+    n = labels.shape[0]
+    words_per_class = f // c
+    feats = np.zeros((n, f), dtype=np.float32)
+    for i in range(n):
+        cls = labels[i]
+        vocab_lo = cls * words_per_class
+        k_sig = max(1, int(active * 0.7))
+        sig = vocab_lo + rng.integers(0, words_per_class, size=k_sig)
+        noise = rng.integers(0, f, size=active - k_sig)
+        feats[i, sig] = 1.0
+        feats[i, noise] = 1.0
+    return feats
+
+
+def _splits(
+    rng: np.random.Generator, n: int, train_frac: float, val_frac: float = 0.15
+):
+    order = rng.permutation(n)
+    n_tr = max(int(round(train_frac * n)), 4)
+    n_va = int(val_frac * n)
+    train = np.zeros(n, dtype=bool)
+    val = np.zeros(n, dtype=bool)
+    test = np.zeros(n, dtype=bool)
+    train[order[:n_tr]] = True
+    val[order[n_tr : n_tr + n_va]] = True
+    test[order[n_tr + n_va :]] = True
+    return train, val, test
+
+
+# ---------------------------------------------------------------------------
+# Node-level datasets (Table 7 analogues; sizes scaled for 1-core budget)
+# ---------------------------------------------------------------------------
+
+NODE_SPECS = {
+    # name:        (N,     F,    C,  m, label_frac, assort)
+    "synth-cora": (2708, 1433, 7, 2, 0.0517, 0.85),
+    "synth-citeseer": (3327, 1200, 6, 2, 0.0361, 0.85),
+    # PubMed 19717 → 6000 nodes, label rate kept at 0.30%: the Local-Gradient
+    # motivation (≈18 labeled nodes) survives the rescale.
+    "synth-pubmed": (6000, 500, 3, 3, 0.0030, 0.80),
+    # ogbn-arxiv 169343 → 12000 nodes, 53.7% labeled as in Table 5.
+    "synth-arxiv": (12000, 128, 23, 4, 0.5370, 0.70),
+}
+
+
+def make_node_dataset(name: str, seed: int = 0) -> NodeDataset:
+    n, f, c, m, label_frac, assort = NODE_SPECS[name]
+    rng = np.random.default_rng(seed * 9176 + _stable_hash(name))
+    labels = rng.integers(0, c, size=n).astype(np.int32)
+    src, dst = _preferential_attachment(rng, n, m, labels, assort)
+    indptr, indices = _edges_to_csr(n, src, dst)
+    binary = name in ("synth-cora", "synth-citeseer")
+    if binary:
+        feats = _bow_features(rng, labels, f, c, active=20)
+    else:
+        # dense tf-idf-like features: class centroid + noise
+        centroids = rng.normal(0.0, 1.0, size=(c, f)).astype(np.float32)
+        feats = centroids[labels] + rng.normal(0.0, 0.8, size=(n, f)).astype(
+            np.float32
+        )
+    train, val, test = _splits(rng, n, label_frac)
+    return NodeDataset(
+        name=name,
+        indptr=indptr,
+        indices=indices,
+        features=feats.astype(np.float32),
+        labels=labels,
+        train_mask=train,
+        val_mask=val,
+        test_mask=test,
+        num_classes=c,
+        binary_features=binary,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Graph-level datasets
+# ---------------------------------------------------------------------------
+
+GRAPH_SPECS = {
+    # name:             (G,   avg_n, F,  C)   C=0 ⇒ regression
+    "synth-reddit-b": (600, 200, 8, 2),
+    "synth-mnist": (1500, 71, 3, 10),
+    "synth-cifar10": (1200, 117, 5, 10),
+    "synth-zinc": (1500, 23, 28, 0),
+}
+
+
+def _degree_bucket_features(indptr: np.ndarray, f: int) -> np.ndarray:
+    """REDDIT-BINARY has no node features; standard practice (and DQ) uses
+    degree encodings.  One-hot of ⌊log2(1+deg)⌋ capped at f-1."""
+    deg = np.diff(indptr)
+    bucket = np.minimum(np.floor(np.log2(1.0 + deg)).astype(np.int64), f - 1)
+    feats = np.zeros((deg.shape[0], f), dtype=np.float32)
+    feats[np.arange(deg.shape[0]), bucket] = 1.0
+    return feats
+
+
+def _make_reddit_graph(rng: np.random.Generator, label: int, avg_n: int, f: int):
+    """Q/A threads (label 0): few high-degree hubs answering many leaves.
+    Discussion threads (label 1): deeper chains, flatter degree profile."""
+    n = int(rng.integers(avg_n // 2, avg_n * 2))
+    if label == 0:
+        hubs = max(2, n // 40)
+        src = rng.integers(0, hubs, size=n - hubs)
+        dst = np.arange(hubs, n)
+        extra = rng.integers(0, n, size=n // 4)
+        extra_d = rng.integers(0, hubs, size=n // 4)
+        s = np.concatenate([src, extra])
+        d = np.concatenate([dst, extra_d])
+    else:
+        # chain with random back-edges (reply chains)
+        s = np.arange(1, n)
+        d = np.maximum(s - 1 - rng.integers(0, 4, size=n - 1), 0)
+        extra = rng.integers(0, n, size=n // 6)
+        extra_d = rng.integers(0, n, size=n // 6)
+        s = np.concatenate([s, extra])
+        d = np.concatenate([d, extra_d])
+    keep = s != d
+    s, d = s[keep], d[keep]
+    indptr, indices = _edges_to_csr(n, np.concatenate([s, d]), np.concatenate([d, s]))
+    return SmallGraph(indptr, indices, _degree_bucket_features(indptr, f))
+
+
+def _make_superpixel_graph(
+    rng: np.random.Generator, label: int, avg_n: int, f: int, c: int
+):
+    """Superpixel analogue: nodes at random 2D positions, 4-NN edges,
+    intensity = class-specific mixture of 2D gaussian blobs + noise."""
+    n = int(rng.integers(int(avg_n * 0.8), int(avg_n * 1.2)))
+    pos = rng.random((n, 2)).astype(np.float32)
+    # class pattern: ``label`` seeds blob centres deterministically
+    prng = np.random.default_rng(label * 7919 + 13)
+    centers = prng.random((3, 2)).astype(np.float32)
+    weights = prng.uniform(0.5, 1.5, size=3).astype(np.float32)
+    d2 = ((pos[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+    intensity = (weights[None, :] * np.exp(-d2 / 0.02)).sum(-1)
+    intensity += rng.normal(0, 0.08, size=n)
+    # k-NN edges (k=4) on positions
+    dist = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(dist, np.inf)
+    knn = np.argsort(dist, axis=1)[:, :4]
+    src = np.repeat(np.arange(n), 4)
+    dst = knn.reshape(-1)
+    indptr, indices = _edges_to_csr(
+        n, np.concatenate([src, dst]), np.concatenate([dst, src])
+    )
+    extra = np.zeros((n, max(0, f - 3)), dtype=np.float32)
+    feats = np.concatenate(
+        [intensity[:, None].astype(np.float32), pos, extra], axis=1
+    )[:, :f]
+    return SmallGraph(indptr, indices, feats)
+
+
+def _make_molecule_graph(rng: np.random.Generator, f: int):
+    """ZINC analogue: a random tree plus ring closures; one-hot atom types.
+    Regression target = planted 'penalized-logP-like' functional of motif
+    counts (ring atoms, leaves, heteroatoms), plus small noise."""
+    n = int(rng.integers(12, 38))
+    parent = np.array([rng.integers(0, max(i, 1)) for i in range(1, n)])
+    src = np.arange(1, n)
+    dst = parent
+    n_rings = rng.integers(0, 3)
+    ring_atoms = set()
+    for _ in range(n_rings):
+        a, b = rng.integers(0, n, size=2)
+        if a != b:
+            src = np.append(src, a)
+            dst = np.append(dst, b)
+            ring_atoms.update((int(a), int(b)))
+    indptr, indices = _edges_to_csr(
+        n, np.concatenate([src, dst]), np.concatenate([dst, src])
+    )
+    atom_type = rng.choice(f, size=n, p=_atom_probs(f))
+    feats = np.zeros((n, f), dtype=np.float32)
+    feats[np.arange(n), atom_type] = 1.0
+    deg = np.diff(indptr)
+    hetero = (atom_type >= 4).sum()
+    target = (
+        0.15 * len(ring_atoms)
+        - 0.10 * (deg == 1).sum()
+        + 0.05 * hetero
+        - 0.02 * n
+        + rng.normal(0, 0.05)
+    )
+    return SmallGraph(indptr, indices, feats), np.float32(target)
+
+
+def _atom_probs(f: int) -> np.ndarray:
+    p = np.ones(f)
+    p[:4] = f  # carbon-like types dominate
+    return p / p.sum()
+
+
+def make_graph_dataset(name: str, seed: int = 0) -> GraphDataset:
+    g, avg_n, f, c = GRAPH_SPECS[name]
+    rng = np.random.default_rng(seed * 7919 + _stable_hash(name))
+    graphs: list[SmallGraph] = []
+    targets = []
+    for i in range(g):
+        if name == "synth-reddit-b":
+            label = i % 2
+            graphs.append(_make_reddit_graph(rng, label, avg_n, f))
+            targets.append(label)
+        elif name in ("synth-mnist", "synth-cifar10"):
+            label = i % c
+            graphs.append(_make_superpixel_graph(rng, label, avg_n, f, c))
+            targets.append(label)
+        else:  # synth-zinc
+            graph, y = _make_molecule_graph(rng, f)
+            graphs.append(graph)
+            targets.append(y)
+    tgt = (
+        np.asarray(targets, dtype=np.float32)
+        if c == 0
+        else np.asarray(targets, dtype=np.int64)
+    )
+    return GraphDataset(name, graphs, f, c, tgt)
+
+
+# ---------------------------------------------------------------------------
+# Binary serialisation (shared with rust/src/graph/io.rs)
+# ---------------------------------------------------------------------------
+
+
+def save_node_dataset(ds: NodeDataset, path: str) -> None:
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<II", VERSION, 0))
+        fh.write(
+            struct.pack(
+                "<IIII", ds.num_nodes, ds.num_features, ds.num_classes, ds.num_edges
+            )
+        )
+        fh.write(ds.indptr.astype("<u4").tobytes())
+        fh.write(ds.indices.astype("<u4").tobytes())
+        fh.write(ds.features.astype("<f4").tobytes())
+        fh.write(ds.labels.astype("<i4").tobytes())
+        for mask in (ds.train_mask, ds.val_mask, ds.test_mask):
+            fh.write(mask.astype(np.uint8).tobytes())
+
+
+def save_graph_dataset(ds: GraphDataset, path: str) -> None:
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<II", VERSION, 1))
+        fh.write(struct.pack("<III", ds.num_graphs, ds.num_features, ds.num_classes))
+        for g, y in zip(ds.graphs, ds.targets):
+            fh.write(struct.pack("<II", g.num_nodes, int(g.indices.shape[0])))
+            fh.write(g.indptr.astype("<u4").tobytes())
+            fh.write(g.indices.astype("<u4").tobytes())
+            fh.write(g.features.astype("<f4").tobytes())
+            if ds.num_classes == 0:
+                fh.write(struct.pack("<f", float(y)))
+            else:
+                fh.write(struct.pack("<i", int(y)))
+
+
+def build_all(out_dir: str, seed: int = 0, names=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name in names or list(NODE_SPECS) + list(GRAPH_SPECS):
+        path = os.path.join(out_dir, f"{name}.bin")
+        if os.path.exists(path):
+            continue
+        if name in NODE_SPECS:
+            save_node_dataset(make_node_dataset(name, seed), path)
+        else:
+            save_graph_dataset(make_graph_dataset(name, seed), path)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    build_all(sys.argv[1] if len(sys.argv) > 1 else "../artifacts/data")

@@ -1,0 +1,240 @@
+"""Full paper-table experiment sweep (build-time; cached & resumable).
+
+Regenerates the training-side numbers behind every table/figure of the paper
+(DESIGN.md §4 experiment index).  Each cell is a ``TrainConfig``; results are
+cached in ``artifacts/results`` as JSON, so interrupting and re-running
+`make experiments` resumes where it stopped.  A²Q cells additionally dump
+``.bits.bin`` files (per-node learned bitwidths) consumed by the rust
+cycle-accurate accelerator simulator for the speedup columns.
+
+Ordering matters on the 1-core budget: Tables 1-2 (headline) run first,
+ablations afterwards.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+from . import models as M
+from . import train as T
+from .aot import write_bits_file
+from .train import TrainConfig
+
+# ---------------------------------------------------------------------------
+# Table 1 — node-level (paper: GCN/GAT/GIN × Cora/CiteSeer/PubMed/arxiv)
+# ---------------------------------------------------------------------------
+
+
+def table1_cells() -> list[TrainConfig]:
+    cells = []
+    rows = [
+        # (arch, dataset, hidden, layers, epochs, target_bits, seeds)
+        ("gcn", "synth-cora", 16, 2, 200, 1.7, (0, 1)),
+        ("gat", "synth-cora", 64, 2, 200, 2.0, (0, 1)),
+        ("gcn", "synth-citeseer", 16, 2, 200, 1.9, (0, 1)),
+        ("gin", "synth-citeseer", 16, 2, 200, 2.5, (0, 1)),
+        ("gat", "synth-pubmed", 64, 2, 150, 2.1, (0,)),
+        ("gcn", "synth-arxiv", 64, 3, 100, 2.65, (0,)),
+    ]
+    for arch, ds, hid, lay, ep, tgt, seeds in rows:
+        for method in ("fp32", "dq", "a2q"):
+            for seed in seeds:
+                cells.append(
+                    TrainConfig(
+                        dataset=ds, arch=arch, method=method, hidden=hid,
+                        layers=lay, epochs=ep, target_avg_bits=tgt, seed=seed,
+                        lr=0.005 if arch == "gat" else 0.01,
+                        dropout=0.6 if arch == "gat" else 0.5,
+                        lam=5.0,
+                    )
+                )
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Table 2 — graph-level (NNS)
+# ---------------------------------------------------------------------------
+
+
+def table2_cells() -> list[TrainConfig]:
+    cells = []
+    rows = [
+        ("gcn", "synth-mnist", 64, 4, 20, 3.5),
+        ("gin", "synth-mnist", 64, 4, 20, 3.75),
+        ("gcn", "synth-cifar10", 64, 4, 20, 3.3),
+        ("gat", "synth-cifar10", 64, 4, 20, 3.7),
+        ("gcn", "synth-zinc", 64, 4, 30, 3.7),
+        ("gin", "synth-reddit-b", 64, 4, 30, 3.5),
+    ]
+    for arch, ds, hid, lay, ep, tgt in rows:
+        for method in ("fp32", "dq", "a2q"):
+            # quantized runs ramp slowly post-calibration (the quantizer
+            # must adapt before the task loss moves) — give them 2× epochs
+            ep_m = ep if method == "fp32" else ep * 2
+            cells.append(
+                TrainConfig(
+                    dataset=ds, arch=arch, method=method, hidden=hid,
+                    layers=lay, epochs=ep_m, target_avg_bits=tgt, seed=0,
+                    lr=0.003 if arch == "gat" else 0.005,
+                    lam=0.5, penalty_warmup=5, batch_graphs=32,
+                )
+            )
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — ablations
+# ---------------------------------------------------------------------------
+
+
+def table3_cells() -> list[TrainConfig]:
+    base = dict(dataset="synth-cora", arch="gin", hidden=16, layers=2,
+                epochs=200, target_avg_bits=2.4, lam=5.0, seed=0)
+    cells = [
+        # no-lr: neither step nor bits learned (init only)
+        TrainConfig(method="a2q", learn_step=False, learn_bits=False, **base),
+        # no-lr-b: only step learned (bits fixed at 4)
+        TrainConfig(method="a2q", learn_step=True, learn_bits=False, **base),
+        # no-lr-s: only bits learned
+        TrainConfig(method="a2q", learn_step=False, learn_bits=True, **base),
+        # lr-all
+        TrainConfig(method="a2q", learn_step=True, learn_bits=True, **base),
+    ]
+    # Local vs Global gradient on GCN-CiteSeer
+    for method in ("a2q", "a2q_global"):
+        cells.append(
+            TrainConfig(dataset="synth-citeseer", arch="gcn", method=method,
+                        hidden=16, layers=2, epochs=200, target_avg_bits=1.9,
+                        lam=5.0, seed=0)
+        )
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Table 11 — NNS group count sweep (GIN-REDDIT-B)
+# ---------------------------------------------------------------------------
+
+
+def table11_cells() -> list[TrainConfig]:
+    return [
+        TrainConfig(dataset="synth-reddit-b", arch="gin", method="a2q",
+                    hidden=64, layers=4, epochs=20, target_avg_bits=4.0,
+                    lam=0.25, penalty_warmup=5, nns_m=m, seed=0,
+                    batch_graphs=32, lr=0.005)
+        for m in (100, 400, 800, 1000, 1500)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Tables 13/14 — depth & skip-connection ablation (GCN-Cora)
+# ---------------------------------------------------------------------------
+
+
+def table13_cells() -> list[TrainConfig]:
+    cells = []
+    for layers in (3, 4, 5, 6):
+        for skip in (False, True):
+            for method in ("fp32", "a2q"):
+                cells.append(
+                    TrainConfig(dataset="synth-cora", arch="gcn", method=method,
+                                hidden=16, layers=layers, skip=skip, epochs=200,
+                                target_avg_bits=3.0, lam=2.0, seed=0)
+                )
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Table 16 — binary quantization comparison
+# ---------------------------------------------------------------------------
+
+
+def table16_cells() -> list[TrainConfig]:
+    cells = []
+    for ds in ("synth-cora", "synth-citeseer"):
+        for arch in ("gcn", "gin", "gat"):
+            hid = 64 if arch == "gat" else 16
+            cells.append(
+                TrainConfig(dataset=ds, arch=arch, method="binary", hidden=hid,
+                            layers=2, epochs=200, seed=0,
+                            lr=0.005 if arch == "gat" else 0.01)
+            )
+            # a2q counterpart for GIN/GAT rows not already in Table 1
+            cells.append(
+                TrainConfig(dataset=ds, arch=arch, method="a2q", hidden=hid,
+                            layers=2, epochs=200, target_avg_bits=2.0,
+                            lam=5.0, seed=0,
+                            lr=0.005 if arch == "gat" else 0.01)
+            )
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 — learned vs manual bit assignment
+# ---------------------------------------------------------------------------
+
+
+def fig5_cells() -> list[TrainConfig]:
+    cells = []
+    for arch, ds in (("gcn", "synth-cora"), ("gin", "synth-citeseer")):
+        for avg in (2.2, 3.0):
+            cells.append(
+                TrainConfig(dataset=ds, arch=arch, method="manual", hidden=16,
+                            layers=2, epochs=200, manual_avg_bits=avg,
+                            target_avg_bits=avg, seed=0)
+            )
+            cells.append(
+                TrainConfig(dataset=ds, arch=arch, method="a2q", hidden=16,
+                            layers=2, epochs=200, target_avg_bits=avg,
+                            lam=5.0, seed=0)
+            )
+    return cells
+
+
+SUITES = {
+    "table1": table1_cells,
+    "table2": table2_cells,
+    "table3": table3_cells,
+    "table11": table11_cells,
+    "table13": table13_cells,
+    "table16": table16_cells,
+    "fig5": fig5_cells,
+}
+
+
+def dump_bits(cfg: TrainConfig) -> None:
+    """Write the .bits.bin for an A²Q cell (accelerator sim input)."""
+    try:
+        tree, mcfg, qcfg, _ds = T.rebuild_tree(cfg)
+    except Exception as exc:  # noqa: BLE001 — missing npz etc.
+        print(f"  bits skip ({exc})")
+        return
+    path = T.tree_path(cfg).replace(".npz", ".bits.bin")
+    write_bits_file(tree, mcfg, qcfg, path)
+
+
+def main() -> None:
+    only = sys.argv[1:] or list(SUITES)
+    t_start = time.time()
+    for suite in only:
+        cells = SUITES[suite]()
+        print(f"=== {suite}: {len(cells)} cells ===", flush=True)
+        for i, cfg in enumerate(cells):
+            t0 = time.time()
+            hit, _ = T.cached(cfg)
+            blob, _path = T.train_any(cfg)
+            state = "cached" if hit is not None else f"{time.time()-t0:.0f}s"
+            print(
+                f"[{suite} {i+1}/{len(cells)}] {cfg.tag()} -> "
+                f"{blob['metric_name']}={blob['accuracy']:.4f} "
+                f"bits={blob['avg_bits']:.2f} ({state})",
+                flush=True,
+            )
+            if cfg.method in ("a2q", "a2q_global", "manual") and hit is None:
+                dump_bits(cfg)
+    print(f"sweep done in {(time.time()-t_start)/60:.1f} min")
+
+
+if __name__ == "__main__":
+    main()

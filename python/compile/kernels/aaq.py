@@ -1,0 +1,83 @@
+"""Pallas kernel: Aggregation-Aware fake-quantization (Eq. 1), per-node (s, b).
+
+This is the L1 hot-spot of the A²Q inference path: every layer quantizes the
+[N, F] node-feature matrix with a *per-row* learnable step size and bitwidth.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles rows into
+(BLOCK_N, F) VMEM blocks — the per-node scalars (s, b) ride along as a
+(BLOCK_N,) vector per tile.  The op is purely element-wise over lanes so it
+targets the VPU, not the MXU; the block shape is chosen to keep the
+HBM↔VMEM schedule streaming (one pass over X) with 8×128-aligned tiles.
+
+Run with ``interpret=True`` everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step.  8-sublane aligned; at F=4096 lanes this is
+# 128*4096*4B = 2 MiB of VMEM for the input block, well inside the ~16 MiB
+# budget together with the output block.
+DEFAULT_BLOCK_N = 128
+
+
+def _aaq_kernel(x_ref, s_ref, b_ref, o_ref, *, signed: bool):
+    """One (BLOCK_N, F) tile: xq = s * clip(round(|x|/s), 0, levels) * sign."""
+    x = x_ref[...]
+    s = jnp.maximum(s_ref[...], 1e-9)[:, None]
+    b = jnp.round(b_ref[...])[:, None]
+    levels = (jnp.exp2(b - 1.0) - 1.0) if signed else (jnp.exp2(b) - 1.0)
+    mag = jnp.floor(jnp.abs(x) / s + 0.5)
+    mag = jnp.minimum(mag, levels)
+    xbar = jnp.sign(x) * mag
+    if not signed:
+        xbar = jnp.maximum(xbar, 0.0)
+    o_ref[...] = s * xbar
+
+
+@functools.partial(jax.jit, static_argnames=("signed", "block_n"))
+def aaq_quantize(
+    x: jnp.ndarray,
+    step: jnp.ndarray,
+    bits: jnp.ndarray,
+    *,
+    signed: bool = True,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jnp.ndarray:
+    """Fake-quantize ``x`` [N, F] with per-row ``step``/``bits`` [N].
+
+    Matches ``ref.quantize_ref`` exactly (pytest/hypothesis enforced).
+    Rows are padded up to a multiple of ``block_n``; padding rows use
+    step=1, bits=8 and are sliced off afterwards.
+    """
+    n, f = x.shape
+    n_pad = (-n) % block_n
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+        step = jnp.pad(step, (0, n_pad), constant_values=1.0)
+        bits = jnp.pad(bits, (0, n_pad), constant_values=8.0)
+    grid = ((n + n_pad) // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_aaq_kernel, signed=signed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, step, bits)
+    return out[:n] if n_pad else out
+
+
+def vmem_bytes(block_n: int, f: int) -> int:
+    """Estimated VMEM working set of one grid step (input+output+scalars)."""
+    return 2 * block_n * f * 4 + 2 * block_n * 4

@@ -1,0 +1,98 @@
+"""Pallas kernel: Nearest Neighbor Strategy selection + quantize (Algorithm 1).
+
+Graph-level tasks see unseen graphs with varying node counts, so A²Q learns a
+fixed pool of ``m`` (step, bits) groups and each node picks the group whose
+``q_max = s·(2^{b-1}-1)`` is nearest to the node's max-|feature|.
+
+The paper implements the search with a sorted-q_max binary search plus a
+comparator array in hardware.  A TPU has no scalar branching worth using
+inside a vectorised kernel, so the kernel does the branchless equivalent:
+a (BLOCK_N, m) broadcast compare + argmin, which is exactly the comparator
+array unrolled over lanes.  m ≈ 1000 keeps the (BLOCK_N, m) distance tile at
+128×1024×4B = 512 KiB — fine for VMEM.
+
+The rust serving path (``quant::nns``) uses the true binary search on sorted
+q_max; ``python/tests`` pins both to ``ref.nns_select_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+
+
+def _nns_kernel(x_ref, qmax_ref, s_ref, b_ref, o_ref, idx_ref, *, signed: bool):
+    x = x_ref[...]  # (BN, F)
+    qmax = qmax_ref[...]  # (m,)
+    f = jnp.max(jnp.abs(x), axis=-1)  # (BN,)
+    dist = jnp.abs(f[:, None] - qmax[None, :])  # (BN, m)
+    idx = jnp.argmin(dist, axis=-1)  # (BN,)
+    s = jnp.maximum(s_ref[...][idx], 1e-9)[:, None]
+    b = jnp.round(b_ref[...][idx])[:, None]
+    levels = (jnp.exp2(b - 1.0) - 1.0) if signed else (jnp.exp2(b) - 1.0)
+    mag = jnp.minimum(jnp.floor(jnp.abs(x) / s + 0.5), levels)
+    xbar = jnp.sign(x) * mag
+    if not signed:
+        xbar = jnp.maximum(xbar, 0.0)
+    o_ref[...] = s * xbar
+    idx_ref[...] = idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("signed", "block_n"))
+def nns_quantize(
+    x: jnp.ndarray,
+    step_g: jnp.ndarray,
+    bits_g: jnp.ndarray,
+    *,
+    signed: bool = True,
+    block_n: int = DEFAULT_BLOCK_N,
+):
+    """NNS select + fake-quantize.  Returns ``(x_q, index)``.
+
+    ``x`` [N, F]; ``step_g``/``bits_g`` [m] learned group parameters.
+    Matches ``ref.nns_quantize_ref`` / ``ref.nns_select_ref``.
+    """
+    n, f = x.shape
+    m = step_g.shape[0]
+    levels = (
+        jnp.exp2(jnp.round(bits_g) - 1.0) - 1.0
+        if signed
+        else jnp.exp2(jnp.round(bits_g)) - 1.0
+    )
+    qmax = step_g * levels
+    n_pad = (-n) % block_n
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // block_n,)
+    xq, idx = pl.pallas_call(
+        functools.partial(_nns_kernel, signed=signed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
+        ],
+        interpret=True,
+    )(x, qmax, step_g, bits_g)
+    if n_pad:
+        xq, idx = xq[:n], idx[:n]
+    return xq, idx
+
+
+def vmem_bytes(block_n: int, f: int, m: int) -> int:
+    """Per-step VMEM: x + out tiles, (BN, m) distance tile, 3 m-vectors."""
+    return 2 * block_n * f * 4 + block_n * m * 4 + 3 * m * 4

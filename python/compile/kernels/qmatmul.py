@@ -1,0 +1,109 @@
+"""Pallas kernel: integer-domain matmul with outer-product rescale (Eq. 2).
+
+The A²Q update phase computes  X·W ≈ (X̄·W̄) ⊙ (s_X ⊗ s_W)  where X̄ holds the
+per-node integer codes and W̄ the per-column integer codes.  On real TPU
+hardware the integer codes live in bf16/int8 and hit the MXU systolic array;
+here the codes are integer-valued f32 (interpret mode), so the kernel
+structure — (BM, BK)×(BK, BN) tiles, K-innermost accumulation in VMEM
+scratch, rescale fused into the final store — is what we validate, and the
+MXU utilization is *estimated* in EXPERIMENTS.md §Perf from the tile shapes.
+
+Tiles default to 128×128×128: MXU-native (128×128) and 3 blocks × 64 KiB
+per step, comfortably double-bufferable in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, k_steps: int):
+    """Grid (M/BM, N/BN, K/BK); K is the innermost (fastest) axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        # Fused Eq. 2 rescale: one multiply per output element, no extra
+        # HBM round-trip for the integer accumulator.
+        o_ref[...] = acc_ref[...] * (sx_ref[...][:, None] * sw_ref[...][None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def qmatmul(
+    xbar: jnp.ndarray,
+    wbar: jnp.ndarray,
+    sx: jnp.ndarray,
+    sw: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """Quantized matmul: ``(xbar @ wbar) * outer(sx, sw)``.
+
+    ``xbar`` [M, K] integer-valued codes with per-row scales ``sx`` [M];
+    ``wbar`` [K, N] integer-valued codes with per-column scales ``sw`` [N].
+    Matches ``ref.qmatmul_ref``.
+    """
+    m, k = xbar.shape
+    k2, n = wbar.shape
+    assert k == k2, (xbar.shape, wbar.shape)
+    mp, kp, np_ = (-m) % bm, (-k) % bk, (-n) % bn
+    if mp or kp:
+        xbar = jnp.pad(xbar, ((0, mp), (0, kp)))
+        sx = jnp.pad(sx, (0, mp))
+    if kp or np_:
+        wbar = jnp.pad(wbar, ((0, kp), (0, np_)))
+        sw = jnp.pad(sw, (0, np_))
+    gm, gn, gk = (m + mp) // bm, (n + np_) // bn, (k + kp) // bk
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, k_steps=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + mp, n + np_), jnp.float32),
+        scratch_shapes=[pltpu_scratch(bm, bn)],
+        interpret=True,
+    )(xbar, wbar, sx, sw)
+    return out[:m, :n]
+
+
+def pltpu_scratch(bm: int, bn: int):
+    """VMEM accumulator scratch, version-portable."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM((bm, bn), jnp.float32)
+    except Exception:  # pragma: no cover - fallback for older jax
+        return pl.BlockSpec.memory_space  # type: ignore[attr-defined]
+
+
+def flops(m: int, k: int, n: int) -> int:
+    """MAC count ×2 for the tile-level roofline estimate."""
+    return 2 * m * k * n
+
+
+def vmem_bytes(bm: int, bk: int, bn: int) -> int:
+    """Per-step VMEM working set: x, w, acc, out tiles + scale vectors."""
+    return (bm * bk + bk * bn + 2 * bm * bn) * 4 + (bm + bn) * 4

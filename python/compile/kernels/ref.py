@@ -1,0 +1,136 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact functional twin here, written
+with plain ``jax.numpy`` ops only.  ``python/tests/test_kernels.py`` sweeps
+shapes/dtypes with hypothesis and asserts ``assert_allclose`` between the two.
+
+The quantizer follows Eq. 1 / Eq. 9 of the paper:
+
+    xbar = sign(x) * min( floor(|x|/s + 0.5), 2^(b-1) - 1 )
+    x_q  = s * xbar
+
+with the unsigned variant (features after ReLU, paper §3.1: "[b]+1 bits")
+using ``2^b - 1`` positive levels and no sign bit.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_levels(bits: jnp.ndarray, signed: bool) -> jnp.ndarray:
+    """Number of positive quantization levels for an (integer-valued) bitwidth.
+
+    Signed symmetric uniform quantization keeps one bit for the sign:
+    ``2^(b-1) - 1``.  Unsigned (post-ReLU) uses all bits: ``2^b - 1``.
+    """
+    b = jnp.round(bits)
+    if signed:
+        return jnp.exp2(b - 1.0) - 1.0
+    return jnp.exp2(b) - 1.0
+
+
+def quantize_ref(
+    x: jnp.ndarray,
+    step: jnp.ndarray,
+    bits: jnp.ndarray,
+    *,
+    signed: bool = True,
+) -> jnp.ndarray:
+    """Fake-quantize ``x`` with per-row step/bits (Eq. 1).
+
+    ``step`` and ``bits`` broadcast against ``x`` rows: for ``x`` of shape
+    ``[N, F]`` they are ``[N]`` (per-node, aggregation-aware) or scalars.
+    Returns the dequantized representation ``x_q = s * xbar``.
+    """
+    step = jnp.asarray(step)
+    bits = jnp.asarray(bits)
+    if step.ndim == 1:
+        step = step[:, None]
+    if bits.ndim == 1:
+        bits = bits[:, None]
+    step = jnp.maximum(step, 1e-9)
+    levels = quant_levels(bits, signed)
+    mag = jnp.floor(jnp.abs(x) / step + 0.5)
+    mag = jnp.minimum(mag, levels)
+    xbar = jnp.sign(x) * mag
+    if not signed:
+        xbar = jnp.maximum(xbar, 0.0)
+    return step * xbar
+
+
+def quantize_int_ref(
+    x: jnp.ndarray,
+    step: jnp.ndarray,
+    bits: jnp.ndarray,
+    *,
+    signed: bool = True,
+) -> jnp.ndarray:
+    """Integer codes ``xbar`` (as f32) rather than the dequantized value."""
+    q = quantize_ref(x, step, bits, signed=signed)
+    step = jnp.asarray(step)
+    if step.ndim == 1:
+        step = step[:, None]
+    return q / jnp.maximum(step, 1e-9)
+
+
+def qmatmul_ref(
+    xbar: jnp.ndarray,
+    wbar: jnp.ndarray,
+    sx: jnp.ndarray,
+    sw: jnp.ndarray,
+) -> jnp.ndarray:
+    """Integer-domain matmul with outer-product rescale (Eq. 2).
+
+    ``xbar``: [M, K] integer-valued activations, per-row scales ``sx`` [M].
+    ``wbar``: [K, N] integer-valued weights, per-column scales ``sw`` [N].
+    Result: ``(xbar @ wbar) ⊙ (sx ⊗ sw)`` — exactly Eq. 2 of the paper.
+    """
+    acc = jnp.matmul(xbar, wbar, preferred_element_type=jnp.float32)
+    return acc * (sx[:, None] * sw[None, :])
+
+
+def nns_select_ref(
+    x: jnp.ndarray,
+    step_g: jnp.ndarray,
+    bits_g: jnp.ndarray,
+    *,
+    signed: bool = True,
+):
+    """Nearest Neighbor Strategy (Algorithm 1) reference.
+
+    For each node (row of ``x``): find the group ``g`` minimising
+    ``| max_j |x_ij|  -  q_max^g |`` where ``q_max^g = s_g (2^{b_g-1}-1)``,
+    then return (index, step, bits) per node.  Ties break toward the lower
+    index, matching ``jnp.argmin`` semantics (and the rust implementation).
+    """
+    levels = quant_levels(bits_g, signed)
+    qmax = step_g * levels  # [m]
+    f = jnp.max(jnp.abs(x), axis=-1)  # [N]
+    dist = jnp.abs(f[:, None] - qmax[None, :])  # [N, m]
+    idx = jnp.argmin(dist, axis=-1)
+    return idx, step_g[idx], bits_g[idx]
+
+
+def nns_quantize_ref(
+    x: jnp.ndarray,
+    step_g: jnp.ndarray,
+    bits_g: jnp.ndarray,
+    *,
+    signed: bool = True,
+) -> jnp.ndarray:
+    """Full NNS pipeline: select a group per node, then fake-quantize."""
+    _, s, b = nns_select_ref(x, step_g, bits_g, signed=signed)
+    return quantize_ref(x, s, b, signed=signed)
+
+
+def csr_aggregate_ref(
+    x: jnp.ndarray,
+    edge_src: jnp.ndarray,
+    edge_dst: jnp.ndarray,
+    edge_w: jnp.ndarray,
+    num_nodes: int,
+) -> jnp.ndarray:
+    """Message-passing aggregation  out[d] += w_e * x[s]  (sum aggregator)."""
+    msgs = x[edge_src] * edge_w[:, None]
+    return jnp.zeros((num_nodes, x.shape[1]), x.dtype).at[edge_dst].add(msgs)

@@ -1,0 +1,536 @@
+"""L2: GCN / GIN / GAT in functional JAX with pluggable A²Q quantization.
+
+The three architectures follow Table 4 of the paper (MPNN forms):
+
+    GCN:  h_i = Σ_{j∈N(i)∪{i}} (d_i d_j)^{-1/2} x_j ;  x' = ReLU(W h + b)
+    GIN:  h_i = (1+ε) x_i + Σ_{j∈N(i)} x_j          ;  x' = MLP(h)
+    GAT:  h_i = Σ_{j∈N(i)∪{i}} α_ij x_j             ;  x' = W h + b  (ELU between layers)
+
+Quantization points (§3.1):
+* the [N, F] feature map entering each update-phase matmul is fake-quantized
+  with per-node learnable (s_i, b_i) — "aggregation-aware";
+* weights are fake-quantized per output column at fixed 4 bits;
+* GAT attention coefficients are quantized at fixed 4 bits (per A.6);
+* the normalized adjacency is NOT quantized (Proof 2).
+
+One forward function serves FP32 / A²Q(local|global) / DQ-INT4 / binary /
+manual by swapping the feature-quantizer closure built in ``make_quantizer``.
+Graph-level models quantize through the Nearest Neighbor Strategy instead of
+per-node parameters (§3.3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as Q
+
+Array = jnp.ndarray
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch: str  # "gcn" | "gin" | "gat"
+    in_dim: int
+    hidden: int
+    out_dim: int
+    layers: int = 2
+    heads: int = 8  # GAT only
+    skip: bool = False
+    dropout: float = 0.5
+    readout: str = "none"  # "none" (node-level) | "mean" | "sum"
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    method: str = "fp32"  # fp32|a2q|a2q_global|dq|binary|manual
+    wbits: float = 4.0
+    abits: float = 4.0  # attention-coefficient bits (GAT)
+    nns: bool = False  # graph-level: use NNS groups instead of per-node
+    nns_m: int = 1000
+    skip_input_quant: bool = False  # binary bag-of-words inputs (Cora/CiteSeer)
+    init_bits: float = 4.0
+    learn_bits: bool = True  # ablation "no-lr-b"
+    learn_step: bool = True  # ablation "no-lr-s"
+
+
+# ---------------------------------------------------------------------------
+# Edge preprocessing
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EdgeData:
+    """Static edge arrays for one (possibly batched block-diagonal) graph.
+
+    Registered as a jax pytree (arrays are children) so it can be passed as
+    a jit argument — closing over it as a constant makes XLA constant-fold
+    full-graph gathers at compile time (minutes on large graphs).
+    """
+
+    src: Array  # [E] i32
+    dst: Array  # [E] i32
+    gcn_w: Array  # [E] f32  (d_i d_j)^{-1/2} with self-loops, 0 on padding
+    sum_w: Array  # [E] f32  1.0 for real edges, 0 on padding (GIN/GAT mask)
+    num_nodes: int
+    node2graph: Array | None = None  # [N] i32 (graph-level batching)
+    num_graphs: int = 1
+    node_mask: Array | None = None  # [N] f32 1=real node
+
+
+def _edges_flatten(e: "EdgeData"):
+    return (
+        (e.src, e.dst, e.gcn_w, e.sum_w, e.node2graph, e.node_mask),
+        (e.num_nodes, e.num_graphs),
+    )
+
+
+def _edges_unflatten(aux, children):
+    src, dst, gcn_w, sum_w, node2graph, node_mask = children
+    return EdgeData(
+        src=src, dst=dst, gcn_w=gcn_w, sum_w=sum_w,
+        num_nodes=aux[0], node2graph=node2graph,
+        num_graphs=aux[1], node_mask=node_mask,
+    )
+
+
+jax.tree_util.register_pytree_node(EdgeData, _edges_flatten, _edges_unflatten)
+
+
+def build_edges(indptr: np.ndarray, indices: np.ndarray) -> EdgeData:
+    """Node-level: full-graph edges + self-loops + GCN normalisation."""
+    n = indptr.shape[0] - 1
+    deg = np.diff(indptr).astype(np.int64)
+    dst = np.repeat(np.arange(n, dtype=np.int64), deg)
+    src = indices.astype(np.int64)
+    # self loops
+    src = np.concatenate([src, np.arange(n)])
+    dst = np.concatenate([dst, np.arange(n)])
+    dtilde = np.bincount(dst, minlength=n).astype(np.float64)
+    w = 1.0 / np.sqrt(dtilde[src] * dtilde[dst])
+    sum_w = np.ones_like(w)
+    # the self-loop messages don't count for GIN's neighbour sum
+    sum_w[-n:] = 0.0
+    return EdgeData(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        gcn_w=jnp.asarray(w, jnp.float32),
+        sum_w=jnp.asarray(sum_w, jnp.float32),
+        num_nodes=n,
+    )
+
+
+def pad_graph_batch(
+    graphs: list, max_nodes: int, max_edges: int, feat_dim: int
+) -> tuple[np.ndarray, EdgeData]:
+    """Block-diagonal batch of small graphs padded to static shapes.
+
+    Padding nodes are routed to graph slot ``G`` (one extra dummy segment)
+    and padding edges get zero weight, so the readout over real segments is
+    exact.  This same packing is what the rust coordinator's dynamic batcher
+    produces at serving time.
+    """
+    g = len(graphs)
+    feats = np.zeros((max_nodes, feat_dim), dtype=np.float32)
+    node2graph = np.full(max_nodes, g, dtype=np.int64)
+    node_mask = np.zeros(max_nodes, dtype=np.float32)
+    src_l, dst_l, w_l, sw_l = [], [], [], []
+    off = 0
+    for gi, gr in enumerate(graphs):
+        n = gr.num_nodes
+        assert off + n <= max_nodes, "batch overflow"
+        feats[off : off + n] = gr.features
+        node2graph[off : off + n] = gi
+        node_mask[off : off + n] = 1.0
+        s, d = gr.edge_list()
+        deg_in = np.bincount(d, minlength=n) + 1.0
+        # self loops per graph
+        s_all = np.concatenate([s, np.arange(n)])
+        d_all = np.concatenate([d, np.arange(n)])
+        w = 1.0 / np.sqrt(deg_in[s_all] * deg_in[d_all])
+        sw = np.ones_like(w)
+        sw[-n:] = 0.0
+        src_l.append(s_all + off)
+        dst_l.append(d_all + off)
+        w_l.append(w)
+        sw_l.append(sw)
+        off += n
+    src = np.concatenate(src_l) if src_l else np.zeros(0, np.int64)
+    dst = np.concatenate(dst_l) if dst_l else np.zeros(0, np.int64)
+    w = np.concatenate(w_l) if w_l else np.zeros(0, np.float64)
+    sw = np.concatenate(sw_l) if sw_l else np.zeros(0, np.float64)
+    e = src.shape[0]
+    assert e <= max_edges, f"edge overflow {e} > {max_edges}"
+    pad_e = max_edges - e
+    src = np.concatenate([src, np.zeros(pad_e, np.int64)])
+    dst = np.concatenate([dst, np.zeros(pad_e, np.int64)])
+    w = np.concatenate([w, np.zeros(pad_e)])
+    sw = np.concatenate([sw, np.zeros(pad_e)])
+    edges = EdgeData(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        gcn_w=jnp.asarray(w, jnp.float32),
+        sum_w=jnp.asarray(sw, jnp.float32),
+        num_nodes=max_nodes,
+        node2graph=jnp.asarray(node2graph, jnp.int32),
+        num_graphs=g,
+        node_mask=jnp.asarray(node_mask, jnp.float32),
+    )
+    return feats, edges
+
+
+def aggregate(x: Array, edges: EdgeData, weights: Array) -> Array:
+    """out[d] = Σ_e w_e · x[src_e]  — the aggregation phase (fixed-point
+    additions on hardware; Â itself is never quantized, Proof 2)."""
+    msgs = x[edges.src] * weights[:, None]
+    return jnp.zeros((edges.num_nodes, x.shape[1]), x.dtype).at[edges.dst].add(msgs)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def _glorot(rng, fan_in, fan_out):
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jax.random.uniform(rng, (fan_in, fan_out), minval=-lim, maxval=lim)
+
+
+def layer_dims(cfg: ModelConfig) -> list[tuple[int, int]]:
+    """(in, out) dims of each GNN layer (GAT hidden is per-head × heads)."""
+    dims = []
+    d = cfg.in_dim
+    for l in range(cfg.layers):
+        out = cfg.out_dim if l == cfg.layers - 1 and cfg.readout == "none" else cfg.hidden
+        dims.append((d, out))
+        d = out
+    return dims
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    """Model weights. GIN layers carry a 2-layer MLP + ε; GAT carries
+    per-head attention vectors; graph-level models add a readout MLP head."""
+    params: dict[str, Any] = {"layers": []}
+    keys = jax.random.split(rng, cfg.layers * 4 + 2)
+    ki = 0
+    for l, (fi, fo) in enumerate(layer_dims(cfg)):
+        if cfg.arch == "gin":
+            lay = {
+                "w1": _glorot(keys[ki], fi, fo),
+                "b1": jnp.zeros(fo),
+                "w2": _glorot(keys[ki + 1], fo, fo),
+                "b2": jnp.zeros(fo),
+                "eps": jnp.zeros(()),
+            }
+        elif cfg.arch == "gat":
+            # concat heads on hidden layers; single head on the output layer
+            last = l == cfg.layers - 1 and cfg.readout == "none"
+            heads_l = 1 if last else cfg.heads
+            fh = fo if last else max(fo // cfg.heads, 1)
+            lay = {
+                "w": _glorot(keys[ki], fi, fh * heads_l),
+                "b": jnp.zeros(fh * heads_l),
+                "a_src": 0.1 * jax.random.normal(keys[ki + 1], (heads_l, fh)),
+                "a_dst": 0.1 * jax.random.normal(keys[ki + 2], (heads_l, fh)),
+            }
+        else:  # gcn
+            lay = {"w": _glorot(keys[ki], fi, fo), "b": jnp.zeros(fo)}
+        params["layers"].append(lay)
+        ki += 4
+    if cfg.readout != "none":
+        fi = layer_dims(cfg)[-1][1]
+        params["head"] = {
+            "w1": _glorot(keys[ki], fi, cfg.hidden),
+            "b1": jnp.zeros(cfg.hidden),
+            "w2": _glorot(keys[ki + 1], cfg.hidden, cfg.out_dim),
+            "b2": jnp.zeros(cfg.out_dim),
+        }
+    return params
+
+
+def init_qparams(rng, cfg: ModelConfig, qcfg: QuantConfig, num_nodes: int) -> dict:
+    """Quantizer parameters: per-node (s, b) per quantized map (node-level)
+    or m NNS groups (graph-level); per-column weight steps per matmul."""
+    if qcfg.method == "fp32":
+        return {}
+    qp: dict[str, Any] = {"feat": [], "w": []}
+    if cfg.arch == "gin":
+        qp["feat2"] = []  # second MLP matmul input (analysed in Fig. 4(e))
+    keys = jax.random.split(rng, 4 * cfg.layers + 4)
+    ki = 0
+    n_or_m = qcfg.nns_m if qcfg.nns else num_nodes
+    for l, (fi, fo) in enumerate(layer_dims(cfg)):
+        init = Q.init_feature_qparams(keys[ki], n_or_m, qcfg.init_bits)
+        qp["feat"].append({"s": init.step, "b": init.bits})
+        ki += 1
+        if cfg.arch == "gin":
+            init2 = Q.init_feature_qparams(keys[ki], n_or_m, qcfg.init_bits)
+            qp["feat2"].append({"s": init2.step, "b": init2.bits})
+            wcols = [fo, fo]
+        elif cfg.arch == "gat":
+            last = l == cfg.layers - 1 and cfg.readout == "none"
+            heads_l = 1 if last else cfg.heads
+            fh = fo if last else max(fo // cfg.heads, 1)
+            wcols = [fh * heads_l]
+        else:
+            wcols = [fo]
+        qp["w"].append([Q.init_weight_steps(keys[ki + i], c) for i, c in enumerate(wcols)])
+        ki += 2
+    if cfg.readout != "none":
+        qp["head_w"] = [
+            Q.init_weight_steps(keys[ki], cfg.hidden),
+            Q.init_weight_steps(keys[ki + 1], cfg.out_dim),
+        ]
+        init = Q.init_feature_qparams(keys[ki + 2], n_or_m, qcfg.init_bits)
+        qp["head_feat"] = {"s": init.step, "b": init.bits}
+    if cfg.arch == "gat":
+        qp["attn"] = [jnp.asarray(0.05) for _ in range(cfg.layers)]
+    # DQ/binary: scalar steps per layer
+    if qcfg.method == "dq":
+        qp["dq_s"] = [jnp.asarray(0.05) for _ in range(cfg.layers + 1)]
+    return qp
+
+
+# ---------------------------------------------------------------------------
+# Quantizer dispatch
+# ---------------------------------------------------------------------------
+
+
+def make_feature_quantizer(
+    qcfg: QuantConfig,
+    qp: dict,
+    layer: int,
+    *,
+    signed: bool,
+    key: str = "feat",
+    impl: str = "jnp",
+) -> Callable[[Array, Array | None], tuple[Array, Array | None]]:
+    """Returns q(x, prot_mask) -> (x_q, nns_idx).  Closures capture qparams
+    so jax.grad w.r.t. qp flows through the returned function.
+
+    ``impl="pallas"`` routes the forward through the L1 Pallas kernels
+    (inference/export only — no custom VJP on that path)."""
+
+    method = qcfg.method
+
+    def fp32(x, prot):
+        return x, None
+
+    if method == "fp32":
+        return fp32
+
+    if method == "binary":
+
+        def binq(x, prot):
+            return Q.binary_quantize(x), None
+
+        return binq
+
+    if method == "dq":
+
+        def dqq(x, prot):
+            s = qp["dq_s"][layer]
+            mask = prot if prot is not None else jnp.zeros(x.shape[0])
+            return Q.dq_quantize(x, s, mask, qcfg.abits, signed), None
+
+        return dqq
+
+    entry = qp[key][layer] if isinstance(qp[key], list) else qp[key]
+    s, b = entry["s"], entry["b"]
+    if not qcfg.learn_step:
+        s = jax.lax.stop_gradient(s)
+    if not qcfg.learn_bits or method == "manual":
+        b = jax.lax.stop_gradient(b)
+    grad_mode = "local" if method == "a2q" else "global"
+
+    if qcfg.nns:
+        if impl == "pallas":
+            from .kernels import nns as nns_kernel
+
+            def nnsq_pl(x, prot):
+                return nns_kernel.nns_quantize(x, s, b, signed=signed)
+
+            return nnsq_pl
+
+        def nnsq(x, prot):
+            xq, idx = Q.nns_quantize_train(x, s, b, signed)
+            return xq, idx
+
+        return nnsq
+
+    if impl == "pallas":
+        from .kernels import aaq as aaq_kernel
+
+        def a2q_pl(x, prot):
+            return aaq_kernel.aaq_quantize(x, s, b, signed=signed), None
+
+        return a2q_pl
+
+    def a2q(x, prot):
+        return Q.a2q_quantize(x, s, b, signed, grad_mode), None
+
+    return a2q
+
+
+def quant_w(qcfg: QuantConfig, steps: Array | None, w: Array) -> Array:
+    if qcfg.method == "fp32" or steps is None:
+        return w
+    if qcfg.method == "binary":
+        return Q.binary_quantize(w.T).T
+    return Q.quantize_weights(w, steps, qcfg.wbits)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def segment_softmax(logits: Array, seg: Array, num_segments: int) -> Array:
+    mx = jax.ops.segment_max(logits, seg, num_segments=num_segments)
+    ex = jnp.exp(logits - mx[seg])
+    den = jax.ops.segment_sum(ex, seg, num_segments=num_segments)
+    return ex / (den[seg] + 1e-16)
+
+
+def forward(
+    params: dict,
+    qp: dict,
+    x: Array,
+    edges: EdgeData,
+    cfg: ModelConfig,
+    qcfg: QuantConfig,
+    *,
+    train: bool = False,
+    rng: Array | None = None,
+    prot_mask: Array | None = None,
+    collect: bool = False,
+    impl: str = "jnp",
+):
+    """Full model forward.  Returns (output, aux) where output is
+    [N, out_dim] node logits or [G, out_dim] graph predictions, and aux
+    carries per-layer hidden states / NNS indices when ``collect``.
+    """
+    aux: dict[str, Any] = {"hidden": [], "aggregated": [], "nns_idx": []}
+    h = x
+    signed = True  # input features may be negative
+    for l, lay in enumerate(params["layers"]):
+        skip_q = l == 0 and qcfg.skip_input_quant
+        if not skip_q and qcfg.method != "fp32":
+            quant = make_feature_quantizer(qcfg, qp, l, signed=signed, impl=impl)
+            h, idx = quant(h, prot_mask)
+            if collect:
+                aux["nns_idx"].append(idx)
+        if train and cfg.dropout > 0 and rng is not None:
+            rng, sub = jax.random.split(rng)
+            keep = jax.random.bernoulli(sub, 1.0 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1.0 - cfg.dropout), 0.0)
+
+        if cfg.arch == "gcn":
+            agg = aggregate(h, edges, edges.gcn_w)
+            if collect:
+                aux["aggregated"].append(agg)
+            wq = quant_w(qcfg, qp["w"][l][0] if qp else None, lay["w"])
+            out = agg @ wq + lay["b"]
+        elif cfg.arch == "gin":
+            neigh = aggregate(h, edges, edges.sum_w)
+            agg = (1.0 + lay["eps"]) * h + neigh
+            if collect:
+                aux["aggregated"].append(agg)
+            w1 = quant_w(qcfg, qp["w"][l][0] if qp else None, lay["w1"])
+            hid = jax.nn.relu(agg @ w1 + lay["b1"])
+            # second MLP matmul gets its own feature quantization (the paper
+            # analyses exactly this map in Fig. 4(e))
+            if qcfg.method != "fp32":
+                key2 = "feat2" if "feat2" in qp else "feat"
+                quant2 = make_feature_quantizer(
+                    qcfg, qp, l, signed=False, key=key2, impl=impl
+                )
+                hid, _ = quant2(hid, prot_mask)
+            w2 = quant_w(qcfg, qp["w"][l][1] if qp else None, lay["w2"])
+            out = hid @ w2 + lay["b2"]
+        else:  # gat
+            fh = lay["a_src"].shape[1]
+            heads = lay["a_src"].shape[0]
+            wq = quant_w(qcfg, qp["w"][l][0] if qp else None, lay["w"])
+            z = (h @ wq).reshape(-1, heads, fh)  # [N, H, Fh]
+            e_src = jnp.einsum("nhf,hf->nh", z, lay["a_src"])
+            e_dst = jnp.einsum("nhf,hf->nh", z, lay["a_dst"])
+            logits = jax.nn.leaky_relu(
+                e_src[edges.src] + e_dst[edges.dst], negative_slope=0.2
+            )  # [E, H]
+            # mask padding edges with -inf before softmax
+            logits = jnp.where(
+                (edges.gcn_w > 0)[:, None] | (edges.sum_w > 0)[:, None],
+                logits,
+                -1e9,
+            )
+            alpha = jax.vmap(
+                lambda lg: segment_softmax(lg, edges.dst, edges.num_nodes),
+                in_axes=1,
+                out_axes=1,
+            )(logits)  # [E, H]
+            if qcfg.method not in ("fp32", "binary"):
+                alpha = Q.lsq_quantize(alpha, qp["attn"][l], qcfg.abits, False)
+            msgs = z[edges.src] * alpha[:, :, None]  # [E, H, Fh]
+            agg = (
+                jnp.zeros((edges.num_nodes, heads, fh))
+                .at[edges.dst]
+                .add(msgs)
+                .reshape(edges.num_nodes, heads * fh)
+            )
+            if collect:
+                aux["aggregated"].append(agg)
+            out = agg + lay["b"]
+
+        last = l == cfg.layers - 1
+        if cfg.skip and out.shape == h.shape:
+            out = out + h
+        if not last or cfg.readout != "none":
+            out = jax.nn.relu(out) if cfg.arch != "gat" else jax.nn.elu(out)
+            signed = cfg.arch == "gat"  # ReLU outputs are non-negative
+        if collect:
+            aux["hidden"].append(out)
+        h = out
+
+    if cfg.readout == "none":
+        return h, aux
+
+    # graph-level readout: mean over real nodes per segment
+    n2g = edges.node2graph
+    g = edges.num_graphs
+    mask = edges.node_mask[:, None]
+    sums = jax.ops.segment_sum(h * mask, n2g, num_segments=g + 1)[:g]
+    if cfg.readout == "mean":
+        cnt = jax.ops.segment_sum(edges.node_mask, n2g, num_segments=g + 1)[:g]
+        pooled = sums / jnp.maximum(cnt, 1.0)[:, None]
+    else:
+        pooled = sums
+    head = params["head"]
+    hq = pooled
+    if qcfg.method not in ("fp32", "binary", "dq") and "head_feat" in qp:
+        quant = make_feature_quantizer(qcfg, qp, 0, signed=True, key="head_feat")
+        hq, _ = quant(hq, None)
+    w1 = quant_w(qcfg, qp["head_w"][0] if qp and "head_w" in qp else None, head["w1"])
+    w2 = quant_w(qcfg, qp["head_w"][1] if qp and "head_w" in qp else None, head["w2"])
+    z = jax.nn.relu(hq @ w1 + head["b1"])
+    return z @ w2 + head["b2"], aux
+
+
+def feature_bits_and_dims(qp: dict, cfg: ModelConfig) -> tuple[list, list]:
+    """Bits arrays + feature dims for the memory penalty / average-bits."""
+    if not qp or "feat" not in qp:
+        return [], []
+    bits = [entry["b"] for entry in qp["feat"]]
+    dims = [fi for (fi, _fo) in layer_dims(cfg)]
+    if "feat2" in qp:  # GIN: the hidden map feeding the MLP's 2nd matmul
+        bits.extend(entry["b"] for entry in qp["feat2"])
+        dims.extend(fo for (_fi, fo) in layer_dims(cfg))
+    if "head_feat" in qp:
+        bits.append(qp["head_feat"]["b"])
+        dims.append(layer_dims(cfg)[-1][1])
+    return bits, dims

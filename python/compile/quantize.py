@@ -1,0 +1,288 @@
+"""A²Q quantization machinery (L2, build-time): learnable (step, bits) per node.
+
+Implements the paper's training-time components:
+
+* ``a2q_quantize`` — Eq. 1 fake-quant with a custom VJP implementing the
+  closed-form STE gradients of Eq. 10, in two flavours:
+  - ``grad_mode="global"``: task-loss gradients (Eq. 3/4),
+  - ``grad_mode="local"``:  Local Gradient (§3.2, Eq. 7/8) — the incoming
+    task cotangent is *replaced* for (s, b) by the gradient of the local
+    quantization error E = (1/d)·|x_q − x|₁, fixing the vanishing-gradient
+    problem of semi-supervised node tasks (Proof 1).
+* ``nns_quantize_train`` — Nearest Neighbor Strategy (Algorithm 1) with a
+  straight-through argmin: gradients scatter-add into the selected groups.
+* ``memory_penalty`` — Eq. 5 memory-size loss on the learned bitwidths.
+* Baselines: ``dq_quantize`` (Degree-Quant, INT4), ``binary_quantize``
+  (Bi-GCN-style sign), ``manual`` bit assignment (ablation, Fig. 5).
+
+All quantizers are pure functions over (x, params) so the same model code
+runs FP32 / A²Q / DQ / binary by swapping the feature-quantizer closure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LN2 = 0.6931471805599453
+MIN_STEP = 1e-9
+# Learnable-bitwidth clamp. The paper reports learned bits in [1, 8]; the
+# round() in Eq. 1 needs b >= 1 to be meaningful and >8 never helps vs FP32.
+BITS_LO, BITS_HI = 1.0, 8.0
+
+
+def _levels(bits_round: jnp.ndarray, signed: bool) -> jnp.ndarray:
+    return jnp.exp2(bits_round - 1.0) - 1.0 if signed else jnp.exp2(bits_round) - 1.0
+
+
+def _fake_quant(x, step, bits, signed):
+    """Eq. 1 forward. step/bits already broadcast to x's rows ([N] vs [N,F])."""
+    s = jnp.maximum(step, MIN_STEP)[:, None]
+    br = jnp.round(jnp.clip(bits, BITS_LO, BITS_HI))[:, None]
+    lv = _levels(br, signed)
+    mag = jnp.minimum(jnp.floor(jnp.abs(x) / s + 0.5), lv)
+    xbar = jnp.sign(x) * mag
+    if not signed:
+        xbar = jnp.maximum(xbar, 0.0)
+    return s * xbar
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def a2q_quantize(x, step, bits, signed: bool = True, grad_mode: str = "global"):
+    """Aggregation-aware fake-quant with learnable per-row (step, bits).
+
+    ``x`` [N, F]; ``step``/``bits`` [N].  ``grad_mode`` picks Eq. 3/4
+    ("global") or Eq. 7/8 ("local") for the (step, bits) gradients.
+    """
+    return _fake_quant(x, step, bits, signed)
+
+
+def _a2q_fwd(x, step, bits, signed, grad_mode):
+    xq = _fake_quant(x, step, bits, signed)
+    return xq, (x, step, bits, xq)
+
+
+def _a2q_bwd(signed, grad_mode, res, g):
+    x, step, bits, xq = res
+    s = jnp.maximum(step, MIN_STEP)[:, None]
+    br = jnp.round(jnp.clip(bits, BITS_LO, BITS_HI))[:, None]
+    lv = _levels(br, signed)
+    in_range = jnp.abs(x) < s * lv
+    # Eq. 10: closed-form partials through the STE.
+    dxq_ds = jnp.where(in_range, (xq - x) / s, jnp.sign(x) * lv)
+    pow_term = jnp.exp2(br - 1.0) if signed else jnp.exp2(br)
+    dxq_db = jnp.where(in_range, 0.0, jnp.sign(x) * pow_term * LN2 * s)
+    if not signed:
+        neg = x < 0.0
+        dxq_ds = jnp.where(neg, 0.0, dxq_ds)
+        dxq_db = jnp.where(neg, 0.0, dxq_db)
+
+    g_x = g * in_range.astype(g.dtype)  # STE indicator (App. A.1.2)
+
+    if grad_mode == "local":
+        # Local Gradient (Eq. 7/8): supervision is the quantization error
+        # E = (1/d)|x_q - x|_1, independent of the (possibly zero) task
+        # cotangent g.
+        d = x.shape[-1]
+        e = jnp.sign(xq - x) / d
+        g_s = jnp.sum(e * dxq_ds, axis=-1)
+        g_b = jnp.sum(e * dxq_db, axis=-1)
+    else:
+        g_s = jnp.sum(g * dxq_ds, axis=-1)
+        g_b = jnp.sum(g * dxq_db, axis=-1)
+    return g_x, g_s, g_b
+
+
+a2q_quantize.defvjp(_a2q_fwd, _a2q_bwd)
+
+
+def quantize_weights(w, step, bits: float = 4.0):
+    """Per-output-column weight fake-quant (paper fixes W to 4 bits).
+
+    ``w`` [F_in, F_out], ``step`` [F_out] learnable (trained with the global
+    gradient — weights always receive task gradients).
+    """
+    wq_t = a2q_quantize(w.T, step, jnp.full_like(step, bits), True, "global")
+    return wq_t.T
+
+
+def weight_codes(w, step, bits: float = 4.0):
+    """Integer codes + scales for export: w ≈ codes * step (per column)."""
+    wq = quantize_weights(w, step, bits)
+    return wq / jnp.maximum(step, MIN_STEP)[None, :], step
+
+
+# ---------------------------------------------------------------------------
+# Nearest Neighbor Strategy (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def nns_quantize_train(x, step_g, bits_g, signed: bool = True):
+    """NNS forward with trainable groups.
+
+    The argmin index is non-differentiable (stop-gradient); the gathered
+    (s, b) remain differentiable, so backprop scatter-adds each node's
+    gradient into its selected group — exactly the paper's "collect the
+    gradients from the nodes that have used them and add these together".
+    """
+    br = jnp.round(jnp.clip(bits_g, BITS_LO, BITS_HI))
+    qmax = jnp.maximum(step_g, MIN_STEP) * _levels(br, signed)
+    f = jnp.max(jnp.abs(x), axis=-1)
+    idx = jnp.argmin(jnp.abs(f[:, None] - qmax[None, :]), axis=-1)
+    idx = jax.lax.stop_gradient(idx)
+    s_i = step_g[idx]
+    b_i = bits_g[idx]
+    return a2q_quantize(x, s_i, b_i, signed, "global"), idx
+
+
+# ---------------------------------------------------------------------------
+# Memory penalty (Eq. 5/6)
+# ---------------------------------------------------------------------------
+
+
+def memory_penalty(bits_per_layer, dims, target_kb: float) -> jnp.ndarray:
+    """L_mem = (1/η · Σ_l Σ_i dim_l · b_i^l  −  M_target)²  with η = 8·1024.
+
+    ``bits_per_layer``: list of [N]-arrays of learnable bits (one per
+    quantized feature map), ``dims``: matching feature dimensions.
+    ``target_kb``: M_target in KB.
+    """
+    eta = 8.0 * 1024.0
+    total = 0.0
+    for b, dim in zip(bits_per_layer, dims):
+        total = total + jnp.sum(jnp.clip(b, BITS_LO, BITS_HI)) * float(dim)
+    return (total / eta - target_kb) ** 2
+
+
+def average_bits(bits_per_layer, dims) -> jnp.ndarray:
+    """Feature-memory-weighted average bitwidth (the paper's "Average bits")."""
+    num = 0.0
+    den = 0.0
+    for b, dim in zip(bits_per_layer, dims):
+        br = jnp.round(jnp.clip(b, BITS_LO, BITS_HI))
+        num = num + jnp.sum(br) * float(dim)
+        den = den + b.shape[0] * float(dim)
+    return num / den
+
+
+def compression_ratio(avg_bits: float) -> float:
+    """FP32 feature memory / quantized feature memory."""
+    return 32.0 / float(avg_bits)
+
+
+# ---------------------------------------------------------------------------
+# Baseline quantizers
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_quantize(x, step, bits: float = 4.0, signed: bool = True):
+    """LSQ-style per-tensor fake-quant with a learnable scalar step (DQ uses
+    this form for INT4).  Gradient for step follows Esser et al. (2019)."""
+    s = jnp.maximum(step, MIN_STEP)
+    lv = _levels(jnp.round(jnp.asarray(bits)), signed)
+    mag = jnp.minimum(jnp.floor(jnp.abs(x) / s + 0.5), lv)
+    xbar = jnp.sign(x) * mag
+    if not signed:
+        xbar = jnp.maximum(xbar, 0.0)
+    return s * xbar
+
+
+def _lsq_fwd(x, step, bits, signed):
+    return lsq_quantize(x, step, bits, signed), (x, step)
+
+
+def _lsq_bwd(bits, signed, res, g):
+    x, step = res
+    s = jnp.maximum(step, MIN_STEP)
+    lv = _levels(jnp.round(jnp.asarray(bits)), signed)
+    xq = lsq_quantize(x, step, bits, signed)
+    in_range = jnp.abs(x) < s * lv
+    g_x = g * in_range.astype(g.dtype)
+    dxq_ds = jnp.where(in_range, (xq - x) / s, jnp.sign(x) * lv)
+    if not signed:
+        dxq_ds = jnp.where(x < 0.0, 0.0, dxq_ds)
+    # LSQ gradient-scale 1/sqrt(N * levels) stabilises the scalar step.
+    gscale = 1.0 / jnp.sqrt(float(x.size) * jnp.maximum(lv, 1.0))
+    g_s = jnp.sum(g * dxq_ds) * gscale
+    return g_x, g_s
+
+
+lsq_quantize.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def dq_quantize(x, step, prot_mask, bits: float = 4.0, signed: bool = True):
+    """Degree-Quant (Tailor et al., 2020) feature quantization, simplified.
+
+    High in-degree nodes are stochastically "protected" (operate FP32)
+    during training via ``prot_mask`` [N] ∈ {0,1}; at inference the mask is
+    all-zero and everything is INT4.  Per-tensor learnable step (LSQ).
+    """
+    xq = lsq_quantize(x, step, bits, signed)
+    keep = prot_mask[:, None].astype(x.dtype)
+    return keep * x + (1.0 - keep) * xq
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def _sign_ste(x):
+    return jnp.sign(x)
+
+
+def _sign_fwd(x):
+    return jnp.sign(x), x
+
+
+def _sign_bwd(res, g):
+    x = res
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+_sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+def binary_quantize(x):
+    """Bi-GCN-style 1-bit: sign(x) scaled by the per-row mean |x|."""
+    alpha = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+    return _sign_ste(x) * jax.lax.stop_gradient(alpha)
+
+
+def manual_bits_by_degree(in_degree, avg_bits: float, hi_frac: float = 0.2):
+    """Manual mixed-precision baseline (Fig. 5): top ``hi_frac`` in-degree
+    nodes get ``ceil(avg)+…`` high bits, rest low bits, matching the paper's
+    A.6.1 recipe (e.g. avg 2.2 → top 20% at 3 bits, others at 2 bits)."""
+    import numpy as np
+
+    n = in_degree.shape[0]
+    lo = int(np.floor(avg_bits))
+    hi = lo + 1
+    # choose the high fraction so that the average matches avg_bits
+    frac_hi = float(avg_bits - lo)
+    k = int(round(frac_hi * n))
+    order = np.argsort(-np.asarray(in_degree), kind="stable")
+    bits = np.full(n, lo, dtype=np.float32)
+    bits[order[:k]] = hi
+    return jnp.asarray(bits)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+class QuantInit(NamedTuple):
+    step: jnp.ndarray
+    bits: jnp.ndarray
+
+
+def init_feature_qparams(rng, n: int, init_bits: float = 4.0) -> QuantInit:
+    """Paper A.6: bits init 4, step ~ N(0.01, 0.01) (clamped positive)."""
+    s = 0.01 + 0.01 * jax.random.normal(rng, (n,))
+    return QuantInit(jnp.maximum(s, 1e-3), jnp.full((n,), init_bits))
+
+
+def init_weight_steps(rng, f_out: int) -> jnp.ndarray:
+    s = 0.01 + 0.01 * jax.random.normal(rng, (f_out,))
+    return jnp.maximum(s, 1e-3)

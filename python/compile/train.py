@@ -1,0 +1,678 @@
+"""Build-time QAT training for A²Q and all baselines (L2).
+
+Runs entirely at `make artifacts` / `make experiments` time — never on the
+rust request path.  Implements:
+
+* node-level semi-supervised training (full batch, masked NLL) with the
+  Local Gradient method (§3.2) for A²Q;
+* graph-level training with NNS (§3.3), static-shape padded batches;
+* baselines: FP32, DQ-INT4 (degree-based protection), binary (Bi-GCN-like),
+  manual mixed-precision assignment (Fig. 5 ablation);
+* ablations: no-lr / no-lr-b / no-lr-s / lr-all (Table 3), Local vs Global
+  (Table 3), NNS group-count sweep (Table 11), depth & skip (Tables 13/14);
+* the Fig. 3 gradient-sparsity probe.
+
+Results are cached as JSON under ``artifacts/results`` keyed by config, so
+re-running `make experiments` only trains missing cells.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from dataclasses import asdict, dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as D
+from . import models as M
+from . import quantize as Q
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (no optax available offline) with per-group learning rates
+# ---------------------------------------------------------------------------
+
+
+def adam_init(tree):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    return {"m": zeros, "v": zeros, "t": 0}
+
+
+def adam_update(tree, grads, state, lr_tree, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads
+    )
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+    new = jax.tree_util.tree_map(
+        lambda p, mm, vv, lr: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+        tree,
+        m,
+        v,
+        lr_tree,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def lr_tree_for(tree, lr_model, lr_step, lr_bits):
+    """Per-leaf learning rate: quantizer bits / steps get their own lr
+    (paper A.6 trains them with dedicated learning rates)."""
+
+    def assign(path, leaf):
+        names = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        names = [str(n) for n in names]
+        if "qp" in names:
+            if "b" in names:
+                return jnp.full_like(leaf, lr_bits)
+            return jnp.full_like(leaf, lr_step)
+        return jnp.full_like(leaf, lr_model)
+
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+def clamp_qparams(qp):
+    """Keep steps positive and bits in the learnable range after each step."""
+
+    def fix(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        if "b" in names:
+            return jnp.clip(leaf, Q.BITS_LO, Q.BITS_HI)
+        if "s" in names or "w" in names or "dq_s" in names or "attn" in names:
+            return jnp.maximum(leaf, Q.MIN_STEP * 10)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, qp)
+
+
+# ---------------------------------------------------------------------------
+# Config / results
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainConfig:
+    dataset: str = "synth-cora"
+    arch: str = "gcn"
+    method: str = "a2q"  # fp32|a2q|a2q_global|dq|binary|manual|mixed_manual
+    layers: int = 2
+    hidden: int = 16
+    heads: int = 8
+    skip: bool = False
+    dropout: float = 0.5
+    epochs: int = 200
+    lr: float = 0.01
+    lr_step: float = 0.01
+    lr_bits: float = 0.03
+    weight_decay: float = 5e-4
+    lam: float = 5.0  # λ memory-penalty factor (Eq. 6)
+    penalty_warmup: int = 30  # epochs before L_mem kicks in (stabilises QAT)
+    target_avg_bits: float = 2.0  # drives M_target in Eq. 5
+    manual_avg_bits: float = 0.0  # manual baseline bit budget
+    seed: int = 0
+    nns_m: int = 1000
+    batch_graphs: int = 32
+    init_bits: float = 4.0
+    learn_bits: bool = True
+    learn_step: bool = True
+
+    def key(self) -> str:
+        blob = json.dumps(asdict(self), sort_keys=True).encode()
+        return hashlib.sha1(blob).hexdigest()[:12]
+
+    def tag(self) -> str:
+        return f"{self.arch}-{self.dataset}-{self.method}-s{self.seed}"
+
+
+@dataclass
+class TrainResult:
+    config: dict
+    accuracy: float  # test accuracy (or -MAE for regression)
+    metric_name: str
+    avg_bits: float
+    compression: float
+    train_seconds: float
+    epochs_run: int
+    history: list  # (epoch, train_loss, val_metric)
+    bits_hist: list  # learned-bit histogram (counts of 1..8), feature maps
+    grad_zero_frac: float = -1.0  # Fig. 3 probe (node-level only)
+
+
+def _results_dir() -> str:
+    d = os.environ.get("A2Q_RESULTS", os.path.join(_repo_root(), "artifacts", "results"))
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def cached(cfg: TrainConfig):
+    path = os.path.join(_results_dir(), f"{cfg.tag()}-{cfg.key()}.json")
+    if os.path.exists(path):
+        with open(path) as fh:
+            return json.load(fh), path
+    return None, path
+
+
+def save_tree(tree, path: str) -> None:
+    """Flatten a params pytree into an .npz keyed by the leaf path string."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {jax.tree_util.keystr(p): np.asarray(v) for p, v in flat}
+    np.savez(path, **arrays)
+
+
+def load_tree(template, path: str):
+    """Restore arrays saved by ``save_tree`` into ``template``'s structure."""
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = [jnp.asarray(data[jax.tree_util.keystr(p)]) for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def tree_path(cfg: TrainConfig) -> str:
+    return os.path.join(_results_dir(), f"{cfg.tag()}-{cfg.key()}.npz")
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def build_qcfg(cfg: TrainConfig, ds_binary_feat: bool, graph_level: bool) -> M.QuantConfig:
+    method = cfg.method
+    if method in ("mixed_manual",):
+        method = "manual"
+    return M.QuantConfig(
+        method={"a2q_global": "a2q_global", "a2q": "a2q"}.get(method, method),
+        nns=graph_level and method in ("a2q", "a2q_global", "manual"),
+        nns_m=cfg.nns_m,
+        skip_input_quant=ds_binary_feat,
+        init_bits=cfg.init_bits,
+        learn_bits=cfg.learn_bits and method not in ("manual",),
+        learn_step=cfg.learn_step,
+    )
+
+
+def mem_target_kb(cfg: TrainConfig, dims: list[int], counts: list[int]) -> float:
+    total_elems = sum(d * n for d, n in zip(dims, counts))
+    return cfg.target_avg_bits * total_elems / (8.0 * 1024.0)
+
+
+def calibrate_qparams(tree, mcfg, qcfg, x, edges, cfg):
+    """Data-driven step-size initialisation (LSQ-style calibration).
+
+    The paper's N(0.01, 0.01) init assumes citation-network magnitudes; on
+    feature scales far from that (superpixel intensities ≈ 1.0) the initial
+    q_max ≈ 0.07·(2^{b-1}-1) clips catastrophically and QAT cannot recover
+    within the epoch budget.  We run one FP32 forward, measure each feature
+    map's mean |x|, and set  s = 2·E|x| / (2^{b-1}-1)  per map.  NNS groups
+    are spread log-uniformly so their q_max covers [0.1, 4]×max|x|.
+    """
+    qp = tree["qp"]
+    if not qp:
+        return tree
+    fp_qcfg = M.QuantConfig(method="fp32")
+    _, aux = M.forward(
+        tree["model"], {}, x, edges, mcfg, fp_qcfg, train=False, collect=True
+    )
+    # input to layer l: x for l=0, post-activation hidden[l-1] otherwise
+    layer_inputs = [x] + aux["hidden"][:-1]
+    levels = 2.0 ** (cfg.init_bits - 1.0) - 1.0
+
+    def step_for(map_x):
+        m = float(jnp.mean(jnp.abs(map_x))) + 1e-6
+        return 2.0 * m / levels
+
+    def spread(map_x, m_groups):
+        mx = float(jnp.max(jnp.abs(map_x))) + 1e-6
+        qmaxes = np.logspace(np.log10(0.1 * mx), np.log10(4.0 * mx), m_groups)
+        return jnp.asarray((qmaxes / levels).astype(np.float32))
+
+    if "feat" in qp:
+        for l, entry in enumerate(qp["feat"]):
+            ref = layer_inputs[min(l, len(layer_inputs) - 1)]
+            if qcfg.nns:
+                entry["s"] = spread(ref, entry["s"].shape[0])
+            else:
+                entry["s"] = jnp.full_like(entry["s"], step_for(ref))
+    if "feat2" in qp:
+        for l, entry in enumerate(qp["feat2"]):
+            ref = aux["hidden"][min(l, len(aux["hidden"]) - 1)]
+            if qcfg.nns:
+                entry["s"] = spread(ref, entry["s"].shape[0])
+            else:
+                entry["s"] = jnp.full_like(entry["s"], step_for(ref))
+    if "head_feat" in qp:
+        ref = aux["hidden"][-1]
+        if qcfg.nns:
+            qp["head_feat"]["s"] = spread(ref, qp["head_feat"]["s"].shape[0])
+        else:
+            qp["head_feat"]["s"] = jnp.full_like(
+                qp["head_feat"]["s"], step_for(ref)
+            )
+    if "dq_s" in qp:
+        for l in range(len(qp["dq_s"])):
+            ref = layer_inputs[min(l, len(layer_inputs) - 1)]
+            qp["dq_s"][l] = jnp.asarray(step_for(ref))
+    return {"model": tree["model"], "qp": qp}
+
+
+def bits_histogram(qp, skip_first: bool = False) -> list:
+    """Histogram of learned (rounded) bits over quantized feature maps.
+    ``skip_first`` drops the unused layer-0 quantizer when the input is
+    binary bag-of-words (Cora/CiteSeer analogues)."""
+    if not qp or "feat" not in qp:
+        return []
+    counts = np.zeros(9, dtype=np.int64)
+    entries = list(qp["feat"][1 if skip_first else 0 :])
+    entries += list(qp.get("feat2", []))
+    if "head_feat" in qp:
+        entries.append(qp["head_feat"])
+    for entry in entries:
+        b = np.asarray(jnp.round(jnp.clip(entry["b"], Q.BITS_LO, Q.BITS_HI)))
+        for v in range(1, 9):
+            counts[v] += int((b == v).sum())
+    return counts[1:].tolist()
+
+
+def effective_avg_bits(qp, cfg_model: M.ModelConfig, qcfg: M.QuantConfig) -> float:
+    """Memory-weighted average bits over quantized feature maps (skipping the
+    unquantized bag-of-words input when applicable)."""
+    bits, dims = M.feature_bits_and_dims(qp, cfg_model)
+    if qcfg.skip_input_quant and bits:
+        bits, dims = bits[1:], dims[1:]
+    if not bits:
+        return 32.0
+    return float(Q.average_bits(bits, dims))
+
+
+# ---------------------------------------------------------------------------
+# Node-level training
+# ---------------------------------------------------------------------------
+
+
+def train_node(cfg: TrainConfig, use_cache: bool = True):
+    hit, path = cached(cfg)
+    if hit is not None and use_cache:
+        return hit, path
+    t0 = time.time()
+    ds = D.make_node_dataset(cfg.dataset, seed=0)  # graph fixed across seeds
+    edges = M.build_edges(ds.indptr, ds.indices)
+    deg = jnp.asarray(ds.in_degrees(), jnp.float32)
+
+    mcfg = M.ModelConfig(
+        arch=cfg.arch,
+        in_dim=ds.num_features,
+        hidden=cfg.hidden,
+        out_dim=ds.num_classes,
+        layers=cfg.layers,
+        heads=cfg.heads,
+        skip=cfg.skip,
+        dropout=cfg.dropout,
+        readout="none",
+    )
+    qcfg = build_qcfg(cfg, ds.binary_features, graph_level=False)
+
+    rng = jax.random.PRNGKey(cfg.seed)
+    rng, k1, k2 = jax.random.split(rng, 3)
+    params = M.init_params(k1, mcfg)
+    qp = M.init_qparams(k2, mcfg, qcfg, ds.num_nodes)
+    if cfg.method in ("manual", "mixed_manual") and qp:
+        avg = cfg.manual_avg_bits or cfg.target_avg_bits
+        for entry in qp["feat"]:
+            entry["b"] = Q.manual_bits_by_degree(np.asarray(deg), avg)
+
+    x = jnp.asarray(ds.features)
+    y = jnp.asarray(ds.labels)
+    train_mask = jnp.asarray(ds.train_mask)
+    val_mask = jnp.asarray(ds.val_mask)
+    test_mask = jnp.asarray(ds.test_mask)
+
+    bits_list, dim_list = M.feature_bits_and_dims(qp, mcfg)
+    if qcfg.skip_input_quant and bits_list:
+        bits_ix = list(range(1, len(bits_list)))
+    else:
+        bits_ix = list(range(len(bits_list)))
+    dims_kept = [dim_list[i] for i in bits_ix]
+    m_target = mem_target_kb(cfg, dims_kept, [ds.num_nodes] * len(dims_kept))
+
+    # DQ protection probabilities ∝ in-degree percentile (Tailor et al.)
+    if cfg.method == "dq":
+        pct = jnp.argsort(jnp.argsort(deg)) / max(ds.num_nodes - 1, 1)
+        prot_p = 0.1 + 0.8 * pct
+    else:
+        prot_p = None
+
+    tree = {"model": params, "qp": qp}
+    tree = calibrate_qparams(tree, mcfg, qcfg, x, edges, cfg)
+    opt = adam_init(tree)
+    lr_tree = lr_tree_for(tree, cfg.lr, cfg.lr_step, cfg.lr_bits)
+
+    def loss_fn(tree, rng, prot, x, edges, lam):
+        logits, _ = M.forward(
+            tree["model"], tree["qp"], x, edges, mcfg, qcfg,
+            train=True, rng=rng, prot_mask=prot,
+        )
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.sum(
+            jnp.where(train_mask, logp[jnp.arange(y.shape[0]), y], 0.0)
+        ) / jnp.sum(train_mask)
+        l2 = sum(jnp.sum(w**2) for w in jax.tree_util.tree_leaves(tree["model"]))
+        loss = nll + cfg.weight_decay * l2
+        if tree["qp"] and "feat" in tree["qp"] and cfg.method in ("a2q", "a2q_global", "manual"):
+            bl, dl = M.feature_bits_and_dims(tree["qp"], mcfg)
+            bl = [bl[i] for i in bits_ix]
+            dl = [dl[i] for i in bits_ix]
+            if bl and qcfg.learn_bits:
+                loss = loss + lam * Q.memory_penalty(bl, dl, m_target)
+        return loss, nll
+
+    @jax.jit
+    def step(tree, opt, rng, prot, x, edges, lam):
+        rng, sub = jax.random.split(rng)
+        (loss, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            tree, sub, prot, x, edges, lam
+        )
+        tree, opt = adam_update(tree, grads, opt, lr_tree)
+        tree = {"model": tree["model"], "qp": clamp_qparams(tree["qp"])}
+        return tree, opt, rng, nll
+
+    @jax.jit
+    def evaluate(tree, mask, x, edges):
+        logits, _ = M.forward(
+            tree["model"], tree["qp"], x, edges, mcfg, qcfg,
+            train=False, prot_mask=jnp.zeros(x.shape[0]),
+        )
+        pred = jnp.argmax(logits, -1)
+        return jnp.sum(jnp.where(mask, (pred == y).astype(jnp.float32), 0.0)) / jnp.sum(mask)
+
+    history = []
+    best_val, best_test = -1.0, 0.0
+    zeros = jnp.zeros(ds.num_nodes)
+    for epoch in range(cfg.epochs):
+        if prot_p is not None:
+            rng, sub = jax.random.split(rng)
+            prot = jax.random.bernoulli(sub, prot_p).astype(jnp.float32)
+        else:
+            prot = zeros
+        lam = jnp.asarray(cfg.lam if epoch >= cfg.penalty_warmup else 0.0)
+        tree, opt, rng, nll = step(tree, opt, rng, prot, x, edges, lam)
+        if epoch % 10 == 0 or epoch == cfg.epochs - 1:
+            va = float(evaluate(tree, val_mask, x, edges))
+            te = float(evaluate(tree, test_mask, x, edges))
+            history.append((epoch, float(nll), va))
+            if va >= best_val:
+                best_val, best_test = va, te
+
+    # Fig. 3 probe: fraction of nodes with exactly-zero task gradient
+    def task_loss_of_x(xx, edges):
+        logits, _ = M.forward(
+            tree["model"], tree["qp"], xx, edges, mcfg, qcfg,
+            train=False, prot_mask=zeros,
+        )
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.sum(
+            jnp.where(train_mask, logp[jnp.arange(y.shape[0]), y], 0.0)
+        ) / jnp.sum(train_mask)
+
+    gx = jax.jit(jax.grad(task_loss_of_x))(x, edges)
+    grad_norms = jnp.linalg.norm(gx, axis=-1)
+    zero_frac = float(jnp.mean((grad_norms == 0.0).astype(jnp.float32)))
+
+    avg_bits = (
+        effective_avg_bits(tree["qp"], mcfg, qcfg)
+        if cfg.method in ("a2q", "a2q_global", "manual")
+        else {"fp32": 32.0, "dq": 4.0, "binary": 1.0}.get(cfg.method, 4.0)
+    )
+    result = TrainResult(
+        config=asdict(cfg),
+        accuracy=best_test,
+        metric_name="accuracy",
+        avg_bits=avg_bits,
+        compression=32.0 / avg_bits,
+        train_seconds=time.time() - t0,
+        epochs_run=cfg.epochs,
+        history=history,
+        bits_hist=bits_histogram(tree["qp"], skip_first=qcfg.skip_input_quant),
+        grad_zero_frac=zero_frac,
+    )
+    blob = asdict(result)
+    hit, path = cached(cfg)
+    save_tree(tree, tree_path(cfg))
+    with open(path, "w") as fh:
+        json.dump(blob, fh)
+    return blob, path
+
+
+# ---------------------------------------------------------------------------
+# Graph-level training (NNS)
+# ---------------------------------------------------------------------------
+
+
+def _batch_plan(ds: D.GraphDataset, batch_graphs: int):
+    """Static-shape batch packing: graphs in fixed batches, padded to the
+    dataset-wide per-batch max (keeps every jitted step the same shape)."""
+    order = np.arange(ds.num_graphs)
+    batches = [order[i : i + batch_graphs] for i in range(0, ds.num_graphs, batch_graphs)]
+    max_nodes = 0
+    max_edges = 0
+    for b in batches:
+        nn = sum(ds.graphs[i].num_nodes for i in b)
+        ee = sum(ds.graphs[i].indices.shape[0] + ds.graphs[i].num_nodes for i in b)
+        max_nodes = max(max_nodes, nn)
+        max_edges = max(max_edges, ee)
+    return batches, max_nodes, max_edges
+
+
+def train_graph(cfg: TrainConfig, use_cache: bool = True):
+    hit, path = cached(cfg)
+    if hit is not None and use_cache:
+        return hit, path
+    t0 = time.time()
+    ds = D.make_graph_dataset(cfg.dataset, seed=0)
+    regression = ds.num_classes == 0
+    out_dim = 1 if regression else ds.num_classes
+
+    g = ds.num_graphs
+    rng_np = np.random.default_rng(cfg.seed)
+    perm = rng_np.permutation(g)
+    n_tr, n_va = int(0.8 * g), int(0.1 * g)
+    tr_ids, va_ids, te_ids = (
+        perm[:n_tr],
+        perm[n_tr : n_tr + n_va],
+        perm[n_tr + n_va :],
+    )
+
+    mcfg = M.ModelConfig(
+        arch=cfg.arch,
+        in_dim=ds.num_features,
+        hidden=cfg.hidden,
+        out_dim=out_dim,
+        layers=cfg.layers,
+        heads=cfg.heads,
+        skip=cfg.skip,
+        dropout=0.0,
+        readout="mean",
+    )
+    qcfg = build_qcfg(cfg, False, graph_level=True)
+
+    rng = jax.random.PRNGKey(cfg.seed)
+    rng, k1, k2 = jax.random.split(rng, 3)
+    params = M.init_params(k1, mcfg)
+    qp = M.init_qparams(k2, mcfg, qcfg, cfg.nns_m)
+
+    def pack(ids):
+        sub = [ds.graphs[i] for i in ids]
+        batches, mn, me = _batch_plan_sub(sub, cfg.batch_graphs)
+        packed = []
+        for b in batches:
+            feats, edges = M.pad_graph_batch([sub[i] for i in b], mn, me, ds.num_features)
+            tgt = np.asarray([ds.targets[ids[i]] for i in b])
+            gmask = np.zeros(len(b), dtype=np.float32) + 1.0
+            packed.append((jnp.asarray(feats), edges, jnp.asarray(tgt), len(b)))
+        return packed
+
+    def _batch_plan_sub(graphs, bs):
+        order = np.arange(len(graphs))
+        batches = [order[i : i + bs] for i in range(0, len(graphs), bs)]
+        mn = max(sum(graphs[i].num_nodes for i in b) for b in batches)
+        me = max(
+            sum(graphs[i].indices.shape[0] + graphs[i].num_nodes for i in b)
+            for b in batches
+        )
+        return batches, mn, me
+
+    train_batches = pack(tr_ids)
+    val_batches = pack(va_ids)
+    test_batches = pack(te_ids)
+
+    # NNS bits penalty: groups are [m]; dims use hidden size per layer
+    bits_list, dim_list = M.feature_bits_and_dims(qp, mcfg)
+    m_target = mem_target_kb(cfg, dim_list, [cfg.nns_m] * len(dim_list))
+
+    tree = {"model": params, "qp": qp}
+    if train_batches:
+        cal_x, cal_edges, _, _ = train_batches[0]
+        tree = calibrate_qparams(tree, mcfg, qcfg, cal_x, cal_edges, cfg)
+    opt = adam_init(tree)
+    lr_tree = lr_tree_for(tree, cfg.lr, cfg.lr_step, cfg.lr_bits)
+
+    def loss_fn(tree, feats, edges, tgt, nb, lam):
+        out, _ = M.forward(tree["model"], tree["qp"], feats, edges, mcfg, qcfg, train=False)
+        out = out[:nb]
+        if regression:
+            task = jnp.mean(jnp.abs(out[:, 0] - tgt))
+        else:
+            logp = jax.nn.log_softmax(out)
+            task = -jnp.mean(logp[jnp.arange(nb), tgt.astype(jnp.int32)])
+        loss = task
+        if tree["qp"] and "feat" in tree["qp"] and cfg.method in ("a2q", "a2q_global") and qcfg.learn_bits:
+            bl, dl = M.feature_bits_and_dims(tree["qp"], mcfg)
+            loss = loss + lam * Q.memory_penalty(bl, dl, m_target)
+        return loss, task
+
+    nb_static = train_batches[0][3]
+
+    @jax.jit
+    def step(tree, opt, feats, edges, tgt, lam):
+        (loss, task), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            tree, feats, edges, tgt, nb_static, lam
+        )
+        tree, opt = adam_update(tree, grads, opt, lr_tree)
+        tree = {"model": tree["model"], "qp": clamp_qparams(tree["qp"])}
+        return tree, opt, task
+
+    # NOTE: batches in one split share shapes; the last ragged batch is
+    # dropped from training (kept for eval via per-batch jit cache).
+    def run_epoch(tree, opt, lam):
+        tot = 0.0
+        cnt = 0
+        for feats, edges, tgt, nb in train_batches:
+            if nb != nb_static:
+                continue
+            tree, opt, task = step(tree, opt, feats, edges, tgt, lam)
+            tot += float(task)
+            cnt += 1
+        return tree, opt, tot / max(cnt, 1)
+
+    @jax.jit
+    def eval_batch(tree, feats, edges):
+        out, _ = M.forward(
+            tree["model"], tree["qp"], feats, edges, mcfg, qcfg, train=False
+        )
+        return out
+
+    def eval_split(tree, batches):
+        """Accuracy (classification) or MAE (regression) over a split."""
+        good, tot, err = 0.0, 0, 0.0
+        for feats, edges, tgt, nb in batches:
+            out = eval_batch(tree, feats, edges)[:nb]
+            if regression:
+                err += float(jnp.sum(jnp.abs(out[:, 0] - tgt)))
+            else:
+                good += float(jnp.sum((jnp.argmax(out, -1) == tgt.astype(jnp.int32))))
+            tot += nb
+        return (err / tot) if regression else (good / tot)
+    history = []
+    best_val = np.inf if regression else -np.inf
+    best_test = 0.0
+    for epoch in range(cfg.epochs):
+        lam = jnp.asarray(cfg.lam if epoch >= cfg.penalty_warmup else 0.0)
+        tree, opt, tr_loss = run_epoch(tree, opt, lam)
+        if epoch % 5 == 0 or epoch == cfg.epochs - 1:
+            va = eval_split(tree, val_batches)
+            te = eval_split(tree, test_batches)
+            history.append((epoch, tr_loss, va))
+            better = va <= best_val if regression else va >= best_val
+            if better:
+                best_val, best_test = va, te
+
+    avg_bits = (
+        effective_avg_bits(tree["qp"], mcfg, qcfg)
+        if cfg.method in ("a2q", "a2q_global", "manual")
+        else {"fp32": 32.0, "dq": 4.0, "binary": 1.0}.get(cfg.method, 4.0)
+    )
+    result = TrainResult(
+        config=asdict(cfg),
+        accuracy=float(best_test) if not regression else -float(best_test),
+        metric_name="mae" if regression else "accuracy",
+        avg_bits=avg_bits,
+        compression=32.0 / avg_bits,
+        train_seconds=time.time() - t0,
+        epochs_run=cfg.epochs,
+        history=history,
+        bits_hist=bits_histogram(tree["qp"]),
+    )
+    blob = asdict(result)
+    hit, path = cached(cfg)
+    save_tree(tree, tree_path(cfg))
+    with open(path, "w") as fh:
+        json.dump(blob, fh)
+    return blob, path
+
+
+def train_any(cfg: TrainConfig, use_cache: bool = True):
+    if cfg.dataset in D.NODE_SPECS:
+        return train_node(cfg, use_cache)
+    return train_graph(cfg, use_cache)
+
+
+def rebuild_tree(cfg: TrainConfig):
+    """Reconstruct (tree, mcfg, qcfg) for a trained config from its .npz."""
+    if cfg.dataset in D.NODE_SPECS:
+        ds = D.make_node_dataset(cfg.dataset, seed=0)
+        n, out_dim, readout, binary = (
+            ds.num_nodes,
+            ds.num_classes,
+            "none",
+            ds.binary_features,
+        )
+        in_dim = ds.num_features
+        graph_level = False
+    else:
+        ds = D.make_graph_dataset(cfg.dataset, seed=0)
+        out_dim = 1 if ds.num_classes == 0 else ds.num_classes
+        n, readout, binary = cfg.nns_m, "mean", False
+        in_dim = ds.num_features
+        graph_level = True
+    mcfg = M.ModelConfig(
+        arch=cfg.arch, in_dim=in_dim, hidden=cfg.hidden, out_dim=out_dim,
+        layers=cfg.layers, heads=cfg.heads, skip=cfg.skip,
+        dropout=cfg.dropout if not graph_level else 0.0, readout=readout,
+    )
+    qcfg = build_qcfg(cfg, binary, graph_level)
+    rng = jax.random.PRNGKey(cfg.seed)
+    _, k1, k2 = jax.random.split(rng, 3)
+    template = {
+        "model": M.init_params(k1, mcfg),
+        "qp": M.init_qparams(k2, mcfg, qcfg, n),
+    }
+    tree = load_tree(template, tree_path(cfg))
+    return tree, mcfg, qcfg, ds

@@ -1,0 +1,138 @@
+"""Dataset-generator tests: the synthetic analogues must reproduce the graph
+properties A²Q's mechanism depends on (DESIGN.md §3 substitution table)."""
+
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+
+
+@pytest.fixture(scope="module")
+def cora():
+    return D.make_node_dataset("synth-cora", seed=0)
+
+
+class TestNodeDatasets:
+    def test_spec_counts(self, cora):
+        assert cora.num_nodes == 2708
+        assert cora.num_features == 1433
+        assert cora.num_classes == 7
+
+    def test_label_rate_matches_table5(self, cora):
+        rate = cora.train_mask.mean()
+        assert rate == pytest.approx(0.0517, abs=0.005)
+
+    def test_pubmed_tiny_label_rate(self):
+        ds = D.make_node_dataset("synth-pubmed", seed=0)
+        assert ds.train_mask.sum() <= 25  # ~0.30% of 6000
+
+    def test_masks_disjoint(self, cora):
+        overlap = (
+            cora.train_mask.astype(int)
+            + cora.val_mask.astype(int)
+            + cora.test_mask.astype(int)
+        )
+        assert overlap.max() == 1
+
+    def test_power_law_degree_distribution(self, cora):
+        """Most nodes low-degree, a heavy tail of hubs (Fig. 8)."""
+        deg = cora.in_degrees()
+        assert np.median(deg) <= 6
+        assert deg.max() >= 20 * np.median(deg)
+        frac_low = (deg <= 2 * np.median(deg)).mean()
+        assert frac_low > 0.6
+
+    def test_aggregation_magnitude_correlates_with_degree(self, cora):
+        """Fig. 1: mean |sum-aggregated feature| grows with in-degree."""
+        deg = cora.in_degrees()
+        x = cora.features
+        src, dst = cora.edge_list()
+        agg = np.zeros_like(x)
+        np.add.at(agg, dst, x[src])
+        mag = np.abs(agg).mean(axis=1)
+        lo = mag[deg <= np.percentile(deg, 30)].mean()
+        hi = mag[deg >= np.percentile(deg, 90)].mean()
+        assert hi > 2.0 * lo
+
+    def test_binary_features_are_01(self, cora):
+        vals = np.unique(cora.features)
+        assert set(vals.tolist()) <= {0.0, 1.0}
+
+    def test_csr_valid(self, cora):
+        assert cora.indptr[0] == 0
+        assert cora.indptr[-1] == cora.indices.shape[0]
+        assert (np.diff(cora.indptr.astype(np.int64)) >= 0).all()
+        assert cora.indices.max() < cora.num_nodes
+
+    def test_deterministic(self):
+        a = D.make_node_dataset("synth-citeseer", seed=0)
+        b = D.make_node_dataset("synth-citeseer", seed=0)
+        np.testing.assert_array_equal(a.indices, b.indices)
+        np.testing.assert_array_equal(a.features, b.features)
+
+
+class TestGraphDatasets:
+    def test_variable_node_counts(self):
+        ds = D.make_graph_dataset("synth-zinc", seed=0)
+        sizes = {g.num_nodes for g in ds.graphs}
+        assert len(sizes) > 5  # NNS motivation: sizes vary
+
+    def test_reddit_classes_differ_in_hub_structure(self):
+        ds = D.make_graph_dataset("synth-reddit-b", seed=0)
+        max_deg_frac = []
+        for g, y in zip(ds.graphs[:60], ds.targets[:60]):
+            deg = g.in_degrees()
+            max_deg_frac.append((y, deg.max() / max(deg.mean(), 1)))
+        qa = np.mean([v for y, v in max_deg_frac if y == 0])
+        disc = np.mean([v for y, v in max_deg_frac if y == 1])
+        assert qa > disc  # Q/A threads are hubbier
+
+    def test_zinc_regression_targets(self):
+        ds = D.make_graph_dataset("synth-zinc", seed=0)
+        assert ds.num_classes == 0
+        assert ds.targets.dtype == np.float32
+        assert np.std(ds.targets) > 0.05
+
+    def test_superpixel_features_have_position_channels(self):
+        ds = D.make_graph_dataset("synth-mnist", seed=0)
+        g = ds.graphs[0]
+        assert g.features.shape[1] == 3
+        # channels 1-2 are positions in [0,1]
+        assert g.features[:, 1:].min() >= 0.0
+        assert g.features[:, 1:].max() <= 1.0
+
+
+class TestSerialisation:
+    def test_node_roundtrip_header(self, tmp_path, cora):
+        path = os.path.join(tmp_path, "c.bin")
+        D.save_node_dataset(cora, path)
+        with open(path, "rb") as fh:
+            assert fh.read(4) == b"A2QD"
+            ver, kind = struct.unpack("<II", fh.read(8))
+            assert (ver, kind) == (D.VERSION, 0)
+            n, f, c, nnz = struct.unpack("<IIII", fh.read(16))
+            assert (n, f, c, nnz) == (
+                cora.num_nodes, cora.num_features, cora.num_classes, cora.num_edges,
+            )
+
+    def test_node_file_size_exact(self, tmp_path, cora):
+        path = os.path.join(tmp_path, "c.bin")
+        D.save_node_dataset(cora, path)
+        n, f = cora.num_nodes, cora.num_features
+        nnz = cora.num_edges
+        want = 4 + 8 + 16 + 4 * (n + 1) + 4 * nnz + 4 * n * f + 4 * n + 3 * n
+        assert os.path.getsize(path) == want
+
+    def test_graph_file_roundtrip_counts(self, tmp_path):
+        ds = D.make_graph_dataset("synth-zinc", seed=0)
+        path = os.path.join(tmp_path, "z.bin")
+        D.save_graph_dataset(ds, path)
+        with open(path, "rb") as fh:
+            assert fh.read(4) == b"A2QD"
+            _, kind = struct.unpack("<II", fh.read(8))
+            assert kind == 1
+            g, f, c = struct.unpack("<III", fh.read(12))
+            assert (g, f, c) == (ds.num_graphs, ds.num_features, 0)

@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aaq, nns, qmatmul, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@st.composite
+def quant_case(draw):
+    n = draw(st.integers(1, 300))
+    f = draw(st.integers(1, 96))
+    seed = draw(st.integers(0, 2**31 - 1))
+    signed = draw(st.booleans())
+    return n, f, seed, signed
+
+
+class TestAaqKernel:
+    @given(quant_case())
+    @settings(**SETTINGS)
+    def test_matches_ref(self, case):
+        n, f, seed, signed = case
+        rng = np.random.default_rng(seed)
+        x = rand(rng, n, f)
+        if not signed:
+            x = jnp.abs(x)
+        s = jnp.asarray(rng.uniform(0.005, 0.3, n).astype(np.float32))
+        b = jnp.asarray(rng.uniform(1.0, 8.0, n).astype(np.float32))
+        got = aaq.aaq_quantize(x, s, b, signed=signed)
+        want = ref.quantize_ref(x, s, b, signed=signed)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_block_boundary_shapes(self):
+        """Rows exactly at / around the 128-row block boundary."""
+        rng = np.random.default_rng(0)
+        for n in (127, 128, 129, 256, 257):
+            x = rand(rng, n, 17)
+            s = jnp.full((n,), 0.05)
+            b = jnp.full((n,), 4.0)
+            np.testing.assert_allclose(
+                aaq.aaq_quantize(x, s, b), ref.quantize_ref(x, s, b), atol=1e-6
+            )
+
+    def test_clipping_saturates_at_levels(self):
+        x = jnp.asarray([[100.0, -100.0, 0.1]])
+        s = jnp.asarray([0.1])
+        b = jnp.asarray([4.0])
+        out = np.asarray(aaq.aaq_quantize(x, s, b))
+        assert out[0, 0] == pytest.approx(0.1 * 7)  # 2^3 - 1 levels
+        assert out[0, 1] == pytest.approx(-0.1 * 7)
+
+    def test_unsigned_clamps_negatives_to_zero(self):
+        x = jnp.asarray([[-1.0, 0.5]])
+        out = np.asarray(
+            aaq.aaq_quantize(x, jnp.asarray([0.1]), jnp.asarray([4.0]), signed=False)
+        )
+        assert out[0, 0] == 0.0
+
+    def test_vmem_estimate_positive(self):
+        assert aaq.vmem_bytes(128, 1433) > 0
+
+
+class TestQmatmulKernel:
+    @given(
+        st.integers(1, 200), st.integers(1, 150), st.integers(1, 80),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        xb = jnp.round(rand(rng, m, k) * 7)
+        wb = jnp.round(rand(rng, k, n) * 7)
+        sx = jnp.asarray(rng.uniform(0.01, 0.2, m).astype(np.float32))
+        sw = jnp.asarray(rng.uniform(0.01, 0.2, n).astype(np.float32))
+        got = qmatmul.qmatmul(xb, wb, sx, sw)
+        want = ref.qmatmul_ref(xb, wb, sx, sw)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_tile_boundaries(self):
+        rng = np.random.default_rng(1)
+        for m, k, n in ((128, 128, 128), (129, 127, 1), (256, 64, 130)):
+            xb = jnp.round(rand(rng, m, k) * 3)
+            wb = jnp.round(rand(rng, k, n) * 3)
+            sx = jnp.full((m,), 0.1)
+            sw = jnp.full((n,), 0.1)
+            np.testing.assert_allclose(
+                qmatmul.qmatmul(xb, wb, sx, sw),
+                ref.qmatmul_ref(xb, wb, sx, sw),
+                rtol=1e-5,
+                atol=1e-5,
+            )
+
+    def test_flops_model(self):
+        assert qmatmul.flops(2, 3, 4) == 48
+        assert qmatmul.vmem_bytes(128, 128, 128) <= 16 * 2**20
+
+
+class TestNnsKernel:
+    @given(
+        st.integers(1, 200), st.integers(1, 48), st.integers(2, 64),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, n, f, m, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, n, f)
+        sg = jnp.asarray(rng.uniform(0.005, 0.4, m).astype(np.float32))
+        bg = jnp.asarray(rng.uniform(1.0, 8.0, m).astype(np.float32))
+        xq, idx = nns.nns_quantize(x, sg, bg)
+        want_idx, _, _ = ref.nns_select_ref(x, sg, bg)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_idx))
+        np.testing.assert_allclose(
+            xq, ref.nns_quantize_ref(x, sg, bg), rtol=1e-6, atol=1e-6
+        )
+
+    def test_selects_nearest_qmax(self):
+        # two groups: qmax = 0.7 and 7.0; node max 0.6 must take group 0
+        sg = jnp.asarray([0.1, 1.0])
+        bg = jnp.asarray([4.0, 4.0])
+        x = jnp.asarray([[0.6, 0.1], [6.5, 0.2]])
+        _, idx = nns.nns_quantize(x, sg, bg)
+        assert idx.tolist() == [0, 1]
+
+
+class TestCsrAggregateRef:
+    def test_simple_sum(self):
+        x = jnp.asarray([[1.0], [2.0], [4.0]])
+        src = jnp.asarray([0, 1, 2])
+        dst = jnp.asarray([1, 2, 0])
+        w = jnp.ones(3)
+        out = ref.csr_aggregate_ref(x, src, dst, w, 3)
+        np.testing.assert_allclose(out[:, 0], [4.0, 1.0, 2.0])

@@ -1,0 +1,162 @@
+"""L2 model tests: shapes, quantization plumbing, batching, aggregation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile import models as M
+from compile import quantize as Q
+
+
+def tiny_node_ds():
+    return D.make_node_dataset("synth-cora", seed=0)
+
+
+def _mini_graph():
+    """4-node path graph 0-1-2-3 (undirected)."""
+    src = np.asarray([0, 1, 1, 2, 2, 3])
+    dst = np.asarray([1, 0, 2, 1, 3, 2])
+    indptr, indices = D._edges_to_csr(4, src, dst)
+    return indptr, indices
+
+
+@pytest.fixture(scope="module")
+def edges4():
+    indptr, indices = _mini_graph()
+    return M.build_edges(indptr, indices)
+
+
+class TestEdges:
+    def test_gcn_norm_includes_self_loops(self, edges4):
+        # 4 nodes path: 6 directed edges + 4 self loops
+        assert edges4.src.shape[0] == 10
+        # degree-normalised weights are symmetric positive
+        assert float(jnp.min(edges4.gcn_w)) > 0.0
+
+    def test_self_loops_excluded_from_gin_sum(self, edges4):
+        assert float(jnp.sum(edges4.sum_w)) == 6.0
+
+    def test_aggregate_path_graph(self, edges4):
+        x = jnp.asarray([[1.0], [2.0], [3.0], [4.0]])
+        out = np.asarray(M.aggregate(x, edges4, edges4.sum_w))
+        np.testing.assert_allclose(out[:, 0], [2.0, 4.0, 6.0, 3.0])
+
+
+def _forward_shapes(arch, method, readout="none"):
+    indptr, indices = _mini_graph()
+    edges = M.build_edges(indptr, indices)
+    cfg = M.ModelConfig(
+        arch=arch, in_dim=6, hidden=8, out_dim=3, layers=2,
+        heads=2, dropout=0.0, readout=readout,
+    )
+    qcfg = M.QuantConfig(method=method, nns=readout != "none" and method != "fp32")
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng, cfg)
+    qp = M.init_qparams(rng, cfg, qcfg, 4 if readout == "none" else 16)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 6)).astype(np.float32))
+    if readout != "none":
+        edges = M.EdgeData(
+            src=edges.src, dst=edges.dst, gcn_w=edges.gcn_w, sum_w=edges.sum_w,
+            num_nodes=4, node2graph=jnp.zeros(4, jnp.int32), num_graphs=1,
+            node_mask=jnp.ones(4),
+        )
+    out, _ = M.forward(
+        params, qp, x, edges, cfg, qcfg, prot_mask=jnp.zeros(4)
+    )
+    return out
+
+
+class TestForwardShapes:
+    @pytest.mark.parametrize("arch", ["gcn", "gin", "gat"])
+    @pytest.mark.parametrize("method", ["fp32", "a2q", "dq", "binary"])
+    def test_node_level_output_shape(self, arch, method):
+        out = _forward_shapes(arch, method)
+        assert out.shape == (4, 3)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    @pytest.mark.parametrize("arch", ["gcn", "gin"])
+    def test_graph_level_readout_shape(self, arch):
+        out = _forward_shapes(arch, "a2q", readout="mean")
+        assert out.shape == (1, 3)
+
+    def test_quantization_changes_output(self):
+        a = _forward_shapes("gcn", "fp32")
+        b = _forward_shapes("gcn", "a2q")
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+    def test_pallas_impl_matches_jnp_impl(self):
+        """The exported (pallas) forward must agree with the training
+        (custom-vjp) forward — same Eq. 1 semantics."""
+        indptr, indices = _mini_graph()
+        edges = M.build_edges(indptr, indices)
+        cfg = M.ModelConfig(arch="gcn", in_dim=6, hidden=8, out_dim=3,
+                            layers=2, dropout=0.0)
+        qcfg = M.QuantConfig(method="a2q")
+        rng = jax.random.PRNGKey(1)
+        params = M.init_params(rng, cfg)
+        qp = M.init_qparams(rng, cfg, qcfg, 4)
+        x = jnp.asarray(
+            np.random.default_rng(1).normal(size=(4, 6)).astype(np.float32)
+        )
+        zero = jnp.zeros(4)
+        out_jnp, _ = M.forward(params, qp, x, edges, cfg, qcfg, prot_mask=zero)
+        out_pl, _ = M.forward(
+            params, qp, x, edges, cfg, qcfg, prot_mask=zero, impl="pallas"
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_jnp), np.asarray(out_pl), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestGraphBatching:
+    def test_pad_batch_conserves_graphs(self):
+        ds = D.make_graph_dataset("synth-zinc", seed=0)
+        graphs = ds.graphs[:4]
+        total_n = sum(g.num_nodes for g in graphs)
+        feats, edges = M.pad_graph_batch(graphs, total_n + 10, 4096, ds.num_features)
+        n2g = np.asarray(edges.node2graph)
+        for gi, g in enumerate(graphs):
+            assert (n2g == gi).sum() == g.num_nodes
+        # padding nodes route to the dummy segment
+        assert (n2g == len(graphs)).sum() == 10
+        assert float(jnp.sum(edges.node_mask)) == total_n
+
+    def test_padding_edges_have_zero_weight(self):
+        ds = D.make_graph_dataset("synth-zinc", seed=0)
+        feats, edges = M.pad_graph_batch(ds.graphs[:2], 200, 2048, ds.num_features)
+        w = np.asarray(edges.gcn_w)
+        nz = int((w > 0).sum())
+        real_e = sum(
+            g.indices.shape[0] + g.num_nodes for g in ds.graphs[:2]
+        )
+        assert nz == real_e
+
+    def test_block_diagonal_no_cross_graph_messages(self):
+        ds = D.make_graph_dataset("synth-zinc", seed=0)
+        feats, edges = M.pad_graph_batch(ds.graphs[:3], 150, 1024, ds.num_features)
+        src = np.asarray(edges.src)
+        dst = np.asarray(edges.dst)
+        n2g = np.asarray(edges.node2graph)
+        w = np.asarray(edges.gcn_w)
+        real = w > 0
+        assert (n2g[src[real]] == n2g[dst[real]]).all()
+
+
+class TestBitsAccounting:
+    def test_feature_bits_and_dims_cover_all_maps(self):
+        cfg = M.ModelConfig(arch="gin", in_dim=6, hidden=8, out_dim=3, layers=2)
+        qcfg = M.QuantConfig(method="a2q")
+        qp = M.init_qparams(jax.random.PRNGKey(0), cfg, qcfg, 10)
+        bits, dims = M.feature_bits_and_dims(qp, cfg)
+        # 2 layer inputs + 2 GIN hidden maps
+        assert len(bits) == 4
+        assert dims[0] == 6 and dims[1] == 8
+
+    def test_avg_bits_at_init_is_init_bits(self):
+        cfg = M.ModelConfig(arch="gcn", in_dim=6, hidden=8, out_dim=3, layers=2)
+        qcfg = M.QuantConfig(method="a2q", init_bits=4.0)
+        qp = M.init_qparams(jax.random.PRNGKey(0), cfg, qcfg, 10)
+        bits, dims = M.feature_bits_and_dims(qp, cfg)
+        assert float(Q.average_bits(bits, dims)) == pytest.approx(4.0)

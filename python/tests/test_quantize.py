@@ -1,0 +1,192 @@
+"""L2 quantizer semantics: Eq. 10 gradients, Local Gradient, NNS, penalties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _case(seed, n=8, f=16):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(0.02, 0.2, n).astype(np.float32))
+    b = jnp.asarray(rng.uniform(2.0, 7.0, n).astype(np.float32))
+    return x, s, b
+
+
+class TestForwardSemantics:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_forward_matches_ref(self, seed):
+        x, s, b = _case(seed)
+        got = Q.a2q_quantize(x, s, b, True, "global")
+        want = ref.quantize_ref(x, s, b, signed=True)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_codes_within_levels(self, seed):
+        """|x̄| ≤ 2^{b-1} − 1 — the fixed-point representability invariant."""
+        x, s, b = _case(seed)
+        xq = np.asarray(Q.a2q_quantize(x, s, b, True, "global"))
+        codes = np.abs(xq / np.maximum(np.asarray(s)[:, None], 1e-9))
+        levels = 2 ** (np.round(np.asarray(b)) - 1) - 1
+        assert (codes <= levels[:, None] + 1e-4).all()
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_inrange_error_below_half_step(self, seed):
+        x, s, b = _case(seed)
+        xq = np.asarray(Q.a2q_quantize(x, s, b, True, "global"))
+        s_col = np.asarray(s)[:, None]
+        levels = (2 ** (np.round(np.asarray(b)) - 1) - 1)[:, None]
+        in_range = np.abs(np.asarray(x)) < s_col * levels
+        err = np.abs(xq - np.asarray(x))
+        assert (err[in_range] <= s_col.repeat(x.shape[1], 1)[in_range] / 2 + 1e-6).all()
+
+
+class TestGradients:
+    def test_ste_passes_inrange_blocks_clipped(self):
+        x = jnp.asarray([[0.05, 10.0]])
+        s = jnp.asarray([0.1])
+        b = jnp.asarray([4.0])
+        g = jax.grad(lambda xx: jnp.sum(Q.a2q_quantize(xx, s, b, True, "global")))(x)
+        assert g[0, 0] == 1.0  # in range
+        assert g[0, 1] == 0.0  # clipped
+
+    def test_step_gradient_eq10_inrange(self):
+        """In-range: dxq/ds = (xq - x)/s (Eq. 10 upper row)."""
+        x = jnp.asarray([[0.234]])
+        s = jnp.asarray([0.1])
+        b = jnp.asarray([6.0])
+        gs = jax.grad(
+            lambda ss: jnp.sum(Q.a2q_quantize(x, ss, b, True, "global"))
+        )(s)
+        xq = float(Q.a2q_quantize(x, s, b, True, "global")[0, 0])
+        assert gs[0] == pytest.approx((xq - 0.234) / 0.1, rel=1e-5)
+
+    def test_step_gradient_eq10_clipped(self):
+        x = jnp.asarray([[99.0]])
+        s = jnp.asarray([0.1])
+        b = jnp.asarray([4.0])
+        gs = jax.grad(
+            lambda ss: jnp.sum(Q.a2q_quantize(x, ss, b, True, "global"))
+        )(s)
+        assert gs[0] == pytest.approx(2**3 - 1)  # sign(x)·(2^{b-1}−1)
+
+    def test_bits_gradient_zero_inrange_nonzero_clipped(self):
+        x = jnp.asarray([[0.05, 99.0]])
+        s = jnp.asarray([0.1])
+        b = jnp.asarray([4.0])
+        gb = jax.grad(
+            lambda bb: jnp.sum(Q.a2q_quantize(x, s, bb, True, "global"))
+        )(b)
+        # only the clipped element contributes: 2^{b-1}·ln2·s
+        assert gb[0] == pytest.approx(2**3 * np.log(2) * 0.1, rel=1e-5)
+
+    def test_local_gradient_nonzero_when_task_grad_zero(self):
+        """§3.2: with a zero upstream cotangent, global grads vanish but
+        Local Gradient still trains (s, b)."""
+        x, s, b = _case(3)
+
+        def loss_global(ss):
+            xq = Q.a2q_quantize(x, ss, b, True, "global")
+            return jnp.sum(xq * 0.0)  # zero task gradient
+
+        def loss_local(ss):
+            xq = Q.a2q_quantize(x, ss, b, True, "local")
+            return jnp.sum(xq * 0.0)
+
+        g_global = jax.grad(loss_global)(s)
+        g_local = jax.grad(loss_local)(s)
+        assert float(jnp.abs(g_global).max()) == 0.0
+        assert float(jnp.abs(g_local).max()) > 0.0
+
+    def test_local_gradient_matches_eq7(self):
+        """Eq. 7: dE/ds = (1/d) Σ sign(xq−x)·dxq/ds."""
+        x, s, b = _case(11, n=4, f=8)
+
+        def loss(ss):
+            return jnp.sum(Q.a2q_quantize(x, ss, b, True, "local"))
+
+        g = jax.grad(loss)(s)
+        xq = np.asarray(Q.a2q_quantize(x, s, b, True, "global"))
+        xn, sn, bn = np.asarray(x), np.asarray(s), np.asarray(b)
+        lv = 2 ** (np.round(bn) - 1) - 1
+        in_range = np.abs(xn) < sn[:, None] * lv[:, None]
+        dxq_ds = np.where(
+            in_range, (xq - xn) / sn[:, None], np.sign(xn) * lv[:, None]
+        )
+        want = (np.sign(xq - xn) / x.shape[1] * dxq_ds).sum(-1)
+        np.testing.assert_allclose(np.asarray(g), want, rtol=1e-4, atol=1e-6)
+
+
+class TestNnsTraining:
+    def test_index_matches_ref_and_grads_scatter(self):
+        x, _, _ = _case(5, n=32, f=8)
+        sg = jnp.asarray(np.linspace(0.01, 0.5, 16).astype(np.float32))
+        bg = jnp.full((16,), 4.0)
+        (xq, idx) = Q.nns_quantize_train(x, sg, bg)
+        want_idx, _, _ = ref.nns_select_ref(x, sg, bg)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_idx))
+        # gradient w.r.t. group steps only lands on used groups
+        g = jax.grad(lambda ss: jnp.sum(Q.nns_quantize_train(x, ss, bg)[0] ** 2))(sg)
+        used = set(np.asarray(idx).tolist())
+        for j in range(16):
+            if j not in used:
+                assert float(g[j]) == 0.0
+
+
+class TestMemoryPenalty:
+    def test_zero_at_target(self):
+        bits = [jnp.full((100,), 4.0)]
+        target = 100 * 16 * 4 / 8192
+        assert float(Q.memory_penalty(bits, [16], target)) == pytest.approx(0.0)
+
+    def test_gradient_sign_pulls_toward_target(self):
+        bits = [jnp.full((100,), 6.0)]
+        target = 100 * 16 * 2 / 8192  # want 2 bits
+        g = jax.grad(lambda b: Q.memory_penalty([b], [16], target))(bits[0])
+        assert (np.asarray(g) > 0).all()  # positive grad → bits decrease
+
+    def test_average_bits_weighted_by_dim(self):
+        bits = [jnp.full((10,), 2.0), jnp.full((10,), 6.0)]
+        avg = float(Q.average_bits(bits, [1, 3]))
+        assert avg == pytest.approx((2 * 1 + 6 * 3) / 4)
+
+    def test_compression_ratio(self):
+        assert Q.compression_ratio(1.7) == pytest.approx(32 / 1.7)
+
+
+class TestBaselines:
+    def test_dq_protection_bypasses_quant(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)).astype(np.float32))
+        s = jnp.asarray(0.05)
+        prot = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+        out = np.asarray(Q.dq_quantize(x, s, prot))
+        np.testing.assert_allclose(out[0], np.asarray(x)[0])  # protected
+        assert not np.allclose(out[1], np.asarray(x)[1])  # quantized
+
+    def test_binary_is_sign_times_rowmean(self):
+        x = jnp.asarray([[1.0, -2.0, 3.0]])
+        out = np.asarray(Q.binary_quantize(x))
+        np.testing.assert_allclose(np.abs(out), 2.0 * np.ones((1, 3)))
+        np.testing.assert_allclose(np.sign(out), [[1, -1, 1]])
+
+    def test_manual_bits_match_budget(self):
+        deg = np.arange(100)
+        bits = np.asarray(Q.manual_bits_by_degree(deg, 2.2))
+        assert bits.mean() == pytest.approx(2.2, abs=0.02)
+        # high-degree nodes get the high bitwidth
+        assert bits[np.argsort(-deg)[:10]].mean() >= bits.mean()
+
+    def test_lsq_forward(self):
+        x = jnp.asarray([[0.123, -0.04]])
+        out = np.asarray(Q.lsq_quantize(x, jnp.asarray(0.05), 4.0, True))
+        np.testing.assert_allclose(out, [[0.1, -0.05]], atol=1e-6)

@@ -1,0 +1,124 @@
+"""End-to-end training smoke tests (tiny budgets) + AOT export round-trip."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import compile.train as T
+from compile import datasets as D
+from compile.train import TrainConfig
+
+
+@pytest.fixture(autouse=True)
+def _tmp_results(tmp_path, monkeypatch):
+    monkeypatch.setenv("A2Q_RESULTS", str(tmp_path))
+    yield
+
+
+def _node_cfg(**kw):
+    base = dict(dataset="synth-cora", arch="gcn", method="a2q", epochs=8,
+                hidden=8, penalty_warmup=2)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+class TestNodeTraining:
+    def test_loss_decreases_and_above_chance(self):
+        blob, _ = T.train_node(_node_cfg(epochs=25), use_cache=False)[:2]
+        hist = blob["history"]
+        assert hist[-1][1] < hist[0][1]  # train loss decreased
+        assert blob["accuracy"] > 1.0 / 7 + 0.1  # well above chance
+
+    def test_local_gradient_learns_steps_for_unlabeled_nodes(self):
+        """§3.2: steps of nodes with zero task gradient must still move."""
+        cfg = _node_cfg(epochs=5)
+        T.train_node(cfg, use_cache=False)
+        tree, mcfg, qcfg, ds = T.rebuild_tree(cfg)
+        s = np.asarray(tree["qp"]["feat"][1]["s"])
+        # practically all nodes moved away from the N(0.01, 0.01) init
+        moved = np.abs(s - 0.01) > 1e-4
+        assert moved.mean() > 0.9
+
+    def test_fp32_has_no_qparams(self):
+        cfg = _node_cfg(method="fp32", epochs=4)
+        blob, _ = T.train_node(cfg, use_cache=False)[:2]
+        assert blob["avg_bits"] == 32.0
+        assert blob["bits_hist"] == []
+
+    def test_grad_zero_fraction_probe(self):
+        blob, _ = T.train_node(_node_cfg(epochs=4), use_cache=False)[:2]
+        assert 0.0 <= blob["grad_zero_frac"] <= 1.0
+
+    def test_cache_roundtrip(self):
+        cfg = _node_cfg(epochs=4)
+        blob1, p1 = T.train_node(cfg, use_cache=False)[:2]
+        blob2, p2 = T.train_node(cfg, use_cache=True)[:2]
+        assert p1 == p2
+        assert blob1["accuracy"] == blob2["accuracy"]
+
+    def test_ablation_flags(self):
+        cfg = _node_cfg(epochs=4, learn_bits=False)
+        blob, _ = T.train_node(cfg, use_cache=False)[:2]
+        # bits must stay at the 4-bit init
+        assert blob["avg_bits"] == pytest.approx(4.0)
+
+    def test_dq_baseline_runs(self):
+        blob, _ = T.train_node(_node_cfg(method="dq", epochs=4), use_cache=False)[:2]
+        assert blob["avg_bits"] == 4.0
+
+    def test_manual_bits_assignment(self):
+        cfg = _node_cfg(method="manual", epochs=4, manual_avg_bits=3.0)
+        blob, _ = T.train_node(cfg, use_cache=False)[:2]
+        assert blob["avg_bits"] == pytest.approx(3.0, abs=0.3)
+
+
+class TestGraphTraining:
+    def test_zinc_regression_improves(self):
+        cfg = TrainConfig(dataset="synth-zinc", arch="gcn", method="a2q",
+                          epochs=6, hidden=16, layers=2, batch_graphs=16,
+                          penalty_warmup=2, lam=0.5, target_avg_bits=3.5)
+        blob, _ = T.train_graph(cfg, use_cache=False)[:2]
+        assert blob["metric_name"] == "mae"
+        hist = blob["history"]
+        assert hist[-1][1] < hist[0][1]
+
+    def test_nns_groups_saved(self):
+        cfg = TrainConfig(dataset="synth-zinc", arch="gin", method="a2q",
+                          epochs=3, hidden=16, layers=2, batch_graphs=16,
+                          nns_m=64)
+        T.train_graph(cfg, use_cache=False)
+        tree, mcfg, qcfg, _ = T.rebuild_tree(cfg)
+        assert tree["qp"]["feat"][0]["s"].shape == (64,)
+        assert qcfg.nns
+
+
+class TestExport:
+    def test_export_writes_complete_artifact(self, tmp_path):
+        from compile.aot import export_variant
+
+        cfg = _node_cfg(epochs=3)
+        man_path = export_variant(cfg, str(tmp_path / "models"))
+        with open(man_path) as fh:
+            man = json.load(fh)
+        d = tmp_path / "models"
+        assert (d / man["hlo"]).exists()
+        assert (d / man["weights_bin"]).exists()
+        assert man["expected_head"]
+        assert man["num_nodes"] == 2708
+        # weights file length matches the tensor table
+        total = sum(int(np.prod(t["shape"]) or 1) for t in man["tensors"])
+        assert os.path.getsize(d / man["weights_bin"]) == 4 * total
+
+    def test_hlo_text_parses_back(self, tmp_path):
+        """The emitted HLO text must be loadable (the rust runtime contract)."""
+        from compile.aot import export_variant
+        from jax._src.lib import xla_client as xc
+
+        cfg = _node_cfg(epochs=3)
+        man_path = export_variant(cfg, str(tmp_path / "models"))
+        with open(man_path) as fh:
+            man = json.load(fh)
+        text = (tmp_path / "models" / man["hlo"]).read_text()
+        assert "ENTRY" in text and "parameter(0)" in text

@@ -1,0 +1,205 @@
+//! End-to-end model simulation + the speedup/energy comparisons behind the
+//! paper's Tables 1–2 "Speedup" column and Fig. 22.
+
+use crate::graph::csr::Csr;
+use crate::quant::mixed::BitsFile;
+
+use super::energy::EnergyModel;
+use super::simulator::{CycleStats, Simulator};
+
+/// Workload description of one model inference: layer dims + per-map bits.
+#[derive(Debug, Clone)]
+pub struct ModelWorkload {
+    /// (f_in, f_out) per matmul, in execution order
+    pub matmuls: Vec<(usize, usize)>,
+    /// per-matmul input bitwidths (one entry per node, length N); uniform
+    /// baselines pass a constant vector
+    pub bits: Vec<Vec<u8>>,
+    /// feature dim entering each aggregation
+    pub agg_dims: Vec<usize>,
+    /// NNS group count (0 = node-level, no NNS search)
+    pub nns_m: usize,
+}
+
+impl ModelWorkload {
+    /// Build from an exported `.bits.bin` plus the model's layer dims.
+    pub fn from_bits_file(bf: &BitsFile, matmul_dims: Vec<(usize, usize)>, nns_m: usize) -> ModelWorkload {
+        let bits: Vec<Vec<u8>> = bf.maps.iter().map(|(b, _)| b.clone()).collect();
+        let agg_dims = matmul_dims.iter().map(|&(fi, _)| fi).collect();
+        ModelWorkload {
+            matmuls: matmul_dims,
+            bits,
+            agg_dims,
+            nns_m,
+        }
+    }
+
+    /// Uniform-bitwidth clone (the DQ-INT4 / arbitrary-b baselines).
+    pub fn with_uniform_bits(&self, b: u8) -> ModelWorkload {
+        let mut w = self.clone();
+        for bits in w.bits.iter_mut() {
+            for x in bits.iter_mut() {
+                *x = b;
+            }
+        }
+        w
+    }
+}
+
+/// Simulate a full model inference over `csr`.
+pub fn simulate_model_cycles(
+    sim: &Simulator,
+    csr: &Csr,
+    workload: &ModelWorkload,
+) -> CycleStats {
+    let mut total = CycleStats::default();
+    let n = csr.num_nodes();
+    for (li, &(f_in, f_out)) in workload.matmuls.iter().enumerate() {
+        let uniform4 = vec![4u8; n];
+        let bits = workload
+            .bits
+            .get(li)
+            .map(|b| {
+                if b.len() == n {
+                    b.clone()
+                } else if b.is_empty() {
+                    uniform4.clone()
+                } else {
+                    // NNS groups: expand by cycling (distribution preserved)
+                    (0..n).map(|i| b[i % b.len()]).collect()
+                }
+            })
+            .unwrap_or(uniform4);
+        if workload.nns_m > 0 {
+            total.add(&sim.nns_phase(n, f_in, workload.nns_m));
+        }
+        total.add(&sim.update_phase(&bits, f_in, f_out));
+        let agg_dim = workload.agg_dims.get(li).copied().unwrap_or(f_out);
+        total.add(&sim.aggregate_phase(csr, agg_dim));
+    }
+    total
+}
+
+/// Speedup of a mixed-precision model vs the DQ-INT4 baseline on the same
+/// graph — the Tables 1–2 "Speedup" definition (DQ = 1×).
+pub fn speedup_vs_dq(sim: &Simulator, csr: &Csr, workload: &ModelWorkload) -> f64 {
+    let ours = simulate_model_cycles(sim, csr, workload).total_cycles();
+    let dq = simulate_model_cycles(sim, csr, &workload.with_uniform_bits(4)).total_cycles();
+    if ours == 0 {
+        return 0.0;
+    }
+    dq as f64 / ours as f64
+}
+
+/// Fig. 22: energy-efficiency ratio vs the fp32-GPU model.
+pub fn energy_efficiency_vs_gpu(
+    sim: &Simulator,
+    csr: &Csr,
+    workload: &ModelWorkload,
+) -> f64 {
+    let stats = simulate_model_cycles(sim, csr, workload);
+    EnergyModel::default().efficiency_vs_gpu(&stats)
+}
+
+/// Fixed-vs-float op-count ratio (Table 6).
+pub fn float_op_ratio(sim: &Simulator, csr: &Csr, workload: &ModelWorkload) -> (u64, u64, f64) {
+    let s = simulate_model_cycles(sim, csr, workload);
+    let fixed = s.int_mults + s.int_adds;
+    let ratio = s.float_ops as f64 / fixed.max(1) as f64;
+    (fixed, s.float_ops, ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::config::AccelConfig;
+    use crate::util::rng::Rng;
+
+    fn ba_graph(n: usize) -> Csr {
+        let mut rng = Rng::new(7);
+        crate::graph::generate::preferential_attachment(&mut rng, n, 2)
+    }
+
+    /// Power-law bits: low degree → low bits (the learned pattern).
+    fn degree_bits(csr: &Csr) -> Vec<u8> {
+        (0..csr.num_nodes())
+            .map(|v| match csr.in_degree(v) {
+                0..=3 => 2u8,
+                4..=8 => 3,
+                9..=20 => 5,
+                _ => 8,
+            })
+            .collect()
+    }
+
+    fn workload(csr: &Csr) -> ModelWorkload {
+        let bits = degree_bits(csr);
+        ModelWorkload {
+            matmuls: vec![(128, 64), (64, 16)],
+            bits: vec![bits.clone(), bits],
+            agg_dims: vec![64, 16],
+            nns_m: 0,
+        }
+    }
+
+    #[test]
+    fn speedup_in_paper_range() {
+        let csr = ba_graph(3000);
+        let sim = Simulator::new(AccelConfig::default());
+        let s = speedup_vs_dq(&sim, &csr, &workload(&csr));
+        // paper reports 1.2x–2.0x for learned bits vs DQ-INT4
+        assert!(s > 1.1 && s < 3.0, "speedup {s}");
+    }
+
+    #[test]
+    fn uniform_4bit_speedup_is_one() {
+        let csr = ba_graph(1000);
+        let sim = Simulator::new(AccelConfig::default());
+        let w = workload(&csr).with_uniform_bits(4);
+        let s = speedup_vs_dq(&sim, &csr, &w);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_bits_slower() {
+        let csr = ba_graph(1000);
+        let sim = Simulator::new(AccelConfig::default());
+        let w8 = workload(&csr).with_uniform_bits(8);
+        let s = speedup_vs_dq(&sim, &csr, &w8);
+        assert!(s < 1.0, "8-bit should be slower than 4-bit: {s}");
+    }
+
+    #[test]
+    fn energy_efficiency_positive_and_large() {
+        let csr = ba_graph(1000);
+        let sim = Simulator::new(AccelConfig::default());
+        let e = energy_efficiency_vs_gpu(&sim, &csr, &workload(&csr));
+        assert!(e > 2.0, "efficiency {e}");
+    }
+
+    #[test]
+    fn float_ratio_matches_table6_shape() {
+        // Table 6: float ops < 1% of fixed ops
+        let csr = ba_graph(2000);
+        let sim = Simulator::new(AccelConfig::default());
+        let mut w = workload(&csr);
+        w.nns_m = 1000;
+        let (_fixed, _float, ratio) = float_op_ratio(&sim, &csr, &w);
+        // paper's Table 6 reports 0.34%–0.98% at their (larger) feature
+        // dims; the ratio scales ~1/F, so this small config allows 5%.
+        assert!(ratio < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn nns_overhead_under_one_percent_of_cycles() {
+        // §5.4: NNS adds ~0.95% latency
+        let csr = ba_graph(2000);
+        let sim = Simulator::new(AccelConfig::default());
+        let base = simulate_model_cycles(&sim, &csr, &workload(&csr)).total_cycles();
+        let mut w = workload(&csr);
+        w.nns_m = 1000;
+        let with_nns = simulate_model_cycles(&sim, &csr, &w).total_cycles();
+        let overhead = with_nns as f64 / base as f64 - 1.0;
+        assert!(overhead < 0.02, "overhead {overhead}");
+    }
+}

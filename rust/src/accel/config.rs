@@ -1,0 +1,70 @@
+//! Accelerator architecture parameters (paper §A.7.5 defaults).
+
+/// Static architecture description.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// Processing engines (rows processed in lockstep per phase).
+    pub pes: usize,
+    /// Bit-serial MACs per PE (feature dims processed per chunk).
+    pub macs_per_pe: usize,
+    /// Weight bitwidth (fixed 4 in the paper).
+    pub weight_bits: u8,
+    /// Input buffer bytes (2 MB).
+    pub input_buf: usize,
+    /// Output buffer bytes (2 MB).
+    pub output_buf: usize,
+    /// Edge buffer bytes (256 KB).
+    pub edge_buf: usize,
+    /// Weight buffer bytes (256 KB).
+    pub weight_buf: usize,
+    /// Sort nodes by in-degree before aggregation (the paper's
+    /// load-balancing optimisation).  Exposed for the ablation bench.
+    pub degree_sorted_schedule: bool,
+    /// Sort nodes by bitwidth before the update phase (groups nodes of
+    /// similar precision into the same lockstep tile; the bit-serial
+    /// analogue of the degree sort — paper processes "nodes with similar
+    /// in-degrees in parallel", and bits track degree).
+    pub bit_sorted_schedule: bool,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            pes: 256,
+            macs_per_pe: 16,
+            weight_bits: 4,
+            input_buf: 2 << 20,
+            output_buf: 2 << 20,
+            edge_buf: 256 << 10,
+            weight_buf: 256 << 10,
+            degree_sorted_schedule: true,
+            bit_sorted_schedule: true,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Unoptimized variant (no scheduling sorts) for ablations.
+    pub fn unsorted() -> Self {
+        AccelConfig {
+            degree_sorted_schedule: false,
+            bit_sorted_schedule: false,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = AccelConfig::default();
+        assert_eq!(c.pes, 256);
+        assert_eq!(c.macs_per_pe, 16);
+        assert_eq!(c.weight_bits, 4);
+        assert_eq!(c.input_buf, 2 * 1024 * 1024);
+        assert_eq!(c.edge_buf, 256 * 1024);
+    }
+}

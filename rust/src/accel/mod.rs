@@ -1,0 +1,35 @@
+//! Cycle-accurate simulator of the paper's bit-serial GNN accelerator
+//! (§A.7.5) and its energy model (§A.7.6).
+//!
+//! Architecture being modelled:
+//! * 256 Processing Engines × 16 bit-serial MACs (Stripes-style, Judd et
+//!   al. 2016): an m-bit node feature × 4-bit weight multiply takes m
+//!   cycles; only the node features are serialized.
+//! * Update phase `B = X·W`: 256 consecutive X rows × one W column mapped
+//!   per phase; PEs run in lockstep, so a 256-row tile costs
+//!   `ceil(F_in/16) · max(bits in tile)` cycles per output column.
+//! * Aggregation phase `X' = Â·B` on CSR with full-zero-row elimination;
+//!   nodes are processed 256 at a time **sorted by in-degree descending**
+//!   (the paper's load-balancing), costing `max(deg in group) · ceil(F/16)`
+//!   add-cycles per group.
+//! * On-chip SRAM: Input 2 MB, Output 2 MB (swapped between layers), Edge
+//!   256 KB, Weight 256 KB; spills induce extra off-chip (HBM) traffic.
+//! * Energy: 45 nm op energies (paper Fig. 21), CACTI-style SRAM access
+//!   cost, HBM at 7 pJ/bit; the GPU comparison point runs the same FLOPs in
+//!   fp32 with DRAM-resident data.
+//!
+//! "Cycle-accurate" here means deterministic per-tile cycle accounting of
+//! the lockstep dataflow — the same methodology the paper uses for its
+//! speedup tables (their simulator, like ours, does not model pipeline
+//! hazards inside the MAC array because the dataflow is statically
+//! scheduled).
+
+pub mod compare;
+pub mod config;
+pub mod energy;
+pub mod simulator;
+
+pub use compare::{simulate_model_cycles, speedup_vs_dq, ModelWorkload};
+pub use config::AccelConfig;
+pub use energy::{EnergyModel, EnergyReport};
+pub use simulator::{CycleStats, Simulator};

@@ -1,0 +1,226 @@
+//! Dynamic batching policy.
+//!
+//! Graph-level: requests accumulate until the **node budget** of the
+//! static-shape executable fills, the **graph-slot capacity** is reached,
+//! or the oldest request's **deadline** expires — the same trade-off as
+//! vLLM-style continuous batching, specialised to padded graph batches.
+//! Node-level: all queued classify requests coalesce onto one full-graph
+//! forward (the forward cost is independent of the query count).
+
+use std::time::{Duration, Instant};
+
+use super::request::{Payload, Request};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// max nodes across a graph-level batch (executable capacity)
+    pub node_budget: usize,
+    /// max graphs per batch (executable graph slots)
+    pub graph_slots: usize,
+    /// flush even if underfull once the oldest request waited this long
+    pub max_wait: Duration,
+    /// max queued requests before admission rejects (backpressure)
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            node_budget: 1024,
+            graph_slots: 16,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Accumulates requests into flushable batches.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    pending: Vec<Request>,
+    pending_nodes: usize,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        DynamicBatcher {
+            cfg,
+            pending: Vec::new(),
+            pending_nodes: 0,
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Offer a request.  Returns `Err(req)` when the queue is full
+    /// (admission control — caller replies with overload).
+    pub fn offer(&mut self, req: Request) -> std::result::Result<(), Request> {
+        if self.pending.len() >= self.cfg.queue_cap {
+            return Err(req);
+        }
+        self.pending_nodes += req.num_nodes();
+        self.pending.push(req);
+        Ok(())
+    }
+
+    /// Would adding `n` more nodes overflow the budget?
+    fn over_budget(&self) -> bool {
+        self.pending_nodes >= self.cfg.node_budget
+            || self.pending.len() >= self.cfg.graph_slots
+    }
+
+    fn deadline_expired(&self, now: Instant) -> bool {
+        self.pending
+            .first()
+            .map(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+            .unwrap_or(false)
+    }
+
+    /// Pull the next batch if a flush condition holds (or `force`).
+    /// Greedy packing in arrival order; a graph that would overflow the
+    /// node budget closes the batch (it stays queued for the next one).
+    pub fn flush(&mut self, now: Instant, force: bool) -> Option<Vec<Request>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        if !(force || self.over_budget() || self.deadline_expired(now)) {
+            return None;
+        }
+        let mut batch = Vec::new();
+        let mut nodes = 0usize;
+        let mut rest = Vec::new();
+        for req in self.pending.drain(..) {
+            let n = req.num_nodes();
+            let fits = batch.len() < self.cfg.graph_slots
+                && (nodes + n <= self.cfg.node_budget || batch.is_empty());
+            if fits && rest.is_empty() {
+                nodes += n;
+                batch.push(req);
+            } else {
+                rest.push(req);
+            }
+        }
+        self.pending = rest;
+        self.pending_nodes = self.pending.iter().map(|r| r.num_nodes()).sum();
+        Some(batch)
+    }
+
+    /// Split a batch into (classify, predict) sub-batches — mixed payloads
+    /// execute separately but are accounted as one admission batch.
+    pub fn split_payloads(batch: Vec<Request>) -> (Vec<Request>, Vec<Request>) {
+        batch
+            .into_iter()
+            .partition(|r| matches!(r.payload, Payload::ClassifyNodes(_)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::graph::io::SmallGraph;
+    use std::sync::mpsc;
+
+    fn graph_req(n: usize) -> Request {
+        let csr = Csr::from_edges(n, &[]).unwrap();
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            model: "m".into(),
+            payload: Payload::PredictGraph(SmallGraph {
+                csr,
+                features: vec![0.0; n * 2],
+                target_class: 0,
+                target_value: 0.0,
+            }),
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn cfg(budget: usize, slots: usize) -> BatcherConfig {
+        BatcherConfig {
+            node_budget: budget,
+            graph_slots: slots,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 8,
+        }
+    }
+
+    #[test]
+    fn accumulates_until_budget() {
+        let mut b = DynamicBatcher::new(cfg(100, 16));
+        for _ in 0..3 {
+            b.offer(graph_req(20)).unwrap();
+        }
+        assert!(b.flush(Instant::now(), false).is_none()); // 60 < 100, fresh
+        b.offer(graph_req(50)).unwrap(); // 110 >= 100
+        let batch = b.flush(Instant::now(), false).unwrap();
+        // greedy packing: 20+20+20 fits, 50 overflows 100? 60+50=110 > 100
+        assert_eq!(batch.len(), 4 - 1);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn deadline_flushes_underfull_batch() {
+        let mut b = DynamicBatcher::new(cfg(1000, 16));
+        b.offer(graph_req(5)).unwrap();
+        assert!(b.flush(Instant::now(), false).is_none());
+        let later = Instant::now() + Duration::from_millis(5);
+        let batch = b.flush(later, false).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn graph_slot_cap() {
+        let mut b = DynamicBatcher::new(cfg(10_000, 2));
+        for _ in 0..3 {
+            b.offer(graph_req(5)).unwrap();
+        }
+        let batch = b.flush(Instant::now(), true).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn queue_cap_backpressure() {
+        let mut b = DynamicBatcher::new(cfg(1000, 16));
+        for _ in 0..8 {
+            b.offer(graph_req(1)).unwrap();
+        }
+        assert!(b.offer(graph_req(1)).is_err());
+    }
+
+    #[test]
+    fn conservation_property() {
+        use crate::util::prop::{property, Gen};
+        property("batcher conserves requests", 30, |g: &mut Gen| {
+            let mut b = DynamicBatcher::new(cfg(g.usize_range(10, 200), g.usize_range(1, 8)));
+            let total = g.usize_range(1, 30);
+            let mut accepted = 0;
+            for _ in 0..total {
+                if b.offer(graph_req(g.usize_range(1, 40))).is_ok() {
+                    accepted += 1;
+                }
+            }
+            let mut flushed = 0;
+            let far = Instant::now() + Duration::from_secs(1);
+            while let Some(batch) = b.flush(far, true) {
+                assert!(!batch.is_empty());
+                flushed += batch.len();
+            }
+            assert_eq!(flushed, accepted);
+            assert_eq!(b.pending_len(), 0);
+        });
+    }
+
+    #[test]
+    fn oversized_single_request_still_ships_alone() {
+        let mut b = DynamicBatcher::new(cfg(10, 4));
+        b.offer(graph_req(50)).unwrap(); // bigger than the whole budget
+        let batch = b.flush(Instant::now(), true).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+}

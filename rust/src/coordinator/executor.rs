@@ -1,0 +1,326 @@
+//! Execution backends behind the coordinator.
+//!
+//! * [`PjrtExecutor`] — runs the AOT HLO artifact through `runtime::Engine`
+//!   (the production path: python never touched).
+//! * [`NativeExecutor`] — pure-rust integer/fp path (`gnn::infer`), used as
+//!   a cross-check backend and for environments without the PJRT library.
+//! * [`MockExecutor`] — deterministic fake for coordinator unit tests.
+
+use crate::error::{Error, Result};
+use crate::gnn::{forward_fp, GnnModel, GraphInput};
+use crate::graph::batch::GraphBatch;
+use crate::graph::io::{Dataset, NodeData, SmallGraph};
+use crate::graph::norm::EdgeForm;
+use crate::runtime::engine::EngineHandle;
+use crate::runtime::{ExecInput, ModelArtifact};
+
+/// A backend able to run the two batch kinds.
+pub trait BatchExecutor: Send + Sync {
+    /// Full-graph node classification; returns per-queried-node logits.
+    fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>>;
+    /// Batched graph-level prediction; returns per-graph outputs.
+    fn run_graph_batch(&self, graphs: &[&SmallGraph]) -> Result<Vec<Vec<f32>>>;
+    /// Executable batch capacity (nodes, graph slots); node-level models
+    /// report (N, 0).
+    fn capacity(&self) -> (usize, usize);
+    fn out_dim(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT
+// ---------------------------------------------------------------------------
+
+/// Runs the compiled HLO artifact (via the engine service thread).
+pub struct PjrtExecutor {
+    engine: EngineHandle,
+    key: String,
+    node: Option<NodeSide>,
+    graph_caps: Option<(usize, usize, usize)>, // (nodes, edges, graphs)
+    feat_dim: usize,
+    out_dim: usize,
+    /// surviving logical parameter indices (XLA drops unused entry params)
+    param_map: Vec<usize>,
+    /// weight tensors appended after the data inputs (manifest order)
+    weight_inputs: Vec<ExecInput>,
+}
+
+struct NodeSide {
+    features: Vec<f32>,
+    edges: EdgeForm,
+    num_nodes: usize,
+}
+
+impl PjrtExecutor {
+    /// Build from an artifact + its dataset (node-level needs the resident
+    /// graph; graph-level needs only capacities).
+    pub fn new(
+        engine: EngineHandle,
+        artifact: &ModelArtifact,
+        dataset: Option<&Dataset>,
+    ) -> Result<PjrtExecutor> {
+        engine.load_artifact(artifact)?;
+        let param_map = artifact.param_map()?;
+        let weight_inputs = artifact.weight_inputs()?;
+        let mut node = None;
+        let mut graph_caps = None;
+        if artifact.node_level {
+            let ds = match dataset {
+                Some(Dataset::Node(d)) => d,
+                _ => {
+                    return Err(Error::coordinator(
+                        "node-level executor needs its node dataset",
+                    ))
+                }
+            };
+            node = Some(NodeSide {
+                features: ds.features.clone(),
+                edges: EdgeForm::from_csr(&ds.csr),
+                num_nodes: ds.num_nodes(),
+            });
+        } else {
+            graph_caps = Some((
+                artifact.num_nodes,
+                artifact.num_edges,
+                artifact.graph_capacity,
+            ));
+        }
+        Ok(PjrtExecutor {
+            engine,
+            key: artifact.name.clone(),
+            node,
+            graph_caps,
+            feat_dim: artifact.in_dim,
+            out_dim: artifact.out_dim,
+            param_map,
+            weight_inputs,
+        })
+    }
+
+    /// Append the weight parameters, then keep only the logical inputs the
+    /// compiled program still expects (XLA drops unused entry params).
+    fn select_params(&self, data: Vec<ExecInput>) -> Vec<ExecInput> {
+        let mut logical: Vec<Option<ExecInput>> = data
+            .into_iter()
+            .chain(self.weight_inputs.iter().cloned())
+            .map(Some)
+            .collect();
+        self.param_map
+            .iter()
+            .filter_map(|&l| logical.get_mut(l).and_then(|slot| slot.take()))
+            .collect()
+    }
+
+    fn logits_full_graph(&self) -> Result<Vec<f32>> {
+        let side = self
+            .node
+            .as_ref()
+            .ok_or_else(|| Error::coordinator("not a node-level executor"))?;
+        let inputs = self.select_params(vec![
+            ExecInput::f32_2d(side.features.clone(), side.num_nodes, self.feat_dim),
+            ExecInput::i32_1d(side.edges.src.clone()),
+            ExecInput::i32_1d(side.edges.dst.clone()),
+            ExecInput::f32_1d(side.edges.gcn_w.clone()),
+            ExecInput::f32_1d(side.edges.sum_w.clone()),
+        ]);
+        self.engine.execute(&self.key, inputs)
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let logits = self.logits_full_graph()?;
+        let c = self.out_dim;
+        node_ids
+            .iter()
+            .map(|&v| {
+                let v = v as usize;
+                if (v + 1) * c > logits.len() {
+                    return Err(Error::coordinator(format!("node {v} out of range")));
+                }
+                Ok(logits[v * c..(v + 1) * c].to_vec())
+            })
+            .collect()
+    }
+
+    fn run_graph_batch(&self, graphs: &[&SmallGraph]) -> Result<Vec<Vec<f32>>> {
+        let (cap_n, cap_e, cap_g) = self
+            .graph_caps
+            .ok_or_else(|| Error::coordinator("not a graph-level executor"))?;
+        let batch = GraphBatch::pack(graphs, self.feat_dim, cap_n, cap_e, cap_g)?;
+        let inputs = self.select_params(vec![
+            ExecInput::f32_2d(batch.features, cap_n, self.feat_dim),
+            ExecInput::i32_1d(batch.src),
+            ExecInput::i32_1d(batch.dst),
+            ExecInput::f32_1d(batch.gcn_w),
+            ExecInput::f32_1d(batch.sum_w),
+            ExecInput::i32_1d(batch.node2graph),
+            ExecInput::f32_1d(batch.node_mask),
+        ]);
+        let out = self.engine.execute(&self.key, inputs)?;
+        let c = self.out_dim;
+        Ok((0..graphs.len()).map(|g| out[g * c..(g + 1) * c].to_vec()).collect())
+    }
+
+    fn capacity(&self) -> (usize, usize) {
+        match (&self.node, self.graph_caps) {
+            (Some(n), _) => (n.num_nodes, 0),
+            (None, Some((n, _e, g))) => (n, g),
+            _ => (0, 0),
+        }
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native
+// ---------------------------------------------------------------------------
+
+/// Pure-rust backend over `gnn::forward_fp`.
+pub struct NativeExecutor {
+    model: GnnModel,
+    node: Option<NodeSide>,
+    caps: (usize, usize, usize),
+}
+
+impl NativeExecutor {
+    pub fn new(model: GnnModel, dataset: Option<&Dataset>) -> Result<NativeExecutor> {
+        let mut node = None;
+        if model.node_level {
+            let ds: &NodeData = match dataset {
+                Some(Dataset::Node(d)) => d,
+                _ => {
+                    return Err(Error::coordinator(
+                        "node-level executor needs its node dataset",
+                    ))
+                }
+            };
+            node = Some(NodeSide {
+                features: ds.features.clone(),
+                edges: EdgeForm::from_csr(&ds.csr),
+                num_nodes: ds.num_nodes(),
+            });
+        }
+        let caps = (
+            model.num_nodes,
+            model
+                .manifest
+                .get("num_edges")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(model.num_nodes * 8),
+            model.graph_capacity.max(1),
+        );
+        Ok(NativeExecutor { model, node, caps })
+    }
+}
+
+impl BatchExecutor for NativeExecutor {
+    fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let side = self
+            .node
+            .as_ref()
+            .ok_or_else(|| Error::coordinator("not a node-level executor"))?;
+        let input = GraphInput::node_level(&side.features, self.model.in_dim, &side.edges);
+        let logits = forward_fp(&self.model, &input);
+        node_ids
+            .iter()
+            .map(|&v| {
+                let v = v as usize;
+                if v >= logits.rows {
+                    return Err(Error::coordinator(format!("node {v} out of range")));
+                }
+                Ok(logits.row(v).to_vec())
+            })
+            .collect()
+    }
+
+    fn run_graph_batch(&self, graphs: &[&SmallGraph]) -> Result<Vec<Vec<f32>>> {
+        let (cap_n, cap_e, cap_g) = self.caps;
+        let batch = GraphBatch::pack(graphs, self.model.in_dim, cap_n, cap_e, cap_g)?;
+        let input = GraphInput::batch(&batch);
+        let out = forward_fp(&self.model, &input);
+        Ok((0..graphs.len()).map(|g| out.row(g).to_vec()).collect())
+    }
+
+    fn capacity(&self) -> (usize, usize) {
+        if self.model.node_level {
+            (self.caps.0, 0)
+        } else {
+            (self.caps.0, self.caps.2)
+        }
+    }
+
+    fn out_dim(&self) -> usize {
+        self.model.out_dim
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock
+// ---------------------------------------------------------------------------
+
+/// Deterministic test double: returns node id / node count as "logits",
+/// optionally sleeping to emulate execution latency.
+pub struct MockExecutor {
+    pub out_dim: usize,
+    pub latency: std::time::Duration,
+}
+
+impl Default for MockExecutor {
+    fn default() -> Self {
+        MockExecutor {
+            out_dim: 2,
+            latency: std::time::Duration::ZERO,
+        }
+    }
+}
+
+impl BatchExecutor for MockExecutor {
+    fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.latency);
+        Ok(node_ids
+            .iter()
+            .map(|&v| {
+                let mut out = vec![0.0; self.out_dim];
+                out[v as usize % self.out_dim] = 1.0;
+                out
+            })
+            .collect())
+    }
+
+    fn run_graph_batch(&self, graphs: &[&SmallGraph]) -> Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.latency);
+        Ok(graphs
+            .iter()
+            .map(|g| {
+                let mut out = vec![0.0; self.out_dim];
+                out[g.num_nodes() % self.out_dim] = 1.0;
+                out
+            })
+            .collect())
+    }
+
+    fn capacity(&self) -> (usize, usize) {
+        (1024, 16)
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let m = MockExecutor::default();
+        let out = m.run_node_batch(&[0, 1, 2]).unwrap();
+        assert_eq!(out[0], vec![1.0, 0.0]);
+        assert_eq!(out[1], vec![0.0, 1.0]);
+        assert_eq!(out[2], vec![1.0, 0.0]);
+    }
+}

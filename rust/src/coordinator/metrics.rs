@@ -1,0 +1,142 @@
+//! Serving metrics: latency histograms + throughput counters.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latency: LatencyHistogram,
+    queue_wait: LatencyHistogram,
+    requests: u64,
+    responses: u64,
+    rejected: u64,
+    errors: u64,
+    batches: u64,
+    batched_requests: u64,
+    started: Option<Instant>,
+}
+
+/// Thread-safe metrics sink shared across the pipeline.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub mean_queue_us: f64,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn record_admitted(&self) {
+        let mut m = self.inner.lock().unwrap();
+        if m.started.is_none() {
+            m.started = Some(Instant::now());
+        }
+        m.requests += 1;
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn record_batch(&self, batch_size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batched_requests += batch_size as u64;
+    }
+
+    pub fn record_response(&self, latency_us: u64, queue_us: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.responses += 1;
+        m.latency.record_us(latency_us as f64);
+        m.queue_wait.record_us(queue_us as f64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let elapsed = m
+            .started
+            .map(|s| s.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        MetricsSnapshot {
+            requests: m.requests,
+            responses: m.responses,
+            rejected: m.rejected,
+            errors: m.errors,
+            batches: m.batches,
+            mean_batch_size: if m.batches == 0 {
+                0.0
+            } else {
+                m.batched_requests as f64 / m.batches as f64
+            },
+            mean_latency_us: m.latency.mean_us(),
+            p50_latency_us: m.latency.percentile_us(50.0),
+            p99_latency_us: m.latency.percentile_us(99.0),
+            mean_queue_us: m.queue_wait.mean_us(),
+            throughput_rps: m.responses as f64 / elapsed,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} responses={} rejected={} errors={} batches={} \
+             mean_batch={:.2} latency(mean/p50/p99)={:.0}/{:.0}/{:.0}µs \
+             queue_mean={:.0}µs throughput={:.1} rps",
+            self.requests,
+            self.responses,
+            self.rejected,
+            self.errors,
+            self.batches,
+            self.mean_batch_size,
+            self.mean_latency_us,
+            self.p50_latency_us,
+            self.p99_latency_us,
+            self.mean_queue_us,
+            self.throughput_rps,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.record_admitted();
+        m.record_admitted();
+        m.record_rejected();
+        m.record_batch(2);
+        m.record_response(100, 10);
+        m.record_response(300, 30);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.mean_batch_size, 2.0);
+        assert!((s.mean_latency_us - 200.0).abs() < 1.0);
+        assert!(s.render().contains("requests=2"));
+    }
+}

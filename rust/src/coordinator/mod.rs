@@ -1,0 +1,29 @@
+//! Serving coordinator (L3): router → dynamic batcher → worker pipeline.
+//!
+//! The deployable inference service in front of the AOT artifacts:
+//!
+//! * [`request`] — typed requests/responses (node classification over the
+//!   resident graph; graph-level prediction for client-supplied graphs).
+//! * [`batcher`] — dynamic batching: graph-level requests accumulate until
+//!   a node-count budget fills or a deadline expires (static-shape batches
+//!   for the PJRT executable); node-level queries coalesce onto one
+//!   full-graph forward.
+//! * [`router`] — dispatches to per-model runners, bounded queues give
+//!   admission-control backpressure.
+//! * [`executor`] — pluggable execution backends: PJRT artifact, native
+//!   integer path, or mock (tests).
+//! * [`metrics`] — latency histograms + throughput counters.
+//! * [`server`] — the `Coordinator` facade tying it together.
+
+pub mod batcher;
+pub mod executor;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use executor::{BatchExecutor, MockExecutor, NativeExecutor, PjrtExecutor};
+pub use metrics::Metrics;
+pub use request::{Prediction, Request, Response};
+pub use server::{Coordinator, CoordinatorConfig};

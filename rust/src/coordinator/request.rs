@@ -1,0 +1,78 @@
+//! Request / response types for the serving API.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::graph::io::SmallGraph;
+
+/// A prediction for one request.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// raw output vector (logits or regression value)
+    pub output: Vec<f32>,
+    /// argmax class for classification outputs
+    pub class: usize,
+}
+
+impl Prediction {
+    pub fn from_logits(output: Vec<f32>) -> Prediction {
+        let class = output
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Prediction { output, class }
+    }
+}
+
+/// Server response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub predictions: Vec<Prediction>,
+    pub model: String,
+    /// microseconds spent queued + executing
+    pub latency_us: u64,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+}
+
+/// Client request payload.
+#[derive(Debug)]
+pub enum Payload {
+    /// classify these nodes of the model's resident graph
+    ClassifyNodes(Vec<u32>),
+    /// predict for a client-supplied small graph
+    PredictGraph(SmallGraph),
+}
+
+/// Internal envelope: payload + reply channel + admission timestamp.
+#[derive(Debug)]
+pub struct Request {
+    pub model: String,
+    pub payload: Payload,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<crate::error::Result<Response>>,
+}
+
+impl Request {
+    pub fn num_nodes(&self) -> usize {
+        match &self.payload {
+            Payload::ClassifyNodes(ids) => ids.len(),
+            Payload::PredictGraph(g) => g.num_nodes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_argmax() {
+        let p = Prediction::from_logits(vec![0.1, 2.0, -1.0]);
+        assert_eq!(p.class, 1);
+        let empty = Prediction::from_logits(vec![]);
+        assert_eq!(empty.class, 0);
+    }
+}

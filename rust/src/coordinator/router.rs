@@ -1,0 +1,103 @@
+//! Request router: model name → per-model runner queue.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use crate::error::{Error, Result};
+
+use super::request::Request;
+
+/// Routes requests to per-model bounded queues.
+pub struct Router {
+    queues: HashMap<String, mpsc::SyncSender<Request>>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router {
+            queues: HashMap::new(),
+        }
+    }
+
+    /// Register a model runner queue; returns the receiving end.
+    pub fn register(&mut self, model: &str, depth: usize) -> mpsc::Receiver<Request> {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        self.queues.insert(model.to_string(), tx);
+        rx
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.queues.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Route a request.  `Err` carries the request back on unknown model or
+    /// full queue (the caller decides how to reply).
+    pub fn route(&self, req: Request) -> Result<()> {
+        let q = self.queues.get(&req.model).ok_or_else(|| {
+            Error::coordinator(format!("unknown model '{}'", req.model))
+        })?;
+        q.try_send(req)
+            .map_err(|e| match e {
+                mpsc::TrySendError::Full(_) => Error::coordinator("queue full"),
+                mpsc::TrySendError::Disconnected(_) => {
+                    Error::coordinator("runner stopped")
+                }
+            })
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Payload;
+    use std::time::Instant;
+
+    fn req(model: &str) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            model: model.into(),
+            payload: Payload::ClassifyNodes(vec![0]),
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn routes_to_registered_queue() {
+        let mut r = Router::new();
+        let rx = r.register("gcn", 4);
+        r.route(req("gcn")).unwrap();
+        assert!(rx.try_recv().is_ok());
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let r = Router::new();
+        assert!(r.route(req("nope")).is_err());
+    }
+
+    #[test]
+    fn full_queue_backpressure() {
+        let mut r = Router::new();
+        let _rx = r.register("gcn", 1);
+        r.route(req("gcn")).unwrap();
+        let err = r.route(req("gcn")).unwrap_err();
+        assert!(format!("{err}").contains("queue full"));
+    }
+
+    #[test]
+    fn lists_models_sorted() {
+        let mut r = Router::new();
+        let _a = r.register("zeta", 1);
+        let _b = r.register("alpha", 1);
+        assert_eq!(r.models(), vec!["alpha", "zeta"]);
+    }
+}

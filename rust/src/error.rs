@@ -1,0 +1,60 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for all a2q subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    pub fn dataset(msg: impl Into<String>) -> Self {
+        Error::Dataset(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn json(msg: impl Into<String>) -> Self {
+        Error::Json(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        Error::Coordinator(msg.into())
+    }
+}

@@ -1,0 +1,18 @@
+//! Native GNN inference (no python, no PJRT).
+//!
+//! Two execution paths over the same loaded parameters:
+//!
+//! * [`infer::forward_fp`] — f32 emulation of the quantized forward
+//!   (fake-quant), numerically identical to the exported HLO artifact;
+//!   integration tests pin it against the PJRT path and against the logits
+//!   recorded by python at export time.
+//! * [`infer::forward_int`] — the true integer path: per-node codes,
+//!   i32-accumulate matmuls, Eq. 2 outer-product rescale, Â never quantized
+//!   (Proof 2).  This is the arithmetic the paper's accelerator executes;
+//!   the simulator derives its cycle counts from exactly these shapes.
+
+pub mod infer;
+pub mod model;
+
+pub use infer::{forward_fp, forward_int, GraphInput};
+pub use model::{GnnModel, LayerParams, QuantMethod};

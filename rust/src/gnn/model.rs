@@ -1,0 +1,302 @@
+//! Model parameter loading from AOT manifests.
+//!
+//! `python/compile/aot.py` exports a `manifest.json` (tensor table) plus a
+//! flat `weights.bin` (little-endian f32 in table order).  Tensor names are
+//! jax key paths like `['model']['layers'][0]['w']`; this module parses
+//! them back into typed layer structs.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::quant::mixed::NodeQuantParams;
+use crate::tensor::Matrix;
+use crate::util::json::{self, Json};
+
+/// Quantization method baked into an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMethod {
+    Fp32,
+    A2q,
+    Dq,
+    Binary,
+}
+
+impl QuantMethod {
+    pub fn parse(s: &str) -> QuantMethod {
+        match s {
+            "a2q" | "a2q_global" | "manual" => QuantMethod::A2q,
+            "dq" => QuantMethod::Dq,
+            "binary" => QuantMethod::Binary,
+            _ => QuantMethod::Fp32,
+        }
+    }
+}
+
+/// One GNN layer's parameters (union across architectures).
+#[derive(Debug, Clone, Default)]
+pub struct LayerParams {
+    pub w: Option<Matrix<f32>>,
+    pub b: Vec<f32>,
+    // GIN MLP second matmul
+    pub w2: Option<Matrix<f32>>,
+    pub b2: Vec<f32>,
+    pub eps: f32,
+    // GAT attention
+    pub a_src: Option<Matrix<f32>>, // [heads, fh]
+    pub a_dst: Option<Matrix<f32>>,
+    pub attn_step: f32,
+    // per-output-column weight quant steps
+    pub w_steps: Vec<f32>,
+    pub w2_steps: Vec<f32>,
+    // per-node feature quant params (layer input), and the GIN hidden map
+    pub feat: Option<NodeQuantParams>,
+    pub feat2: Option<NodeQuantParams>,
+}
+
+/// Readout head (graph-level models).
+#[derive(Debug, Clone)]
+pub struct HeadParams {
+    pub w1: Matrix<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Matrix<f32>,
+    pub b2: Vec<f32>,
+    pub w1_steps: Vec<f32>,
+    pub w2_steps: Vec<f32>,
+    pub feat: Option<NodeQuantParams>,
+}
+
+/// A fully-loaded model artifact (weights + quantization parameters +
+/// metadata).  The HLO side of the same artifact is handled by
+/// `runtime::Engine`.
+#[derive(Debug, Clone)]
+pub struct GnnModel {
+    pub name: String,
+    pub arch: String,
+    pub dataset: String,
+    pub method: QuantMethod,
+    pub layers: Vec<LayerParams>,
+    pub head: Option<HeadParams>,
+    pub dq_steps: Vec<f32>,
+    pub skip_input_quant: bool,
+    pub node_level: bool,
+    pub num_nodes: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub heads: usize,
+    pub graph_capacity: usize,
+    pub accuracy: f64,
+    pub avg_bits: f64,
+    pub expected_head: Vec<f32>,
+    pub manifest: Json,
+}
+
+struct TensorTable {
+    tensors: BTreeMap<String, (Vec<usize>, usize)>, // name -> (shape, offset)
+    data: Vec<f32>,
+}
+
+impl TensorTable {
+    fn get(&self, name: &str) -> Option<(Vec<usize>, &[f32])> {
+        let (shape, off) = self.tensors.get(name)?;
+        let len: usize = shape.iter().product::<usize>().max(1);
+        Some((shape.clone(), &self.data[*off..*off + len]))
+    }
+
+    fn vec(&self, name: &str) -> Option<Vec<f32>> {
+        self.get(name).map(|(_, s)| s.to_vec())
+    }
+
+    fn matrix(&self, name: &str) -> Result<Option<Matrix<f32>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some((shape, data)) => {
+                if shape.len() != 2 {
+                    return Err(Error::artifact(format!(
+                        "tensor {name} is not 2-D: {shape:?}"
+                    )));
+                }
+                Ok(Some(Matrix::from_vec(shape[0], shape[1], data.to_vec())?))
+            }
+        }
+    }
+
+    fn scalar(&self, name: &str) -> Option<f32> {
+        self.get(name).and_then(|(_, s)| s.first().copied())
+    }
+}
+
+impl GnnModel {
+    /// Load `<dir>/<name>.manifest.json` + its weights.
+    pub fn load(dir: &Path, name: &str) -> Result<GnnModel> {
+        let man_path = dir.join(format!("{name}.manifest.json"));
+        let man = json::parse_file(&man_path)?;
+        let weights_path = dir.join(man.req_str("weights_bin")?);
+        let mut raw = Vec::new();
+        std::fs::File::open(&weights_path)?.read_to_end(&mut raw)?;
+        if raw.len() % 4 != 0 {
+            return Err(Error::artifact("weights.bin not a multiple of 4 bytes"));
+        }
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let mut tensors = BTreeMap::new();
+        for t in man
+            .req("tensors")?
+            .as_arr()
+            .ok_or_else(|| Error::artifact("tensors not an array"))?
+        {
+            let tname = t.req_str("name")?.to_string();
+            let shape: Vec<usize> = t
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| Error::artifact("bad shape"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let offset = t.req_usize("offset")?;
+            tensors.insert(tname, (shape, offset));
+        }
+        let table = TensorTable { tensors, data };
+
+        let arch = man.req_str("arch")?.to_string();
+        let method = QuantMethod::parse(man.req_str("method")?);
+        let n_layers = man.req_usize("layers")?;
+        let node_level = man.req("node_level")?.as_bool().unwrap_or(true);
+        let num_nodes = man.req_usize("num_nodes")?;
+        let signed_in = true;
+
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let p = |suffix: &str| format!("['model']['layers'][{l}]{suffix}");
+            let q = |suffix: &str| format!("['qp']{suffix}");
+            let mut lay = LayerParams {
+                w: table.matrix(&p("['w']"))?.or(table.matrix(&p("['w1']"))?),
+                b: table
+                    .vec(&p("['b']"))
+                    .or_else(|| table.vec(&p("['b1']")))
+                    .unwrap_or_default(),
+                w2: table.matrix(&p("['w2']"))?,
+                b2: table.vec(&p("['b2']")).unwrap_or_default(),
+                eps: table.scalar(&p("['eps']")).unwrap_or(0.0),
+                a_src: table.matrix(&p("['a_src']"))?,
+                a_dst: table.matrix(&p("['a_dst']"))?,
+                attn_step: table
+                    .scalar(&q(&format!("['attn'][{l}]")))
+                    .unwrap_or(0.05),
+                w_steps: table
+                    .vec(&q(&format!("['w'][{l}][0]")))
+                    .unwrap_or_default(),
+                w2_steps: table
+                    .vec(&q(&format!("['w'][{l}][1]")))
+                    .unwrap_or_default(),
+                feat: None,
+                feat2: None,
+            };
+            // per-node (or NNS-group) feature quant params
+            let fs = table.vec(&q(&format!("['feat'][{l}]['s']")));
+            let fb = table.vec(&q(&format!("['feat'][{l}]['b']")));
+            if let (Some(s), Some(b)) = (fs, fb) {
+                let bits: Vec<u8> = b.iter().map(|&x| x.round().clamp(1.0, 8.0) as u8).collect();
+                // input layer is signed; deeper layers unsigned (post-ReLU)
+                // for gcn/gin, signed for gat (ELU) — matching models.py
+                let signed = if l == 0 { signed_in } else { arch == "gat" };
+                lay.feat = Some(NodeQuantParams::new(s, bits, signed)?);
+            }
+            let fs2 = table.vec(&q(&format!("['feat2'][{l}]['s']")));
+            let fb2 = table.vec(&q(&format!("['feat2'][{l}]['b']")));
+            if let (Some(s), Some(b)) = (fs2, fb2) {
+                let bits: Vec<u8> = b.iter().map(|&x| x.round().clamp(1.0, 8.0) as u8).collect();
+                lay.feat2 = Some(NodeQuantParams::new(s, bits, false)?);
+            }
+            layers.push(lay);
+        }
+
+        let head = match table.matrix("['model']['head']['w1']")? {
+            Some(w1) => {
+                let hf_s = table.vec("['qp']['head_feat']['s']");
+                let hf_b = table.vec("['qp']['head_feat']['b']");
+                let feat = match (hf_s, hf_b) {
+                    (Some(s), Some(b)) => {
+                        let bits: Vec<u8> =
+                            b.iter().map(|&x| x.round().clamp(1.0, 8.0) as u8).collect();
+                        Some(NodeQuantParams::new(s, bits, true)?)
+                    }
+                    _ => None,
+                };
+                Some(HeadParams {
+                    w1,
+                    b1: table.vec("['model']['head']['b1']").unwrap_or_default(),
+                    w2: table
+                        .matrix("['model']['head']['w2']")?
+                        .ok_or_else(|| Error::artifact("head.w2 missing"))?,
+                    b2: table.vec("['model']['head']['b2']").unwrap_or_default(),
+                    w1_steps: table.vec("['qp']['head_w'][0]").unwrap_or_default(),
+                    w2_steps: table.vec("['qp']['head_w'][1]").unwrap_or_default(),
+                    feat,
+                })
+            }
+            None => None,
+        };
+
+        let mut dq_steps = Vec::new();
+        for l in 0..=n_layers {
+            if let Some(s) = table.scalar(&format!("['qp']['dq_s'][{l}]")) {
+                dq_steps.push(s);
+            }
+        }
+
+        Ok(GnnModel {
+            name: name.to_string(),
+            arch,
+            dataset: man.req_str("dataset")?.to_string(),
+            method,
+            layers,
+            head,
+            dq_steps,
+            skip_input_quant: man
+                .get("skip_input_quant")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            node_level,
+            num_nodes,
+            in_dim: man.req_usize("in_dim")?,
+            out_dim: man.req_usize("out_dim")?,
+            heads: man.req_usize("heads")?,
+            graph_capacity: man.req_usize("graph_capacity")?,
+            accuracy: man.req_f64("accuracy")?,
+            avg_bits: man.req_f64("avg_bits")?,
+            expected_head: man
+                .req("expected_head")?
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
+                .unwrap_or_default(),
+            manifest: man,
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_method_parsing() {
+        assert_eq!(QuantMethod::parse("a2q"), QuantMethod::A2q);
+        assert_eq!(QuantMethod::parse("a2q_global"), QuantMethod::A2q);
+        assert_eq!(QuantMethod::parse("dq"), QuantMethod::Dq);
+        assert_eq!(QuantMethod::parse("fp32"), QuantMethod::Fp32);
+        assert_eq!(QuantMethod::parse("binary"), QuantMethod::Binary);
+        assert_eq!(QuantMethod::parse("other"), QuantMethod::Fp32);
+    }
+
+    // Full loading is covered by the integration test rust/tests/
+    // artifact_roundtrip.rs (requires `make artifacts`).
+}

@@ -1,0 +1,210 @@
+//! Block-diagonal batching of small graphs (graph-level serving).
+//!
+//! Mirrors `python/compile/models.py::pad_graph_batch`: the coordinator's
+//! dynamic batcher packs several request graphs into one fixed-capacity
+//! batch (static shapes for the AOT executable).  Padding nodes route to a
+//! dummy segment `G` and padding edges carry zero weight, so readout over
+//! real segments is exact.
+
+use crate::error::{Error, Result};
+
+use super::io::SmallGraph;
+
+/// A packed batch matching the AOT executable's input shapes.
+#[derive(Debug, Clone)]
+pub struct GraphBatch {
+    pub features: Vec<f32>, // [cap_nodes * feat_dim]
+    pub src: Vec<i32>,      // [cap_edges]
+    pub dst: Vec<i32>,
+    pub gcn_w: Vec<f32>,
+    pub sum_w: Vec<f32>,
+    pub node2graph: Vec<i32>, // [cap_nodes]
+    pub node_mask: Vec<f32>,
+    pub cap_nodes: usize,
+    pub cap_edges: usize,
+    pub cap_graphs: usize,
+    pub num_graphs: usize,
+    pub feat_dim: usize,
+}
+
+impl GraphBatch {
+    /// Pack `graphs` into a batch with the given static capacities.
+    pub fn pack(
+        graphs: &[&SmallGraph],
+        feat_dim: usize,
+        cap_nodes: usize,
+        cap_edges: usize,
+        cap_graphs: usize,
+    ) -> Result<GraphBatch> {
+        if graphs.len() > cap_graphs {
+            return Err(Error::shape(format!(
+                "batch of {} graphs exceeds capacity {}",
+                graphs.len(),
+                cap_graphs
+            )));
+        }
+        let total_nodes: usize = graphs.iter().map(|g| g.num_nodes()).sum();
+        let total_edges: usize = graphs
+            .iter()
+            .map(|g| g.csr.num_edges() + g.num_nodes())
+            .sum();
+        if total_nodes > cap_nodes || total_edges > cap_edges {
+            return Err(Error::shape(format!(
+                "batch needs {total_nodes} nodes / {total_edges} edges, capacity \
+                 {cap_nodes}/{cap_edges}"
+            )));
+        }
+
+        let mut features = vec![0.0f32; cap_nodes * feat_dim];
+        let mut node2graph = vec![graphs.len() as i32; cap_nodes];
+        let mut node_mask = vec![0.0f32; cap_nodes];
+        let mut src = Vec::with_capacity(cap_edges);
+        let mut dst = Vec::with_capacity(cap_edges);
+        let mut gcn_w = Vec::with_capacity(cap_edges);
+        let mut sum_w = Vec::with_capacity(cap_edges);
+
+        let mut off = 0usize;
+        for (gi, g) in graphs.iter().enumerate() {
+            let n = g.num_nodes();
+            features[off * feat_dim..(off + n) * feat_dim].copy_from_slice(&g.features);
+            for v in 0..n {
+                node2graph[off + v] = gi as i32;
+                node_mask[off + v] = 1.0;
+            }
+            // d̃ = in-degree + 1
+            let deg: Vec<f64> = (0..n).map(|v| g.csr.in_degree(v) as f64 + 1.0).collect();
+            for v in 0..n {
+                for &s in g.csr.in_neighbors(v) {
+                    src.push((off + s as usize) as i32);
+                    dst.push((off + v) as i32);
+                    gcn_w.push((1.0 / (deg[s as usize] * deg[v]).sqrt()) as f32);
+                    sum_w.push(1.0);
+                }
+            }
+            for v in 0..n {
+                src.push((off + v) as i32);
+                dst.push((off + v) as i32);
+                gcn_w.push((1.0 / deg[v]) as f32);
+                sum_w.push(0.0);
+            }
+            off += n;
+        }
+        // pad edges: self-edges on node 0 with zero weight
+        while src.len() < cap_edges {
+            src.push(0);
+            dst.push(0);
+            gcn_w.push(0.0);
+            sum_w.push(0.0);
+        }
+
+        Ok(GraphBatch {
+            features,
+            src,
+            dst,
+            gcn_w,
+            sum_w,
+            node2graph,
+            node_mask,
+            cap_nodes,
+            cap_edges,
+            cap_graphs,
+            num_graphs: graphs.len(),
+            feat_dim,
+        })
+    }
+
+    /// True node count (non-padding).
+    pub fn real_nodes(&self) -> usize {
+        self.node_mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::util::prop::{property, Gen};
+    use crate::util::rng::Rng;
+
+    fn tiny_graph(n: usize, seed: u64) -> SmallGraph {
+        let mut rng = Rng::new(seed);
+        let csr = crate::graph::generate::molecule(&mut rng, n, 1);
+        let nn = csr.num_nodes();
+        SmallGraph {
+            csr,
+            features: (0..nn * 3).map(|i| i as f32 * 0.1).collect(),
+            target_class: 0,
+            target_value: 0.0,
+        }
+    }
+
+    #[test]
+    fn pack_basic_layout() {
+        let g1 = tiny_graph(5, 0);
+        let g2 = tiny_graph(7, 1);
+        let b = GraphBatch::pack(&[&g1, &g2], 3, 20, 200, 4).unwrap();
+        assert_eq!(b.real_nodes(), 12);
+        assert_eq!(b.node2graph[..5], [0, 0, 0, 0, 0]);
+        assert_eq!(b.node2graph[5..12], [1; 7]);
+        assert_eq!(b.node2graph[12], 2); // dummy segment
+        assert_eq!(b.src.len(), 200);
+    }
+
+    #[test]
+    fn capacity_overflow_rejected() {
+        let g1 = tiny_graph(30, 0);
+        assert!(GraphBatch::pack(&[&g1], 3, 10, 100, 2).is_err());
+        assert!(GraphBatch::pack(&[&g1, &g1, &g1], 3, 1000, 10_000, 2).is_err());
+    }
+
+    #[test]
+    fn no_cross_graph_edges_property() {
+        property("block-diagonal batching", 25, |g: &mut Gen| {
+            let k = g.usize_range(1, 5);
+            let graphs: Vec<SmallGraph> = (0..k)
+                .map(|i| tiny_graph(g.usize_range(3, 15), i as u64))
+                .collect();
+            let refs: Vec<&SmallGraph> = graphs.iter().collect();
+            let total_n: usize = graphs.iter().map(|x| x.num_nodes()).sum();
+            let b = GraphBatch::pack(&refs, 3, total_n + 8, 4096, 8).unwrap();
+            for ((&s, &d), &w) in b.src.iter().zip(&b.dst).zip(&b.gcn_w) {
+                if w > 0.0 {
+                    assert_eq!(b.node2graph[s as usize], b.node2graph[d as usize]);
+                }
+            }
+            // feature block copied intact for each graph
+            let mut off = 0;
+            for gr in &graphs {
+                let n = gr.num_nodes();
+                assert_eq!(
+                    &b.features[off * 3..(off + n) * 3],
+                    gr.features.as_slice()
+                );
+                off += n;
+            }
+        });
+    }
+
+    #[test]
+    fn empty_batch_is_all_padding() {
+        let b = GraphBatch::pack(&[], 3, 4, 8, 2).unwrap();
+        assert_eq!(b.real_nodes(), 0);
+        assert!(b.gcn_w.iter().all(|&w| w == 0.0));
+    }
+
+    #[test]
+    fn gcn_weights_match_single_graph_form() {
+        // packing one graph must reproduce EdgeForm's weights
+        let g1 = tiny_graph(6, 2);
+        let n = g1.num_nodes();
+        let e = g1.csr.num_edges();
+        let b = GraphBatch::pack(&[&g1], 3, n, e + n, 1).unwrap();
+        let ef = crate::graph::norm::EdgeForm::from_csr(&g1.csr);
+        for i in 0..e + n {
+            assert_eq!(b.src[i], ef.src[i]);
+            assert_eq!(b.dst[i], ef.dst[i]);
+            assert!((b.gcn_w[i] - ef.gcn_w[i]).abs() < 1e-6);
+        }
+        let _ = Csr::from_edges(2, &[(0, 1)]); // keep import used
+    }
+}

@@ -1,0 +1,158 @@
+//! Compressed Sparse Row adjacency (incoming edges, dst-major).
+
+use crate::error::{Error, Result};
+
+/// CSR over incoming edges: `indices[indptr[v]..indptr[v+1]]` are the
+/// *sources* of edges arriving at node `v`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+}
+
+impl Csr {
+    pub fn num_nodes(&self) -> usize {
+        self.indptr.len().saturating_sub(1)
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Incoming neighbours (edge sources) of `v`.
+    pub fn in_neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v] as usize..self.indptr[v + 1] as usize]
+    }
+
+    pub fn in_degree(&self, v: usize) -> usize {
+        (self.indptr[v + 1] - self.indptr[v]) as usize
+    }
+
+    pub fn in_degrees(&self) -> Vec<u32> {
+        (0..self.num_nodes())
+            .map(|v| self.in_degree(v) as u32)
+            .collect()
+    }
+
+    /// Build from an edge list (src, dst), deduplicating parallel edges.
+    pub fn from_edges(num_nodes: usize, edges: &[(u32, u32)]) -> Result<Csr> {
+        let n = num_nodes;
+        for &(s, d) in edges {
+            if s as usize >= n || d as usize >= n {
+                return Err(Error::dataset(format!(
+                    "edge ({s},{d}) out of range for {n} nodes"
+                )));
+            }
+        }
+        // sort by (dst, src) then dedup
+        let mut keyed: Vec<u64> = edges
+            .iter()
+            .map(|&(s, d)| (d as u64) << 32 | s as u64)
+            .collect();
+        keyed.sort_unstable();
+        keyed.dedup();
+        let mut indptr = vec![0u32; n + 1];
+        let mut indices = Vec::with_capacity(keyed.len());
+        for &k in &keyed {
+            let d = (k >> 32) as usize;
+            indptr[d + 1] += 1;
+            indices.push((k & 0xffff_ffff) as u32);
+        }
+        for v in 0..n {
+            indptr[v + 1] += indptr[v];
+        }
+        Ok(Csr { indptr, indices })
+    }
+
+    /// Expand to a (src, dst) edge list in dst-major order.
+    pub fn edge_list(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for v in 0..self.num_nodes() {
+            for &s in self.in_neighbors(v) {
+                out.push((s, v as u32));
+            }
+        }
+        out
+    }
+
+    /// Structural validation (used after IO).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.num_nodes();
+        if self.indptr.is_empty() || self.indptr[0] != 0 {
+            return Err(Error::dataset("csr: indptr must start at 0"));
+        }
+        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+            return Err(Error::dataset("csr: indptr end != nnz"));
+        }
+        for w in self.indptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(Error::dataset("csr: indptr not monotone"));
+            }
+        }
+        if self.indices.iter().any(|&s| s as usize >= n) {
+            return Err(Error::dataset("csr: index out of range"));
+        }
+        Ok(())
+    }
+
+    /// Whether the graph is symmetric (u→v implies v→u).  The synthetic
+    /// datasets are undirected, so this holds for all of them.
+    pub fn is_symmetric(&self) -> bool {
+        let mut edges: Vec<(u32, u32)> = self.edge_list();
+        edges.sort_unstable();
+        self.edge_list()
+            .iter()
+            .all(|&(s, d)| edges.binary_search(&(d, s)).is_ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{property, Gen};
+
+    fn path3() -> Csr {
+        // 0 <-> 1 <-> 2
+        Csr::from_edges(3, &[(0, 1), (1, 0), (1, 2), (2, 1)]).unwrap()
+    }
+
+    #[test]
+    fn from_edges_basic() {
+        let g = path3();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.in_neighbors(1), &[0, 2]);
+        assert_eq!(g.in_degree(0), 1);
+        g.validate().unwrap();
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn dedups_parallel_edges() {
+        let g = Csr::from_edges(2, &[(0, 1), (0, 1), (0, 1)]).unwrap();
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(Csr::from_edges(2, &[(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn edge_list_roundtrip_property() {
+        property("csr edge_list roundtrip", 50, |g: &mut Gen| {
+            let n = g.usize_range(1, 40);
+            let m = g.usize_range(0, 120);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.usize_range(0, n) as u32, g.usize_range(0, n) as u32))
+                .collect();
+            let csr = Csr::from_edges(n, &edges).unwrap();
+            csr.validate().unwrap();
+            let back = Csr::from_edges(n, &csr.edge_list()).unwrap();
+            assert_eq!(csr, back);
+            // degree sum == edge count
+            let total: usize = (0..n).map(|v| csr.in_degree(v)).sum();
+            assert_eq!(total, csr.num_edges());
+        });
+    }
+}

@@ -1,0 +1,202 @@
+//! Synthetic graph generators (rust-native).
+//!
+//! The python side generates the *training* datasets; these generators feed
+//! the property tests, the benches and the coordinator load generator with
+//! structurally matching graphs without reading artifacts.  Same families:
+//! preferential attachment (power-law in-degree), Q/A vs discussion thread
+//! shapes (REDDIT-B analogue), k-NN "superpixel" grids, molecule-like trees.
+
+use crate::util::rng::Rng;
+
+use super::csr::Csr;
+
+/// Barabási–Albert-style preferential attachment; undirected (both edge
+/// directions present).  `m` = edges per new node.
+pub fn preferential_attachment(rng: &mut Rng, n: usize, m: usize) -> Csr {
+    let m = m.max(1);
+    let seed_n = (m + 1).max(3).min(n);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut endpoints: Vec<u32> = Vec::new();
+    for i in 0..seed_n {
+        for j in 0..i {
+            edges.push((i as u32, j as u32));
+            endpoints.push(i as u32);
+            endpoints.push(j as u32);
+        }
+    }
+    for v in seed_n..n {
+        let mut targets = Vec::with_capacity(m);
+        let mut attempts = 0;
+        while targets.len() < m && attempts < 50 * m {
+            attempts += 1;
+            let u = endpoints[rng.below(endpoints.len())];
+            if u as usize != v && !targets.contains(&u) {
+                targets.push(u);
+            }
+        }
+        for &u in &targets {
+            edges.push((v as u32, u));
+            endpoints.push(v as u32);
+            endpoints.push(u);
+        }
+    }
+    let mut both = Vec::with_capacity(edges.len() * 2);
+    for &(s, d) in &edges {
+        both.push((s, d));
+        both.push((d, s));
+    }
+    Csr::from_edges(n, &both).expect("generator produces valid edges")
+}
+
+/// Q/A-thread shaped graph (hubby; REDDIT-B class 0 analogue).
+pub fn qa_thread(rng: &mut Rng, n: usize) -> Csr {
+    let n = n.max(4);
+    let hubs = (n / 40).max(2);
+    let mut edges = Vec::new();
+    for v in hubs..n {
+        let h = rng.below(hubs) as u32;
+        edges.push((h, v as u32));
+    }
+    for _ in 0..n / 4 {
+        let a = rng.below(n) as u32;
+        let h = rng.below(hubs) as u32;
+        if a != h {
+            edges.push((a, h));
+        }
+    }
+    undirected(n, edges)
+}
+
+/// Discussion-thread shaped graph (chains; REDDIT-B class 1 analogue).
+pub fn discussion_thread(rng: &mut Rng, n: usize) -> Csr {
+    let n = n.max(4);
+    let mut edges = Vec::new();
+    for v in 1..n {
+        let back = 1 + rng.below(4.min(v));
+        edges.push(((v - back) as u32, v as u32));
+    }
+    for _ in 0..n / 6 {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a != b {
+            edges.push((a, b));
+        }
+    }
+    undirected(n, edges)
+}
+
+/// k-NN graph over random 2D points (superpixel analogue). Returns the CSR
+/// and the positions (flattened x,y pairs).
+pub fn knn_superpixel(rng: &mut Rng, n: usize, k: usize) -> (Csr, Vec<f32>) {
+    let n = n.max(k + 1);
+    let pos: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+    let mut edges = Vec::with_capacity(n * k);
+    for i in 0..n {
+        let mut dists: Vec<(f64, usize)> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let dx = pos[i].0 - pos[j].0;
+                let dy = pos[i].1 - pos[j].1;
+                (dx * dx + dy * dy, j)
+            })
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(_, j) in dists.iter().take(k) {
+            edges.push((i as u32, j as u32));
+        }
+    }
+    let flat: Vec<f32> = pos.iter().flat_map(|&(x, y)| [x as f32, y as f32]).collect();
+    (undirected(n, edges), flat)
+}
+
+/// Molecule-like graph: random tree + up to `rings` ring closures.
+pub fn molecule(rng: &mut Rng, n: usize, rings: usize) -> Csr {
+    let n = n.max(2);
+    let mut edges = Vec::with_capacity(n + rings);
+    for v in 1..n {
+        let p = rng.below(v) as u32;
+        edges.push((p, v as u32));
+    }
+    for _ in 0..rings {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a != b {
+            edges.push((a, b));
+        }
+    }
+    undirected(n, edges)
+}
+
+fn undirected(n: usize, edges: Vec<(u32, u32)>) -> Csr {
+    let mut both = Vec::with_capacity(edges.len() * 2);
+    for &(s, d) in &edges {
+        both.push((s, d));
+        both.push((d, s));
+    }
+    Csr::from_edges(n, &both).expect("valid edges")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{property, Gen};
+
+    #[test]
+    fn ba_is_power_lawish() {
+        let mut rng = Rng::new(0);
+        let g = preferential_attachment(&mut rng, 2000, 2);
+        let deg = g.in_degrees();
+        let max = *deg.iter().max().unwrap() as f64;
+        let med = {
+            let mut d: Vec<u32> = deg.clone();
+            d.sort_unstable();
+            d[d.len() / 2] as f64
+        };
+        assert!(max > 8.0 * med, "hub max {max} vs median {med}");
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn qa_is_hubbier_than_discussion() {
+        let mut rng = Rng::new(1);
+        let qa = qa_thread(&mut rng, 300);
+        let disc = discussion_thread(&mut rng, 300);
+        let hubness = |g: &Csr| {
+            let deg = g.in_degrees();
+            let mean = deg.iter().map(|&d| d as f64).sum::<f64>() / deg.len() as f64;
+            *deg.iter().max().unwrap() as f64 / mean.max(1e-9)
+        };
+        assert!(hubness(&qa) > hubness(&disc));
+    }
+
+    #[test]
+    fn generators_produce_valid_graphs() {
+        property("generators valid", 20, |g: &mut Gen| {
+            let n = g.usize_range(5, 120);
+            let seed = g.usize_range(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            for csr in [
+                preferential_attachment(&mut rng, n, 2),
+                qa_thread(&mut rng, n),
+                discussion_thread(&mut rng, n),
+                molecule(&mut rng, n, 2),
+                knn_superpixel(&mut rng, n.max(6), 4).0,
+            ] {
+                csr.validate().unwrap();
+                assert_eq!(csr.num_nodes(), n.max(csr.num_nodes().min(n)));
+                assert!(csr.is_symmetric());
+            }
+        });
+    }
+
+    #[test]
+    fn knn_degree_at_least_k() {
+        let mut rng = Rng::new(3);
+        let (g, pos) = knn_superpixel(&mut rng, 60, 4);
+        assert_eq!(pos.len(), 120);
+        // undirected k-NN: every node has in-degree >= k
+        for v in 0..g.num_nodes() {
+            assert!(g.in_degree(v) >= 4);
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Binary dataset IO — reads the files written by `python/compile/datasets.py`.
+//!
+//! Format (little endian; see the python module docstring for the spec):
+//! magic "A2QD", version u32, kind u32 (0 node-level, 1 graph-level), then
+//! the kind-specific payload.
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::csr::Csr;
+
+/// A node-level dataset: one graph, features, labels, semi-supervised masks.
+#[derive(Debug, Clone)]
+pub struct NodeData {
+    pub name: String,
+    pub csr: Csr,
+    pub num_features: usize,
+    pub num_classes: usize,
+    /// row-major [N, F]
+    pub features: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub train_mask: Vec<bool>,
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+impl NodeData {
+    pub fn num_nodes(&self) -> usize {
+        self.csr.num_nodes()
+    }
+    pub fn feature_row(&self, v: usize) -> &[f32] {
+        &self.features[v * self.num_features..(v + 1) * self.num_features]
+    }
+}
+
+/// One small graph of a graph-level dataset.
+#[derive(Debug, Clone)]
+pub struct SmallGraph {
+    pub csr: Csr,
+    /// row-major [n, F]
+    pub features: Vec<f32>,
+    /// class label, or f32-bits for regression targets
+    pub target_class: i32,
+    pub target_value: f32,
+}
+
+impl SmallGraph {
+    pub fn num_nodes(&self) -> usize {
+        self.csr.num_nodes()
+    }
+}
+
+/// A graph-level dataset (classification if `num_classes > 0`, else
+/// regression).
+#[derive(Debug, Clone)]
+pub struct GraphSet {
+    pub name: String,
+    pub num_features: usize,
+    pub num_classes: usize,
+    pub graphs: Vec<SmallGraph>,
+}
+
+/// Either kind of dataset.
+#[derive(Debug, Clone)]
+pub enum Dataset {
+    Node(NodeData),
+    Graphs(GraphSet),
+}
+
+impl Dataset {
+    pub fn name(&self) -> &str {
+        match self {
+            Dataset::Node(d) => &d.name,
+            Dataset::Graphs(d) => &d.name,
+        }
+    }
+}
+
+struct Reader {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl Reader {
+    fn u32(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.buf.len() {
+            return Err(Error::dataset("truncated file (u32)"));
+        }
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(self.u32()? as i32)
+    }
+
+    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        if self.pos + 4 * n > self.buf.len() {
+            return Err(Error::dataset("truncated file (u32 vec)"));
+        }
+        let out = self.buf[self.pos..self.pos + 4 * n]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += 4 * n;
+        Ok(out)
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        Ok(self.u32_vec(n)?.into_iter().map(f32::from_bits).collect())
+    }
+
+    fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        Ok(self.u32_vec(n)?.into_iter().map(|v| v as i32).collect())
+    }
+
+    fn mask(&mut self, n: usize) -> Result<Vec<bool>> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::dataset("truncated file (mask)"));
+        }
+        let out = self.buf[self.pos..self.pos + n].iter().map(|&b| b != 0).collect();
+        self.pos += n;
+        Ok(out)
+    }
+}
+
+/// Load a dataset binary written by the python generator.
+pub fn load_dataset(path: &Path) -> Result<Dataset> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    if buf.len() < 12 || &buf[..4] != b"A2QD" {
+        return Err(Error::dataset(format!(
+            "{}: not an A2QD file",
+            path.display()
+        )));
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    let mut r = Reader { buf, pos: 4 };
+    let version = r.u32()?;
+    if version != 1 {
+        return Err(Error::dataset(format!("unsupported version {version}")));
+    }
+    let kind = r.u32()?;
+    match kind {
+        0 => load_node(&mut r, name).map(Dataset::Node),
+        1 => load_graphs(&mut r, name).map(Dataset::Graphs),
+        k => Err(Error::dataset(format!("unknown kind {k}"))),
+    }
+}
+
+fn load_node(r: &mut Reader, name: String) -> Result<NodeData> {
+    let n = r.u32()? as usize;
+    let f = r.u32()? as usize;
+    let c = r.u32()? as usize;
+    let nnz = r.u32()? as usize;
+    let indptr = r.u32_vec(n + 1)?;
+    let indices = r.u32_vec(nnz)?;
+    let features = r.f32_vec(n * f)?;
+    let labels = r.i32_vec(n)?;
+    let train_mask = r.mask(n)?;
+    let val_mask = r.mask(n)?;
+    let test_mask = r.mask(n)?;
+    let csr = Csr { indptr, indices };
+    csr.validate()?;
+    Ok(NodeData {
+        name,
+        csr,
+        num_features: f,
+        num_classes: c,
+        features,
+        labels,
+        train_mask,
+        val_mask,
+        test_mask,
+    })
+}
+
+fn load_graphs(r: &mut Reader, name: String) -> Result<GraphSet> {
+    let g = r.u32()? as usize;
+    let f = r.u32()? as usize;
+    let c = r.u32()? as usize;
+    let mut graphs = Vec::with_capacity(g);
+    for _ in 0..g {
+        let n = r.u32()? as usize;
+        let nnz = r.u32()? as usize;
+        let indptr = r.u32_vec(n + 1)?;
+        let indices = r.u32_vec(nnz)?;
+        let features = r.f32_vec(n * f)?;
+        let (target_class, target_value) = if c == 0 {
+            let v = r.f32()?;
+            (0, v)
+        } else {
+            let l = r.i32()?;
+            (l, l as f32)
+        };
+        let csr = Csr { indptr, indices };
+        csr.validate()?;
+        graphs.push(SmallGraph {
+            csr,
+            features,
+            target_class,
+            target_value,
+        });
+    }
+    Ok(GraphSet {
+        name,
+        num_features: f,
+        num_classes: c,
+        graphs,
+    })
+}
+
+/// Convenience: load `artifacts/data/<name>.bin`.
+pub fn load_named(artifacts: &Path, name: &str) -> Result<Dataset> {
+    load_dataset(&artifacts.join("data").join(format!("{name}.bin")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Hand-craft a tiny node-level file matching the python format.
+    fn write_tiny_node(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"A2QD").unwrap();
+        for v in [1u32, 0u32] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        // N=2, F=2, C=2, nnz=2
+        for v in [2u32, 2, 2, 2] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for v in [0u32, 1, 2] {
+            f.write_all(&v.to_le_bytes()).unwrap(); // indptr
+        }
+        for v in [1u32, 0] {
+            f.write_all(&v.to_le_bytes()).unwrap(); // indices
+        }
+        for v in [1.0f32, 0.0, 0.0, 1.0] {
+            f.write_all(&v.to_le_bytes()).unwrap(); // features
+        }
+        for v in [0i32, 1] {
+            f.write_all(&v.to_le_bytes()).unwrap(); // labels
+        }
+        f.write_all(&[1, 0]).unwrap(); // train
+        f.write_all(&[0, 1]).unwrap(); // val
+        f.write_all(&[0, 0]).unwrap(); // test
+    }
+
+    #[test]
+    fn reads_tiny_node_file() {
+        let dir = std::env::temp_dir().join("a2q_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.bin");
+        write_tiny_node(&path);
+        let ds = load_dataset(&path).unwrap();
+        match ds {
+            Dataset::Node(d) => {
+                assert_eq!(d.num_nodes(), 2);
+                assert_eq!(d.num_features, 2);
+                assert_eq!(d.csr.in_neighbors(0), &[1]);
+                assert_eq!(d.feature_row(1), &[0.0, 1.0]);
+                assert_eq!(d.labels, vec![0, 1]);
+                assert_eq!(d.train_mask, vec![true, false]);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("a2q_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        assert!(load_dataset(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("a2q_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.bin");
+        write_tiny_node(&path);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 4]).unwrap();
+        assert!(load_dataset(&path).is_err());
+    }
+}

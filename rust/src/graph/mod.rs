@@ -1,0 +1,16 @@
+//! Graph substrate: CSR storage, generators, normalization, batching, IO.
+//!
+//! The CSR is **incoming-edge** oriented (dst-major), matching the python
+//! serializer (`python/compile/datasets.py`) and the aggregation direction
+//! of the MPNN forms in the paper's Table 4.
+
+pub mod batch;
+pub mod csr;
+pub mod generate;
+pub mod io;
+pub mod norm;
+pub mod stats;
+
+pub use batch::GraphBatch;
+pub use csr::Csr;
+pub use io::{load_dataset, Dataset, GraphSet, NodeData};

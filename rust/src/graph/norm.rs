@@ -1,0 +1,134 @@
+//! GCN normalization and edge-form expansion.
+//!
+//! Builds the `(src, dst, gcn_w, sum_w)` edge arrays used by both the
+//! native inference path and the PJRT artifacts (identical to
+//! `python/compile/models.py::build_edges`): self-loops appended, GCN
+//! weights `(d̃_s d̃_d)^{-1/2}`, and `sum_w` masking self-loops out of the
+//! GIN neighbour sum.  Per the paper's Proof 2, Â itself is never
+//! quantized — aggregation runs on these f32 weights / fixed-point adds.
+
+use super::csr::Csr;
+
+/// Edge-form graph with precomputed normalization weights.
+#[derive(Debug, Clone)]
+pub struct EdgeForm {
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    /// (d̃_s · d̃_d)^{-1/2} with self-loops (GCN aggregation weights)
+    pub gcn_w: Vec<f32>,
+    /// 1.0 for real edges, 0.0 for the appended self-loops (GIN mask)
+    pub sum_w: Vec<f32>,
+    pub num_nodes: usize,
+}
+
+impl EdgeForm {
+    /// Expand a CSR into edge form, appending self-loops.
+    pub fn from_csr(csr: &Csr) -> EdgeForm {
+        let n = csr.num_nodes();
+        let e = csr.num_edges();
+        let mut src = Vec::with_capacity(e + n);
+        let mut dst = Vec::with_capacity(e + n);
+        for v in 0..n {
+            for &s in csr.in_neighbors(v) {
+                src.push(s as i32);
+                dst.push(v as i32);
+            }
+        }
+        for v in 0..n {
+            src.push(v as i32);
+            dst.push(v as i32);
+        }
+        // d̃ = in-degree + 1 (self loop)
+        let mut dtilde = vec![1.0f64; n];
+        for v in 0..n {
+            dtilde[v] += csr.in_degree(v) as f64;
+        }
+        let gcn_w: Vec<f32> = src
+            .iter()
+            .zip(&dst)
+            .map(|(&s, &d)| (1.0 / (dtilde[s as usize] * dtilde[d as usize]).sqrt()) as f32)
+            .collect();
+        let mut sum_w = vec![1.0f32; e + n];
+        for w in sum_w[e..].iter_mut() {
+            *w = 0.0;
+        }
+        EdgeForm {
+            src,
+            dst,
+            gcn_w,
+            sum_w,
+            num_nodes: n,
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Σ_e w_e · x[src_e] → out[dst_e]   (the aggregation phase).
+    pub fn aggregate(&self, x: &[f32], feat_dim: usize, weights: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.num_nodes * feat_dim];
+        for ((&s, &d), &w) in self.src.iter().zip(&self.dst).zip(weights) {
+            if w == 0.0 {
+                continue;
+            }
+            let srow = &x[s as usize * feat_dim..(s as usize + 1) * feat_dim];
+            let orow = &mut out[d as usize * feat_dim..(d as usize + 1) * feat_dim];
+            for (o, v) in orow.iter_mut().zip(srow) {
+                *o += w * v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Csr {
+        Csr::from_edges(3, &[(0, 1), (1, 0), (1, 2), (2, 1)]).unwrap()
+    }
+
+    #[test]
+    fn self_loops_appended() {
+        let ef = EdgeForm::from_csr(&path3());
+        assert_eq!(ef.num_edges(), 4 + 3);
+        // last 3 edges are self loops with sum_w == 0
+        for i in 4..7 {
+            assert_eq!(ef.src[i], ef.dst[i]);
+            assert_eq!(ef.sum_w[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn gcn_weights_match_formula() {
+        let ef = EdgeForm::from_csr(&path3());
+        // node degrees+1: d̃ = [2, 3, 2]
+        // edge (1 -> 0): w = 1/sqrt(3*2)
+        let idx = ef
+            .src
+            .iter()
+            .zip(&ef.dst)
+            .position(|(&s, &d)| s == 1 && d == 0)
+            .unwrap();
+        assert!((ef.gcn_w[idx] - 1.0 / (6.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_sum_mask_skips_self_loops() {
+        let ef = EdgeForm::from_csr(&path3());
+        let x = vec![1.0, 2.0, 4.0]; // feat_dim = 1
+        let out = ef.aggregate(&x, 1, &ef.sum_w);
+        assert_eq!(out, vec![2.0, 5.0, 2.0]); // pure neighbour sums
+    }
+
+    #[test]
+    fn aggregate_gcn_includes_self() {
+        let ef = EdgeForm::from_csr(&path3());
+        let x = vec![1.0, 1.0, 1.0];
+        let out = ef.aggregate(&x, 1, &ef.gcn_w);
+        // every node sees itself + neighbours with positive weights
+        assert!(out.iter().all(|&v| v > 0.5));
+    }
+}

@@ -1,0 +1,140 @@
+//! Graph statistics used by the figure harness (Fig. 1 / Fig. 4 / Fig. 8).
+
+use crate::util::stats::pearson;
+
+use super::csr::Csr;
+
+/// Histogram of in-degrees with power-of-two buckets (Fig. 8 series).
+pub fn degree_histogram(csr: &Csr) -> Vec<(u32, usize)> {
+    let mut buckets: Vec<usize> = Vec::new();
+    for v in 0..csr.num_nodes() {
+        let d = csr.in_degree(v);
+        let b = if d == 0 { 0 } else { (d as f64).log2().floor() as usize + 1 };
+        if b >= buckets.len() {
+            buckets.resize(b + 1, 0);
+        }
+        buckets[b] += 1;
+    }
+    buckets
+        .into_iter()
+        .enumerate()
+        .map(|(b, c)| (if b == 0 { 0 } else { 1u32 << (b - 1) }, c))
+        .collect()
+}
+
+/// Group nodes by in-degree bucket and average a per-node value over each
+/// group — the Fig. 1 / Fig. 4 aggregation.
+pub fn mean_by_degree_group(csr: &Csr, values: &[f32], bounds: &[u32]) -> Vec<(String, f64, usize)> {
+    assert_eq!(values.len(), csr.num_nodes());
+    let mut out = Vec::new();
+    let mut lo = 0u32;
+    for (i, &hi) in bounds.iter().chain(std::iter::once(&u32::MAX)).enumerate() {
+        let hi = if i == bounds.len() { u32::MAX } else { hi };
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for v in 0..csr.num_nodes() {
+            let d = csr.in_degree(v) as u32;
+            if d >= lo && d < hi {
+                sum += values[v] as f64;
+                n += 1;
+            }
+        }
+        let label = if hi == u32::MAX {
+            format!("[{lo},inf)")
+        } else {
+            format!("[{lo},{hi})")
+        };
+        out.push((label, if n > 0 { sum / n as f64 } else { 0.0 }, n));
+        lo = hi;
+    }
+    out
+}
+
+/// Pearson correlation between in-degree and a per-node value (used to
+/// verify the "aggregation-aware" claim: learned bits ↔ degree).
+pub fn degree_correlation(csr: &Csr, values: &[f32]) -> f64 {
+    let deg: Vec<f64> = (0..csr.num_nodes())
+        .map(|v| csr.in_degree(v) as f64)
+        .collect();
+    let vals: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+    pearson(&deg, &vals)
+}
+
+/// For each bitwidth 1..=8: (average in-degree of nodes using it, count) —
+/// exactly the series plotted in Fig. 4.
+pub fn bits_vs_degree(csr: &Csr, bits: &[u8]) -> Vec<(u8, f64, usize)> {
+    assert_eq!(bits.len(), csr.num_nodes());
+    (1u8..=8)
+        .map(|b| {
+            let mut sum = 0.0f64;
+            let mut n = 0usize;
+            for v in 0..csr.num_nodes() {
+                if bits[v] == b {
+                    sum += csr.in_degree(v) as f64;
+                    n += 1;
+                }
+            }
+            (b, if n > 0 { sum / n as f64 } else { 0.0 }, n)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ba(n: usize) -> Csr {
+        let mut rng = Rng::new(0);
+        crate::graph::generate::preferential_attachment(&mut rng, n, 2)
+    }
+
+    #[test]
+    fn degree_histogram_counts_all_nodes() {
+        let g = ba(500);
+        let h = degree_histogram(&g);
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 500);
+        // power law: bucket counts decay with degree
+        assert!(h[1].1 + h[2].1 > h.last().unwrap().1 * 3);
+    }
+
+    #[test]
+    fn mean_by_degree_group_partition() {
+        let g = ba(300);
+        let vals: Vec<f32> = (0..300).map(|v| g.in_degree(v) as f32).collect();
+        let groups = mean_by_degree_group(&g, &vals, &[2, 4, 8, 16]);
+        let total: usize = groups.iter().map(|&(_, _, n)| n).sum();
+        assert_eq!(total, 300);
+        // value == degree, so group means must be increasing
+        let means: Vec<f64> = groups.iter().filter(|g| g.2 > 0).map(|g| g.1).collect();
+        for w in means.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn degree_correlation_of_degree_itself_is_one() {
+        let g = ba(200);
+        let vals: Vec<f32> = (0..200).map(|v| g.in_degree(v) as f32).collect();
+        assert!((degree_correlation(&g, &vals) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bits_vs_degree_grouping() {
+        let g = ba(200);
+        // assign high bits to high-degree nodes artificially
+        let med = {
+            let mut d = g.in_degrees();
+            d.sort_unstable();
+            d[100]
+        };
+        let bits: Vec<u8> = (0..200)
+            .map(|v| if g.in_degree(v) as u32 > med { 8 } else { 2 })
+            .collect();
+        let rows = bits_vs_degree(&g, &bits);
+        let low = rows.iter().find(|r| r.0 == 2).unwrap();
+        let high = rows.iter().find(|r| r.0 == 8).unwrap();
+        assert!(high.1 > low.1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Table/figure regeneration harness.
+//!
+//! Reads the training results (`artifacts/results/*.json`, written by
+//! `python -m compile.experiments`), the exported bit vectors
+//! (`*.bits.bin`) and the datasets, runs the accelerator simulator for the
+//! speedup/energy columns, and renders every table and figure of the paper
+//! (DESIGN.md §4 experiment index) as markdown + CSV.
+
+pub mod figures;
+pub mod results;
+pub mod tables;
+
+pub use results::{ResultEntry, ResultsStore};

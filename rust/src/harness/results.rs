@@ -1,0 +1,186 @@
+//! Results store: parsed training-result JSONs.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+/// One training run's recorded outcome.
+#[derive(Debug, Clone)]
+pub struct ResultEntry {
+    pub path: PathBuf,
+    pub dataset: String,
+    pub arch: String,
+    pub method: String,
+    pub seed: usize,
+    pub layers: usize,
+    pub skip: bool,
+    pub nns_m: usize,
+    pub learn_bits: bool,
+    pub learn_step: bool,
+    pub manual_avg_bits: f64,
+    pub target_avg_bits: f64,
+    pub accuracy: f64,
+    pub metric_name: String,
+    pub avg_bits: f64,
+    pub compression: f64,
+    pub grad_zero_frac: f64,
+    pub bits_hist: Vec<usize>,
+    pub raw: Json,
+}
+
+impl ResultEntry {
+    fn parse(path: &Path) -> Result<ResultEntry> {
+        let j = json::parse_file(path)?;
+        let cfg = j.req("config")?;
+        Ok(ResultEntry {
+            path: path.to_path_buf(),
+            dataset: cfg.req_str("dataset")?.to_string(),
+            arch: cfg.req_str("arch")?.to_string(),
+            method: cfg.req_str("method")?.to_string(),
+            seed: cfg.req_usize("seed")?,
+            layers: cfg.req_usize("layers")?,
+            skip: cfg.get("skip").and_then(|v| v.as_bool()).unwrap_or(false),
+            nns_m: cfg.get("nns_m").and_then(|v| v.as_usize()).unwrap_or(0),
+            learn_bits: cfg
+                .get("learn_bits")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(true),
+            learn_step: cfg
+                .get("learn_step")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(true),
+            manual_avg_bits: cfg
+                .get("manual_avg_bits")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            target_avg_bits: cfg
+                .get("target_avg_bits")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            accuracy: j.req_f64("accuracy")?,
+            metric_name: j.req_str("metric_name")?.to_string(),
+            avg_bits: j.req_f64("avg_bits")?,
+            compression: j.req_f64("compression")?,
+            grad_zero_frac: j
+                .get("grad_zero_frac")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(-1.0),
+            bits_hist: j
+                .get("bits_hist")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default(),
+            raw: j,
+        })
+    }
+
+    /// Path of the sibling `.bits.bin` (exported for a2q cells).
+    pub fn bits_path(&self) -> PathBuf {
+        let mut p = self.path.clone();
+        p.set_extension("");
+        let s = p.to_string_lossy().into_owned();
+        PathBuf::from(format!("{s}.bits.bin"))
+    }
+}
+
+/// All parsed results under `artifacts/results`.
+#[derive(Debug, Clone, Default)]
+pub struct ResultsStore {
+    pub entries: Vec<ResultEntry>,
+}
+
+impl ResultsStore {
+    pub fn load(artifacts: &Path) -> Result<ResultsStore> {
+        let dir = artifacts.join("results");
+        let mut entries = Vec::new();
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(&dir)? {
+                let path = entry?.path();
+                if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                    match ResultEntry::parse(&path) {
+                        Ok(e) => entries.push(e),
+                        Err(err) => {
+                            log::warn!("skipping {}: {err}", path.display());
+                        }
+                    }
+                }
+            }
+        }
+        entries.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(ResultsStore { entries })
+    }
+
+    /// All entries matching (dataset, arch, method) with default ablation
+    /// flags (learnable bits+step, no manual assignment).
+    pub fn find(&self, dataset: &str, arch: &str, method: &str) -> Vec<&ResultEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.dataset == dataset
+                    && e.arch == arch
+                    && e.method == method
+                    && e.learn_bits
+                    && e.learn_step
+                    && e.manual_avg_bits == 0.0
+            })
+            .collect()
+    }
+
+    pub fn find_where<F: Fn(&ResultEntry) -> bool>(&self, pred: F) -> Vec<&ResultEntry> {
+        self.entries.iter().filter(|e| pred(e)).collect()
+    }
+
+    /// Mean ± std of accuracy over seeds, plus mean avg-bits.
+    pub fn aggregate(entries: &[&ResultEntry]) -> Option<(f64, f64, f64)> {
+        if entries.is_empty() {
+            return None;
+        }
+        let accs: Vec<f64> = entries.iter().map(|e| e.accuracy).collect();
+        let bits: Vec<f64> = entries.iter().map(|e| e.avg_bits).collect();
+        Some((stats::mean(&accs), stats::std_dev(&accs), stats::mean(&bits)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_result(dir: &Path, tag: &str, dataset: &str, method: &str, acc: f64) {
+        let json = format!(
+            r#"{{"config": {{"dataset": "{dataset}", "arch": "gcn", "method": "{method}",
+                "seed": 0, "layers": 2, "nns_m": 0, "learn_bits": true,
+                "learn_step": true, "manual_avg_bits": 0.0, "target_avg_bits": 2.0}},
+                "accuracy": {acc}, "metric_name": "accuracy", "avg_bits": 2.0,
+                "compression": 16.0, "bits_hist": [1, 2, 3], "grad_zero_frac": 0.5}}"#
+        );
+        std::fs::write(dir.join(format!("{tag}.json")), json).unwrap();
+    }
+
+    #[test]
+    fn loads_and_filters() {
+        let root = std::env::temp_dir().join(format!("a2q_results_{}", std::process::id()));
+        let dir = root.join("results");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_result(&dir, "a", "synth-cora", "a2q", 0.8);
+        write_result(&dir, "b", "synth-cora", "fp32", 0.82);
+        write_result(&dir, "c", "synth-pubmed", "a2q", 0.7);
+        std::fs::write(dir.join("garbage.json"), "{not json").unwrap();
+
+        let store = ResultsStore::load(&root).unwrap();
+        assert_eq!(store.entries.len(), 3); // garbage skipped
+        let found = store.find("synth-cora", "gcn", "a2q");
+        assert_eq!(found.len(), 1);
+        let (mean, std, bits) = ResultsStore::aggregate(&found).unwrap();
+        assert_eq!(mean, 0.8);
+        assert_eq!(std, 0.0);
+        assert_eq!(bits, 2.0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn aggregate_empty_is_none() {
+        assert!(ResultsStore::aggregate(&[]).is_none());
+    }
+}

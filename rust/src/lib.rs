@@ -1,0 +1,21 @@
+pub mod accel;
+pub mod coordinator;
+pub mod error;
+pub mod gnn;
+pub mod graph;
+pub mod harness;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub use error::{Error, Result};
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("A2Q_ARTIFACTS") { return dir.into(); }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() { return cand; }
+        if !cur.pop() { return "artifacts".into(); }
+    }
+}

@@ -1,0 +1,258 @@
+//! `a2q` — the L3 command-line entry point.
+//!
+//! Commands:
+//!   models    list the AOT model artifacts
+//!   infer     run one inference through the PJRT runtime
+//!   serve     run the serving coordinator under a synthetic load
+//!   simulate  run the cycle-accurate accelerator simulator
+//!   tables    regenerate the paper's tables from recorded results
+//!   figures   regenerate the paper's figure series (CSV)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use a2q::coordinator::request::Payload;
+use a2q::coordinator::{BatcherConfig, Coordinator, PjrtExecutor};
+use a2q::error::{Error, Result};
+use a2q::harness::tables::{render_table, TableSpec};
+use a2q::harness::{figures, ResultsStore};
+use a2q::quant::mixed::BitsFile;
+use a2q::runtime::{ArtifactIndex, EngineHandle};
+use a2q::util::cli::{App, CommandSpec};
+use a2q::util::rng::Rng;
+
+fn app() -> App {
+    App::new("a2q", "Aggregation-Aware Quantization for GNNs — serving & evaluation")
+        .command(CommandSpec::new("models", "list AOT model artifacts"))
+        .command(
+            CommandSpec::new("infer", "run one inference via PJRT")
+                .opt("model", "gcn-synth-cora-a2q", "artifact name")
+                .opt("nodes", "8", "how many nodes to classify (node-level)"),
+        )
+        .command(
+            CommandSpec::new("serve", "run the coordinator under synthetic load")
+                .opt("model", "gcn-synth-cora-a2q", "artifact name")
+                .opt("requests", "200", "number of requests")
+                .opt("clients", "4", "concurrent client threads")
+                .opt("max-wait-ms", "5", "batcher deadline (ms)"),
+        )
+        .command(
+            CommandSpec::new("simulate", "cycle-accurate accelerator simulation")
+                .opt("model", "gcn-synth-cora-a2q", "artifact name (needs bits.bin)")
+                .flag("unsorted", "disable the degree/bit-sorted schedules"),
+        )
+        .command(
+            CommandSpec::new("tables", "regenerate paper tables")
+                .opt("id", "all", "table1|table2|table3|table6|table11|table13|table16|fig5|all"),
+        )
+        .command(
+            CommandSpec::new("figures", "regenerate paper figure series (CSV)")
+                .opt("id", "all", "fig1|fig3|fig4|fig8|fig22|all")
+                .opt("dataset", "synth-cora", "dataset for fig1/fig4/fig8")
+                .opt("arch", "gcn", "architecture for fig4"),
+        )
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let matches = match app.parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = matches.command.clone();
+    if let Err(e) = run(&cmd, matches) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: &str, m: a2q::util::cli::Matches) -> Result<()> {
+    let artifacts = a2q::artifacts_dir();
+    match cmd {
+        "models" => {
+            let index = ArtifactIndex::load(&artifacts)?;
+            println!(
+                "{:<34} {:>8} {:>9} {:>11} {:>9}",
+                "name", "method", "avg_bits", "compression", "accuracy"
+            );
+            for a in index.all()? {
+                println!(
+                    "{:<34} {:>8} {:>9.2} {:>10.1}x {:>8.4}",
+                    a.name,
+                    a.method,
+                    a.avg_bits,
+                    32.0 / a.avg_bits.max(0.01),
+                    a.accuracy
+                );
+            }
+            Ok(())
+        }
+        "infer" => {
+            let index = ArtifactIndex::load(&artifacts)?;
+            let artifact = index.artifact(m.req("model")?)?;
+            let dataset = a2q::graph::io::load_named(&artifacts, &artifact.dataset)?;
+            let engine = EngineHandle::spawn()?;
+            println!("platform: {}", engine.platform()?);
+            let t0 = Instant::now();
+            let exec = PjrtExecutor::new(engine, &artifact, Some(&dataset))?;
+            println!("compiled {} in {:?}", artifact.name, t0.elapsed());
+            let n = m.get_usize("nodes")?;
+            let ids: Vec<u32> = (0..n as u32).collect();
+            let t1 = Instant::now();
+            let outputs = {
+                use a2q::coordinator::BatchExecutor;
+                exec.run_node_batch(&ids)?
+            };
+            println!("executed in {:?}", t1.elapsed());
+            for (v, out) in ids.iter().zip(&outputs) {
+                let class = out
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                println!(
+                    "node {v}: class {class} logits {:?}",
+                    &out[..out.len().min(4)]
+                );
+            }
+            Ok(())
+        }
+        "serve" => {
+            let index = ArtifactIndex::load(&artifacts)?;
+            let artifact = index.artifact(m.req("model")?)?;
+            let dataset = a2q::graph::io::load_named(&artifacts, &artifact.dataset)?;
+            let engine = EngineHandle::spawn()?;
+            let exec = Arc::new(PjrtExecutor::new(engine, &artifact, Some(&dataset))?);
+            let mut coord = Coordinator::new();
+            let cfg = BatcherConfig {
+                max_wait: Duration::from_millis(m.get_usize("max-wait-ms")? as u64),
+                ..BatcherConfig::default()
+            };
+            coord.add_model(&artifact.name, exec, cfg);
+            let coord = Arc::new(coord);
+            let total = m.get_usize("requests")?;
+            let clients = m.get_usize("clients")?;
+            let num_nodes = artifact.num_nodes;
+            let t0 = Instant::now();
+            let mut joins = Vec::new();
+            for c in 0..clients {
+                let coord = Arc::clone(&coord);
+                let name = artifact.name.clone();
+                joins.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(c as u64);
+                    let mut ok = 0usize;
+                    for _ in 0..total / clients {
+                        let ids = vec![rng.below(num_nodes) as u32];
+                        if coord
+                            .submit_blocking(&name, Payload::ClassifyNodes(ids))
+                            .is_ok()
+                        {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                }));
+            }
+            let ok: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+            let wall = t0.elapsed();
+            println!("served {ok} requests in {wall:?}");
+            println!("{}", coord.metrics().render());
+            Ok(())
+        }
+        "simulate" => {
+            let index = ArtifactIndex::load(&artifacts)?;
+            let artifact = index.artifact(m.req("model")?)?;
+            let bits_path = artifact
+                .bits_path()
+                .ok_or_else(|| Error::artifact("model has no bits.bin (fp32?)"))?;
+            let bf = BitsFile::load(&bits_path)?;
+            let csr =
+                a2q::harness::tables::representative_csr(&artifacts, &artifact.dataset)?;
+            let cfg = if m.has_flag("unsorted") {
+                a2q::accel::AccelConfig::unsorted()
+            } else {
+                a2q::accel::AccelConfig::default()
+            };
+            let sim = a2q::accel::Simulator::new(cfg);
+            let n_maps = bf.maps.len();
+            let matmuls: Vec<(usize, usize)> = bf
+                .maps
+                .iter()
+                .enumerate()
+                .map(|(i, (_b, dim))| {
+                    (*dim, if i + 1 == n_maps { artifact.out_dim } else { 64 })
+                })
+                .collect();
+            let workload = a2q::accel::ModelWorkload::from_bits_file(&bf, matmuls, 0);
+            let stats = a2q::accel::simulate_model_cycles(&sim, &csr, &workload);
+            let speedup = a2q::accel::speedup_vs_dq(&sim, &csr, &workload);
+            let energy = a2q::accel::EnergyModel::default();
+            let rep = energy.accelerator(&stats);
+            println!("model {}  avg_bits {:.2}", artifact.name, bf.avg_bits());
+            println!(
+                "cycles: update {} + aggregate {} = {}",
+                stats.update_cycles,
+                stats.aggregate_cycles,
+                stats.total_cycles()
+            );
+            println!(
+                "ops: int_mults {}M  int_adds {}M  float {}M",
+                stats.int_mults / 1_000_000,
+                stats.int_adds / 1_000_000,
+                stats.float_ops / 1_000_000
+            );
+            println!("speedup vs DQ-INT4: {speedup:.2}x");
+            println!(
+                "energy: compute {:.1} µJ, sram {:.1} µJ, off-chip {:.1} µJ  (vs GPU model: {:.1}x better)",
+                rep.compute_nj / 1e3,
+                rep.sram_nj / 1e3,
+                rep.offchip_nj / 1e3,
+                energy.efficiency_vs_gpu(&stats)
+            );
+            Ok(())
+        }
+        "tables" => {
+            let store = ResultsStore::load(&artifacts)?;
+            let id = m.req("id")?;
+            let specs: Vec<TableSpec> = if id == "all" {
+                TableSpec::all().to_vec()
+            } else {
+                vec![TableSpec::parse(id)
+                    .ok_or_else(|| Error::config(format!("unknown table '{id}'")))?]
+            };
+            for spec in specs {
+                println!("{}", render_table(spec, &store, &artifacts));
+            }
+            Ok(())
+        }
+        "figures" => {
+            let store = ResultsStore::load(&artifacts)?;
+            let id = m.req("id")?;
+            let dataset = m.req("dataset")?;
+            let arch = m.req("arch")?;
+            let all = id == "all";
+            if all || id == "fig1" {
+                print!("{}", figures::fig1(&artifacts, dataset)?);
+            }
+            if all || id == "fig3" {
+                print!("{}", figures::fig3(&store));
+            }
+            if all || id == "fig4" {
+                print!("{}", figures::fig4(&store, &artifacts, dataset, arch)?);
+            }
+            if all || id == "fig8" {
+                print!("{}", figures::fig8(&artifacts, dataset)?);
+            }
+            if all || id == "fig22" {
+                print!("{}", figures::fig22(&store, &artifacts));
+            }
+            Ok(())
+        }
+        other => Err(Error::config(format!("unhandled command {other}"))),
+    }
+}

@@ -1,0 +1,202 @@
+//! Per-node mixed-precision parameters + the `.bits.bin` loader.
+//!
+//! `NodeQuantParams` carries the learned per-node (step, bits) of one
+//! feature map; `BitsFile` reads the bit vectors exported by
+//! `python/compile/aot.py::write_bits_file` (magic "A2QB") that drive the
+//! accelerator simulator.
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::uniform;
+
+/// Learned per-node quantization parameters for one feature map.
+#[derive(Debug, Clone)]
+pub struct NodeQuantParams {
+    pub steps: Vec<f32>,
+    pub bits: Vec<u8>,
+    pub signed: bool,
+}
+
+impl NodeQuantParams {
+    pub fn new(steps: Vec<f32>, bits: Vec<u8>, signed: bool) -> Result<Self> {
+        if steps.len() != bits.len() {
+            return Err(Error::shape("steps/bits length mismatch"));
+        }
+        Ok(NodeQuantParams {
+            steps,
+            bits,
+            signed,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Fake-quantize a [N, F] feature matrix row-by-row in place.
+    pub fn fake_quantize(&self, x: &mut [f32], feat_dim: usize) {
+        assert_eq!(x.len(), self.len() * feat_dim);
+        for (v, chunk) in x.chunks_exact_mut(feat_dim).enumerate() {
+            uniform::fake_quantize_row(chunk, self.steps[v], self.bits[v], self.signed);
+        }
+    }
+
+    /// Quantize to integer codes, returning codes + per-row steps (for the
+    /// Eq. 2 integer-path matmul).
+    pub fn quantize_codes(&self, x: &[f32], feat_dim: usize) -> (Vec<i32>, Vec<f32>) {
+        assert_eq!(x.len(), self.len() * feat_dim);
+        let mut codes = vec![0i32; x.len()];
+        for (v, chunk) in x.chunks_exact(feat_dim).enumerate() {
+            let s = self.steps[v];
+            let b = self.bits[v];
+            for (o, &xv) in codes[v * feat_dim..(v + 1) * feat_dim]
+                .iter_mut()
+                .zip(chunk)
+            {
+                *o = uniform::quantize_value(xv, s, b, self.signed);
+            }
+        }
+        (codes, self.steps.clone())
+    }
+
+    /// Memory-weighted average bitwidth of this map.
+    pub fn avg_bits(&self) -> f64 {
+        if self.bits.is_empty() {
+            return 0.0;
+        }
+        self.bits.iter().map(|&b| b as f64).sum::<f64>() / self.bits.len() as f64
+    }
+}
+
+/// Parsed `.bits.bin`: one bit vector per quantized feature map, each with
+/// its feature dimension (for memory weighting).
+#[derive(Debug, Clone)]
+pub struct BitsFile {
+    pub maps: Vec<(Vec<u8>, usize)>,
+}
+
+impl BitsFile {
+    pub fn load(path: &Path) -> Result<BitsFile> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        if buf.len() < 8 || &buf[..4] != b"A2QB" {
+            return Err(Error::artifact(format!(
+                "{}: not an A2QB file",
+                path.display()
+            )));
+        }
+        let n_maps = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        let mut pos = 8;
+        let mut maps = Vec::with_capacity(n_maps);
+        for _ in 0..n_maps {
+            if pos + 8 > buf.len() {
+                return Err(Error::artifact("truncated bits file"));
+            }
+            let count = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+            let dim = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap()) as usize;
+            pos += 8;
+            if pos + count > buf.len() {
+                return Err(Error::artifact("truncated bits payload"));
+            }
+            maps.push((buf[pos..pos + count].to_vec(), dim));
+            pos += count;
+        }
+        Ok(BitsFile { maps })
+    }
+
+    /// Memory-weighted average bits across all maps (paper's "Average bits").
+    pub fn avg_bits(&self) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (bits, dim) in &self.maps {
+            num += bits.iter().map(|&b| b as f64).sum::<f64>() * *dim as f64;
+            den += bits.len() as f64 * *dim as f64;
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+
+    /// Histogram over bitwidths 1..=8 pooled across maps.
+    pub fn histogram(&self) -> [usize; 8] {
+        let mut h = [0usize; 8];
+        for (bits, _) in &self.maps {
+            for &b in bits {
+                let i = (b.clamp(1, 8) - 1) as usize;
+                h[i] += 1;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn fake_quantize_per_row() {
+        let p = NodeQuantParams::new(vec![0.1, 0.5], vec![4, 2], true).unwrap();
+        let mut x = vec![0.23, -0.9, 0.6, 10.0];
+        p.fake_quantize(&mut x, 2);
+        assert!((x[0] - 0.2).abs() < 1e-6);
+        assert!((x[1] + 0.7).abs() < 1e-6); // clipped to 7 levels * 0.1
+        assert!((x[2] - 0.5).abs() < 1e-6);
+        assert!((x[3] - 0.5).abs() < 1e-6); // 2-bit: 1 level * 0.5
+    }
+
+    #[test]
+    fn codes_roundtrip_scales() {
+        let p = NodeQuantParams::new(vec![0.1, 0.2], vec![6, 6], true).unwrap();
+        let x = vec![0.31, -0.52, 0.4, 0.79];
+        let (codes, steps) = p.quantize_codes(&x, 2);
+        assert_eq!(codes, vec![3, -5, 2, 4]);
+        assert_eq!(steps, vec![0.1, 0.2]);
+    }
+
+    #[test]
+    fn bits_file_roundtrip() {
+        let dir = std::env::temp_dir().join("a2q_bits_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bits.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(b"A2QB").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // map 1: 3 nodes, dim 16
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(&16u32.to_le_bytes()).unwrap();
+        f.write_all(&[2u8, 4, 8]).unwrap();
+        // map 2: 2 nodes, dim 32
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&32u32.to_le_bytes()).unwrap();
+        f.write_all(&[1u8, 1]).unwrap();
+        drop(f);
+
+        let bf = BitsFile::load(&path).unwrap();
+        assert_eq!(bf.maps.len(), 2);
+        assert_eq!(bf.maps[0].0, vec![2, 4, 8]);
+        let want = (2.0 + 4.0 + 8.0) * 16.0 + 2.0 * 32.0;
+        let den = 3.0 * 16.0 + 2.0 * 32.0;
+        assert!((bf.avg_bits() - want / den).abs() < 1e-12);
+        assert_eq!(bf.histogram()[0], 2); // two 1-bit nodes
+    }
+
+    #[test]
+    fn bits_file_rejects_garbage() {
+        let dir = std::env::temp_dir().join("a2q_bits_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bits.bin");
+        std::fs::write(&path, b"XXXX").unwrap();
+        assert!(BitsFile::load(&path).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Quantization substrate (L3 mirror of `python/compile/quantize.py`).
+//!
+//! The rust side never *learns* quantization parameters (training is
+//! build-time python); it applies them: uniform fake-quant (Eq. 1),
+//! per-node mixed precision, the Nearest Neighbor Strategy runtime lookup
+//! (Algorithm 1, binary search over sorted q_max exactly as the paper's
+//! comparator array), bit-packed feature storage, and the compression
+//! accounting behind the paper's "Average bits" / "Compression ratio"
+//! columns.
+
+pub mod compress;
+pub mod mixed;
+pub mod nns;
+pub mod pack;
+pub mod uniform;
+
+pub use compress::{average_bits, compression_ratio, feature_memory_bytes};
+pub use mixed::{BitsFile, NodeQuantParams};
+pub use nns::NnsTable;
+pub use uniform::{dequantize, quantize_row, quantize_value, Quantized};

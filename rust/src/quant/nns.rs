@@ -1,0 +1,175 @@
+//! Nearest Neighbor Strategy runtime (Algorithm 1).
+//!
+//! The paper sorts the m learned `q_max = s·(2^{b-1}−1)` values offline and
+//! binary-searches them per node at inference ("can be implemented by
+//! binary searching"; the ASIC overlaps it with a comparator array).  This
+//! is that lookup: O(log m) per node, allocation-free per query.
+
+use super::uniform::levels;
+
+/// Sorted NNS lookup table over m (step, bits) groups.
+#[derive(Debug, Clone)]
+pub struct NnsTable {
+    /// sorted ascending
+    qmax: Vec<f32>,
+    /// (step, bits) in qmax-sorted order
+    params: Vec<(f32, u8)>,
+    /// original group index in qmax-sorted order (for gradient bookkeeping /
+    /// diagnostics parity with python)
+    orig_index: Vec<u32>,
+}
+
+impl NnsTable {
+    pub fn new(steps: &[f32], bits: &[u8], signed: bool) -> NnsTable {
+        assert_eq!(steps.len(), bits.len());
+        let mut rows: Vec<(f32, (f32, u8), u32)> = steps
+            .iter()
+            .zip(bits)
+            .enumerate()
+            .map(|(i, (&s, &b))| (s * levels(b, signed) as f32, (s, b), i as u32))
+            .collect();
+        // stable sort keeps the python argmin tie-break (lower original
+        // index wins among equal qmax)
+        rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.2.cmp(&b.2)));
+        NnsTable {
+            qmax: rows.iter().map(|r| r.0).collect(),
+            params: rows.iter().map(|r| r.1).collect(),
+            orig_index: rows.iter().map(|r| r.2).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.qmax.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.qmax.is_empty()
+    }
+
+    /// Binary-search the group whose q_max is nearest to `f`.
+    /// Ties (equidistant neighbours) resolve to the lower original index,
+    /// matching `jnp.argmin` in the python reference.
+    pub fn select(&self, f: f32) -> (usize, f32, u8) {
+        debug_assert!(!self.qmax.is_empty());
+        let pos = self.qmax.partition_point(|&q| q < f);
+        let candidates = [pos.checked_sub(1), Some(pos)];
+        let mut best: Option<(f32, u32, usize)> = None;
+        for cand in candidates.into_iter().flatten() {
+            if cand >= self.qmax.len() {
+                continue;
+            }
+            // rewind to the head of the equal-qmax run: within a run the
+            // stable sort put the lowest original index first, which is the
+            // argmin tie-break python uses.
+            let mut cand = cand;
+            while cand > 0 && self.qmax[cand - 1] == self.qmax[cand] {
+                cand -= 1;
+            }
+            let dist = (self.qmax[cand] - f).abs();
+            let key = (dist, self.orig_index[cand], cand);
+            best = match best {
+                None => Some(key),
+                Some(cur) if (key.0, key.1) < (cur.0, cur.1) => Some(key),
+                Some(cur) => Some(cur),
+            };
+        }
+        let (_, _, idx) = best.expect("non-empty table");
+        let (s, b) = self.params[idx];
+        (self.orig_index[idx] as usize, s, b)
+    }
+
+    /// Select per row of a [N, F] matrix using the row max-|x| (Algorithm 1
+    /// line 4-5). Returns (orig_index, step, bits) per row.
+    pub fn select_rows(&self, x: &[f32], feat_dim: usize) -> Vec<(usize, f32, u8)> {
+        x.chunks_exact(feat_dim)
+            .map(|row| {
+                let f = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                self.select(f)
+            })
+            .collect()
+    }
+
+    /// Linear-scan reference (used by tests and the crossover bench).
+    pub fn select_linear(&self, f: f32) -> (usize, f32, u8) {
+        let mut best = 0usize;
+        let mut best_key = (f32::INFINITY, u32::MAX);
+        for (i, &q) in self.qmax.iter().enumerate() {
+            let key = ((q - f).abs(), self.orig_index[i]);
+            if key < best_key {
+                best_key = key;
+                best = i;
+            }
+        }
+        let (s, b) = self.params[best];
+        (self.orig_index[best] as usize, s, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{property, Gen};
+
+    #[test]
+    fn picks_nearest() {
+        // qmax: 0.1*7=0.7, 1.0*7=7.0
+        let t = NnsTable::new(&[0.1, 1.0], &[4, 4], true);
+        assert_eq!(t.select(0.6).0, 0);
+        assert_eq!(t.select(6.0).0, 1);
+        assert_eq!(t.select(100.0).0, 1);
+        assert_eq!(t.select(0.0).0, 0);
+    }
+
+    #[test]
+    fn binary_matches_linear_property() {
+        property("nns binary == linear scan", 100, |g: &mut Gen| {
+            let m = g.usize_range(1, 200);
+            let steps = g.vec_uniform(m, 0.005, 0.5);
+            let bits: Vec<u8> = (0..m).map(|_| g.usize_range(1, 9) as u8).collect();
+            let t = NnsTable::new(&steps, &bits, true);
+            for _ in 0..20 {
+                let f = g.f32_range(0.0, 5.0);
+                let (bi, bs, bb) = t.select(f);
+                let (li, ls, lb) = t.select_linear(f);
+                assert_eq!((bi, bs, bb), (li, ls, lb), "f={f}");
+            }
+        });
+    }
+
+    #[test]
+    fn selection_minimises_distance_property() {
+        property("nns argmin optimality", 50, |g: &mut Gen| {
+            let m = g.usize_range(2, 64);
+            let steps = g.vec_uniform(m, 0.01, 0.4);
+            let bits: Vec<u8> = (0..m).map(|_| g.usize_range(2, 9) as u8).collect();
+            let t = NnsTable::new(&steps, &bits, true);
+            let f = g.f32_range(0.0, 4.0);
+            let (idx, s, b) = t.select(f);
+            let chosen_q = s * levels(b, true) as f32;
+            for (st, bt) in steps.iter().zip(&bits) {
+                let q = st * levels(*bt, true) as f32;
+                assert!(
+                    (chosen_q - f).abs() <= (q - f).abs() + 1e-6,
+                    "group {idx} not optimal for f={f}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn select_rows_uses_row_max() {
+        let t = NnsTable::new(&[0.1, 1.0], &[4, 4], true);
+        // row 0 max |x| = 0.5 -> group 0; row 1 max = 6 -> group 1
+        let x = vec![0.5, -0.2, -6.0, 0.1];
+        let picks = t.select_rows(&x, 2);
+        assert_eq!(picks[0].0, 0);
+        assert_eq!(picks[1].0, 1);
+    }
+
+    #[test]
+    fn tie_breaks_to_lower_original_index() {
+        // duplicate qmax values: groups 0 and 1 identical
+        let t = NnsTable::new(&[0.1, 0.1, 0.2], &[4, 4, 4], true);
+        assert_eq!(t.select(0.7).0, 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Bit-packed feature storage.
+//!
+//! The paper's compression ratios are *memory* ratios: an m-bit node stores
+//! its F features in m·F bits.  This module actually packs/unpacks codes at
+//! arbitrary bitwidths 1..=8 (sign-magnitude is avoided by biasing signed
+//! codes), proving the claimed memory layout is realizable and giving the
+//! serving path a compact at-rest representation.
+
+/// Packed feature map: each row packed at its own bitwidth.
+#[derive(Debug, Clone)]
+pub struct PackedFeatures {
+    pub data: Vec<u8>,
+    /// per row: (bit offset into data, bits, step)
+    pub rows: Vec<(usize, u8, f32)>,
+    pub feat_dim: usize,
+    pub signed: bool,
+}
+
+/// Pack integer codes row-wise; row v uses bits[v] bits per element.
+/// Signed codes c ∈ [−(2^{b−1}−1), 2^{b−1}−1] are stored biased by
+/// +(2^{b−1}−1); unsigned codes stored raw.
+pub fn pack_rows(
+    codes: &[i32],
+    steps: &[f32],
+    bits: &[u8],
+    feat_dim: usize,
+    signed: bool,
+) -> PackedFeatures {
+    assert_eq!(codes.len(), steps.len() * feat_dim);
+    assert_eq!(steps.len(), bits.len());
+    let total_bits: usize = bits.iter().map(|&b| b as usize * feat_dim).sum();
+    let mut data = vec![0u8; total_bits.div_ceil(8)];
+    let mut rows = Vec::with_capacity(bits.len());
+    let mut bitpos = 0usize;
+    for (v, (&b, &s)) in bits.iter().zip(steps).enumerate() {
+        rows.push((bitpos, b, s));
+        let bias = if signed { (1i32 << (b.max(1) - 1)) - 1 } else { 0 };
+        for &c in &codes[v * feat_dim..(v + 1) * feat_dim] {
+            let raw = (c + bias) as u32;
+            write_bits(&mut data, bitpos, b, raw);
+            bitpos += b as usize;
+        }
+    }
+    PackedFeatures {
+        data,
+        rows,
+        feat_dim,
+        signed,
+    }
+}
+
+impl PackedFeatures {
+    /// Unpack one row back to integer codes.
+    pub fn unpack_row(&self, v: usize) -> Vec<i32> {
+        let (start, b, _s) = self.rows[v];
+        let bias = if self.signed {
+            (1i32 << (b.max(1) - 1)) - 1
+        } else {
+            0
+        };
+        let mut out = Vec::with_capacity(self.feat_dim);
+        let mut pos = start;
+        for _ in 0..self.feat_dim {
+            let raw = read_bits(&self.data, pos, b);
+            out.push(raw as i32 - bias);
+            pos += b as usize;
+        }
+        out
+    }
+
+    /// Dequantize one row.
+    pub fn dequantize_row(&self, v: usize) -> Vec<f32> {
+        let (_, _, s) = self.rows[v];
+        self.unpack_row(v).into_iter().map(|c| c as f32 * s).collect()
+    }
+
+    /// Total storage in bytes (payload only).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+fn write_bits(data: &mut [u8], bitpos: usize, nbits: u8, value: u32) {
+    debug_assert!(nbits <= 8 && (nbits == 32 || value < (1u32 << nbits)));
+    let mut pos = bitpos;
+    for i in 0..nbits {
+        if (value >> i) & 1 == 1 {
+            data[pos / 8] |= 1 << (pos % 8);
+        }
+        pos += 1;
+    }
+}
+
+fn read_bits(data: &[u8], bitpos: usize, nbits: u8) -> u32 {
+    let mut out = 0u32;
+    let mut pos = bitpos;
+    for i in 0..nbits {
+        if (data[pos / 8] >> (pos % 8)) & 1 == 1 {
+            out |= 1 << i;
+        }
+        pos += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::{levels, quantize_value};
+    use crate::util::prop::{property, Gen};
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let steps = vec![0.1f32, 0.2];
+        let bits = vec![3u8, 5];
+        let codes = vec![1, -3, 0, 2, /* row1 */ 7, -15, 4, -1];
+        let p = pack_rows(&codes, &steps, &bits, 4, true);
+        assert_eq!(p.unpack_row(0), &codes[..4]);
+        assert_eq!(p.unpack_row(1), &codes[4..]);
+    }
+
+    #[test]
+    fn payload_matches_bit_accounting() {
+        let steps = vec![0.1f32; 10];
+        let bits = vec![2u8; 10];
+        let codes = vec![0i32; 10 * 16];
+        let p = pack_rows(&codes, &steps, &bits, 16, true);
+        assert_eq!(p.payload_bytes(), (10 * 16 * 2 + 7) / 8);
+    }
+
+    #[test]
+    fn roundtrip_property_with_real_quantizer() {
+        property("pack roundtrip", 50, |g: &mut Gen| {
+            let n = g.usize_range(1, 20);
+            let f = g.usize_range(1, 24);
+            let signed = g.bool(0.5);
+            let steps = g.vec_uniform(n, 0.01, 0.3);
+            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
+            let x = g.vec_normal(n * f, 1.0);
+            let mut codes = vec![0i32; n * f];
+            for v in 0..n {
+                for j in 0..f {
+                    codes[v * f + j] =
+                        quantize_value(x[v * f + j], steps[v], bits[v], signed);
+                }
+            }
+            let p = pack_rows(&codes, &steps, &bits, f, signed);
+            for v in 0..n {
+                assert_eq!(p.unpack_row(v), &codes[v * f..(v + 1) * f], "row {v}");
+                let lv = levels(bits[v], signed);
+                assert!(p.unpack_row(v).iter().all(|c| c.abs() <= lv));
+            }
+        });
+    }
+
+    #[test]
+    fn dequantize_row_scales() {
+        let p = pack_rows(&[3, -2], &[0.5], &[4], 2, true);
+        assert_eq!(p.dequantize_row(0), vec![1.5, -1.0]);
+    }
+}

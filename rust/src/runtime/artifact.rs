@@ -1,0 +1,255 @@
+//! Artifact discovery: the `artifacts/models` directory layout.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Metadata of one exported model variant (subset of the manifest needed
+/// for runtime dispatch; full parameters load through `gnn::GnnModel`).
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub dir: PathBuf,
+    pub hlo_path: PathBuf,
+    pub dataset: String,
+    pub arch: String,
+    pub method: String,
+    pub node_level: bool,
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub graph_capacity: usize,
+    pub avg_bits: f64,
+    pub accuracy: f64,
+    pub expected_head: Vec<f32>,
+    pub manifest: Json,
+}
+
+/// Parse the ENTRY computation's surviving parameters from HLO text.
+///
+/// XLA eliminates unused entry parameters during lowering (e.g. GCN never
+/// reads `sum_w`), so the compiled program may expect fewer buffers than
+/// the logical export signature.  jax names entry args `Arg_<logical>...`;
+/// this returns the logical index for each surviving position, sorted by
+/// position.
+pub fn parse_param_map(hlo_text: &str) -> Vec<usize> {
+    let mut in_entry = false;
+    let mut pairs: Vec<(usize, usize)> = Vec::new(); // (position, logical)
+    for line in hlo_text.lines() {
+        if line.starts_with("ENTRY") {
+            in_entry = true;
+            continue;
+        }
+        if in_entry {
+            if line.starts_with('}') {
+                break;
+            }
+            let Some(ppos) = line.find(" parameter(") else {
+                continue;
+            };
+            let pos_str: String = line[ppos + " parameter(".len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            let Some(apos) = line.find("Arg_") else { continue };
+            let log_str: String = line[apos + 4..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            if let (Ok(p), Ok(l)) = (pos_str.parse(), log_str.parse()) {
+                pairs.push((p, l));
+            }
+        }
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+    pairs.into_iter().map(|(_p, l)| l).collect()
+}
+
+impl ModelArtifact {
+    pub fn load(dir: &Path, name: &str) -> Result<ModelArtifact> {
+        let man = json::parse_file(&dir.join(format!("{name}.manifest.json")))?;
+        Ok(ModelArtifact {
+            name: name.to_string(),
+            dir: dir.to_path_buf(),
+            hlo_path: dir.join(man.req_str("hlo")?),
+            dataset: man.req_str("dataset")?.to_string(),
+            arch: man.req_str("arch")?.to_string(),
+            method: man.req_str("method")?.to_string(),
+            node_level: man.req("node_level")?.as_bool().unwrap_or(true),
+            num_nodes: man.req_usize("num_nodes")?,
+            num_edges: man.req_usize("num_edges")?,
+            in_dim: man.req_usize("in_dim")?,
+            out_dim: man.req_usize("out_dim")?,
+            graph_capacity: man.req_usize("graph_capacity")?,
+            avg_bits: man.req_f64("avg_bits")?,
+            accuracy: man.req_f64("accuracy")?,
+            expected_head: man
+                .req("expected_head")?
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_f64())
+                        .map(|v| v as f32)
+                        .collect()
+                })
+                .unwrap_or_default(),
+            manifest: man,
+        })
+    }
+
+    pub fn bits_path(&self) -> Option<PathBuf> {
+        self.manifest
+            .get("bits_bin")
+            .and_then(|v| v.as_str())
+            .map(|f| self.dir.join(f))
+    }
+
+    /// Surviving logical parameter indices of the compiled program, in
+    /// positional order.  Preferred source: the manifest's `param_map`
+    /// (jax's `kept_var_idx`, recorded at export).  Fallback: parsing the
+    /// HLO entry's Arg names (only valid when jax did not renumber them).
+    pub fn param_map(&self) -> Result<Vec<usize>> {
+        if let Some(arr) = self.manifest.get("param_map").and_then(|v| v.as_arr()) {
+            let map: Vec<usize> = arr.iter().filter_map(|v| v.as_usize()).collect();
+            if !map.is_empty() {
+                return Ok(map);
+            }
+        }
+        let text = std::fs::read_to_string(&self.hlo_path)?;
+        let map = parse_param_map(&text);
+        if map.is_empty() {
+            return Err(Error::artifact(format!(
+                "{}: no parameters found in HLO entry",
+                self.hlo_path.display()
+            )));
+        }
+        Ok(map)
+    }
+
+    /// Number of data inputs before the appended weight parameters.
+    pub fn num_data_inputs(&self) -> usize {
+        self.manifest
+            .get("num_data_inputs")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(if self.node_level { 5 } else { 7 })
+    }
+
+    /// Load the weight tensors (manifest order) as shaped exec inputs —
+    /// appended after the data inputs on every execution (HLO text cannot
+    /// carry large constants; see aot.py).
+    pub fn weight_inputs(&self) -> Result<Vec<super::engine::ExecInput>> {
+        use std::io::Read;
+        let path = self.dir.join(self.manifest.req_str("weights_bin")?);
+        let mut raw = Vec::new();
+        std::fs::File::open(&path)?.read_to_end(&mut raw)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let mut out = Vec::new();
+        for t in self
+            .manifest
+            .req("tensors")?
+            .as_arr()
+            .ok_or_else(|| Error::artifact("tensors not an array"))?
+        {
+            let shape: Vec<i64> = t
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| Error::artifact("bad shape"))?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as i64)
+                .collect();
+            let offset = t.req_usize("offset")?;
+            let len: usize = shape.iter().product::<i64>().max(1) as usize;
+            out.push(super::engine::ExecInput::f32_shaped(
+                data[offset..offset + len].to_vec(),
+                shape,
+            ));
+        }
+        Ok(out)
+    }
+}
+
+/// The `index.json` written by `aot.py`: all exported variants.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub models: Vec<String>,
+}
+
+impl ArtifactIndex {
+    /// Load `<artifacts>/models/index.json`.
+    pub fn load(artifacts: &Path) -> Result<ArtifactIndex> {
+        let dir = artifacts.join("models");
+        let idx = json::parse_file(&dir.join("index.json")).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read artifact index ({e}); run `make artifacts` first"
+            ))
+        })?;
+        let models = idx
+            .req("models")?
+            .as_arr()
+            .ok_or_else(|| Error::artifact("index.models not an array"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        Ok(ArtifactIndex { dir, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<ModelArtifact> {
+        if !self.models.iter().any(|m| m == name) {
+            return Err(Error::artifact(format!(
+                "model '{name}' not in index (have: {:?})",
+                self.models
+            )));
+        }
+        ModelArtifact::load(&self.dir, name)
+    }
+
+    pub fn all(&self) -> Result<Vec<ModelArtifact>> {
+        self.models
+            .iter()
+            .map(|m| ModelArtifact::load(&self.dir, m))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_index_gives_actionable_error() {
+        let err = ArtifactIndex::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn param_map_parses_entry_only() {
+        let hlo = r#"
+region_0 {
+  Arg_9.9 = f32[2]{0} parameter(0)
+}
+
+ENTRY main.42 {
+  Arg_2.7 = s32[13534]{0} parameter(2)
+  Arg_0.19 = f32[2708,1433]{1,0} parameter(0)
+  Arg_1.11 = s32[13534]{0} parameter(1)
+  Arg_3.1 = f32[13534]{0} parameter(3)
+  ROOT t = (f32[2708,7]{1,0}) tuple(Arg_0.19)
+}
+"#;
+        // position order 0..3 → logical 0,1,2,3 (sum_w / logical 4 dropped)
+        assert_eq!(parse_param_map(hlo), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn param_map_reordered_logicals() {
+        let hlo = "ENTRY e {\n  Arg_4.1 = f32[2]{0} parameter(0)\n  Arg_1.2 = f32[2]{0} parameter(1)\n}\n";
+        assert_eq!(parse_param_map(hlo), vec![4, 1]);
+    }
+}

@@ -1,0 +1,237 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! The `xla` crate's `PjRtClient` holds `Rc` internals, so it is neither
+//! `Send` nor `Sync`.  [`Engine`] is therefore a single-threaded object,
+//! and [`EngineHandle`] runs one behind a dedicated service thread (actor
+//! pattern): the coordinator's runner threads talk to it over channels.
+//! PJRT CPU executions were serialized anyway (single device); the actor
+//! makes that explicit and safe.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+
+use crate::error::{Error, Result};
+
+use super::artifact::ModelArtifact;
+
+/// One typed, shaped input buffer for an executable.
+#[derive(Debug, Clone)]
+pub enum ExecInput {
+    /// (flat data, dims) — dims empty or len-1 means rank-1
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl ExecInput {
+    pub fn f32_1d(data: Vec<f32>) -> ExecInput {
+        let n = data.len() as i64;
+        ExecInput::F32(data, vec![n])
+    }
+    pub fn f32_2d(data: Vec<f32>, rows: usize, cols: usize) -> ExecInput {
+        ExecInput::F32(data, vec![rows as i64, cols as i64])
+    }
+    /// Rank-0 scalar (dims = []).
+    pub fn f32_scalar(v: f32) -> ExecInput {
+        ExecInput::F32(vec![v], vec![])
+    }
+    /// Arbitrary-shape f32 tensor.
+    pub fn f32_shaped(data: Vec<f32>, dims: Vec<i64>) -> ExecInput {
+        ExecInput::F32(data, dims)
+    }
+    pub fn i32_1d(data: Vec<i32>) -> ExecInput {
+        let n = data.len() as i64;
+        ExecInput::I32(data, vec![n])
+    }
+}
+
+/// Single-threaded compiled-executable cache over a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the HLO-text artifact.
+    pub fn load_artifact(&mut self, artifact: &ModelArtifact) -> Result<()> {
+        self.load_hlo_file(&artifact.name, &artifact.hlo_path)
+    }
+
+    /// Compile an HLO text file under a cache key.
+    pub fn load_hlo_file(&mut self, key: &str, path: &Path) -> Result<()> {
+        if self.executables.contains_key(key) {
+            return Ok(());
+        }
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::artifact("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, key: &str) -> bool {
+        self.executables.contains_key(key)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Execute a loaded computation.  The AOT export wraps the result in a
+    /// 1-tuple (`return_tuple=True`), unwrapped here; returns the flat f32
+    /// output buffer.
+    pub fn execute(&self, key: &str, inputs: &[ExecInput]) -> Result<Vec<f32>> {
+        let mut literals: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let lit = match inp {
+                ExecInput::F32(v, dims) if dims.is_empty() => xla::Literal::from(v[0]),
+                ExecInput::I32(v, dims) if dims.is_empty() => xla::Literal::from(v[0]),
+                ExecInput::F32(v, dims) => reshape_if_needed(xla::Literal::vec1(v), dims)?,
+                ExecInput::I32(v, dims) => reshape_if_needed(xla::Literal::vec1(v), dims)?,
+            };
+            literals.push(lit);
+        }
+        let exe = self
+            .executables
+            .get(key)
+            .ok_or_else(|| Error::Runtime(format!("executable '{key}' not loaded")))?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("expected 1-tuple output: {e:?}")))?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+fn reshape_if_needed(lit: xla::Literal, dims: &[i64]) -> Result<xla::Literal> {
+    if dims.len() <= 1 {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(dims)?)
+}
+
+// ---------------------------------------------------------------------------
+// Actor wrapper
+// ---------------------------------------------------------------------------
+
+enum EngineMsg {
+    Load(String, PathBuf, mpsc::Sender<Result<()>>),
+    Execute(String, Vec<ExecInput>, mpsc::Sender<Result<Vec<f32>>>),
+    Platform(mpsc::Sender<String>),
+}
+
+/// Cloneable, `Send` handle to an engine running on its own thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<EngineMsg>,
+}
+
+impl EngineHandle {
+    /// Spawn the service thread (creates the PJRT client there).
+    pub fn spawn() -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<EngineMsg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        thread::Builder::new()
+            .name("a2q-pjrt".into())
+            .spawn(move || {
+                let mut engine = match Engine::cpu() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for msg in rx {
+                    match msg {
+                        EngineMsg::Load(key, path, reply) => {
+                            let _ = reply.send(engine.load_hlo_file(&key, &path));
+                        }
+                        EngineMsg::Execute(key, inputs, reply) => {
+                            let _ = reply.send(engine.execute(&key, &inputs));
+                        }
+                        EngineMsg::Platform(reply) => {
+                            let _ = reply.send(engine.platform());
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn engine thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("engine thread died".into()))??;
+        Ok(EngineHandle { tx })
+    }
+
+    pub fn load_artifact(&self, artifact: &ModelArtifact) -> Result<()> {
+        self.load_hlo_file(&artifact.name, artifact.hlo_path.clone())
+    }
+
+    pub fn load_hlo_file(&self, key: &str, path: PathBuf) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(EngineMsg::Load(key.to_string(), path, tx))
+            .map_err(|_| Error::Runtime("engine thread stopped".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread stopped".into()))?
+    }
+
+    pub fn execute(&self, key: &str, inputs: Vec<ExecInput>) -> Result<Vec<f32>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(EngineMsg::Execute(key.to_string(), inputs, tx))
+            .map_err(|_| Error::Runtime("engine thread stopped".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread stopped".into()))?
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(EngineMsg::Platform(tx))
+            .map_err(|_| Error::Runtime("engine thread stopped".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread stopped".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_input_constructors() {
+        match ExecInput::f32_2d(vec![0.0; 6], 2, 3) {
+            ExecInput::F32(d, dims) => {
+                assert_eq!(d.len(), 6);
+                assert_eq!(dims, vec![2, 3]);
+            }
+            _ => panic!(),
+        }
+        match ExecInput::i32_1d(vec![1, 2]) {
+            ExecInput::I32(_, dims) => assert_eq!(dims, vec![2]),
+            _ => panic!(),
+        }
+    }
+
+    // Full execution is covered by the integration tests in
+    // rust/tests/pjrt_roundtrip.rs (gated on `make artifacts` having run).
+}

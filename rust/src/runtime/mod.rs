@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT artifacts on the request path.
+//!
+//! `python/compile/aot.py` lowers each trained model to **HLO text** (the
+//! interchange format that round-trips through xla_extension 0.5.1 — jax ≥
+//! 0.5 serialized protos carry 64-bit instruction ids it rejects).  This
+//! module compiles those artifacts once on a `PjRtClient` and executes them
+//! with zero python involvement.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactIndex, ModelArtifact};
+pub use engine::{Engine, EngineHandle, ExecInput};

@@ -1,0 +1,13 @@
+//! Dense tensor substrate for the native (non-PJRT) inference path.
+//!
+//! A deliberately small surface: row-major `Matrix` over `f32` or `i32`,
+//! with the kernels the GNN layers and the accelerator model need —
+//! blocked matmul, elementwise ops, row/col scaling, softmax.  The hot
+//! matmul is cache-blocked and written so LLVM auto-vectorizes the inner
+//! loop (see benches/quant_kernels.rs for measured numbers and §Perf).
+
+pub mod dense;
+pub mod ops;
+
+pub use dense::Matrix;
+pub use ops::{matmul, matmul_i32, relu_inplace, row_scale, softmax_rows};

@@ -1,0 +1,249 @@
+//! Dense kernels: blocked matmul (f32 and i32-accumulate), elementwise ops.
+
+use super::dense::Matrix;
+
+/// Cache block edge for the matmul kernels (tuned in §Perf; 64 keeps the
+/// working set of a block-panel within L1/L2 on this machine).
+const BLOCK: usize = 64;
+
+/// C = A @ B, blocked over (i, k, j) with a j-innermost loop that LLVM
+/// auto-vectorizes (C and B rows are contiguous).
+pub fn matmul(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue; // features are sparse post-quantization
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Integer-path matmul: i8-coded activations/weights (stored widened) with
+/// i32 accumulation — the arithmetic the paper's accelerator performs.
+/// Returns the raw i32 accumulators; rescale with [`rescale_outer`].
+pub fn matmul_i32(a: &Matrix<i32>, b: &Matrix<i32>) -> Matrix<i32> {
+    assert_eq!(a.cols, b.rows, "matmul_i32 shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Eq. 2 rescale: out[i][j] = acc[i][j] * sx[i] * sw[j].
+pub fn rescale_outer(acc: &Matrix<i32>, sx: &[f32], sw: &[f32]) -> Matrix<f32> {
+    assert_eq!(acc.rows, sx.len());
+    assert_eq!(acc.cols, sw.len());
+    let mut out = Matrix::zeros(acc.rows, acc.cols);
+    for i in 0..acc.rows {
+        let si = sx[i];
+        let arow = acc.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..acc.cols {
+            orow[j] = arow[j] as f32 * si * sw[j];
+        }
+    }
+    out
+}
+
+/// In-place ReLU.
+pub fn relu_inplace(m: &mut Matrix<f32>) {
+    for v in &mut m.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// In-place ELU (α = 1), used between GAT layers.
+pub fn elu_inplace(m: &mut Matrix<f32>) {
+    for v in &mut m.data {
+        if *v < 0.0 {
+            *v = v.exp() - 1.0;
+        }
+    }
+}
+
+/// In-place LeakyReLU with the given negative slope.
+pub fn leaky_relu_inplace(m: &mut Matrix<f32>, slope: f32) {
+    for v in &mut m.data {
+        if *v < 0.0 {
+            *v *= slope;
+        }
+    }
+}
+
+/// Scale each row i by s[i].
+pub fn row_scale(m: &mut Matrix<f32>, s: &[f32]) {
+    assert_eq!(m.rows, s.len());
+    for i in 0..m.rows {
+        let si = s[i];
+        for v in m.row_mut(i) {
+            *v *= si;
+        }
+    }
+}
+
+/// Add a bias row-vector to every row.
+pub fn add_bias(m: &mut Matrix<f32>, bias: &[f32]) {
+    assert_eq!(m.cols, bias.len());
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Row-wise softmax (numerically stable).
+pub fn softmax_rows(m: &mut Matrix<f32>) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{property, Gen};
+
+    fn naive_matmul(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        property("blocked matmul == naive", 25, |g: &mut Gen| {
+            let m = g.usize_range(1, 90);
+            let k = g.usize_range(1, 90);
+            let n = g.usize_range(1, 90);
+            let a = Matrix::from_vec(m, k, g.vec_normal(m * k, 1.0)).unwrap();
+            let b = Matrix::from_vec(k, n, g.vec_normal(k * n, 1.0)).unwrap();
+            let fast = matmul(&a, &b);
+            let slow = naive_matmul(&a, &b);
+            assert!(fast.max_abs_diff(&slow) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn matmul_i32_and_rescale_match_f32() {
+        property("int path == f32 path on integer codes", 25, |g: &mut Gen| {
+            let m = g.usize_range(1, 40);
+            let k = g.usize_range(1, 40);
+            let n = g.usize_range(1, 40);
+            let ai: Vec<i32> = (0..m * k).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
+            let bi: Vec<i32> = (0..k * n).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
+            let sx = g.vec_uniform(m, 0.01, 0.2);
+            let sw = g.vec_uniform(n, 0.01, 0.2);
+            let a_int = Matrix::from_vec(m, k, ai.clone()).unwrap();
+            let b_int = Matrix::from_vec(k, n, bi.clone()).unwrap();
+            let int_out = rescale_outer(&matmul_i32(&a_int, &b_int), &sx, &sw);
+
+            let af: Vec<f32> = ai
+                .iter()
+                .enumerate()
+                .map(|(idx, v)| *v as f32 * sx[idx / k])
+                .collect();
+            let bf: Vec<f32> = bi
+                .iter()
+                .enumerate()
+                .map(|(idx, v)| *v as f32 * sw[idx % n])
+                .collect();
+            let a_f = Matrix::from_vec(m, k, af).unwrap();
+            let b_f = Matrix::from_vec(k, n, bf).unwrap();
+            let f_out = matmul(&a_f, &b_f);
+            assert!(int_out.max_abs_diff(&f_out) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn activations() {
+        let mut m = Matrix::from_vec(1, 3, vec![-1.0, 0.0, 2.0]).unwrap();
+        relu_inplace(&mut m);
+        assert_eq!(m.data, vec![0.0, 0.0, 2.0]);
+        let mut m = Matrix::from_vec(1, 2, vec![-2.0, 3.0]).unwrap();
+        leaky_relu_inplace(&mut m, 0.2);
+        assert_eq!(m.data, vec![-0.4, 3.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let mut m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]).unwrap();
+        softmax_rows(&mut m);
+        for i in 0..2 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bias_and_row_scale() {
+        let mut m = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        add_bias(&mut m, &[1.0, 2.0]);
+        assert_eq!(m.data, vec![2.0, 3.0, 2.0, 3.0]);
+        row_scale(&mut m, &[2.0, 0.5]);
+        assert_eq!(m.data, vec![4.0, 6.0, 1.0, 1.5]);
+    }
+}

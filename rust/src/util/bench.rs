@@ -1,0 +1,194 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not in the
+//! offline vendor set).
+//!
+//! Provides warm-up, adaptive iteration counts targeting a fixed measurement
+//! time, robust statistics (median ± MAD, mean ± σ) and a `black_box` to
+//! defeat constant folding.  `cargo bench` targets use
+//! [`BenchRunner::bench`] and print one line per benchmark:
+//!
+//! ```text
+//! table1/gcn-synth-cora/a2q  time: [median 1.24 ms]  mean 1.25 ms ± 0.03
+//! ```
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Re-export of the standard black box, spelled like criterion's.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's measurements.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        stats::median(&self.samples_ns)
+    }
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+    pub fn std_ns(&self) -> f64 {
+        stats::std_dev(&self.samples_ns)
+    }
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.median_ns()
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Fast profile when A2Q_BENCH_FAST is set (CI), fuller otherwise.
+        if std::env::var("A2Q_BENCH_FAST").is_ok() {
+            BenchConfig {
+                warmup: Duration::from_millis(50),
+                measure: Duration::from_millis(200),
+                samples: 10,
+            }
+        } else {
+            BenchConfig {
+                warmup: Duration::from_millis(300),
+                measure: Duration::from_secs(1),
+                samples: 20,
+            }
+        }
+    }
+}
+
+/// Runs and records a suite of benchmarks.
+pub struct BenchRunner {
+    cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self::new(BenchConfig::default())
+    }
+}
+
+impl BenchRunner {
+    pub fn new(cfg: BenchConfig) -> Self {
+        BenchRunner {
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which must perform one unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up and iteration-count calibration.
+        let warmup_end = Instant::now() + self.cfg.warmup;
+        let mut calib_iters = 0u64;
+        let calib_start = Instant::now();
+        while Instant::now() < warmup_end {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = calib_start.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let budget = self.cfg.measure.as_secs_f64() / self.cfg.samples as f64;
+        let iters = ((budget / per_iter.max(1e-9)) as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            samples_ns: samples,
+        };
+        println!(
+            "{name:<52} time: [median {}]  mean {} ± {}",
+            fmt_ns(result.median_ns()),
+            fmt_ns(result.mean_ns()),
+            fmt_ns(result.std_ns()),
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Report a derived metric alongside bench output (e.g. simulated
+    /// speedup), keeping the bench log single-source.
+    pub fn report_metric(&self, name: &str, value: f64, unit: &str) {
+        println!("{name:<52} metric: {value:.4} {unit}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            samples: 4,
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut r = BenchRunner::new(fast_cfg());
+        let res = r.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(res.median_ns() > 0.0);
+        assert_eq!(res.samples_ns.len(), 4);
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let mut r = BenchRunner::new(fast_cfg());
+        let fast = r.bench("fast", || {
+            black_box((0..10u64).sum::<u64>());
+        })
+        .median_ns();
+        let slow = r.bench("slow", || {
+            black_box((0..10_000u64).sum::<u64>());
+        })
+        .median_ns();
+        assert!(slow > fast * 2.0, "slow {slow} vs fast {fast}");
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,294 @@
+//! Declarative command-line parser (clap is not in the offline vendor set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments; generates `--help` text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Specification of a subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        CommandSpec {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+}
+
+/// Parsed arguments of a matched subcommand.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::config(format!("missing required option --{key}")))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        let v = self.req(key)?;
+        v.parse()
+            .map_err(|_| Error::config(format!("--{key}: '{v}' is not an integer")))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        let v = self.req(key)?;
+        v.parse()
+            .map_err(|_| Error::config(format!("--{key}: '{v}' is not a number")))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Top-level application parser.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        App {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, spec: CommandSpec) -> Self {
+        self.commands.push(spec);
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun `a2q <command> --help` for command options.\n");
+        out
+    }
+
+    pub fn command_help(&self, spec: &CommandSpec) -> String {
+        let mut out = format!("{} {} — {}\n\nOPTIONS:\n", self.name, spec.name, spec.about);
+        for o in &spec.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = o.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            out.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, kind));
+        }
+        for (name, help) in &spec.positional {
+            out.push_str(&format!("  <{name}>  {help}\n"));
+        }
+        out
+    }
+
+    /// Parse argv (excluding the binary name).
+    pub fn parse(&self, args: &[String]) -> Result<Matches> {
+        if args.is_empty() || args[0] == "--help" || args[0] == "-h" {
+            return Err(Error::config(self.help()));
+        }
+        let cmd_name = &args[0];
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name.as_str())
+            .ok_or_else(|| {
+                Error::config(format!("unknown command '{cmd_name}'\n\n{}", self.help()))
+            })?;
+
+        let mut values = BTreeMap::new();
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(Error::config(self.command_help(spec)));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = spec.opts.iter().find(|o| o.name == key).ok_or_else(|| {
+                    Error::config(format!(
+                        "unknown option --{key} for '{}'\n\n{}",
+                        spec.name,
+                        self.command_help(spec)
+                    ))
+                })?;
+                if opt.is_flag {
+                    flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    Error::config(format!("--{key} expects a value"))
+                                })?
+                        }
+                    };
+                    values.insert(key.to_string(), val);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+
+        for o in &spec.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+                return Err(Error::config(format!(
+                    "missing required option --{} for '{}'",
+                    o.name, spec.name
+                )));
+            }
+        }
+
+        Ok(Matches {
+            command: spec.name.to_string(),
+            values,
+            flags,
+            positional,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("a2q", "test app").command(
+            CommandSpec::new("serve", "run server")
+                .opt("port", "8080", "listen port")
+                .opt_req("model", "model name")
+                .flag("verbose", "log more")
+                .pos("input", "input file"),
+        )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let m = app()
+            .parse(&argv(&["serve", "--model", "gcn", "--verbose", "file.bin"]))
+            .unwrap();
+        assert_eq!(m.command, "serve");
+        assert_eq!(m.get("port"), Some("8080")); // default
+        assert_eq!(m.get("model"), Some("gcn"));
+        assert!(m.has_flag("verbose"));
+        assert_eq!(m.positional, vec!["file.bin"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = app().parse(&argv(&["serve", "--model=gat", "--port=99"])).unwrap();
+        assert_eq!(m.get("model"), Some("gat"));
+        assert_eq!(m.get_usize("port").unwrap(), 99);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(app().parse(&argv(&["serve"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(app().parse(&argv(&["nope"])).is_err());
+        assert!(app()
+            .parse(&argv(&["serve", "--model", "m", "--bogus", "1"]))
+            .is_err());
+    }
+
+    #[test]
+    fn help_is_error_carrying_text() {
+        let err = app().parse(&argv(&["--help"])).unwrap_err();
+        assert!(format!("{err}").contains("COMMANDS"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Hand-rolled substrates.
+//!
+//! The offline vendor set only covers the `xla` crate's closure, so the
+//! usual ecosystem crates (serde_json, clap, rand, criterion, proptest,
+//! rayon) are unavailable.  Per the reproduction mandate ("build every
+//! substrate"), this module implements the pieces the system needs:
+//!
+//! * [`json`]   — JSON parser/serializer (manifests, results, tables)
+//! * [`cli`]    — declarative argument parser for the `a2q` binary
+//! * [`rng`]    — SplitMix64 / xoshiro256++ PRNG (graph generators, benches)
+//! * [`bench`]  — criterion-style micro-benchmark harness with robust stats
+//! * [`prop`]   — mini property-testing framework (shrinking by halving)
+//! * [`stats`]  — mean/std/percentile helpers shared by bench + metrics
+//! * [`threadpool`] — fixed worker pool used by the coordinator
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,206 @@
+//! Small statistics helpers shared by the bench harness and serving metrics.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (0 for < 2 samples).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (by sorting a copy).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        0.0
+    } else {
+        num / (dx.sqrt() * dy.sqrt())
+    }
+}
+
+/// Online histogram with fixed log-spaced latency buckets (µs scale).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket upper bounds in µs
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum_us: f64,
+    n: u64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1µs .. ~100s, 1-2-5 sequence
+        let mut bounds = Vec::new();
+        let mut base = 1.0;
+        while base < 1e8 {
+            for m in [1.0, 2.0, 5.0] {
+                bounds.push(base * m);
+            }
+            base *= 10.0;
+        }
+        let n = bounds.len();
+        LatencyHistogram {
+            bounds,
+            counts: vec![0; n + 1],
+            sum_us: 0.0,
+            n: 0,
+            max_us: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, dur: std::time::Duration) {
+        self.record_us(dur.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum_us += us;
+        self.n += 1;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_us / self.n as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate percentile from bucket boundaries.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.bounds.get(i).copied().unwrap_or(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum_us += other.sum_us;
+        self.n += other.n;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [3.0, 1.0, 2.0, 4.0, 5.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yneg = [3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentile_monotone() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(99.0));
+        assert!(h.mean_us() > 400.0 && h.mean_us() < 600.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        a.record_us(10.0);
+        b.record_us(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_us(), 1000.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Integration: AOT artifacts ⇄ rust runtime ⇄ native inference.
+//!
+//! These tests require `make artifacts` to have run (they are skipped with
+//! a notice otherwise, so `cargo test` stays green on a fresh checkout).
+
+use a2q::gnn::{forward_fp, forward_int, GnnModel, GraphInput};
+use a2q::graph::io::{load_named, Dataset};
+use a2q::graph::norm::EdgeForm;
+use a2q::quant::mixed::BitsFile;
+use a2q::runtime::ArtifactIndex;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = a2q::artifacts_dir();
+    if dir.join("models").join("index.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn index_lists_models_with_manifests() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    assert!(!index.models.is_empty());
+    for a in index.all().unwrap() {
+        assert!(a.hlo_path.exists(), "{} missing hlo", a.name);
+        assert!(a.out_dim > 0);
+        assert!(!a.expected_head.is_empty());
+    }
+}
+
+#[test]
+fn native_fp_matches_python_export_record() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    for name in &index.models {
+        let artifact = index.artifact(name).unwrap();
+        if !artifact.node_level {
+            continue; // graph-level record depends on the export batch
+        }
+        let model = GnnModel::load(&index.dir, name).unwrap();
+        let Dataset::Node(ds) = load_named(&dir, &artifact.dataset).unwrap() else {
+            panic!("expected node dataset")
+        };
+        let ef = EdgeForm::from_csr(&ds.csr);
+        let input = GraphInput::node_level(&ds.features, ds.num_features, &ef);
+        let out = forward_fp(&model, &input);
+        let head = &artifact.expected_head;
+        let got: Vec<f32> = out.data[..head.len()].to_vec();
+        for (i, (g, w)) in got.iter().zip(head).enumerate() {
+            assert!(
+                (g - w).abs() < 2e-2 + 0.05 * w.abs(),
+                "{name} logit {i}: native {g} vs python {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn int_path_tracks_fp_path_on_artifact() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    let Ok(artifact) = index.artifact("gcn-synth-cora-a2q") else {
+        return;
+    };
+    let model = GnnModel::load(&index.dir, &artifact.name).unwrap();
+    let Dataset::Node(ds) = load_named(&dir, &artifact.dataset).unwrap() else {
+        panic!()
+    };
+    let ef = EdgeForm::from_csr(&ds.csr);
+    let input = GraphInput::node_level(&ds.features, ds.num_features, &ef);
+    let fp = forward_fp(&model, &input);
+    let int = forward_int(&model, &input);
+    // identical argmax on ≥99% of nodes (fp-emulation vs integer codes)
+    let agree = fp
+        .argmax_rows()
+        .iter()
+        .zip(int.argmax_rows())
+        .filter(|(a, b)| **a == *b)
+        .count();
+    assert!(
+        agree as f64 >= 0.99 * fp.rows as f64,
+        "argmax agreement {agree}/{}",
+        fp.rows
+    );
+}
+
+#[test]
+fn quantized_model_accuracy_matches_manifest() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    let Ok(artifact) = index.artifact("gcn-synth-cora-a2q") else {
+        return;
+    };
+    let model = GnnModel::load(&index.dir, &artifact.name).unwrap();
+    let Dataset::Node(ds) = load_named(&dir, &artifact.dataset).unwrap() else {
+        panic!()
+    };
+    let ef = EdgeForm::from_csr(&ds.csr);
+    let input = GraphInput::node_level(&ds.features, ds.num_features, &ef);
+    let out = forward_fp(&model, &input);
+    let pred = out.argmax_rows();
+    let mut good = 0usize;
+    let mut total = 0usize;
+    for v in 0..ds.num_nodes() {
+        if ds.test_mask[v] {
+            total += 1;
+            if pred[v] as i32 == ds.labels[v] {
+                good += 1;
+            }
+        }
+    }
+    let acc = good as f64 / total as f64;
+    assert!(
+        (acc - artifact.accuracy).abs() < 0.08,
+        "native acc {acc} vs recorded {}",
+        artifact.accuracy
+    );
+}
+
+#[test]
+fn bits_file_consistent_with_manifest_avg() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    for name in &index.models {
+        let artifact = index.artifact(name).unwrap();
+        let Some(bits_path) = artifact.bits_path() else {
+            continue;
+        };
+        if !bits_path.exists() {
+            continue;
+        }
+        let bf = BitsFile::load(&bits_path).unwrap();
+        // manifest avg_bits excludes the unquantized input (cora); allow
+        // generous slack for that accounting difference
+        assert!(
+            (bf.avg_bits() - artifact.avg_bits).abs() < 1.5,
+            "{name}: bits file {:.2} vs manifest {:.2}",
+            bf.avg_bits(),
+            artifact.avg_bits
+        );
+    }
+}

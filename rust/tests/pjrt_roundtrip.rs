@@ -1,0 +1,146 @@
+//! Integration: PJRT execution of the AOT HLO matches the python export
+//! record and the native rust forward; the coordinator serves it end to
+//! end.  Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use a2q::coordinator::request::Payload;
+use a2q::coordinator::{BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
+use a2q::gnn::{forward_fp, GnnModel, GraphInput};
+use a2q::graph::io::{load_named, Dataset};
+use a2q::graph::norm::EdgeForm;
+use a2q::runtime::{ArtifactIndex, EngineHandle};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = a2q::artifacts_dir();
+    if dir.join("models").join("index.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_executes_artifact_and_matches_python() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    let artifact = index.artifact("gcn-synth-cora-a2q").unwrap();
+    let dataset = load_named(&dir, &artifact.dataset).unwrap();
+    let engine = EngineHandle::spawn().unwrap();
+    assert_eq!(engine.platform().unwrap(), "cpu");
+    let exec = PjrtExecutor::new(engine, &artifact, Some(&dataset)).unwrap();
+
+    let n_head = artifact.expected_head.len() / artifact.out_dim;
+    let ids: Vec<u32> = (0..n_head as u32).collect();
+    let outputs = exec.run_node_batch(&ids).unwrap();
+    let flat: Vec<f32> = outputs.into_iter().flatten().collect();
+    for (i, (g, w)) in flat.iter().zip(&artifact.expected_head).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3 + 1e-3 * w.abs(),
+            "logit {i}: pjrt {g} vs python-recorded {w}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_matches_native_rust_forward() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    let artifact = index.artifact("gcn-synth-cora-a2q").unwrap();
+    let dataset = load_named(&dir, &artifact.dataset).unwrap();
+    let engine = EngineHandle::spawn().unwrap();
+    let exec = PjrtExecutor::new(engine, &artifact, Some(&dataset)).unwrap();
+
+    let model = GnnModel::load(&index.dir, &artifact.name).unwrap();
+    let Dataset::Node(ds) = &dataset else { panic!() };
+    let ef = EdgeForm::from_csr(&ds.csr);
+    let input = GraphInput::node_level(&ds.features, ds.num_features, &ef);
+    let native = forward_fp(&model, &input);
+
+    let ids: Vec<u32> = (0..64).collect();
+    let pjrt_out = exec.run_node_batch(&ids).unwrap();
+    for (v, row) in ids.iter().zip(&pjrt_out) {
+        let nrow = native.row(*v as usize);
+        for (a, b) in row.iter().zip(nrow) {
+            assert!(
+                (a - b).abs() < 2e-2 + 0.05 * b.abs(),
+                "node {v}: pjrt {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pallas_variant_matches_jnp_variant() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    let (Ok(a_jnp), Ok(a_pl)) = (
+        index.artifact("gcn-synth-cora-a2q"),
+        index.artifact("gcn-synth-cora-a2q-pallas"),
+    ) else {
+        return;
+    };
+    let dataset = load_named(&dir, &a_jnp.dataset).unwrap();
+    let engine = EngineHandle::spawn().unwrap();
+    let e1 = PjrtExecutor::new(engine.clone(), &a_jnp, Some(&dataset)).unwrap();
+    let e2 = PjrtExecutor::new(engine, &a_pl, Some(&dataset)).unwrap();
+    let ids: Vec<u32> = (0..32).collect();
+    let o1 = e1.run_node_batch(&ids).unwrap();
+    let o2 = e2.run_node_batch(&ids).unwrap();
+    for (r1, r2) in o1.iter().zip(&o2) {
+        for (a, b) in r1.iter().zip(r2) {
+            assert!((a - b).abs() < 1e-4 + 1e-4 * b.abs(), "pallas {b} vs jnp {a}");
+        }
+    }
+}
+
+#[test]
+fn coordinator_serves_pjrt_model_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    let artifact = index.artifact("gcn-synth-cora-a2q").unwrap();
+    let dataset = load_named(&dir, &artifact.dataset).unwrap();
+    let engine = EngineHandle::spawn().unwrap();
+    let exec = Arc::new(PjrtExecutor::new(engine, &artifact, Some(&dataset)).unwrap());
+
+    let mut coord = Coordinator::new();
+    coord.add_model(
+        &artifact.name,
+        exec,
+        BatcherConfig {
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let resp = coord
+        .submit_blocking(&artifact.name, Payload::ClassifyNodes(vec![0, 5, 10]))
+        .unwrap();
+    assert_eq!(resp.predictions.len(), 3);
+    assert!(resp.predictions.iter().all(|p| p.class < artifact.out_dim));
+    let snap = coord.metrics();
+    assert_eq!(snap.responses, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn graph_level_artifact_serves_batches() {
+    let Some(dir) = artifacts() else { return };
+    let index = ArtifactIndex::load(&dir).unwrap();
+    let Ok(artifact) = index.artifact("gin-synth-zinc-a2q") else {
+        return;
+    };
+    let Dataset::Graphs(gs) = load_named(&dir, &artifact.dataset).unwrap() else {
+        panic!()
+    };
+    let engine = EngineHandle::spawn().unwrap();
+    let exec = PjrtExecutor::new(engine, &artifact, None).unwrap();
+    let graphs: Vec<&a2q::graph::io::SmallGraph> = gs.graphs.iter().take(4).collect();
+    let out = exec.run_graph_batch(&graphs).unwrap();
+    assert_eq!(out.len(), 4);
+    for o in &out {
+        assert_eq!(o.len(), artifact.out_dim);
+        assert!(o.iter().all(|v| v.is_finite()));
+    }
+}
