@@ -1,33 +1,104 @@
 //! Bench: the aggregation phase (sparse Â·X) — the memory-bound half of
 //! GNN inference (§Perf L3 target).
+//!
+//! Measures the serial edge-scatter reference against the row-parallel
+//! destination-grouped gather (`AggregationPlan`) at 2 and 4 threads, and
+//! records the headline serial-vs-4-threads speedup on a ≥100k-node
+//! synthetic graph.  Results land in `BENCH_aggregation.json` so the perf
+//! trajectory is machine-readable across PRs.
+//!
+//! `--quick` (used by CI) shrinks the graphs and the measurement budget to
+//! a smoke test: kernel regressions break the build, not just the numbers.
 
 use a2q::graph::generate::preferential_attachment;
 use a2q::graph::norm::EdgeForm;
-use a2q::util::bench::{black_box, BenchRunner};
+use a2q::util::bench::{black_box, BenchConfig, BenchRunner};
 use a2q::util::rng::Rng;
+use a2q::util::threadpool::ParallelConfig;
+
+fn median_of(runner: &BenchRunner, name: &str) -> f64 {
+    runner
+        .results
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.median_ns())
+        .unwrap_or(0.0)
+}
 
 fn main() {
+    let quick = BenchConfig::quick_requested();
     let mut rng = Rng::new(5);
-    let mut runner = BenchRunner::default();
+    let mut runner = BenchRunner::new(BenchConfig::from_args());
 
-    for (n, f) in [(2708usize, 64usize), (12000, 64), (12000, 128)] {
+    let shapes: &[(usize, usize)] = if quick {
+        &[(512, 16)]
+    } else {
+        &[(2708, 64), (12000, 64), (12000, 128)]
+    };
+    for &(n, f) in shapes {
         let csr = preferential_attachment(&mut rng, n, 3);
         let ef = EdgeForm::from_csr(&csr);
+        let plan = ef.plan();
         let x: Vec<f32> = (0..n * f).map(|_| rng.normal() as f32).collect();
-        runner.bench(&format!("aggregate/gcn_norm/n={n}/f={f}"), || {
-            black_box(ef.aggregate(&x, f, &ef.gcn_w));
+        runner.bench(&format!("aggregate/serial/n={n}/f={f}"), || {
+            black_box(ef.aggregate_serial(&x, f, &ef.gcn_w));
         });
-        let edges_per_sec = (ef.num_edges() * f) as f64;
+        for threads in [2usize, 4] {
+            let cfg = ParallelConfig {
+                threads,
+                min_rows_per_task: 64,
+            };
+            runner.bench(&format!("aggregate/parallel/n={n}/f={f}/t={threads}"), || {
+                black_box(plan.aggregate_with(&x, f, &ef.src, &ef.gcn_w, &cfg));
+            });
+        }
+        let edge_floats = (ef.num_edges() * f) as f64;
         runner.report_metric(
             &format!("aggregate/workload/n={n}/f={f}"),
-            edges_per_sec / 1e6,
+            edge_floats / 1e6,
             "M edge-floats per pass",
         );
     }
 
-    // edge-form construction (serving-path batch prep)
-    let csr = preferential_attachment(&mut rng, 12000, 3);
-    runner.bench("aggregate/edge_form_build/n=12000", || {
+    // Headline: serial edge-scatter vs the 4-thread gather on a large
+    // power-law graph (the acceptance bar is >= 2x at 4 threads).
+    let (n, f) = if quick { (2_000, 16) } else { (100_000, 64) };
+    let csr = preferential_attachment(&mut rng, n, 3);
+    let ef = EdgeForm::from_csr(&csr);
+    let plan = ef.plan();
+    let x: Vec<f32> = (0..n * f).map(|_| rng.normal() as f32).collect();
+    let serial_name = format!("aggregate/headline_serial/n={n}/f={f}");
+    runner.bench(&serial_name, || {
+        black_box(ef.aggregate_serial(&x, f, &ef.gcn_w));
+    });
+    let par_name = format!("aggregate/headline_parallel/n={n}/f={f}/t=4");
+    let cfg4 = ParallelConfig {
+        threads: 4,
+        min_rows_per_task: 64,
+    };
+    runner.bench(&par_name, || {
+        black_box(plan.aggregate_with(&x, f, &ef.src, &ef.gcn_w, &cfg4));
+    });
+    let serial_ns = median_of(&runner, &serial_name);
+    let par_ns = median_of(&runner, &par_name);
+    runner.report_metric(
+        &format!("aggregate/parallel_speedup/n={n}/f={f}/threads=4"),
+        if par_ns > 0.0 { serial_ns / par_ns } else { 0.0 },
+        "x vs serial scatter",
+    );
+
+    // serving-path batch prep: edge-form + plan construction
+    let prep_n = if quick { 512 } else { 12_000 };
+    let csr = preferential_attachment(&mut rng, prep_n, 3);
+    runner.bench(&format!("aggregate/edge_form_build/n={prep_n}"), || {
         black_box(EdgeForm::from_csr(&csr));
     });
+    let ef = EdgeForm::from_csr(&csr);
+    runner.bench(&format!("aggregate/plan_build/n={prep_n}"), || {
+        black_box(ef.plan());
+    });
+
+    runner
+        .write_json(std::path::Path::new("BENCH_aggregation.json"))
+        .expect("write BENCH_aggregation.json");
 }

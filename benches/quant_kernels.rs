@@ -1,49 +1,74 @@
 //! Bench: L3 quantization hot paths — per-node fake-quant, code extraction,
-//! bit packing, and the integer vs f32 matmul kernels (§Perf).
+//! bit packing, packed-payload matmul, and the integer vs f32 matmul
+//! kernels (serial vs parallel, §Perf).
+//!
+//! `--quick` (used by CI) shrinks shapes and measurement budget to a smoke
+//! test so kernel regressions break the build.
 
 use a2q::quant::mixed::NodeQuantParams;
 use a2q::quant::pack::pack_rows;
-use a2q::tensor::{matmul, matmul_i32, ops::rescale_outer, Matrix};
-use a2q::util::bench::{black_box, BenchRunner};
+use a2q::tensor::{matmul_i32_with, matmul_with, ops::rescale_outer, Matrix};
+use a2q::util::bench::{black_box, BenchConfig, BenchRunner};
 use a2q::util::rng::Rng;
+use a2q::util::threadpool::ParallelConfig;
 
 fn main() {
+    let quick = BenchConfig::quick_requested();
     let mut rng = Rng::new(11);
-    let mut runner = BenchRunner::default();
+    let mut runner = BenchRunner::new(BenchConfig::from_args());
 
-    // cora-shaped feature map: 2708 x 64 hidden
-    let n = 2708usize;
-    let f = 64usize;
+    // cora-shaped feature map: 2708 x 64 hidden (shrunk under --quick)
+    let n = if quick { 256usize } else { 2708 };
+    let f = if quick { 16usize } else { 64 };
     let x: Vec<f32> = (0..n * f).map(|_| rng.normal() as f32).collect();
     let steps: Vec<f32> = (0..n).map(|_| rng.uniform(0.01, 0.2) as f32).collect();
     let bits: Vec<u8> = (0..n).map(|_| rng.range(1, 9) as u8).collect();
     let params = NodeQuantParams::new(steps.clone(), bits.clone(), true).unwrap();
 
     let mut buf = x.clone();
-    runner.bench("quant/fake_quantize_2708x64", || {
+    runner.bench(&format!("quant/fake_quantize_{n}x{f}"), || {
         buf.copy_from_slice(&x);
         params.fake_quantize(&mut buf, f);
         black_box(&buf);
     });
 
-    runner.bench("quant/codes_2708x64", || {
+    runner.bench(&format!("quant/codes_{n}x{f}"), || {
         black_box(params.quantize_codes(&x, f));
     });
 
     let (codes, _) = params.quantize_codes(&x, f);
-    runner.bench("quant/pack_rows_2708x64", || {
+    runner.bench(&format!("quant/pack_rows_{n}x{f}"), || {
         black_box(pack_rows(&codes, &steps, &bits, f, true));
     });
 
+    // packed-payload integer matmul (the forward_int hot path)
+    let packed = pack_rows(&codes, &steps, &bits, f, true);
+    let w_cols = if quick { 8usize } else { 64 };
+    let w_codes = Matrix::from_vec(
+        f,
+        w_cols,
+        (0..f * w_cols).map(|_| rng.range(0, 15) as i32 - 7).collect(),
+    )
+    .unwrap();
+    for threads in [1usize, 4] {
+        let cfg = ParallelConfig {
+            threads,
+            min_rows_per_task: 64,
+        };
+        runner.bench(&format!("quant/packed_matmul_{n}x{f}x{w_cols}/t={threads}"), || {
+            black_box(packed.matmul_i32(&w_codes, &cfg));
+        });
+    }
+
     // update-phase matmul shapes (cora layer 1: 2708x16 @ 16x7 is tiny;
     // use the arxiv-ish 2048x128 @ 128x64 shape for a meaningful number)
-    let (m, k, nn) = (2048usize, 128usize, 64usize);
+    let (m, k, nn) = if quick {
+        (128usize, 32usize, 16usize)
+    } else {
+        (2048, 128, 64)
+    };
     let a_f = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.normal() as f32).collect()).unwrap();
     let b_f = Matrix::from_vec(k, nn, (0..k * nn).map(|_| rng.normal() as f32).collect()).unwrap();
-    runner.bench("matmul/f32_2048x128x64", || {
-        black_box(matmul(&a_f, &b_f));
-    });
-
     let a_i = Matrix::from_vec(
         m,
         k,
@@ -58,8 +83,21 @@ fn main() {
     .unwrap();
     let sx: Vec<f32> = (0..m).map(|_| 0.05f32).collect();
     let sw: Vec<f32> = (0..nn).map(|_| 0.05f32).collect();
-    runner.bench("matmul/i32_2048x128x64_with_rescale", || {
-        let acc = matmul_i32(&a_i, &b_i);
-        black_box(rescale_outer(&acc, &sx, &sw));
-    });
+    for threads in [1usize, 4] {
+        let cfg = ParallelConfig {
+            threads,
+            min_rows_per_task: 64,
+        };
+        runner.bench(&format!("matmul/f32_{m}x{k}x{nn}/t={threads}"), || {
+            black_box(matmul_with(&a_f, &b_f, &cfg));
+        });
+        runner.bench(&format!("matmul/i32_{m}x{k}x{nn}_with_rescale/t={threads}"), || {
+            let acc = matmul_i32_with(&a_i, &b_i, &cfg);
+            black_box(rescale_outer(&acc, &sx, &sw));
+        });
+    }
+
+    runner
+        .write_json(std::path::Path::new("BENCH_quant_kernels.json"))
+        .expect("write BENCH_quant_kernels.json");
 }

@@ -23,7 +23,11 @@ pub struct ModelWorkload {
 
 impl ModelWorkload {
     /// Build from an exported `.bits.bin` plus the model's layer dims.
-    pub fn from_bits_file(bf: &BitsFile, matmul_dims: Vec<(usize, usize)>, nns_m: usize) -> ModelWorkload {
+    pub fn from_bits_file(
+        bf: &BitsFile,
+        matmul_dims: Vec<(usize, usize)>,
+        nns_m: usize,
+    ) -> ModelWorkload {
         let bits: Vec<Vec<u8>> = bf.maps.iter().map(|(b, _)| b.clone()).collect();
         let agg_dims = matmul_dims.iter().map(|&(fi, _)| fi).collect();
         ModelWorkload {

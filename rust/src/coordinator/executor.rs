@@ -7,12 +7,13 @@
 //! * [`MockExecutor`] — deterministic fake for coordinator unit tests.
 
 use crate::error::{Error, Result};
-use crate::gnn::{forward_fp, GnnModel, GraphInput};
+use crate::gnn::{forward_fp_with, forward_int_with, GnnModel, GraphInput};
 use crate::graph::batch::GraphBatch;
 use crate::graph::io::{Dataset, NodeData, SmallGraph};
 use crate::graph::norm::EdgeForm;
 use crate::runtime::engine::EngineHandle;
 use crate::runtime::{ExecInput, ModelArtifact};
+use crate::util::threadpool::ParallelConfig;
 
 /// A backend able to run the two batch kinds.
 pub trait BatchExecutor: Send + Sync {
@@ -178,11 +179,15 @@ impl BatchExecutor for PjrtExecutor {
 // Native
 // ---------------------------------------------------------------------------
 
-/// Pure-rust backend over `gnn::forward_fp`.
+/// Pure-rust backend over `gnn::infer` (fp emulation by default, true
+/// integer path opt-in).  Carries its own [`ParallelConfig`] so the
+/// serving stack controls the intra-op parallelism budget per executor.
 pub struct NativeExecutor {
     model: GnnModel,
     node: Option<NodeSide>,
     caps: (usize, usize, usize),
+    parallel: ParallelConfig,
+    use_int_path: bool,
 }
 
 impl NativeExecutor {
@@ -212,7 +217,38 @@ impl NativeExecutor {
                 .unwrap_or(model.num_nodes * 8),
             model.graph_capacity.max(1),
         );
-        Ok(NativeExecutor { model, node, caps })
+        Ok(NativeExecutor {
+            model,
+            node,
+            caps,
+            parallel: ParallelConfig::from_env(),
+            use_int_path: false,
+        })
+    }
+
+    /// Set the intra-op parallelism budget (builder style).
+    pub fn with_parallelism(mut self, cfg: ParallelConfig) -> NativeExecutor {
+        self.parallel = cfg;
+        self
+    }
+
+    /// Route through `forward_int` (true integer arithmetic over packed
+    /// codes) instead of the fp emulation.
+    pub fn with_int_path(mut self, on: bool) -> NativeExecutor {
+        self.use_int_path = on;
+        self
+    }
+
+    pub fn parallelism(&self) -> ParallelConfig {
+        self.parallel
+    }
+
+    fn forward(&self, input: &GraphInput) -> crate::tensor::Matrix<f32> {
+        if self.use_int_path {
+            forward_int_with(&self.model, input, &self.parallel)
+        } else {
+            forward_fp_with(&self.model, input, &self.parallel)
+        }
     }
 }
 
@@ -223,7 +259,7 @@ impl BatchExecutor for NativeExecutor {
             .as_ref()
             .ok_or_else(|| Error::coordinator("not a node-level executor"))?;
         let input = GraphInput::node_level(&side.features, self.model.in_dim, &side.edges);
-        let logits = forward_fp(&self.model, &input);
+        let logits = self.forward(&input);
         node_ids
             .iter()
             .map(|&v| {
@@ -240,7 +276,7 @@ impl BatchExecutor for NativeExecutor {
         let (cap_n, cap_e, cap_g) = self.caps;
         let batch = GraphBatch::pack(graphs, self.model.in_dim, cap_n, cap_e, cap_g)?;
         let input = GraphInput::batch(&batch);
-        let out = forward_fp(&self.model, &input);
+        let out = self.forward(&input);
         Ok((0..graphs.len()).map(|g| out.row(g).to_vec()).collect())
     }
 

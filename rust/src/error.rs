@@ -30,12 +30,6 @@ pub enum Error {
     Config(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(format!("{e:?}"))
-    }
-}
-
 pub type Result<T> = std::result::Result<T, Error>;
 
 impl Error {

@@ -7,9 +7,11 @@
 //! (i32-accumulated matmuls over quantized codes, Eq. 2 rescale) — the
 //! computation the paper's bit-serial accelerator performs.
 
+use crate::graph::norm::AggregationPlan;
 use crate::quant::mixed::NodeQuantParams;
-use crate::quant::uniform;
+use crate::quant::{pack, uniform};
 use crate::tensor::{dense::Matrix, ops};
+use crate::util::threadpool::{self, ParallelConfig};
 
 use super::model::{GnnModel, LayerParams, QuantMethod};
 
@@ -65,20 +67,20 @@ impl<'a> GraphInput<'a> {
     }
 }
 
-fn aggregate(x: &Matrix<f32>, input: &GraphInput, weights: &[f32]) -> Matrix<f32> {
-    let f = x.cols;
-    let mut out = Matrix::zeros(input.num_nodes, f);
-    for ((&s, &d), &w) in input.src.iter().zip(input.dst).zip(weights) {
-        if w == 0.0 {
-            continue;
-        }
-        let srow = &x.data[s as usize * f..(s as usize + 1) * f];
-        let orow = &mut out.data[d as usize * f..(d as usize + 1) * f];
-        for (o, v) in orow.iter_mut().zip(srow) {
-            *o += w * v;
-        }
+/// Row-parallel Â·X over the destination-grouped plan (built once per
+/// forward pass, shared across layers).
+fn aggregate(
+    x: &Matrix<f32>,
+    plan: &AggregationPlan,
+    input: &GraphInput,
+    weights: &[f32],
+    cfg: &ParallelConfig,
+) -> Matrix<f32> {
+    Matrix {
+        rows: input.num_nodes,
+        cols: x.cols,
+        data: plan.aggregate_with(&x.data, x.cols, input.src, weights, cfg),
     }
-    out
 }
 
 /// Fake-quantize weights per output column at 4 bits (paper §3.1).
@@ -138,8 +140,7 @@ fn quantize_features(
             let step = model.dq_steps.get(layer).copied().unwrap_or(0.05);
             let signed = layer == 0 || model.arch == "gat";
             for v in h.data.iter_mut() {
-                *v = uniform::quantize_value(*v, step, 4, signed) as f32
-                    * step.max(1e-9);
+                *v = uniform::quantize_value(*v, step, 4, signed) as f32 * step.max(1e-9);
             }
         }
         QuantMethod::A2q => {
@@ -150,8 +151,7 @@ fn quantize_features(
                     p.fake_quantize(&mut h.data, dim);
                 } else {
                     // NNS groups (graph-level): per-row nearest lookup
-                    let table =
-                        crate::quant::nns::NnsTable::new(&p.steps, &p.bits, p.signed);
+                    let table = crate::quant::nns::NnsTable::new(&p.steps, &p.bits, p.signed);
                     for i in 0..h.rows {
                         let row = h.row_mut(i);
                         let f = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
@@ -171,10 +171,11 @@ fn gat_layer(
     lay: &LayerParams,
     input: &GraphInput,
     method: QuantMethod,
+    cfg: &ParallelConfig,
 ) -> Matrix<f32> {
     let w = lay.w.as_ref().expect("gat layer weight");
     let wq = quantize_weights(w, &lay.w_steps, method);
-    let z = ops::matmul(h, &wq); // [N, H*Fh]
+    let z = ops::matmul_with(h, &wq, cfg); // [N, H*Fh]
     let a_src = lay.a_src.as_ref().expect("a_src");
     let a_dst = lay.a_dst.as_ref().expect("a_dst");
     let heads = a_src.rows;
@@ -260,9 +261,23 @@ fn gat_layer(
     agg
 }
 
-/// Full fp-emulation forward. Returns [N, out] node logits (node-level) or
-/// [G, out] predictions (graph-level readout).
+/// Full fp-emulation forward with the process-default parallelism budget.
 pub fn forward_fp(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
+    forward_fp_with(model, input, &threadpool::global_parallelism())
+}
+
+/// Full fp-emulation forward. Returns [N, out] node logits (node-level) or
+/// [G, out] predictions (graph-level readout).  Aggregation and matmuls
+/// run row-parallel under `cfg`; results are bitwise independent of the
+/// thread count (each output row has one owner).
+pub fn forward_fp_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConfig) -> Matrix<f32> {
+    // GAT aggregates inside gat_layer (per-head attention weights), so the
+    // shared destination-grouped plan is only built for gcn/gin.
+    let plan = if model.arch == "gat" {
+        None
+    } else {
+        Some(AggregationPlan::build(input.dst, input.num_nodes))
+    };
     let mut h = Matrix::from_vec(
         input.num_nodes,
         input.feat_dim,
@@ -280,22 +295,24 @@ pub fn forward_fp(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
 
         let mut out = match model.arch.as_str() {
             "gcn" => {
-                let agg = aggregate(&h, input, input.gcn_w);
+                let plan = plan.as_ref().expect("plan built for gcn");
+                let agg = aggregate(&h, plan, input, input.gcn_w, cfg);
                 let w = lay.w.as_ref().expect("gcn weight");
                 let wq = quantize_weights(w, &lay.w_steps, model.method);
-                let mut out = ops::matmul(&agg, &wq);
+                let mut out = ops::matmul_with(&agg, &wq, cfg);
                 ops::add_bias(&mut out, &lay.b);
                 out
             }
             "gin" => {
-                let neigh = aggregate(&h, input, input.sum_w);
+                let plan = plan.as_ref().expect("plan built for gin");
+                let neigh = aggregate(&h, plan, input, input.sum_w, cfg);
                 let mut agg = h.clone();
                 for (a, nv) in agg.data.iter_mut().zip(&neigh.data) {
                     *a = (1.0 + lay.eps) * *a + nv;
                 }
                 let w1 = lay.w.as_ref().expect("gin w1");
                 let w1q = quantize_weights(w1, &lay.w_steps, model.method);
-                let mut hid = ops::matmul(&agg, &w1q);
+                let mut hid = ops::matmul_with(&agg, &w1q, cfg);
                 ops::add_bias(&mut hid, &lay.b);
                 ops::relu_inplace(&mut hid);
                 if model.method != QuantMethod::Fp32 {
@@ -303,11 +320,11 @@ pub fn forward_fp(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
                 }
                 let w2 = lay.w2.as_ref().expect("gin w2");
                 let w2q = quantize_weights(w2, &lay.w2_steps, model.method);
-                let mut out = ops::matmul(&hid, &w2q);
+                let mut out = ops::matmul_with(&hid, &w2q, cfg);
                 ops::add_bias(&mut out, &lay.b2);
                 out
             }
-            "gat" => gat_layer(&h, lay, input, model.method),
+            "gat" => gat_layer(&h, lay, input, model.method, cfg),
             other => panic!("unknown arch {other}"),
         };
 
@@ -373,11 +390,11 @@ pub fn forward_fp(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
                 }
             }
             let w1q = quantize_weights(&head.w1, &head.w1_steps, model.method);
-            let mut z = ops::matmul(&pooled, &w1q);
+            let mut z = ops::matmul_with(&pooled, &w1q, cfg);
             ops::add_bias(&mut z, &head.b1);
             ops::relu_inplace(&mut z);
             let w2q = quantize_weights(&head.w2, &head.w2_steps, model.method);
-            let mut out = ops::matmul(&z, &w2q);
+            let mut out = ops::matmul_with(&z, &w2q, cfg);
             ops::add_bias(&mut out, &head.b2);
             out
         }
@@ -392,13 +409,23 @@ fn model_uses_skip(model: &GnnModel) -> bool {
         .unwrap_or(!model.node_level)
 }
 
-/// Integer-path forward for GCN/GIN: quantize → i32 matmul → Eq. 2 rescale.
-/// GAT falls back to the fp path (attention softmax is f32 on the
-/// accelerator too; only coefficients are 4-bit).
+/// Integer-path forward with the process-default parallelism budget.
 pub fn forward_int(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
-    if model.arch == "gat" || model.method != QuantMethod::A2q {
-        return forward_fp(model, input);
+    forward_int_with(model, input, &threadpool::global_parallelism())
+}
+
+/// Integer-path forward for GCN/GIN: quantize → bit-pack → i32 matmul off
+/// the packed payload → Eq. 2 rescale.  GAT falls back to the fp path
+/// (attention softmax is f32 on the accelerator too; only coefficients are
+/// 4-bit).
+pub fn forward_int_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConfig) -> Matrix<f32> {
+    if model.arch == "gat" || model.method != QuantMethod::A2q || model.head.is_some() {
+        // GAT and non-A2q run fp; graph-level (head) models delegate their
+        // pooling + readout to the fp implementation entirely, so skip the
+        // integer layer loop rather than computing and discarding it.
+        return forward_fp_with(model, input, cfg);
     }
+    let plan = AggregationPlan::build(input.dst, input.num_nodes);
     let mut h = Matrix::from_vec(input.num_nodes, input.feat_dim, input.features.to_vec())
         .expect("feature shape");
     let n_layers = model.layers.len();
@@ -413,37 +440,6 @@ pub fn forward_int(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
                   wsteps: &[f32],
                   bias: &[f32],
                   skip_quant: bool| {
-            // integer codes for activations
-            let (codes, sx) = if skip_quant || feat.is_none() {
-                // unquantized input (binary bag-of-words): treat as codes
-                // with unit step — values are already 0/1 integers.
-                (x.data.iter().map(|&v| v as i32).collect::<Vec<i32>>(),
-                 vec![1.0f32; x.rows])
-            } else {
-                let p = feat.unwrap();
-                if p.len() == x.rows {
-                    p.quantize_codes(&x.data, x.cols)
-                } else {
-                    // NNS selection per row
-                    let table =
-                        crate::quant::nns::NnsTable::new(&p.steps, &p.bits, p.signed);
-                    let mut codes = vec![0i32; x.data.len()];
-                    let mut sx = vec![0.0f32; x.rows];
-                    for i in 0..x.rows {
-                        let row = x.row(i);
-                        let fmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-                        let (_, s, b) = table.select(fmax);
-                        sx[i] = s;
-                        for (cslot, &v) in codes[i * x.cols..(i + 1) * x.cols]
-                            .iter_mut()
-                            .zip(row)
-                        {
-                            *cslot = uniform::quantize_value(v, s, b, p.signed);
-                        }
-                    }
-                    (codes, sx)
-                }
-            };
             // integer codes for weights (per-column 4-bit)
             let mut wcodes = vec![0i32; w.rows * w.cols];
             for i in 0..w.rows {
@@ -452,9 +448,46 @@ pub fn forward_int(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
                         uniform::quantize_value(w.at(i, j), wsteps[j], 4, true);
                 }
             }
-            let a = Matrix::from_vec(x.rows, x.cols, codes).unwrap();
             let b = Matrix::from_vec(w.rows, w.cols, wcodes).unwrap();
-            let acc = ops::matmul_i32(&a, &b);
+
+            // Activation codes, bit-packed row-wise at each node's learned
+            // bitwidth (quant::pack — the serving at-rest layout).  The
+            // integer matmul streams rows straight off the packed payload,
+            // so the dense [N, F] i32 code matrix is never materialized.
+            let (acc, sx) = if skip_quant || feat.is_none() {
+                // unquantized input (binary bag-of-words): treat as codes
+                // with unit step — values are already 0/1 integers.
+                let codes: Vec<i32> = x.data.iter().map(|&v| v as i32).collect();
+                let a = Matrix::from_vec(x.rows, x.cols, codes).unwrap();
+                (ops::matmul_i32_with(&a, &b, cfg), vec![1.0f32; x.rows])
+            } else {
+                let p = feat.unwrap();
+                let packed = if p.len() == x.rows {
+                    let (codes, _steps) = p.quantize_codes(&x.data, x.cols);
+                    pack::pack_rows(&codes, &p.steps, &p.bits, x.cols, p.signed)
+                } else {
+                    // NNS selection per row
+                    let table = crate::quant::nns::NnsTable::new(&p.steps, &p.bits, p.signed);
+                    let mut codes = vec![0i32; x.data.len()];
+                    let mut steps = vec![0.0f32; x.rows];
+                    let mut bits = vec![0u8; x.rows];
+                    for i in 0..x.rows {
+                        let row = x.row(i);
+                        let fmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                        let (_, s, bsel) = table.select(fmax);
+                        steps[i] = s;
+                        bits[i] = bsel;
+                        for (cslot, &v) in
+                            codes[i * x.cols..(i + 1) * x.cols].iter_mut().zip(row)
+                        {
+                            *cslot = uniform::quantize_value(v, s, bsel, p.signed);
+                        }
+                    }
+                    pack::pack_rows(&codes, &steps, &bits, x.cols, p.signed)
+                };
+                let sx = packed.steps();
+                (packed.matmul_i32(&b, cfg), sx)
+            };
             let sw: Vec<f32> = wsteps.iter().map(|s| s.max(1e-9)).collect();
             let mut out = ops::rescale_outer(&acc, &sx, &sw);
             ops::add_bias(&mut out, bias);
@@ -472,7 +505,7 @@ pub fn forward_int(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
                 if !skip_q {
                     quantize_features(&mut hq, model, l, lay.feat.as_ref());
                 }
-                let agg = aggregate(&hq, input, input.gcn_w);
+                let agg = aggregate(&hq, &plan, input, input.gcn_w, cfg);
                 let w = lay.w.as_ref().unwrap();
                 // aggregated values are NOT re-quantized in the fp path;
                 // emulate exactly: feed agg as f32 through an fp matmul of
@@ -480,7 +513,7 @@ pub fn forward_int(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
                 // the dominant X̄·W̄ via distributivity over the (integer/s)
                 // codes; here we keep bit-exactness with forward_fp.
                 let wq = quantize_weights(w, &lay.w_steps, model.method);
-                let mut out = ops::matmul(&agg, &wq);
+                let mut out = ops::matmul_with(&agg, &wq, cfg);
                 ops::add_bias(&mut out, &lay.b);
                 out
             }
@@ -489,14 +522,14 @@ pub fn forward_int(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
                 if !skip_q {
                     quantize_features(&mut hq, model, l, lay.feat.as_ref());
                 }
-                let neigh = aggregate(&hq, input, input.sum_w);
+                let neigh = aggregate(&hq, &plan, input, input.sum_w, cfg);
                 let mut agg = hq.clone();
                 for (a, nv) in agg.data.iter_mut().zip(&neigh.data) {
                     *a = (1.0 + lay.eps) * *a + nv;
                 }
                 let w1 = lay.w.as_ref().unwrap();
                 let w1q = quantize_weights(w1, &lay.w_steps, model.method);
-                let mut hid = ops::matmul(&agg, &w1q);
+                let mut hid = ops::matmul_with(&agg, &w1q, cfg);
                 ops::add_bias(&mut hid, &lay.b);
                 ops::relu_inplace(&mut hid);
                 // hidden map: true integer matmul via per-node codes
@@ -520,12 +553,6 @@ pub fn forward_int(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
         h = out;
     }
 
-    if model.head.is_some() {
-        // delegate pooling + head to the fp implementation on the current
-        // hidden state by reusing forward_fp's head block via a temp model
-        // is overkill; graph-level int path reuses fp forward entirely.
-        return forward_fp(model, input);
-    }
     h
 }
 
@@ -618,6 +645,28 @@ mod tests {
         for method in [QuantMethod::Dq, QuantMethod::Binary] {
             let out = forward_fp(&tiny_gcn(method), &input);
             assert!(out.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn parallel_forward_bitwise_matches_serial() {
+        let (x, ef) = tiny_input();
+        let input = GraphInput::node_level(&x, 2, &ef);
+        let par = ParallelConfig {
+            threads: 4,
+            min_rows_per_task: 1,
+        };
+        let ser = ParallelConfig::serial();
+        for method in [QuantMethod::Fp32, QuantMethod::A2q] {
+            let model = tiny_gcn(method);
+            assert_eq!(
+                forward_fp_with(&model, &input, &par).data,
+                forward_fp_with(&model, &input, &ser).data
+            );
+            assert_eq!(
+                forward_int_with(&model, &input, &par).data,
+                forward_int_with(&model, &input, &ser).data
+            );
         }
     }
 

@@ -14,5 +14,5 @@
 pub mod infer;
 pub mod model;
 
-pub use infer::{forward_fp, forward_int, GraphInput};
+pub use infer::{forward_fp, forward_fp_with, forward_int, forward_int_with, GraphInput};
 pub use model::{GnnModel, LayerParams, QuantMethod};

@@ -7,6 +7,8 @@
 //! GIN neighbour sum.  Per the paper's Proof 2, Â itself is never
 //! quantized — aggregation runs on these f32 weights / fixed-point adds.
 
+use crate::util::threadpool::{self, ParallelConfig};
+
 use super::csr::Csr;
 
 /// Edge-form graph with precomputed normalization weights.
@@ -65,8 +67,19 @@ impl EdgeForm {
         self.src.len()
     }
 
-    /// Σ_e w_e · x[src_e] → out[dst_e]   (the aggregation phase).
+    /// Σ_e w_e · x[src_e] → out[dst_e]   (the aggregation phase), using
+    /// the process-default parallelism budget.  Builds a destination
+    /// grouping per call; hot paths that aggregate repeatedly should build
+    /// an [`AggregationPlan`] once and reuse it.
     pub fn aggregate(&self, x: &[f32], feat_dim: usize, weights: &[f32]) -> Vec<f32> {
+        self.plan()
+            .aggregate_with(x, feat_dim, &self.src, weights, &threadpool::global_parallelism())
+    }
+
+    /// Serial edge-order scatter — the reference implementation the
+    /// parallel gather is verified against (identical float add order per
+    /// destination, hence bitwise-equal output).
+    pub fn aggregate_serial(&self, x: &[f32], feat_dim: usize, weights: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0f32; self.num_nodes * feat_dim];
         for ((&s, &d), &w) in self.src.iter().zip(&self.dst).zip(weights) {
             if w == 0.0 {
@@ -78,6 +91,93 @@ impl EdgeForm {
                 *o += w * v;
             }
         }
+        out
+    }
+
+    /// Build the destination-grouped execution plan for these edges.
+    pub fn plan(&self) -> AggregationPlan {
+        AggregationPlan::build(&self.dst, self.num_nodes)
+    }
+}
+
+/// Destination-grouped view of an edge list: for every destination node,
+/// the edge slots targeting it.  An edge-order scatter writes to arbitrary
+/// output rows, so it cannot be split across threads; grouping by
+/// destination gives each output row exactly one owner, making the gather
+/// embarrassingly row-parallel.  Building the plan is O(E) (a stable
+/// counting sort) — ~1/F of one aggregation pass — and the plan is
+/// reusable across layers and requests since it depends only on `dst`.
+#[derive(Debug, Clone)]
+pub struct AggregationPlan {
+    /// edge indices grouped by destination, stable within a group
+    edge_order: Vec<u32>,
+    /// per-destination extent into `edge_order`, length `num_nodes + 1`
+    offsets: Vec<u32>,
+    num_nodes: usize,
+}
+
+impl AggregationPlan {
+    /// Group `dst` (entries in `0..num_nodes`) by destination.
+    pub fn build(dst: &[i32], num_nodes: usize) -> AggregationPlan {
+        let mut offsets = vec![0u32; num_nodes + 1];
+        for &d in dst {
+            offsets[d as usize + 1] += 1;
+        }
+        for v in 0..num_nodes {
+            offsets[v + 1] += offsets[v];
+        }
+        let mut cursor: Vec<u32> = offsets[..num_nodes].to_vec();
+        let mut edge_order = vec![0u32; dst.len()];
+        for (e, &d) in dst.iter().enumerate() {
+            let slot = &mut cursor[d as usize];
+            edge_order[*slot as usize] = e as u32;
+            *slot += 1;
+        }
+        AggregationPlan {
+            edge_order,
+            offsets,
+            num_nodes,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    /// Edge slots whose destination is `v`, in original edge order.
+    pub fn in_edges(&self, v: usize) -> &[u32] {
+        &self.edge_order[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Row-parallel Σ_e w_e · x[src_e] → out[dst_e].  Per destination the
+    /// accumulation order equals the edge order (the grouping is stable),
+    /// so the result is bitwise identical to the serial scatter at any
+    /// thread count.
+    pub fn aggregate_with(
+        &self,
+        x: &[f32],
+        feat_dim: usize,
+        src: &[i32],
+        weights: &[f32],
+        cfg: &ParallelConfig,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.num_nodes * feat_dim];
+        threadpool::parallel_rows(cfg, self.num_nodes, feat_dim, &mut out, |v0, chunk| {
+            for (vi, orow) in chunk.chunks_mut(feat_dim).enumerate() {
+                for &e in self.in_edges(v0 + vi) {
+                    let e = e as usize;
+                    let w = weights[e];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let s = src[e] as usize;
+                    let srow = &x[s * feat_dim..(s + 1) * feat_dim];
+                    for (o, v) in orow.iter_mut().zip(srow) {
+                        *o += w * v;
+                    }
+                }
+            }
+        });
         out
     }
 }
@@ -130,5 +230,45 @@ mod tests {
         let out = ef.aggregate(&x, 1, &ef.gcn_w);
         // every node sees itself + neighbours with positive weights
         assert!(out.iter().all(|&v| v > 0.5));
+    }
+
+    #[test]
+    fn plan_groups_every_edge_once() {
+        let ef = EdgeForm::from_csr(&path3());
+        let plan = ef.plan();
+        let mut seen = vec![false; ef.num_edges()];
+        for v in 0..plan.num_nodes() {
+            for &e in plan.in_edges(v) {
+                assert_eq!(ef.dst[e as usize] as usize, v);
+                assert!(!seen[e as usize]);
+                seen[e as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn parallel_aggregate_bitwise_matches_serial_scatter() {
+        use crate::util::prop::{property, Gen};
+        use crate::util::rng::Rng;
+        property("plan aggregate == edge scatter", 20, |g: &mut Gen| {
+            let n = g.usize_range(2, 120);
+            let f = g.usize_range(1, 24);
+            let seed = g.usize_range(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let csr = crate::graph::generate::preferential_attachment(&mut rng, n, 2);
+            let ef = EdgeForm::from_csr(&csr);
+            let x = g.vec_normal(n * f, 1.0);
+            let cfg = ParallelConfig {
+                threads: g.usize_range(1, 6),
+                min_rows_per_task: g.usize_range(1, 8),
+            };
+            let plan = ef.plan();
+            for weights in [&ef.gcn_w, &ef.sum_w] {
+                let serial = ef.aggregate_serial(&x, f, weights);
+                let parallel = plan.aggregate_with(&x, f, &ef.src, weights, &cfg);
+                assert_eq!(serial, parallel);
+            }
+        });
     }
 }

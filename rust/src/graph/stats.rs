@@ -24,7 +24,11 @@ pub fn degree_histogram(csr: &Csr) -> Vec<(u32, usize)> {
 
 /// Group nodes by in-degree bucket and average a per-node value over each
 /// group — the Fig. 1 / Fig. 4 aggregation.
-pub fn mean_by_degree_group(csr: &Csr, values: &[f32], bounds: &[u32]) -> Vec<(String, f64, usize)> {
+pub fn mean_by_degree_group(
+    csr: &Csr,
+    values: &[f32],
+    bounds: &[u32],
+) -> Vec<(String, f64, usize)> {
     assert_eq!(values.len(), csr.num_nodes());
     let mut out = Vec::new();
     let mut lo = 0u32;

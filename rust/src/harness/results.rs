@@ -102,7 +102,7 @@ impl ResultsStore {
                     match ResultEntry::parse(&path) {
                         Ok(e) => entries.push(e),
                         Err(err) => {
-                            log::warn!("skipping {}: {err}", path.display());
+                            eprintln!("a2q: skipping result {}: {err}", path.display());
                         }
                     }
                 }

@@ -10,12 +10,59 @@ pub mod tensor;
 pub mod util;
 pub use error::{Error, Result};
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
-pub fn artifacts_dir() -> std::path::PathBuf {
-    if let Ok(dir) = std::env::var("A2Q_ARTIFACTS") { return dir.into(); }
-    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+
+/// Locate the `artifacts/` directory: `$A2Q_ARTIFACTS` if set, else the
+/// nearest `artifacts/` walking up from the current directory.
+///
+/// Returns an error (instead of a silently-relative `"artifacts"`) when
+/// the walk finds nothing, so CI failures name the actual problem.
+pub fn artifacts_dir_checked() -> Result<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("A2Q_ARTIFACTS") {
+        return Ok(dir.into());
+    }
+    let start = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut cur = start.clone();
     loop {
         let cand = cur.join("artifacts");
-        if cand.is_dir() { return cand; }
-        if !cur.pop() { return "artifacts".into(); }
+        if cand.is_dir() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            return Err(Error::Config(format!(
+                "no artifacts/ directory found walking up from {} — run \
+                 `make artifacts` or set A2Q_ARTIFACTS",
+                start.display()
+            )));
+        }
+    }
+}
+
+/// Infallible variant used by binaries and benches: falls back to the
+/// relative `"artifacts"` path, logging the fallback to stderr so a wrong
+/// working directory is diagnosable rather than silent.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match artifacts_dir_checked() {
+        Ok(dir) => dir,
+        Err(e) => {
+            eprintln!("a2q: {e}; falling back to ./artifacts");
+            "artifacts".into()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // NOTE: deliberately no std::env::set_var here — mutating the
+    // environment races with concurrent getenv in parallel unit tests
+    // (ParallelConfig::from_env, prop::property), which is UB on glibc.
+    #[test]
+    fn artifacts_dir_agrees_with_checked_variant() {
+        match super::artifacts_dir_checked() {
+            Ok(dir) => assert_eq!(super::artifacts_dir(), dir),
+            Err(e) => {
+                assert!(format!("{e}").contains("artifacts"));
+                assert_eq!(super::artifacts_dir(), std::path::PathBuf::from("artifacts"));
+            }
+        }
     }
 }

@@ -17,4 +17,5 @@ pub mod uniform;
 pub use compress::{average_bits, compression_ratio, feature_memory_bytes};
 pub use mixed::{BitsFile, NodeQuantParams};
 pub use nns::NnsTable;
+pub use pack::{pack_rows, PackedFeatures};
 pub use uniform::{dequantize, quantize_row, quantize_value, Quantized};

@@ -6,6 +6,8 @@
 //! codes), proving the claimed memory layout is realizable and giving the
 //! serving path a compact at-rest representation.
 
+use crate::util::threadpool::{self, ParallelConfig};
+
 /// Packed feature map: each row packed at its own bitwidth.
 #[derive(Debug, Clone)]
 pub struct PackedFeatures {
@@ -50,22 +52,71 @@ pub fn pack_rows(
 }
 
 impl PackedFeatures {
-    /// Unpack one row back to integer codes.
-    pub fn unpack_row(&self, v: usize) -> Vec<i32> {
+    /// Number of packed rows.
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Per-row quantization steps, in row order (the `sx` of the Eq. 2
+    /// rescale).
+    pub fn steps(&self) -> Vec<f32> {
+        self.rows.iter().map(|&(_, _, s)| s).collect()
+    }
+
+    /// Unpack one row into a caller-provided buffer (no allocation — the
+    /// integer inference path reuses one scratch row per worker).
+    pub fn unpack_row_into(&self, v: usize, out: &mut [i32]) {
+        assert_eq!(out.len(), self.feat_dim);
         let (start, b, _s) = self.rows[v];
         let bias = if self.signed {
             (1i32 << (b.max(1) - 1)) - 1
         } else {
             0
         };
-        let mut out = Vec::with_capacity(self.feat_dim);
         let mut pos = start;
-        for _ in 0..self.feat_dim {
-            let raw = read_bits(&self.data, pos, b);
-            out.push(raw as i32 - bias);
+        for slot in out.iter_mut() {
+            *slot = read_bits(&self.data, pos, b) as i32 - bias;
             pos += b as usize;
         }
+    }
+
+    /// Unpack one row back to integer codes.
+    pub fn unpack_row(&self, v: usize) -> Vec<i32> {
+        let mut out = vec![0i32; self.feat_dim];
+        self.unpack_row_into(v, &mut out);
         out
+    }
+
+    /// Integer matmul straight off the packed payload: `acc = codes(self) @
+    /// w`, i32-accumulated, row-parallel under `cfg`.  This is the serving
+    /// hot path — the at-rest bit-packed representation feeds the update
+    /// phase without ever materializing a dense `[N, F]` code matrix; each
+    /// worker streams rows through one scratch buffer.  Rescale the result
+    /// with [`crate::tensor::ops::rescale_outer`] using [`Self::steps`].
+    pub fn matmul_i32(
+        &self,
+        w: &crate::tensor::Matrix<i32>,
+        cfg: &ParallelConfig,
+    ) -> crate::tensor::Matrix<i32> {
+        assert_eq!(self.feat_dim, w.rows, "packed matmul shape mismatch");
+        let (m, n) = (self.rows.len(), w.cols);
+        let mut c = crate::tensor::Matrix::zeros(m, n);
+        threadpool::parallel_rows(cfg, m, n, &mut c.data, |row0, chunk| {
+            let mut scratch = vec![0i32; self.feat_dim];
+            for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                self.unpack_row_into(row0 + ri, &mut scratch);
+                for (kk, &code) in scratch.iter().enumerate() {
+                    if code == 0 {
+                        continue;
+                    }
+                    let brow = &w.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += code * brow[j];
+                    }
+                }
+            }
+        });
+        c
     }
 
     /// Dequantize one row.
@@ -157,5 +208,53 @@ mod tests {
     fn dequantize_row_scales() {
         let p = pack_rows(&[3, -2], &[0.5], &[4], 2, true);
         assert_eq!(p.dequantize_row(0), vec![1.5, -1.0]);
+    }
+
+    #[test]
+    fn unpack_row_into_matches_unpack_row() {
+        let codes = vec![1, -3, 0, 2, 7, -15, 4, -1];
+        let p = pack_rows(&codes, &[0.1, 0.2], &[3, 5], 4, true);
+        let mut buf = vec![0i32; 4];
+        for v in 0..2 {
+            p.unpack_row_into(v, &mut buf);
+            assert_eq!(buf, p.unpack_row(v));
+        }
+        assert_eq!(p.num_rows(), 2);
+        assert_eq!(p.steps(), vec![0.1, 0.2]);
+    }
+
+    #[test]
+    fn packed_matmul_matches_dense_codes_property() {
+        use crate::tensor::{ops, Matrix};
+        property("packed matmul == dense i32 matmul", 25, |g: &mut Gen| {
+            let n = g.usize_range(1, 80);
+            let f = g.usize_range(1, 32);
+            let cols = g.usize_range(1, 16);
+            let signed = g.bool(0.5);
+            let steps = g.vec_uniform(n, 0.01, 0.3);
+            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
+            let x = g.vec_normal(n * f, 1.0);
+            let mut codes = vec![0i32; n * f];
+            for v in 0..n {
+                for j in 0..f {
+                    codes[v * f + j] = quantize_value(x[v * f + j], steps[v], bits[v], signed);
+                }
+            }
+            let packed = pack_rows(&codes, &steps, &bits, f, signed);
+            let w = Matrix::from_vec(
+                f,
+                cols,
+                (0..f * cols).map(|i| (i % 15) as i32 - 7).collect(),
+            )
+            .unwrap();
+            let cfg = crate::util::threadpool::ParallelConfig {
+                threads: g.usize_range(1, 5),
+                min_rows_per_task: g.usize_range(1, 8),
+            };
+            let dense = Matrix::from_vec(n, f, codes).unwrap();
+            let want = ops::matmul_i32_with(&dense, &w, &cfg);
+            let got = packed.matmul_i32(&w, &cfg);
+            assert_eq!(got.data, want.data);
+        });
     }
 }

@@ -10,4 +10,6 @@ pub mod dense;
 pub mod ops;
 
 pub use dense::Matrix;
-pub use ops::{matmul, matmul_i32, relu_inplace, row_scale, softmax_rows};
+pub use ops::{
+    matmul, matmul_i32, matmul_i32_with, matmul_with, relu_inplace, row_scale, softmax_rows,
+};

@@ -1,4 +1,13 @@
 //! Dense kernels: blocked matmul (f32 and i32-accumulate), elementwise ops.
+//!
+//! The matmuls are row-blocked and parallel: output rows are split into
+//! disjoint contiguous chunks handed to scoped workers through
+//! [`threadpool::parallel_for_chunks`], with a serial fallback below the
+//! [`ParallelConfig::min_rows_per_task`] threshold (scoped-thread spawn
+//! costs dominate tiny kernels).  `matmul`/`matmul_i32` use the process
+//! default budget; the `*_with` variants take an explicit one.
+
+use crate::util::threadpool::{self, ParallelConfig};
 
 use super::dense::Matrix;
 
@@ -6,19 +15,19 @@ use super::dense::Matrix;
 /// working set of a block-panel within L1/L2 on this machine).
 const BLOCK: usize = 64;
 
-/// C = A @ B, blocked over (i, k, j) with a j-innermost loop that LLVM
-/// auto-vectorizes (C and B rows are contiguous).
-pub fn matmul(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
-    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
+/// Serial kernel over the output rows in `out` (which holds rows starting
+/// at logical row `row0` of C), blocked over (i, k) with a j-innermost
+/// loop that LLVM auto-vectorizes (C and B rows are contiguous).
+fn matmul_rows_f32(a: &Matrix<f32>, b: &Matrix<f32>, row0: usize, out: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
+    let rows = out.len() / n;
+    for i0 in (0..rows).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(rows);
         for k0 in (0..k).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(k);
             for i in i0..i1 {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
+                let arow = &a.data[(row0 + i) * k..(row0 + i + 1) * k];
+                let crow = &mut out[i * n..(i + 1) * n];
                 for kk in k0..k1 {
                     let aik = arow[kk];
                     if aik == 0.0 {
@@ -32,23 +41,18 @@ pub fn matmul(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
             }
         }
     }
-    c
 }
 
-/// Integer-path matmul: i8-coded activations/weights (stored widened) with
-/// i32 accumulation — the arithmetic the paper's accelerator performs.
-/// Returns the raw i32 accumulators; rescale with [`rescale_outer`].
-pub fn matmul_i32(a: &Matrix<i32>, b: &Matrix<i32>) -> Matrix<i32> {
-    assert_eq!(a.cols, b.rows, "matmul_i32 shape mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
+fn matmul_rows_i32(a: &Matrix<i32>, b: &Matrix<i32>, row0: usize, out: &mut [i32]) {
+    let (k, n) = (a.cols, b.cols);
+    let rows = out.len() / n;
+    for i0 in (0..rows).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(rows);
         for k0 in (0..k).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(k);
             for i in i0..i1 {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
+                let arow = &a.data[(row0 + i) * k..(row0 + i + 1) * k];
+                let crow = &mut out[i * n..(i + 1) * n];
                 for kk in k0..k1 {
                     let aik = arow[kk];
                     if aik == 0 {
@@ -62,6 +66,42 @@ pub fn matmul_i32(a: &Matrix<i32>, b: &Matrix<i32>) -> Matrix<i32> {
             }
         }
     }
+}
+
+/// C = A @ B with the process-default parallelism budget.
+pub fn matmul(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    matmul_with(a, b, &threadpool::global_parallelism())
+}
+
+/// C = A @ B, row-parallel under the given budget.  Each worker owns a
+/// disjoint run of output rows, so results are bitwise identical to the
+/// serial path regardless of thread count.
+pub fn matmul_with(a: &Matrix<f32>, b: &Matrix<f32>, cfg: &ParallelConfig) -> Matrix<f32> {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, n) = (a.rows, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    threadpool::parallel_rows(cfg, m, n, &mut c.data, |row0, chunk| {
+        matmul_rows_f32(a, b, row0, chunk);
+    });
+    c
+}
+
+/// Integer-path matmul with the process-default parallelism budget.
+pub fn matmul_i32(a: &Matrix<i32>, b: &Matrix<i32>) -> Matrix<i32> {
+    matmul_i32_with(a, b, &threadpool::global_parallelism())
+}
+
+/// Integer-path matmul: i8-coded activations/weights (stored widened) with
+/// i32 accumulation — the arithmetic the paper's accelerator performs.
+/// Returns the raw i32 accumulators; rescale with [`rescale_outer`].
+/// Row-parallel under the given budget.
+pub fn matmul_i32_with(a: &Matrix<i32>, b: &Matrix<i32>, cfg: &ParallelConfig) -> Matrix<i32> {
+    assert_eq!(a.cols, b.rows, "matmul_i32 shape mismatch");
+    let (m, n) = (a.rows, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    threadpool::parallel_rows(cfg, m, n, &mut c.data, |row0, chunk| {
+        matmul_rows_i32(a, b, row0, chunk);
+    });
     c
 }
 
@@ -215,6 +255,34 @@ mod tests {
             let b_f = Matrix::from_vec(k, n, bf).unwrap();
             let f_out = matmul(&a_f, &b_f);
             assert!(int_out.max_abs_diff(&f_out) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn parallel_matmul_bitwise_matches_serial() {
+        use crate::util::threadpool::ParallelConfig;
+        property("parallel matmul == serial (f32/i32)", 15, |g: &mut Gen| {
+            let m = g.usize_range(1, 200);
+            let k = g.usize_range(1, 60);
+            let n = g.usize_range(1, 60);
+            let par = ParallelConfig {
+                threads: g.usize_range(2, 6),
+                min_rows_per_task: g.usize_range(1, 16),
+            };
+            let ser = ParallelConfig::serial();
+
+            let a = Matrix::from_vec(m, k, g.vec_normal(m * k, 1.0)).unwrap();
+            let b = Matrix::from_vec(k, n, g.vec_normal(k * n, 1.0)).unwrap();
+            assert_eq!(matmul_with(&a, &b, &par).data, matmul_with(&a, &b, &ser).data);
+
+            let ai: Vec<i32> = (0..m * k).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
+            let bi: Vec<i32> = (0..k * n).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
+            let a_i = Matrix::from_vec(m, k, ai).unwrap();
+            let b_i = Matrix::from_vec(k, n, bi).unwrap();
+            assert_eq!(
+                matmul_i32_with(&a_i, &b_i, &par).data,
+                matmul_i32_with(&a_i, &b_i, &ser).data
+            );
         });
     }
 

@@ -13,6 +13,8 @@
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 use super::stats;
 
 /// Re-export of the standard black box, spelled like criterion's.
@@ -84,10 +86,39 @@ impl Default for BenchConfig {
     }
 }
 
+impl BenchConfig {
+    /// Smoke profile for the CI `--quick` mode: a couple of short samples,
+    /// just enough to prove the kernel runs and produce a nonzero number.
+    pub fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            samples: 3,
+        }
+    }
+
+    /// True when `--quick` was passed to the bench binary (cargo forwards
+    /// arguments after `--`; the libtest-style `--bench` flag is ignored).
+    pub fn quick_requested() -> bool {
+        std::env::args().any(|a| a == "--quick")
+    }
+
+    /// `quick()` when `--quick` was requested, `default()` otherwise.
+    pub fn from_args() -> BenchConfig {
+        if Self::quick_requested() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
 /// Runs and records a suite of benchmarks.
 pub struct BenchRunner {
     cfg: BenchConfig,
     pub results: Vec<BenchResult>,
+    /// derived metrics reported alongside timings (name, value, unit)
+    pub metrics: Vec<(String, f64, String)>,
 }
 
 impl Default for BenchRunner {
@@ -101,6 +132,7 @@ impl BenchRunner {
         BenchRunner {
             cfg,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -142,9 +174,53 @@ impl BenchRunner {
     }
 
     /// Report a derived metric alongside bench output (e.g. simulated
-    /// speedup), keeping the bench log single-source.
-    pub fn report_metric(&self, name: &str, value: f64, unit: &str) {
+    /// speedup), keeping the bench log single-source.  Metrics are also
+    /// recorded for [`Self::write_json`].
+    pub fn report_metric(&mut self, name: &str, value: f64, unit: &str) {
         println!("{name:<52} metric: {value:.4} {unit}");
+        self.metrics.push((name.to_string(), value, unit.to_string()));
+    }
+
+    /// Machine-readable dump of every timing and metric recorded so far
+    /// (the `BENCH_*.json` files CI archives for the perf trajectory).
+    pub fn to_json(&self) -> Json {
+        let benchmarks = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("median_ns", Json::Num(r.median_ns())),
+                    ("mean_ns", Json::Num(r.mean_ns())),
+                    ("std_ns", Json::Num(r.std_ns())),
+                    ("iters_per_sample", Json::Num(r.iters_per_sample as f64)),
+                    ("samples", Json::Num(r.samples_ns.len() as f64)),
+                ])
+            })
+            .collect();
+        let metrics = self
+            .metrics
+            .iter()
+            .map(|(name, value, unit)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("value", Json::Num(*value)),
+                    ("unit", Json::Str(unit.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("benchmarks", Json::Arr(benchmarks)),
+            ("metrics", Json::Arr(metrics)),
+        ])
+    }
+
+    /// Write [`Self::to_json`] to `path` (pretty-printed).
+    pub fn write_json(&self, path: &std::path::Path) -> crate::error::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        println!("wrote {}", path.display());
+        Ok(())
     }
 }
 
@@ -182,6 +258,33 @@ mod tests {
         })
         .median_ns();
         assert!(slow > fast * 2.0, "slow {slow} vs fast {fast}");
+    }
+
+    #[test]
+    fn json_dump_records_benchmarks_and_metrics() {
+        let mut r = BenchRunner::new(fast_cfg());
+        r.bench("k", || {
+            black_box((0..50u64).sum::<u64>());
+        });
+        r.report_metric("speedup", 2.5, "x");
+        let j = r.to_json();
+        let benches = j.get("benchmarks").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(benches.len(), 1);
+        assert_eq!(benches[0].get("name").and_then(|v| v.as_str()), Some("k"));
+        assert!(benches[0].get("median_ns").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let metrics = j.get("metrics").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(metrics[0].get("value").and_then(|v| v.as_f64()), Some(2.5));
+        // round-trips through the serializer
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("version").and_then(|v| v.as_f64()), Some(1.0));
+    }
+
+    #[test]
+    fn quick_config_is_small() {
+        let q = BenchConfig::quick();
+        assert!(q.measure < BenchConfig::default().measure);
+        assert!(q.samples <= 3);
     }
 
     #[test]

@@ -87,6 +87,168 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Parallelism budget for the data-parallel kernels (matmul, aggregation).
+///
+/// `threads` caps the worker count; `min_rows_per_task` is the smallest row
+/// block worth shipping to a worker — inputs smaller than two such blocks
+/// run serially (spawning scoped threads costs ~10µs, which dominates tiny
+/// kernels).  The serving stack owns the budget: `runtime::Engine` and
+/// `coordinator::NativeExecutor` both carry a `ParallelConfig` and pass it
+/// down, so concurrent request handling and intra-op parallelism cannot
+/// oversubscribe the machine unnoticed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Maximum worker threads for one kernel invocation (>= 1).
+    pub threads: usize,
+    /// Minimum output rows per task; also the serial-fallback threshold.
+    pub min_rows_per_task: usize,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            min_rows_per_task: 64,
+        }
+    }
+}
+
+impl ParallelConfig {
+    /// Single-threaded configuration (the pre-parallel behaviour).
+    pub fn serial() -> ParallelConfig {
+        ParallelConfig {
+            threads: 1,
+            min_rows_per_task: usize::MAX,
+        }
+    }
+
+    pub fn with_threads(threads: usize) -> ParallelConfig {
+        ParallelConfig {
+            threads: threads.max(1),
+            ..ParallelConfig::default()
+        }
+    }
+
+    /// Default budget, overridable via `A2Q_THREADS` and
+    /// `A2Q_MIN_ROWS_PER_TASK` (used by benches and CI).
+    pub fn from_env() -> ParallelConfig {
+        let mut cfg = ParallelConfig::default();
+        if let Some(t) = std::env::var("A2Q_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            cfg.threads = t.max(1);
+        }
+        if let Some(r) = std::env::var("A2Q_MIN_ROWS_PER_TASK")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            cfg.min_rows_per_task = r.max(1);
+        }
+        cfg
+    }
+
+    /// Workers to actually use for `rows` rows of output (1 = stay serial).
+    /// A zero `min_rows_per_task` (fields are public) is treated as 1.
+    pub fn effective_threads(&self, rows: usize) -> usize {
+        let min_rows = self.min_rows_per_task.max(1);
+        if self.threads <= 1 || rows < min_rows.saturating_mul(2) {
+            return 1;
+        }
+        self.threads.min(rows / min_rows).max(1)
+    }
+
+    /// Row-block length per task: enough blocks for load balancing (about
+    /// four per worker) without dropping below `min_rows_per_task`.
+    pub fn rows_per_task(&self, rows: usize, threads: usize) -> usize {
+        rows.div_ceil(threads.max(1) * 4)
+            .max(self.min_rows_per_task.max(1).min(rows.max(1)))
+    }
+}
+
+static GLOBAL_PARALLEL: Mutex<Option<ParallelConfig>> = Mutex::new(None);
+static ENV_PARALLEL: std::sync::OnceLock<ParallelConfig> = std::sync::OnceLock::new();
+
+/// Install the process-wide default budget used by the convenience kernel
+/// entry points (`ops::matmul`, `EdgeForm::aggregate`, …).  Explicit
+/// `*_with` variants ignore this.
+pub fn set_global_parallelism(cfg: ParallelConfig) {
+    *GLOBAL_PARALLEL.lock().unwrap() = Some(cfg);
+}
+
+/// The process-wide default budget.  Until set explicitly this is the
+/// env-derived config, parsed once and cached (no getenv on hot paths).
+pub fn global_parallelism() -> ParallelConfig {
+    if let Some(cfg) = *GLOBAL_PARALLEL.lock().unwrap() {
+        return cfg;
+    }
+    *ENV_PARALLEL.get_or_init(ParallelConfig::from_env)
+}
+
+/// Run `f(chunk_index, chunk)` over disjoint contiguous chunks of `data`
+/// (each `chunk_len` elements, last one shorter) across `threads` scoped
+/// workers.  Chunks are handed out through a shared iterator, so uneven
+/// chunk costs self-balance; each output region is owned by exactly one
+/// task, so no synchronization is needed on the data itself.
+pub fn parallel_for_chunks<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = threads.max(1).min(n_chunks.max(1));
+    if threads == 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let work = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let next = { work.lock().unwrap().next() };
+                match next {
+                    Some((i, chunk)) => f(i, chunk),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Row-parallel dispatch policy shared by every kernel: interpret `data`
+/// as `rows` rows of `row_width` contiguous elements, apply `cfg`'s
+/// serial-fallback and chunk-size policy, and invoke `f(first_row, chunk)`
+/// over disjoint row ranges (serially when below the threshold).
+pub fn parallel_rows<T, F>(
+    cfg: &ParallelConfig,
+    rows: usize,
+    row_width: usize,
+    data: &mut [T],
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * row_width);
+    if rows == 0 || row_width == 0 {
+        return;
+    }
+    let threads = cfg.effective_threads(rows);
+    let rpt = if threads == 1 {
+        rows
+    } else {
+        cfg.rows_per_task(rows, threads)
+    };
+    parallel_for_chunks(data, rpt * row_width, threads, move |ci, chunk| {
+        f(ci * rpt, chunk)
+    });
+}
+
 /// Run `f(i)` for i in 0..n across `threads` scoped threads, collecting
 /// results in order.  Convenience for data-parallel harness sections.
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
@@ -153,5 +315,62 @@ mod tests {
     #[test]
     fn parallel_map_single_thread() {
         assert_eq!(parallel_map(3, 1, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn parallel_for_chunks_covers_all_elements() {
+        for threads in [1usize, 2, 4] {
+            let mut data = vec![0u32; 1000];
+            parallel_for_chunks(&mut data, 64, threads, |ci, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (ci * 64 + j) as u32;
+                }
+            });
+            assert!(data.iter().enumerate().all(|(i, &v)| v == i as u32));
+        }
+    }
+
+    #[test]
+    fn parallel_for_chunks_empty_and_tiny() {
+        let mut empty: Vec<u8> = Vec::new();
+        parallel_for_chunks(&mut empty, 8, 4, |_, _| panic!("no chunks expected"));
+        let mut one = vec![7u8];
+        parallel_for_chunks(&mut one, 8, 4, |_, c| c[0] += 1);
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn effective_threads_respects_serial_threshold() {
+        let cfg = ParallelConfig {
+            threads: 8,
+            min_rows_per_task: 64,
+        };
+        assert_eq!(cfg.effective_threads(10), 1); // too small
+        assert_eq!(cfg.effective_threads(127), 1); // below 2 blocks
+        assert!(cfg.effective_threads(1024) > 1);
+        assert!(cfg.effective_threads(1024) <= 8);
+        assert_eq!(ParallelConfig::serial().effective_threads(1 << 20), 1);
+    }
+
+    #[test]
+    fn rows_per_task_never_zero() {
+        let cfg = ParallelConfig {
+            threads: 4,
+            min_rows_per_task: 64,
+        };
+        assert!(cfg.rows_per_task(0, 4) >= 1);
+        assert!(cfg.rows_per_task(1000, 4) >= 62);
+        assert!(cfg.rows_per_task(1_000_000, 4) >= 64);
+    }
+
+    #[test]
+    fn zero_min_rows_does_not_panic() {
+        let cfg = ParallelConfig {
+            threads: 4,
+            min_rows_per_task: 0,
+        };
+        assert!(cfg.effective_threads(100) >= 1);
+        assert!(cfg.rows_per_task(100, 4) >= 1);
+        assert!(cfg.rows_per_task(0, 0) >= 1);
     }
 }

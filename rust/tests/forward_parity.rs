@@ -1,0 +1,168 @@
+//! Property-style parity: `forward_int` (true integer arithmetic over
+//! bit-packed codes) must track `forward_fp` (fake-quant emulation) within
+//! quantization tolerance on random GCN/GIN models, and both paths must be
+//! bitwise independent of the parallelism budget (threads ∈ {1, 4}).
+
+use a2q::gnn::{forward_fp_with, forward_int_with, GnnModel, GraphInput, LayerParams, QuantMethod};
+use a2q::graph::generate::preferential_attachment;
+use a2q::graph::norm::EdgeForm;
+use a2q::quant::mixed::NodeQuantParams;
+use a2q::tensor::Matrix;
+use a2q::util::json::Json;
+use a2q::util::prop::{property, Gen};
+use a2q::util::rng::Rng;
+use a2q::util::threadpool::ParallelConfig;
+
+fn random_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix<f32> {
+    Matrix::from_vec(rows, cols, g.vec_normal(rows * cols, 0.5)).unwrap()
+}
+
+fn node_quant(g: &mut Gen, n: usize, signed: bool) -> NodeQuantParams {
+    let steps = g.vec_uniform(n, 0.02, 0.1);
+    let bits: Vec<u8> = (0..n).map(|_| g.usize_range(2, 9) as u8).collect();
+    NodeQuantParams::new(steps, bits, signed).unwrap()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn random_model(
+    g: &mut Gen,
+    arch: &str,
+    n: usize,
+    in_dim: usize,
+    hidden: usize,
+    out_dim: usize,
+    n_layers: usize,
+) -> GnnModel {
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let d_in = if l == 0 { in_dim } else { hidden };
+        let d_out = if l == n_layers - 1 { out_dim } else { hidden };
+        // input-layer features are signed; deeper gcn/gin maps are
+        // post-ReLU, hence unsigned — mirrors GnnModel::load
+        let lay = match arch {
+            "gcn" => LayerParams {
+                w: Some(random_matrix(g, d_in, d_out)),
+                b: g.vec_uniform(d_out, -0.1, 0.1),
+                w_steps: g.vec_uniform(d_out, 0.02, 0.08),
+                feat: Some(node_quant(g, n, l == 0)),
+                ..Default::default()
+            },
+            "gin" => LayerParams {
+                w: Some(random_matrix(g, d_in, hidden)),
+                b: g.vec_uniform(hidden, -0.1, 0.1),
+                w_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                w2: Some(random_matrix(g, hidden, d_out)),
+                b2: g.vec_uniform(d_out, -0.1, 0.1),
+                w2_steps: g.vec_uniform(d_out, 0.02, 0.08),
+                eps: g.f32_range(0.0, 0.2),
+                feat: Some(node_quant(g, n, l == 0)),
+                feat2: Some(node_quant(g, n, false)),
+                ..Default::default()
+            },
+            other => panic!("unexpected arch {other}"),
+        };
+        layers.push(lay);
+    }
+    GnnModel {
+        name: format!("prop-{arch}"),
+        arch: arch.to_string(),
+        dataset: "synthetic".to_string(),
+        method: QuantMethod::A2q,
+        layers,
+        head: None,
+        dq_steps: Vec::new(),
+        skip_input_quant: false,
+        node_level: true,
+        num_nodes: n,
+        in_dim,
+        out_dim,
+        heads: 1,
+        graph_capacity: 0,
+        accuracy: 0.0,
+        avg_bits: 4.0,
+        expected_head: Vec::new(),
+        manifest: Json::Null,
+    }
+}
+
+#[test]
+fn int_path_matches_fp_within_quant_tolerance_and_threads() {
+    property("forward_int ≈ forward_fp, thread-invariant", 12, |g: &mut Gen| {
+        let n = g.usize_range(24, 120);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr = preferential_attachment(&mut rng, n, 2);
+        let ef = EdgeForm::from_csr(&csr);
+        let in_dim = g.usize_range(2, 10);
+        let hidden = g.usize_range(2, 12);
+        let out_dim = g.usize_range(2, 6);
+        let n_layers = g.usize_range(1, 4);
+        let x = g.vec_normal(n * in_dim, 0.5);
+
+        let serial = ParallelConfig::serial();
+        // min_rows_per_task small enough that these graphs actually take
+        // the parallel code path
+        let parallel = ParallelConfig {
+            threads: 4,
+            min_rows_per_task: 8,
+        };
+
+        for arch in ["gcn", "gin"] {
+            let model = random_model(g, arch, n, in_dim, hidden, out_dim, n_layers);
+            let input = GraphInput::node_level(&x, in_dim, &ef);
+
+            let fp_s = forward_fp_with(&model, &input, &serial);
+            let int_s = forward_int_with(&model, &input, &serial);
+            assert_eq!(fp_s.shape(), (n, out_dim));
+            assert!(fp_s.data.iter().all(|v| v.is_finite()), "{arch}: fp finite");
+
+            // GCN's integer path runs the identical f32 op sequence
+            // (aggregation over quantized features + fp matmul of quantized
+            // weights), so it matches bitwise.  GIN's hidden map goes
+            // through the true integer matmul: the (Σ c·cw)·s·s' grouping
+            // differs from fake-quant only by f32 rounding, except that in
+            // layers ≥ 2 a ~1e-5 input perturbation can flip a code at a
+            // rounding boundary — each flip moves one output element by at
+            // most step·|ŵ| ≈ 0.06.  Tolerate isolated flips, catch
+            // systematic divergence via the mean.
+            let diff = fp_s.max_abs_diff(&int_s);
+            if arch == "gcn" {
+                assert!(diff <= 1e-6, "{arch}: int path diverged by {diff}");
+            } else {
+                let mean_diff = fp_s
+                    .data
+                    .iter()
+                    .zip(&int_s.data)
+                    .map(|(a, b)| (a - b).abs() as f64)
+                    .sum::<f64>()
+                    / fp_s.data.len() as f64;
+                assert!(diff <= 0.2, "{arch}: int path max diff {diff}");
+                assert!(mean_diff <= 2e-3, "{arch}: int path mean diff {mean_diff}");
+            }
+
+            // the parallel paths are bitwise identical to serial
+            let fp_p = forward_fp_with(&model, &input, &parallel);
+            let int_p = forward_int_with(&model, &input, &parallel);
+            assert_eq!(fp_s.data, fp_p.data, "{arch}: fp parallel != serial");
+            assert_eq!(int_s.data, int_p.data, "{arch}: int parallel != serial");
+        }
+    });
+}
+
+#[test]
+fn fp32_method_ignores_quant_params() {
+    // sanity anchor for the harness above: with method = Fp32 the int path
+    // delegates to fp and both are exactly equal
+    let mut g = Gen::new(7);
+    let n = 40;
+    let mut rng = Rng::new(3);
+    let csr = preferential_attachment(&mut rng, n, 2);
+    let ef = EdgeForm::from_csr(&csr);
+    let x = g.vec_normal(n * 4, 0.5);
+    let mut model = random_model(&mut g, "gcn", n, 4, 8, 3, 2);
+    model.method = QuantMethod::Fp32;
+    let input = GraphInput::node_level(&x, 4, &ef);
+    let cfg = ParallelConfig::with_threads(4);
+    let fp = forward_fp_with(&model, &input, &cfg);
+    let int = forward_int_with(&model, &input, &cfg);
+    assert_eq!(fp.data, int.data);
+}
