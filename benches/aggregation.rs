@@ -98,6 +98,38 @@ fn main() {
         black_box(ef.plan());
     });
 
+    // prepared sessions: a resident graph's plan is request-invariant, so
+    // serving reuses one prepared plan instead of rebuilding it per
+    // forward (the pre-prepared-session behavior).  Record the speedup so
+    // the perf trajectory captures what plan caching banks.
+    let f = 16usize;
+    let x: Vec<f32> = (0..prep_n * f).map(|_| rng.normal() as f32).collect();
+    let cfg4 = ParallelConfig {
+        threads: 4,
+        min_rows_per_task: 64,
+    };
+    let plan = ef.plan();
+    let reuse_name = format!("aggregate/prepared_plan_reuse/n={prep_n}/f={f}/t=4");
+    runner.bench(&reuse_name, || {
+        black_box(plan.aggregate_with(&x, f, &ef.src, &ef.gcn_w, &cfg4));
+    });
+    let rebuild_name = format!("aggregate/unprepared_plan_rebuild/n={prep_n}/f={f}/t=4");
+    runner.bench(&rebuild_name, || {
+        let p = ef.plan();
+        black_box(p.aggregate_with(&x, f, &ef.src, &ef.gcn_w, &cfg4));
+    });
+    let reuse_ns = median_of(&runner, &reuse_name);
+    let rebuild_ns = median_of(&runner, &rebuild_name);
+    runner.report_metric(
+        &format!("aggregate/prepared_vs_rebuild_speedup/n={prep_n}/f={f}"),
+        if reuse_ns > 0.0 {
+            rebuild_ns / reuse_ns
+        } else {
+            0.0
+        },
+        "x prepared plan reuse vs per-request rebuild",
+    );
+
     runner
         .write_json(std::path::Path::new("BENCH_aggregation.json"))
         .expect("write BENCH_aggregation.json");

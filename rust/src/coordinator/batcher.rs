@@ -6,6 +6,13 @@
 //! vLLM-style continuous batching, specialised to padded graph batches.
 //! Node-level: all queued classify requests coalesce onto one full-graph
 //! forward (the forward cost is independent of the query count).
+//!
+//! Admission control lives in the **router** (its bounded per-model queue
+//! is the single backpressure point); the batcher accepts every request
+//! handed to it.  Re-applying a cap here double-counted admission: after a
+//! flush left leftovers pending, burst-drained requests the router had
+//! already admitted were bounced with spurious "overloaded" replies and
+//! recorded both admitted *and* rejected.
 
 use std::time::{Duration, Instant};
 
@@ -20,7 +27,10 @@ pub struct BatcherConfig {
     pub graph_slots: usize,
     /// flush even if underfull once the oldest request waited this long
     pub max_wait: Duration,
-    /// max queued requests before admission rejects (backpressure)
+    /// depth of the router's bounded per-model queue — the single
+    /// admission-control point (`Router::register`); the batcher itself
+    /// never rejects, so its transient backlog is bounded by this depth
+    /// plus what a flush leaves pending
     pub queue_cap: usize,
 }
 
@@ -55,15 +65,12 @@ impl DynamicBatcher {
         self.pending.len()
     }
 
-    /// Offer a request.  Returns `Err(req)` when the queue is full
-    /// (admission control — caller replies with overload).
-    pub fn offer(&mut self, req: Request) -> std::result::Result<(), Request> {
-        if self.pending.len() >= self.cfg.queue_cap {
-            return Err(req);
-        }
+    /// Queue a request for the next batch.  Never rejects: everything
+    /// reaching the batcher was already admitted by the router's bounded
+    /// queue, the single backpressure point.
+    pub fn offer(&mut self, req: Request) {
         self.pending_nodes += req.num_nodes();
         self.pending.push(req);
-        Ok(())
     }
 
     /// Would adding `n` more nodes overflow the budget?
@@ -153,10 +160,10 @@ mod tests {
     fn accumulates_until_budget() {
         let mut b = DynamicBatcher::new(cfg(100, 16));
         for _ in 0..3 {
-            b.offer(graph_req(20)).unwrap();
+            b.offer(graph_req(20));
         }
         assert!(b.flush(Instant::now(), false).is_none()); // 60 < 100, fresh
-        b.offer(graph_req(50)).unwrap(); // 110 >= 100
+        b.offer(graph_req(50)); // 110 >= 100
         let batch = b.flush(Instant::now(), false).unwrap();
         // greedy packing: 20+20+20 fits, 50 overflows 100? 60+50=110 > 100
         assert_eq!(batch.len(), 4 - 1);
@@ -166,7 +173,7 @@ mod tests {
     #[test]
     fn deadline_flushes_underfull_batch() {
         let mut b = DynamicBatcher::new(cfg(1000, 16));
-        b.offer(graph_req(5)).unwrap();
+        b.offer(graph_req(5));
         assert!(b.flush(Instant::now(), false).is_none());
         let later = Instant::now() + Duration::from_millis(5);
         let batch = b.flush(later, false).unwrap();
@@ -177,7 +184,7 @@ mod tests {
     fn graph_slot_cap() {
         let mut b = DynamicBatcher::new(cfg(10_000, 2));
         for _ in 0..3 {
-            b.offer(graph_req(5)).unwrap();
+            b.offer(graph_req(5));
         }
         let batch = b.flush(Instant::now(), true).unwrap();
         assert_eq!(batch.len(), 2);
@@ -185,12 +192,20 @@ mod tests {
     }
 
     #[test]
-    fn queue_cap_backpressure() {
+    fn no_double_admission_beyond_router_cap() {
+        // the router admitted these (its queue is the backpressure point);
+        // a flush leaving leftovers + a burst drain must not re-reject
         let mut b = DynamicBatcher::new(cfg(1000, 16));
-        for _ in 0..8 {
-            b.offer(graph_req(1)).unwrap();
+        for _ in 0..3 * b.cfg.queue_cap {
+            b.offer(graph_req(1));
         }
-        assert!(b.offer(graph_req(1)).is_err());
+        assert_eq!(b.pending_len(), 3 * b.cfg.queue_cap);
+        let mut flushed = 0;
+        let far = Instant::now() + Duration::from_secs(1);
+        while let Some(batch) = b.flush(far, true) {
+            flushed += batch.len();
+        }
+        assert_eq!(flushed, 3 * b.cfg.queue_cap);
     }
 
     #[test]
@@ -199,11 +214,8 @@ mod tests {
         property("batcher conserves requests", 30, |g: &mut Gen| {
             let mut b = DynamicBatcher::new(cfg(g.usize_range(10, 200), g.usize_range(1, 8)));
             let total = g.usize_range(1, 30);
-            let mut accepted = 0;
             for _ in 0..total {
-                if b.offer(graph_req(g.usize_range(1, 40))).is_ok() {
-                    accepted += 1;
-                }
+                b.offer(graph_req(g.usize_range(1, 40)));
             }
             let mut flushed = 0;
             let far = Instant::now() + Duration::from_secs(1);
@@ -211,7 +223,7 @@ mod tests {
                 assert!(!batch.is_empty());
                 flushed += batch.len();
             }
-            assert_eq!(flushed, accepted);
+            assert_eq!(flushed, total);
             assert_eq!(b.pending_len(), 0);
         });
     }
@@ -219,7 +231,7 @@ mod tests {
     #[test]
     fn oversized_single_request_still_ships_alone() {
         let mut b = DynamicBatcher::new(cfg(10, 4));
-        b.offer(graph_req(50)).unwrap(); // bigger than the whole budget
+        b.offer(graph_req(50)); // bigger than the whole budget
         let batch = b.flush(Instant::now(), true).unwrap();
         assert_eq!(batch.len(), 1);
     }

@@ -5,14 +5,30 @@
 //! * [`NativeExecutor`] — pure-rust integer/fp path (`gnn::infer`), used as
 //!   a cross-check backend and for environments without the PJRT library.
 //! * [`MockExecutor`] — deterministic fake for coordinator unit tests.
+//!
+//! Both real executors are **prepared sessions**: everything derivable
+//! from the loaded model alone is computed at construction
+//! ([`gnn::PreparedModel`], the resident graph's
+//! [`AggregationPlan`]), and full-graph node-level logits are cached under
+//! an explicit **epoch** version — `run_node_batch` is a slice-copy after
+//! the first batch of an epoch, and [`NativeExecutor::bump_epoch`] /
+//! [`PjrtExecutor::bump_epoch`] invalidate the cache when a future weight
+//! or feature swap mutates the resident state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
-use crate::gnn::{forward_fp_with, forward_int_with, GnnModel, GraphInput};
+use crate::gnn::{
+    forward_fp_prepared_with_plan, forward_int_prepared_with_plan, GnnModel, GraphInput,
+    PreparedModel,
+};
 use crate::graph::batch::GraphBatch;
 use crate::graph::io::{Dataset, NodeData, SmallGraph};
-use crate::graph::norm::EdgeForm;
+use crate::graph::norm::{AggregationPlan, EdgeForm};
 use crate::runtime::engine::EngineHandle;
 use crate::runtime::{ExecInput, ModelArtifact};
+use crate::tensor::Matrix;
 use crate::util::threadpool::ParallelConfig;
 
 /// A backend able to run the two batch kinds.
@@ -25,6 +41,50 @@ pub trait BatchExecutor: Send + Sync {
     /// report (N, 0).
     fn capacity(&self) -> (usize, usize);
     fn out_dim(&self) -> usize;
+}
+
+/// Versioned full-graph logits cache: the resident graph and model are
+/// immutable within an epoch, so the full forward runs once per epoch and
+/// every subsequent node batch is a row slice-copy.
+struct LogitsCache<T> {
+    epoch: AtomicU64,
+    slot: Mutex<Option<(u64, Arc<T>)>>,
+}
+
+impl<T> LogitsCache<T> {
+    fn new() -> Self {
+        LogitsCache {
+            epoch: AtomicU64::new(0),
+            slot: Mutex::new(None),
+        }
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    fn bump(&self) {
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Fetch the cached value for the current epoch, computing (outside the
+    /// lock) and installing it on miss.  A concurrent [`Self::bump`] during
+    /// compute keeps the stale result out of the cache — the caller still
+    /// gets the value it computed.
+    fn get_or_compute(&self, compute: impl FnOnce() -> Result<T>) -> Result<Arc<T>> {
+        let epoch = self.epoch();
+        if let Some((e, cached)) = self.slot.lock().unwrap().as_ref() {
+            if *e == epoch {
+                return Ok(Arc::clone(cached));
+            }
+        }
+        let value = Arc::new(compute()?);
+        let mut guard = self.slot.lock().unwrap();
+        if self.epoch() == epoch {
+            *guard = Some((epoch, Arc::clone(&value)));
+        }
+        Ok(value)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -43,6 +103,8 @@ pub struct PjrtExecutor {
     param_map: Vec<usize>,
     /// weight tensors appended after the data inputs (manifest order)
     weight_inputs: Vec<ExecInput>,
+    /// versioned full-graph logits (node-level serving hot path)
+    logits: LogitsCache<Vec<f32>>,
 }
 
 struct NodeSide {
@@ -94,6 +156,7 @@ impl PjrtExecutor {
             out_dim: artifact.out_dim,
             param_map,
             weight_inputs,
+            logits: LogitsCache::new(),
         })
     }
 
@@ -125,11 +188,24 @@ impl PjrtExecutor {
         ]);
         self.engine.execute(&self.key, inputs)
     }
+
+    /// Invalidate the full-graph logits cache (call after swapping the
+    /// resident weights or features on the engine side).
+    pub fn bump_epoch(&self) {
+        self.logits.bump();
+    }
+
+    /// Current logits-cache epoch (diagnostics).
+    pub fn epoch(&self) -> u64 {
+        self.logits.epoch()
+    }
 }
 
 impl BatchExecutor for PjrtExecutor {
     fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
-        let logits = self.logits_full_graph()?;
+        // PJRT execution of the full graph is identical for every node
+        // batch of an epoch — serve subsequent batches from the cache.
+        let logits = self.logits.get_or_compute(|| self.logits_full_graph())?;
         let c = self.out_dim;
         node_ids
             .iter()
@@ -180,17 +256,29 @@ impl BatchExecutor for PjrtExecutor {
 // ---------------------------------------------------------------------------
 
 /// Pure-rust backend over `gnn::infer` (fp emulation by default, true
-/// integer path opt-in).  Carries its own [`ParallelConfig`] so the
-/// serving stack controls the intra-op parallelism budget per executor.
+/// integer path opt-in), holding a prepared session: quantized weights,
+/// integer codes, and NNS tables are computed once in [`Self::new`], the
+/// resident graph's [`AggregationPlan`] is built once, and full-graph
+/// node-level logits are cached per epoch.  Carries its own
+/// [`ParallelConfig`] so the serving stack controls the intra-op
+/// parallelism budget per executor.
 pub struct NativeExecutor {
-    model: GnnModel,
+    prepared: PreparedModel,
     node: Option<NodeSide>,
     caps: (usize, usize, usize),
     parallel: ParallelConfig,
     use_int_path: bool,
+    /// destination-grouped plan of the resident graph (node-level gcn/gin)
+    resident_plan: Option<AggregationPlan>,
+    /// versioned full-graph logits (node-level serving hot path)
+    logits: LogitsCache<Matrix<f32>>,
 }
 
 impl NativeExecutor {
+    /// Prepare a serving session from a loaded model.  This is the
+    /// model-load validation boundary: malformed static state (missing
+    /// layer tensors, non-finite or mismatched quant steps, empty NNS
+    /// tables) is rejected here instead of panicking on the first request.
     pub fn new(model: GnnModel, dataset: Option<&Dataset>) -> Result<NativeExecutor> {
         let mut node = None;
         if model.node_level {
@@ -208,6 +296,8 @@ impl NativeExecutor {
                 num_nodes: ds.num_nodes(),
             });
         }
+        let prepared = PreparedModel::prepare(model)?;
+        let model = &prepared.model;
         let caps = (
             model.num_nodes,
             model
@@ -217,12 +307,18 @@ impl NativeExecutor {
                 .unwrap_or(model.num_nodes * 8),
             model.graph_capacity.max(1),
         );
+        let resident_plan = node.as_ref().and_then(|side: &NodeSide| {
+            (model.arch != "gat")
+                .then(|| AggregationPlan::build(&side.edges.dst, side.edges.num_nodes))
+        });
         Ok(NativeExecutor {
-            model,
+            prepared,
             node,
             caps,
             parallel: ParallelConfig::from_env(),
             use_int_path: false,
+            resident_plan,
+            logits: LogitsCache::new(),
         })
     }
 
@@ -243,23 +339,56 @@ impl NativeExecutor {
         self.parallel
     }
 
-    fn forward(&self, input: &GraphInput) -> crate::tensor::Matrix<f32> {
+    /// The prepared session this executor serves from.
+    pub fn prepared(&self) -> &PreparedModel {
+        &self.prepared
+    }
+
+    /// The retained model metadata (note: raw layer weight tensors are
+    /// released at preparation — the prepared matrices are the serving
+    /// source of truth).
+    pub fn model(&self) -> &GnnModel {
+        &self.prepared.model
+    }
+
+    /// Invalidate the full-graph logits cache.  Call after a weight or
+    /// resident-feature swap; the next node batch recomputes under the new
+    /// epoch while in-flight batches keep serving the old one.
+    pub fn bump_epoch(&self) {
+        self.logits.bump();
+    }
+
+    /// Current logits-cache epoch (diagnostics).
+    pub fn epoch(&self) -> u64 {
+        self.logits.epoch()
+    }
+
+    fn forward(&self, input: &GraphInput, plan: Option<&AggregationPlan>) -> Matrix<f32> {
         if self.use_int_path {
-            forward_int_with(&self.model, input, &self.parallel)
+            forward_int_prepared_with_plan(&self.prepared, input, plan, &self.parallel)
         } else {
-            forward_fp_with(&self.model, input, &self.parallel)
+            forward_fp_prepared_with_plan(&self.prepared, input, plan, &self.parallel)
         }
+    }
+
+    fn full_graph_logits(&self) -> Result<Arc<Matrix<f32>>> {
+        let side = self
+            .node
+            .as_ref()
+            .ok_or_else(|| Error::coordinator("not a node-level executor"))?;
+        self.logits.get_or_compute(|| {
+            let input =
+                GraphInput::node_level(&side.features, self.prepared.model.in_dim, &side.edges);
+            Ok(self.forward(&input, self.resident_plan.as_ref()))
+        })
     }
 }
 
 impl BatchExecutor for NativeExecutor {
     fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
-        let side = self
-            .node
-            .as_ref()
-            .ok_or_else(|| Error::coordinator("not a node-level executor"))?;
-        let input = GraphInput::node_level(&side.features, self.model.in_dim, &side.edges);
-        let logits = self.forward(&input);
+        // full forward once per epoch; every batch after that is a
+        // row slice-copy off the cached logits
+        let logits = self.full_graph_logits()?;
         node_ids
             .iter()
             .map(|&v| {
@@ -274,14 +403,15 @@ impl BatchExecutor for NativeExecutor {
 
     fn run_graph_batch(&self, graphs: &[&SmallGraph]) -> Result<Vec<Vec<f32>>> {
         let (cap_n, cap_e, cap_g) = self.caps;
-        let batch = GraphBatch::pack(graphs, self.model.in_dim, cap_n, cap_e, cap_g)?;
+        let batch = GraphBatch::pack(graphs, self.prepared.model.in_dim, cap_n, cap_e, cap_g)?;
         let input = GraphInput::batch(&batch);
-        let out = self.forward(&input);
+        // client-supplied edges differ per batch, so no resident plan here
+        let out = self.forward(&input, None);
         Ok((0..graphs.len()).map(|g| out.row(g).to_vec()).collect())
     }
 
     fn capacity(&self) -> (usize, usize) {
-        if self.model.node_level {
+        if self.prepared.model.node_level {
             (self.caps.0, 0)
         } else {
             (self.caps.0, self.caps.2)
@@ -289,7 +419,7 @@ impl BatchExecutor for NativeExecutor {
     }
 
     fn out_dim(&self) -> usize {
-        self.model.out_dim
+        self.prepared.model.out_dim
     }
 }
 
@@ -350,6 +480,10 @@ impl BatchExecutor for MockExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gnn::{forward_fp_with, LayerParams, QuantMethod};
+    use crate::graph::csr::Csr;
+    use crate::quant::mixed::NodeQuantParams;
+    use crate::util::json::Json;
 
     #[test]
     fn mock_is_deterministic() {
@@ -358,5 +492,98 @@ mod tests {
         assert_eq!(out[0], vec![1.0, 0.0]);
         assert_eq!(out[1], vec![0.0, 1.0]);
         assert_eq!(out[2], vec![1.0, 0.0]);
+    }
+
+    fn tiny_session() -> (GnnModel, Dataset) {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 0.5, -0.5, 1.0]).unwrap();
+        let model = GnnModel {
+            name: "tiny".into(),
+            arch: "gcn".into(),
+            dataset: "unit".into(),
+            method: QuantMethod::A2q,
+            layers: vec![LayerParams {
+                w: Some(w),
+                b: vec![0.1, -0.1],
+                w_steps: vec![0.05, 0.05],
+                feat: Some(NodeQuantParams::new(vec![0.1; 3], vec![4; 3], true).unwrap()),
+                ..Default::default()
+            }],
+            head: None,
+            dq_steps: vec![],
+            skip_input_quant: false,
+            node_level: true,
+            num_nodes: 3,
+            in_dim: 2,
+            out_dim: 2,
+            heads: 1,
+            graph_capacity: 0,
+            accuracy: 0.0,
+            avg_bits: 4.0,
+            expected_head: vec![],
+            manifest: Json::Null,
+        };
+        let csr = Csr::from_edges(3, &[(0, 1), (1, 0), (1, 2), (2, 1)]).unwrap();
+        let ds = Dataset::Node(NodeData {
+            name: "unit".into(),
+            csr,
+            num_features: 2,
+            num_classes: 2,
+            features: vec![0.3, -0.2, 0.15, 0.4, -0.35, 0.05],
+            labels: vec![0, 1, 0],
+            train_mask: vec![false; 3],
+            val_mask: vec![false; 3],
+            test_mask: vec![false; 3],
+        });
+        (model, ds)
+    }
+
+    #[test]
+    fn native_cached_batches_match_unprepared_forward() {
+        let (model, ds) = tiny_session();
+        let exec = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+        let Dataset::Node(nd) = &ds else { unreachable!() };
+        let ef = EdgeForm::from_csr(&nd.csr);
+        let input = GraphInput::node_level(&nd.features, 2, &ef);
+        let want = forward_fp_with(&model, &input, &ParallelConfig::serial());
+
+        // first batch computes + caches, second serves from the cache —
+        // both bitwise identical to the per-call shim
+        for _ in 0..2 {
+            let out = exec.run_node_batch(&[0, 1, 2]).unwrap();
+            for (v, row) in out.iter().enumerate() {
+                assert_eq!(row.as_slice(), want.row(v));
+            }
+        }
+        assert_eq!(exec.epoch(), 0);
+    }
+
+    #[test]
+    fn native_epoch_bump_invalidates_but_stays_consistent() {
+        let (model, ds) = tiny_session();
+        let exec = NativeExecutor::new(model, Some(&ds)).unwrap();
+        let before = exec.run_node_batch(&[0, 2]).unwrap();
+        exec.bump_epoch();
+        assert_eq!(exec.epoch(), 1);
+        // immutable state ⇒ recompute under the new epoch is identical
+        let after = exec.run_node_batch(&[0, 2]).unwrap();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn native_out_of_range_node_is_an_error_not_a_panic() {
+        let (model, ds) = tiny_session();
+        let exec = NativeExecutor::new(model, Some(&ds)).unwrap();
+        let err = exec.run_node_batch(&[99]).unwrap_err();
+        assert!(format!("{err}").contains("out of range"));
+    }
+
+    #[test]
+    fn native_rejects_malformed_model_at_construction() {
+        let (mut model, ds) = tiny_session();
+        model.layers[0].w = None;
+        let err = NativeExecutor::new(model, Some(&ds)).unwrap_err();
+        assert!(format!("{err}").contains("missing w"));
     }
 }

@@ -16,10 +16,16 @@ pub struct Prediction {
 
 impl Prediction {
     pub fn from_logits(output: Vec<f32>) -> Prediction {
+        // NaN logits (a degenerate model, not a protocol error) must
+        // neither panic the runner's response path (the old
+        // partial_cmp().unwrap()) nor hijack the argmax (total_cmp alone
+        // would rank NaN above every real): skip them, fall back to class
+        // 0 only when every logit is NaN.
         let class = output
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .filter(|(_, v)| !v.is_nan())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
         Prediction { output, class }
@@ -74,5 +80,13 @@ mod tests {
         assert_eq!(p.class, 1);
         let empty = Prediction::from_logits(vec![]);
         assert_eq!(empty.class, 0);
+    }
+
+    #[test]
+    fn prediction_argmax_ignores_nan_without_panicking() {
+        let p = Prediction::from_logits(vec![0.9, f32::NAN, 0.3]);
+        assert_eq!(p.class, 0);
+        let all_nan = Prediction::from_logits(vec![f32::NAN, f32::NAN]);
+        assert_eq!(all_nan.class, 0);
     }
 }

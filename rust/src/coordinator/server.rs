@@ -1,12 +1,18 @@
 //! The `Coordinator`: per-model runner threads behind a router.
 //!
-//! Data path:  submit() → router (bounded queue, admission control)
-//!             → runner thread (dynamic batcher) → executor → reply channel.
+//! Data path:  submit() → router (bounded queue, **the** admission-control
+//!             point) → runner thread (dynamic batcher) → executor → reply
+//!             channel.
 //!
 //! One runner thread per model variant keeps the executable's thread
 //! affinity simple (PJRT CPU executions are serialized per executable) and
-//! makes per-model batching state lock-free.
+//! makes per-model batching state lock-free.  Batch execution runs behind
+//! a panic boundary: an executor panic fails the one batch that triggered
+//! it (each client gets a coordinator error, the `errors` metric is
+//! bumped) and the runner keeps serving instead of stranding every queued
+//! client.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
@@ -141,22 +147,22 @@ fn runner_loop(
         if stop.load(Ordering::SeqCst) && batcher.pending_len() == 0 {
             break;
         }
-        // pull what's available, bounded wait to honour deadlines
+        // pull what's available, bounded wait to honour deadlines.  The
+        // router already admitted everything arriving here (its bounded
+        // queue is the single backpressure point), so the batcher never
+        // rejects what we hand it — re-applying a cap there double-counted
+        // admission.  The burst drain stops once the local backlog reaches
+        // queue_cap, though: leaving the rest in the router queue is what
+        // makes it fill up and reject new submits under sustained
+        // overload (otherwise the backlog would grow without bound).
         match rx.recv_timeout(poll) {
             Ok(req) => {
-                if let Err(rejected) = batcher.offer(req) {
-                    metrics.record_rejected();
-                    let _ = rejected
-                        .reply
-                        .send(Err(Error::coordinator("overloaded: batcher queue full")));
-                }
-                // drain burst without waiting
-                while let Ok(req) = rx.try_recv() {
-                    if let Err(rejected) = batcher.offer(req) {
-                        metrics.record_rejected();
-                        let _ = rejected
-                            .reply
-                            .send(Err(Error::coordinator("overloaded: batcher queue full")));
+                batcher.offer(req);
+                // drain burst without waiting, up to the backlog bound
+                while batcher.pending_len() < cfg.queue_cap {
+                    match rx.try_recv() {
+                        Ok(req) => batcher.offer(req),
+                        Err(_) => break,
                     }
                 }
             }
@@ -165,7 +171,7 @@ fn runner_loop(
         }
         let force = disconnected || stop.load(Ordering::SeqCst);
         while let Some(batch) = batcher.flush(Instant::now(), force) {
-            execute_batch(batch, executor.as_ref(), &metrics);
+            execute_batch_isolated(batch, executor.as_ref(), &metrics);
             if !force {
                 break;
             }
@@ -173,6 +179,59 @@ fn runner_loop(
         if disconnected && batcher.pending_len() == 0 {
             break;
         }
+    }
+}
+
+/// Run one batch behind a panic boundary.  Executors can panic on
+/// malformed state (shape asserts, missing-tensor `expect`s, out-of-range
+/// indices); without isolation one such panic kills the per-model runner
+/// and strands every queued client.
+///
+/// The *primary* boundary is inside [`execute_batch`]: each executor call
+/// is caught individually and converted into the ordinary error path, so
+/// exactly the requests of the failing sub-batch get a coordinator error
+/// and an `errors` tick — requests already answered (e.g. the classify
+/// half of a mixed batch) are untouched.  This outer boundary is a
+/// last-resort backstop for panics in the response plumbing itself; it
+/// keeps the runner alive and errors out every reply clone rather than
+/// leaving clients hung (already-answered receivers just see a dropped
+/// duplicate, at the cost of some over-counted errors in that rare case).
+fn execute_batch_isolated(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Metrics) {
+    let replies: Vec<_> = batch.iter().map(|r| r.reply.clone()).collect();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        execute_batch(batch, executor, metrics)
+    }));
+    if let Err(payload) = outcome {
+        let msg = panic_message(payload.as_ref());
+        for reply in replies {
+            metrics.record_error();
+            let _ = reply.send(Err(Error::coordinator(format!(
+                "coordinator response path panicked: {msg}"
+            ))));
+        }
+    }
+}
+
+/// Call an executor entry point with panics converted to `Err`, so the
+/// caller's normal error handling (fail exactly this sub-batch, bump
+/// `errors` per request) applies to panics too.
+fn run_caught<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(result) => result,
+        Err(payload) => Err(Error::coordinator(format!(
+            "executor panicked: {}",
+            panic_message(payload.as_ref())
+        ))),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -192,7 +251,7 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
             }
         }
         let t0 = Instant::now();
-        let result = executor.run_node_batch(&all_ids);
+        let result = run_caught(|| executor.run_node_batch(&all_ids));
         let exec_us = t0.elapsed().as_micros() as u64;
         match result {
             Ok(outputs) => {
@@ -217,7 +276,7 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
             })
             .collect();
         let t0 = Instant::now();
-        let result = executor.run_graph_batch(&graphs);
+        let result = run_caught(|| executor.run_graph_batch(&graphs));
         let exec_us = t0.elapsed().as_micros() as u64;
         match result {
             Ok(outputs) => {
@@ -354,6 +413,120 @@ mod tests {
         assert!(snap.batches <= 100);
         assert!(snap.mean_batch_size >= 1.0);
         Arc::try_unwrap(c).ok().map(|c| c.shutdown());
+    }
+
+    /// Panics on the first node batch, serves normally afterwards —
+    /// models the "one corrupt request / transient bad state" failure.
+    struct PanicOnceExecutor {
+        panicked: std::sync::atomic::AtomicBool,
+    }
+
+    impl BatchExecutor for PanicOnceExecutor {
+        fn run_node_batch(&self, node_ids: &[u32]) -> crate::error::Result<Vec<Vec<f32>>> {
+            if !self.panicked.swap(true, Ordering::SeqCst) {
+                panic!("injected executor panic");
+            }
+            Ok(node_ids.iter().map(|_| vec![1.0, 0.0]).collect())
+        }
+        fn run_graph_batch(
+            &self,
+            graphs: &[&SmallGraph],
+        ) -> crate::error::Result<Vec<Vec<f32>>> {
+            Ok(graphs.iter().map(|_| vec![1.0, 0.0]).collect())
+        }
+        fn capacity(&self) -> (usize, usize) {
+            (1024, 16)
+        }
+        fn out_dim(&self) -> usize {
+            2
+        }
+    }
+
+    #[test]
+    fn panicking_executor_fails_one_batch_but_model_keeps_serving() {
+        let mut c = Coordinator::new();
+        c.add_model(
+            "flaky",
+            Arc::new(PanicOnceExecutor {
+                panicked: std::sync::atomic::AtomicBool::new(false),
+            }),
+            batcher_cfg(),
+        );
+        // first batch: the executor panic must come back as an error reply,
+        // not a hung client on a dead runner
+        let err = c
+            .submit_blocking("flaky", Payload::ClassifyNodes(vec![0]))
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("panicked"), "unexpected reply: {msg}");
+        assert!(msg.contains("injected executor panic"), "payload lost: {msg}");
+        // the runner survived: the same model keeps serving
+        let resp = c
+            .submit_blocking("flaky", Payload::ClassifyNodes(vec![1, 2]))
+            .unwrap();
+        assert_eq!(resp.predictions.len(), 2);
+        let snap = c.metrics();
+        assert!(snap.errors >= 1, "errors metric not bumped: {snap:?}");
+        c.shutdown();
+    }
+
+    /// Node batches succeed, graph batches always panic — for testing that
+    /// a mixed batch fails only the panicking half.
+    struct GraphPanicExecutor;
+
+    impl BatchExecutor for GraphPanicExecutor {
+        fn run_node_batch(&self, node_ids: &[u32]) -> crate::error::Result<Vec<Vec<f32>>> {
+            Ok(node_ids.iter().map(|_| vec![1.0, 0.0]).collect())
+        }
+        fn run_graph_batch(
+            &self,
+            _graphs: &[&SmallGraph],
+        ) -> crate::error::Result<Vec<Vec<f32>>> {
+            panic!("graph side exploded");
+        }
+        fn capacity(&self) -> (usize, usize) {
+            (1024, 16)
+        }
+        fn out_dim(&self) -> usize {
+            2
+        }
+    }
+
+    #[test]
+    fn mixed_batch_panic_fails_only_the_panicking_half() {
+        let metrics = Metrics::default();
+        let (ctx, crx) = mpsc::channel();
+        let classify = Request {
+            model: "m".into(),
+            payload: Payload::ClassifyNodes(vec![0]),
+            enqueued: Instant::now(),
+            reply: ctx,
+        };
+        let (ptx, prx) = mpsc::channel();
+        let predict = Request {
+            model: "m".into(),
+            payload: Payload::PredictGraph(SmallGraph {
+                csr: Csr::from_edges(2, &[(0, 1)]).unwrap(),
+                features: vec![0.0; 4],
+                target_class: 0,
+                target_value: 0.0,
+            }),
+            enqueued: Instant::now(),
+            reply: ptx,
+        };
+        execute_batch_isolated(vec![classify, predict], &GraphPanicExecutor, &metrics);
+        // the classify half was answered normally...
+        let ok = crx.try_recv().unwrap();
+        assert!(ok.is_ok(), "classify half should have succeeded: {ok:?}");
+        // ...the predict half got the panic as an error, counted exactly once
+        let err = prx.try_recv().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("graph side exploded"));
+        let snap = metrics.snapshot();
+        assert_eq!(snap.errors, 1, "only the panicking half counts as errors");
+        assert_eq!(snap.responses, 1);
+        // no stray duplicate replies on either channel
+        assert!(crx.try_recv().is_err());
+        assert!(prx.try_recv().is_err());
     }
 
     #[test]

@@ -6,14 +6,26 @@
 //! `forward_int` runs the same network in true integer arithmetic
 //! (i32-accumulated matmuls over quantized codes, Eq. 2 rescale) — the
 //! computation the paper's bit-serial accelerator performs.
+//!
+//! Both passes run off a [`PreparedModel`] (see [`super::prepared`]): all
+//! request-invariant state — fake-quantized weights, integer weight codes,
+//! clamped step vectors, sorted NNS tables — is derived once at session
+//! build.  The `forward_*_with(model, ...)` signatures are kept as thin
+//! shims that prepare a throwaway session per call, preserving the old
+//! re-derive-everything cost profile for tests and benches; serving code
+//! should hold a `PreparedModel` (as `coordinator::NativeExecutor` does)
+//! and call the `*_prepared` entry points.  Preparation is deterministic,
+//! so both routes are bitwise identical.
 
 use crate::graph::norm::AggregationPlan;
 use crate::quant::mixed::NodeQuantParams;
+use crate::quant::nns::NnsTable;
 use crate::quant::{pack, uniform};
 use crate::tensor::{dense::Matrix, ops};
 use crate::util::threadpool::{self, ParallelConfig};
 
 use super::model::{GnnModel, LayerParams, QuantMethod};
+use super::prepared::{PreparedLayer, PreparedModel};
 
 /// Borrowed view of one inference input (full graph or packed batch).
 #[derive(Debug, Clone, Copy)]
@@ -68,7 +80,8 @@ impl<'a> GraphInput<'a> {
 }
 
 /// Row-parallel Â·X over the destination-grouped plan (built once per
-/// forward pass, shared across layers).
+/// forward pass — or once per *session* for a resident graph — and shared
+/// across layers).
 fn aggregate(
     x: &Matrix<f32>,
     plan: &AggregationPlan,
@@ -83,47 +96,29 @@ fn aggregate(
     }
 }
 
-/// Fake-quantize weights per output column at 4 bits (paper §3.1).
-fn quantize_weights(w: &Matrix<f32>, steps: &[f32], method: QuantMethod) -> Matrix<f32> {
-    match method {
-        QuantMethod::Fp32 => w.clone(),
-        QuantMethod::Binary => {
-            // per-column sign * mean|w| (Bi-GCN form, mirrors python)
-            let mut out = w.clone();
-            for j in 0..w.cols {
-                let mut mean = 0.0f32;
-                for i in 0..w.rows {
-                    mean += w.at(i, j).abs();
-                }
-                mean /= w.rows as f32;
-                for i in 0..w.rows {
-                    let v = w.at(i, j);
-                    *out.at_mut(i, j) = if v >= 0.0 { mean } else { -mean };
-                }
-            }
-            out
-        }
-        _ => {
-            assert_eq!(steps.len(), w.cols, "weight steps per output column");
-            let mut out = w.clone();
-            for i in 0..w.rows {
-                for j in 0..w.cols {
-                    let v = w.at(i, j);
-                    *out.at_mut(i, j) =
-                        uniform::quantize_value(v, steps[j], 4, true) as f32
-                            * steps[j].max(1e-9);
-                }
-            }
-            out
-        }
+/// The session's prepared [`NnsTable`], or an on-demand one when the
+/// session prepared these params as per-node (a node-level model run on
+/// an input sized differently than its resident graph) — shared by the fp
+/// and int paths so the fallback semantics can't diverge.
+fn nns_or_build<'a>(
+    nns: Option<&'a NnsTable>,
+    p: &NodeQuantParams,
+) -> std::borrow::Cow<'a, NnsTable> {
+    match nns {
+        Some(t) => std::borrow::Cow::Borrowed(t),
+        None => std::borrow::Cow::Owned(NnsTable::new(&p.steps, &p.bits, p.signed)),
     }
 }
 
+/// Quantize a feature map in place.  For A²Q's grouped (non-per-node)
+/// parameters the lookup runs over the session's prepared [`NnsTable`] —
+/// the table is never rebuilt per request.
 fn quantize_features(
     h: &mut Matrix<f32>,
     model: &GnnModel,
     layer: usize,
     feat: Option<&NodeQuantParams>,
+    nns: Option<&NnsTable>,
 ) {
     match model.method {
         QuantMethod::Fp32 => {}
@@ -140,7 +135,8 @@ fn quantize_features(
             let step = model.dq_steps.get(layer).copied().unwrap_or(0.05);
             let signed = layer == 0 || model.arch == "gat";
             for v in h.data.iter_mut() {
-                *v = uniform::quantize_value(*v, step, 4, signed) as f32 * step.max(1e-9);
+                *v = uniform::quantize_value(*v, step, 4, signed) as f32
+                    * step.max(uniform::MIN_STEP);
             }
         }
         QuantMethod::A2q => {
@@ -150,8 +146,9 @@ fn quantize_features(
                     let dim = h.cols;
                     p.fake_quantize(&mut h.data, dim);
                 } else {
-                    // NNS groups (graph-level): per-row nearest lookup
-                    let table = crate::quant::nns::NnsTable::new(&p.steps, &p.bits, p.signed);
+                    // NNS groups (graph-level): per-row nearest lookup over
+                    // the prepared (or fallback) table
+                    let table = nns_or_build(nns, p);
                     for i in 0..h.rows {
                         let row = h.row_mut(i);
                         let f = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
@@ -169,13 +166,13 @@ fn quantize_features(
 fn gat_layer(
     h: &Matrix<f32>,
     lay: &LayerParams,
+    pl: &PreparedLayer,
     input: &GraphInput,
     method: QuantMethod,
     cfg: &ParallelConfig,
 ) -> Matrix<f32> {
-    let w = lay.w.as_ref().expect("gat layer weight");
-    let wq = quantize_weights(w, &lay.w_steps, method);
-    let z = ops::matmul_with(h, &wq, cfg); // [N, H*Fh]
+    let wq = pl.wq.as_ref().expect("gat layer weight");
+    let z = ops::matmul_with(h, wq, cfg); // [N, H*Fh]
     let a_src = lay.a_src.as_ref().expect("a_src");
     let a_dst = lay.a_dst.as_ref().expect("a_dst");
     let heads = a_src.rows;
@@ -237,7 +234,8 @@ fn gat_layer(
     if method != QuantMethod::Fp32 && method != QuantMethod::Binary {
         let s = lay.attn_step;
         for a in alpha.iter_mut() {
-            *a = uniform::quantize_value(*a, s, 4, false) as f32 * s.max(1e-9);
+            *a = uniform::quantize_value(*a, s, 4, false) as f32
+                * s.max(uniform::MIN_STEP);
         }
     }
     // weighted aggregation
@@ -266,17 +264,47 @@ pub fn forward_fp(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
     forward_fp_with(model, input, &threadpool::global_parallelism())
 }
 
-/// Full fp-emulation forward. Returns [N, out] node logits (node-level) or
-/// [G, out] predictions (graph-level readout).  Aggregation and matmuls
-/// run row-parallel under `cfg`; results are bitwise independent of the
-/// thread count (each output row has one owner).
+/// Compatibility shim: prepares a throwaway session per call (the old
+/// re-quantize-everything cost profile).  Serving paths should prepare
+/// once and call [`forward_fp_prepared`].
 pub fn forward_fp_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConfig) -> Matrix<f32> {
+    let prep = PreparedModel::prepare(model.clone()).expect("model fails session preparation");
+    forward_fp_prepared(&prep, input, cfg)
+}
+
+/// Full fp-emulation forward over a prepared session.  Returns [N, out]
+/// node logits (node-level) or [G, out] predictions (graph-level readout).
+/// Aggregation and matmuls run row-parallel under `cfg`; results are
+/// bitwise independent of the thread count (each output row has one
+/// owner).
+pub fn forward_fp_prepared(
+    prep: &PreparedModel,
+    input: &GraphInput,
+    cfg: &ParallelConfig,
+) -> Matrix<f32> {
+    forward_fp_prepared_with_plan(prep, input, None, cfg)
+}
+
+/// [`forward_fp_prepared`] with an optional caller-cached
+/// [`AggregationPlan`] for `input`'s edge list (executors serving a
+/// resident graph build the plan once per session instead of per forward).
+pub fn forward_fp_prepared_with_plan(
+    prep: &PreparedModel,
+    input: &GraphInput,
+    resident_plan: Option<&AggregationPlan>,
+    cfg: &ParallelConfig,
+) -> Matrix<f32> {
+    let model = &prep.model;
     // GAT aggregates inside gat_layer (per-head attention weights), so the
     // shared destination-grouped plan is only built for gcn/gin.
-    let plan = if model.arch == "gat" {
+    let built;
+    let plan: Option<&AggregationPlan> = if model.arch == "gat" {
         None
+    } else if let Some(p) = resident_plan {
+        Some(p)
     } else {
-        Some(AggregationPlan::build(input.dst, input.num_nodes))
+        built = AggregationPlan::build(input.dst, input.num_nodes);
+        Some(&built)
     };
     let mut h = Matrix::from_vec(
         input.num_nodes,
@@ -287,44 +315,42 @@ pub fn forward_fp_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConfi
     let n_layers = model.layers.len();
 
     for (l, lay) in model.layers.iter().enumerate() {
+        let pl = &prep.layers[l];
         let skip_q = l == 0 && model.skip_input_quant;
         if !skip_q {
-            quantize_features(&mut h, model, l, lay.feat.as_ref());
+            quantize_features(&mut h, model, l, lay.feat.as_ref(), pl.nns.as_ref());
         }
         let h_in = h.clone(); // python's skip connection adds the quantized input
 
         let mut out = match model.arch.as_str() {
             "gcn" => {
-                let plan = plan.as_ref().expect("plan built for gcn");
+                let plan = plan.expect("plan built for gcn");
                 let agg = aggregate(&h, plan, input, input.gcn_w, cfg);
-                let w = lay.w.as_ref().expect("gcn weight");
-                let wq = quantize_weights(w, &lay.w_steps, model.method);
-                let mut out = ops::matmul_with(&agg, &wq, cfg);
+                let wq = pl.wq.as_ref().expect("gcn weight");
+                let mut out = ops::matmul_with(&agg, wq, cfg);
                 ops::add_bias(&mut out, &lay.b);
                 out
             }
             "gin" => {
-                let plan = plan.as_ref().expect("plan built for gin");
+                let plan = plan.expect("plan built for gin");
                 let neigh = aggregate(&h, plan, input, input.sum_w, cfg);
                 let mut agg = h.clone();
                 for (a, nv) in agg.data.iter_mut().zip(&neigh.data) {
                     *a = (1.0 + lay.eps) * *a + nv;
                 }
-                let w1 = lay.w.as_ref().expect("gin w1");
-                let w1q = quantize_weights(w1, &lay.w_steps, model.method);
-                let mut hid = ops::matmul_with(&agg, &w1q, cfg);
+                let w1q = pl.wq.as_ref().expect("gin w1");
+                let mut hid = ops::matmul_with(&agg, w1q, cfg);
                 ops::add_bias(&mut hid, &lay.b);
                 ops::relu_inplace(&mut hid);
                 if model.method != QuantMethod::Fp32 {
-                    quantize_features(&mut hid, model, l, lay.feat2.as_ref());
+                    quantize_features(&mut hid, model, l, lay.feat2.as_ref(), pl.nns2.as_ref());
                 }
-                let w2 = lay.w2.as_ref().expect("gin w2");
-                let w2q = quantize_weights(w2, &lay.w2_steps, model.method);
-                let mut out = ops::matmul_with(&hid, &w2q, cfg);
+                let w2q = pl.w2q.as_ref().expect("gin w2");
+                let mut out = ops::matmul_with(&hid, w2q, cfg);
                 ops::add_bias(&mut out, &lay.b2);
                 out
             }
-            "gat" => gat_layer(&h, lay, input, model.method, cfg),
+            "gat" => gat_layer(&h, lay, pl, input, model.method, cfg),
             other => panic!("unknown arch {other}"),
         };
 
@@ -349,9 +375,10 @@ pub fn forward_fp_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConfi
         h = out;
     }
 
-    match &model.head {
-        None => h,
-        Some(head) => {
+    match (&model.head, &prep.head) {
+        (None, _) => h,
+        (Some(head), prep_head) => {
+            let ph = prep_head.as_ref().expect("prepared head");
             // mean-pool real nodes per graph segment
             let n2g = input.node2graph.expect("node2graph for graph-level");
             let mask = input.node_mask.expect("node_mask");
@@ -379,8 +406,7 @@ pub fn forward_fp_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConfi
             }
             if model.method == QuantMethod::A2q {
                 if let Some(p) = &head.feat {
-                    let table =
-                        crate::quant::nns::NnsTable::new(&p.steps, &p.bits, p.signed);
+                    let table = ph.nns.as_ref().expect("prepared head NNS table");
                     for i in 0..pooled.rows {
                         let row = pooled.row_mut(i);
                         let fmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
@@ -389,12 +415,10 @@ pub fn forward_fp_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConfi
                     }
                 }
             }
-            let w1q = quantize_weights(&head.w1, &head.w1_steps, model.method);
-            let mut z = ops::matmul_with(&pooled, &w1q, cfg);
+            let mut z = ops::matmul_with(&pooled, &ph.w1q, cfg);
             ops::add_bias(&mut z, &head.b1);
             ops::relu_inplace(&mut z);
-            let w2q = quantize_weights(&head.w2, &head.w2_steps, model.method);
-            let mut out = ops::matmul_with(&z, &w2q, cfg);
+            let mut out = ops::matmul_with(&z, &ph.w2q, cfg);
             ops::add_bias(&mut out, &head.b2);
             out
         }
@@ -414,60 +438,85 @@ pub fn forward_int(model: &GnnModel, input: &GraphInput) -> Matrix<f32> {
     forward_int_with(model, input, &threadpool::global_parallelism())
 }
 
-/// Integer-path forward for GCN/GIN: quantize → bit-pack → i32 matmul off
-/// the packed payload → Eq. 2 rescale.  GAT falls back to the fp path
-/// (attention softmax is f32 on the accelerator too; only coefficients are
-/// 4-bit).
+/// Compatibility shim: prepares a throwaway session per call.  Serving
+/// paths should prepare once and call [`forward_int_prepared`].
 pub fn forward_int_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConfig) -> Matrix<f32> {
+    let prep = PreparedModel::prepare(model.clone()).expect("model fails session preparation");
+    forward_int_prepared(&prep, input, cfg)
+}
+
+/// Integer-path forward over a prepared session.
+pub fn forward_int_prepared(
+    prep: &PreparedModel,
+    input: &GraphInput,
+    cfg: &ParallelConfig,
+) -> Matrix<f32> {
+    forward_int_prepared_with_plan(prep, input, None, cfg)
+}
+
+/// Integer-path forward for GCN/GIN: quantize → bit-pack → i32 matmul off
+/// the packed payload → Eq. 2 rescale, using the session's precomputed
+/// integer weight codes and clamped step vectors.  GAT falls back to the
+/// fp path (attention softmax is f32 on the accelerator too; only
+/// coefficients are 4-bit).
+pub fn forward_int_prepared_with_plan(
+    prep: &PreparedModel,
+    input: &GraphInput,
+    resident_plan: Option<&AggregationPlan>,
+    cfg: &ParallelConfig,
+) -> Matrix<f32> {
+    let model = &prep.model;
     if model.arch == "gat" || model.method != QuantMethod::A2q || model.head.is_some() {
         // GAT and non-A2q run fp; graph-level (head) models delegate their
         // pooling + readout to the fp implementation entirely, so skip the
         // integer layer loop rather than computing and discarding it.
-        return forward_fp_with(model, input, cfg);
+        return forward_fp_prepared_with_plan(prep, input, resident_plan, cfg);
     }
-    let plan = AggregationPlan::build(input.dst, input.num_nodes);
+    let built;
+    let plan: &AggregationPlan = match resident_plan {
+        Some(p) => p,
+        None => {
+            built = AggregationPlan::build(input.dst, input.num_nodes);
+            &built
+        }
+    };
     let mut h = Matrix::from_vec(input.num_nodes, input.feat_dim, input.features.to_vec())
         .expect("feature shape");
     let n_layers = model.layers.len();
 
     for (l, lay) in model.layers.iter().enumerate() {
+        let pl = &prep.layers[l];
         let skip_q = l == 0 && model.skip_input_quant;
         let last = l == n_layers - 1;
 
         let mm = |x: &Matrix<f32>,
                   feat: Option<&NodeQuantParams>,
-                  w: &Matrix<f32>,
-                  wsteps: &[f32],
+                  nns: Option<&NnsTable>,
+                  wcodes: &Matrix<i32>,
+                  sw: &[f32],
                   bias: &[f32],
                   skip_quant: bool| {
-            // integer codes for weights (per-column 4-bit)
-            let mut wcodes = vec![0i32; w.rows * w.cols];
-            for i in 0..w.rows {
-                for j in 0..w.cols {
-                    wcodes[i * w.cols + j] =
-                        uniform::quantize_value(w.at(i, j), wsteps[j], 4, true);
-                }
-            }
-            let b = Matrix::from_vec(w.rows, w.cols, wcodes).unwrap();
-
             // Activation codes, bit-packed row-wise at each node's learned
             // bitwidth (quant::pack — the serving at-rest layout).  The
             // integer matmul streams rows straight off the packed payload,
             // so the dense [N, F] i32 code matrix is never materialized.
+            // Weight codes and the clamped sw come precomputed from the
+            // prepared session.
             let (acc, sx) = if skip_quant || feat.is_none() {
                 // unquantized input (binary bag-of-words): treat as codes
                 // with unit step — values are already 0/1 integers.
                 let codes: Vec<i32> = x.data.iter().map(|&v| v as i32).collect();
                 let a = Matrix::from_vec(x.rows, x.cols, codes).unwrap();
-                (ops::matmul_i32_with(&a, &b, cfg), vec![1.0f32; x.rows])
+                (ops::matmul_i32_with(&a, wcodes, cfg), vec![1.0f32; x.rows])
             } else {
                 let p = feat.unwrap();
                 let packed = if p.len() == x.rows {
                     let (codes, _steps) = p.quantize_codes(&x.data, x.cols);
                     pack::pack_rows(&codes, &p.steps, &p.bits, x.cols, p.signed)
                 } else {
-                    // NNS selection per row
-                    let table = crate::quant::nns::NnsTable::new(&p.steps, &p.bits, p.signed);
+                    // NNS selection per row, over the prepared (or
+                    // fallback) table
+                    let table = nns_or_build(nns, p);
                     let mut codes = vec![0i32; x.data.len()];
                     let mut steps = vec![0.0f32; x.rows];
                     let mut bits = vec![0u8; x.rows];
@@ -486,10 +535,9 @@ pub fn forward_int_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConf
                     pack::pack_rows(&codes, &steps, &bits, x.cols, p.signed)
                 };
                 let sx = packed.steps();
-                (packed.matmul_i32(&b, cfg), sx)
+                (packed.matmul_i32(wcodes, cfg), sx)
             };
-            let sw: Vec<f32> = wsteps.iter().map(|s| s.max(1e-9)).collect();
-            let mut out = ops::rescale_outer(&acc, &sx, &sw);
+            let mut out = ops::rescale_outer(&acc, &sx, sw);
             ops::add_bias(&mut out, bias);
             out
         };
@@ -503,45 +551,43 @@ pub fn forward_int_with(model: &GnnModel, input: &GraphInput, cfg: &ParallelConf
                 // fake-quant because aggregation output feeds mm directly.
                 let mut hq = h.clone();
                 if !skip_q {
-                    quantize_features(&mut hq, model, l, lay.feat.as_ref());
+                    quantize_features(&mut hq, model, l, lay.feat.as_ref(), pl.nns.as_ref());
                 }
-                let agg = aggregate(&hq, &plan, input, input.gcn_w, cfg);
-                let w = lay.w.as_ref().unwrap();
+                let agg = aggregate(&hq, plan, input, input.gcn_w, cfg);
                 // aggregated values are NOT re-quantized in the fp path;
                 // emulate exactly: feed agg as f32 through an fp matmul of
                 // quantized weights.  Integer arithmetic still applies to
                 // the dominant X̄·W̄ via distributivity over the (integer/s)
                 // codes; here we keep bit-exactness with forward_fp.
-                let wq = quantize_weights(w, &lay.w_steps, model.method);
-                let mut out = ops::matmul_with(&agg, &wq, cfg);
+                let wq = pl.wq.as_ref().expect("gcn weight");
+                let mut out = ops::matmul_with(&agg, wq, cfg);
                 ops::add_bias(&mut out, &lay.b);
                 out
             }
             "gin" => {
                 let mut hq = h.clone();
                 if !skip_q {
-                    quantize_features(&mut hq, model, l, lay.feat.as_ref());
+                    quantize_features(&mut hq, model, l, lay.feat.as_ref(), pl.nns.as_ref());
                 }
-                let neigh = aggregate(&hq, &plan, input, input.sum_w, cfg);
+                let neigh = aggregate(&hq, plan, input, input.sum_w, cfg);
                 let mut agg = hq.clone();
                 for (a, nv) in agg.data.iter_mut().zip(&neigh.data) {
                     *a = (1.0 + lay.eps) * *a + nv;
                 }
-                let w1 = lay.w.as_ref().unwrap();
-                let w1q = quantize_weights(w1, &lay.w_steps, model.method);
-                let mut hid = ops::matmul_with(&agg, &w1q, cfg);
+                let w1q = pl.wq.as_ref().expect("gin w1");
+                let mut hid = ops::matmul_with(&agg, w1q, cfg);
                 ops::add_bias(&mut hid, &lay.b);
                 ops::relu_inplace(&mut hid);
                 // hidden map: true integer matmul via per-node codes
-                let out = mm(
+                mm(
                     &hid,
                     lay.feat2.as_ref(),
-                    lay.w2.as_ref().unwrap(),
-                    &lay.w2_steps,
+                    pl.nns2.as_ref(),
+                    pl.w2_codes.as_ref().expect("gin w2 codes"),
+                    &pl.w2_steps_clamped,
                     &lay.b2,
                     false,
-                );
-                out
+                )
             }
             _ => unreachable!(),
         };
@@ -671,11 +717,21 @@ mod tests {
     }
 
     #[test]
-    fn weight_quantization_is_per_column() {
-        let w = Matrix::from_vec(2, 2, vec![0.123, 0.9, -0.07, -0.9]).unwrap();
-        let wq = quantize_weights(&w, &[0.1, 0.5], QuantMethod::A2q);
-        // column 0 step 0.1: 0.123 -> 0.1; column 1 step 0.5: 0.9 -> 1.0
-        assert!((wq.at(0, 0) - 0.1).abs() < 1e-6);
-        assert!((wq.at(0, 1) - 1.0).abs() < 1e-6);
+    fn prepared_session_reuse_is_bitwise_stable() {
+        // one session, many forwards — and identical to the per-call shim
+        let (x, ef) = tiny_input();
+        let input = GraphInput::node_level(&x, 2, &ef);
+        let cfg = ParallelConfig::serial();
+        let model = tiny_gcn(QuantMethod::A2q);
+        let prep = PreparedModel::prepare(model.clone()).unwrap();
+        let shim = forward_fp_with(&model, &input, &cfg);
+        let first = forward_fp_prepared(&prep, &input, &cfg);
+        let second = forward_fp_prepared(&prep, &input, &cfg);
+        assert_eq!(shim.data, first.data);
+        assert_eq!(first.data, second.data);
+        // caller-cached plan takes the same code path
+        let plan = ef.plan();
+        let planned = forward_fp_prepared_with_plan(&prep, &input, Some(&plan), &cfg);
+        assert_eq!(first.data, planned.data);
     }
 }

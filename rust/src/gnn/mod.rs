@@ -10,9 +10,21 @@
 //!   i32-accumulate matmuls, Eq. 2 outer-product rescale, Â never quantized
 //!   (Proof 2).  This is the arithmetic the paper's accelerator executes;
 //!   the simulator derives its cycle counts from exactly these shapes.
+//!
+//! Serving paths build a [`prepared::PreparedModel`] once per loaded model
+//! — quantized weights, integer weight codes, clamped steps, and NNS
+//! tables are all request-invariant — and run the `*_prepared` forward
+//! entry points against it; the `*_with` signatures remain as per-call
+//! shims.
 
 pub mod infer;
 pub mod model;
+pub mod prepared;
 
-pub use infer::{forward_fp, forward_fp_with, forward_int, forward_int_with, GraphInput};
+pub use infer::{
+    forward_fp, forward_fp_prepared, forward_fp_prepared_with_plan, forward_fp_with,
+    forward_int, forward_int_prepared, forward_int_prepared_with_plan, forward_int_with,
+    GraphInput,
+};
 pub use model::{GnnModel, LayerParams, QuantMethod};
+pub use prepared::{PreparedHead, PreparedLayer, PreparedModel};

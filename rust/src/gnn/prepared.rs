@@ -1,0 +1,430 @@
+//! Prepared inference sessions: derive all request-invariant model state
+//! once, serve forever.
+//!
+//! A²Q's economics (and Degree-Quant's / SGQuant's — see PAPERS.md) hinge
+//! on quantization being an *offline specialization* step: the learned
+//! per-node bitwidths, the sorted NNS lookup table, and the quantized
+//! weight matrices are all functions of the trained model alone, never of
+//! a request.  Before this module existed the serving path re-derived all
+//! of it per forward pass — every request re-fake-quantized every weight
+//! matrix, re-computed integer weight codes, and re-sorted a fresh
+//! [`NnsTable`] per layer.  [`PreparedModel::prepare`] hoists that work to
+//! session-build time (one call when the model is loaded) and doubles as
+//! the validation boundary: malformed static state (missing layer tensors,
+//! step/column-count mismatches, empty or non-finite NNS tables) is
+//! rejected here with a descriptive [`Error::artifact`] instead of
+//! panicking inside a runner thread on the first request.
+//!
+//! The forward passes in [`super::infer`] run off `&PreparedModel`; the
+//! old `forward_fp_with`/`forward_int_with` signatures survive as thin
+//! shims that prepare a throwaway session per call (tests/benches).
+//! Preparation is deterministic, so prepared and per-call-prepared
+//! forwards are bitwise identical (property-tested in
+//! `rust/tests/forward_parity.rs`).
+
+use crate::error::{Error, Result};
+use crate::quant::nns::NnsTable;
+use crate::quant::uniform::{self, MIN_STEP};
+use crate::tensor::dense::Matrix;
+
+use super::model::{GnnModel, QuantMethod};
+
+/// Fake-quantize weights per output column at 4 bits (paper §3.1).
+/// Request-invariant — [`PreparedModel::prepare`] calls this once per
+/// weight matrix instead of once per forward pass.
+pub(crate) fn quantize_weights(w: &Matrix<f32>, steps: &[f32], method: QuantMethod) -> Matrix<f32> {
+    match method {
+        QuantMethod::Fp32 => w.clone(),
+        QuantMethod::Binary => {
+            // per-column sign * mean|w| (Bi-GCN form, mirrors python)
+            let mut out = w.clone();
+            for j in 0..w.cols {
+                let mut mean = 0.0f32;
+                for i in 0..w.rows {
+                    mean += w.at(i, j).abs();
+                }
+                mean /= w.rows as f32;
+                for i in 0..w.rows {
+                    let v = w.at(i, j);
+                    *out.at_mut(i, j) = if v >= 0.0 { mean } else { -mean };
+                }
+            }
+            out
+        }
+        _ => {
+            assert_eq!(steps.len(), w.cols, "weight steps per output column");
+            let mut out = w.clone();
+            for i in 0..w.rows {
+                for j in 0..w.cols {
+                    let v = w.at(i, j);
+                    *out.at_mut(i, j) =
+                        uniform::quantize_value(v, steps[j], 4, true) as f32
+                            * steps[j].max(MIN_STEP);
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Per-column 4-bit integer codes of a weight matrix (the `W̄` of the
+/// Eq. 2 integer matmul).
+fn weight_codes(w: &Matrix<f32>, steps: &[f32]) -> Matrix<i32> {
+    let mut codes = vec![0i32; w.rows * w.cols];
+    for i in 0..w.rows {
+        for j in 0..w.cols {
+            codes[i * w.cols + j] = uniform::quantize_value(w.at(i, j), steps[j], 4, true);
+        }
+    }
+    Matrix::from_vec(w.rows, w.cols, codes).expect("weight code shape")
+}
+
+fn clamp_steps(steps: &[f32]) -> Vec<f32> {
+    steps.iter().map(|s| s.max(MIN_STEP)).collect()
+}
+
+/// Validate a weight-step vector against its matrix before any quantizing
+/// use (the old path hit an `assert_eq!` inside a runner thread instead).
+/// Both checks apply only to methods whose weight quantization reads the
+/// steps — Fp32/Binary artifacts may carry stale step tensors harmlessly.
+fn check_wsteps(what: &str, w: &Matrix<f32>, steps: &[f32], method: QuantMethod) -> Result<()> {
+    let needs_steps = !matches!(method, QuantMethod::Fp32 | QuantMethod::Binary);
+    if !needs_steps {
+        return Ok(());
+    }
+    if steps.len() != w.cols {
+        return Err(Error::artifact(format!(
+            "{what}: {} weight-quant steps for {} output columns",
+            steps.len(),
+            w.cols
+        )));
+    }
+    if let Some(i) = steps.iter().position(|s| !s.is_finite()) {
+        return Err(Error::artifact(format!(
+            "{what}: non-finite weight-quant step {} at column {i}",
+            steps[i]
+        )));
+    }
+    Ok(())
+}
+
+/// Request-invariant state of one layer.
+#[derive(Debug, Clone)]
+pub struct PreparedLayer {
+    /// fake-quantized `w` (GCN/GAT weight, GIN `w1`) — fp path and the
+    /// GCN integer path (which keeps the aggregated map in f32, Proof 2)
+    pub wq: Option<Matrix<f32>>,
+    /// fake-quantized GIN `w2` (fp path)
+    pub w2q: Option<Matrix<f32>>,
+    /// integer codes of GIN `w2` (true integer path)
+    pub w2_codes: Option<Matrix<i32>>,
+    /// clamped per-output-column steps of `w2` (the Eq. 2 `sw`)
+    pub w2_steps_clamped: Vec<f32>,
+    /// sorted NNS lookup over the layer-input feature params (used when
+    /// the params are per-group rather than per-node)
+    pub nns: Option<NnsTable>,
+    /// sorted NNS lookup over the GIN hidden-map params
+    pub nns2: Option<NnsTable>,
+}
+
+/// Request-invariant state of the graph-level readout head.
+#[derive(Debug, Clone)]
+pub struct PreparedHead {
+    pub w1q: Matrix<f32>,
+    pub w2q: Matrix<f32>,
+    pub nns: Option<NnsTable>,
+}
+
+/// A [`GnnModel`] plus everything derivable from it alone: quantized
+/// weight matrices (f32 and integer codes), clamped step vectors, and
+/// per-layer NNS tables.  Build once per loaded model, share across
+/// requests (`&PreparedModel` is all the forward passes need).
+///
+/// The retained `model` has its raw layer weight tensors (`w`/`w2`)
+/// released — the derived `wq`/`w2q`/`w2_codes` replace them — so a
+/// session holds one resident copy of each weight, not two.  Re-preparing
+/// from `prep.model` is therefore not supported; prepare from the loaded
+/// model.
+#[derive(Debug, Clone)]
+pub struct PreparedModel {
+    pub model: GnnModel,
+    pub layers: Vec<PreparedLayer>,
+    pub head: Option<PreparedHead>,
+}
+
+impl PreparedModel {
+    /// Precompute all static inference state.  This is the model-load
+    /// validation boundary: structural problems (missing tensors for the
+    /// arch, malformed quant params) surface here as [`Error::artifact`]
+    /// rather than as panics on the first served request.
+    pub fn prepare(model: GnnModel) -> Result<PreparedModel> {
+        let method = model.method;
+        // integer path conditions (see forward_int): only GIN's hidden map
+        // runs the true integer matmul today
+        let int_gin = model.arch == "gin"
+            && method == QuantMethod::A2q
+            && model.head.is_none();
+        let mut layers = Vec::with_capacity(model.layers.len());
+        for (l, lay) in model.layers.iter().enumerate() {
+            match model.arch.as_str() {
+                "gcn" => {
+                    if lay.w.is_none() {
+                        return Err(Error::artifact(format!("gcn layer {l}: missing w")));
+                    }
+                }
+                "gin" => {
+                    if lay.w.is_none() || lay.w2.is_none() {
+                        return Err(Error::artifact(format!(
+                            "gin layer {l}: missing w1/w2"
+                        )));
+                    }
+                }
+                "gat" => {
+                    if lay.w.is_none() || lay.a_src.is_none() || lay.a_dst.is_none() {
+                        return Err(Error::artifact(format!(
+                            "gat layer {l}: missing w/a_src/a_dst"
+                        )));
+                    }
+                }
+                other => {
+                    return Err(Error::artifact(format!("unknown arch '{other}'")));
+                }
+            }
+            let wq = match &lay.w {
+                Some(w) => {
+                    check_wsteps(&format!("layer {l} w"), w, &lay.w_steps, method)?;
+                    Some(quantize_weights(w, &lay.w_steps, method))
+                }
+                None => None,
+            };
+            let w2q = match &lay.w2 {
+                Some(w2) => {
+                    check_wsteps(&format!("layer {l} w2"), w2, &lay.w2_steps, method)?;
+                    Some(quantize_weights(w2, &lay.w2_steps, method))
+                }
+                None => None,
+            };
+            let (w2_codes, w2_steps_clamped) = match (&lay.w2, int_gin) {
+                (Some(w2), true) => (
+                    Some(weight_codes(w2, &lay.w2_steps)),
+                    clamp_steps(&lay.w2_steps),
+                ),
+                _ => (None, Vec::new()),
+            };
+            // NNS tables are only consulted for *grouped* params (the
+            // forward passes take the per-node branch whenever the param
+            // count matches the resident node count), so skip the sort +
+            // resident table for node-level per-node maps — for a large
+            // resident graph that is O(n log n) load time and 12n bytes
+            // per layer of dead weight.
+            let grouped =
+                |p: &crate::quant::mixed::NodeQuantParams| !(model.node_level && p.len() == model.num_nodes);
+            let mut nns = None;
+            let mut nns2 = None;
+            if method == QuantMethod::A2q {
+                if let Some(p) = &lay.feat {
+                    if grouped(p) {
+                        nns = Some(
+                            NnsTable::try_new(&p.steps, &p.bits, p.signed)
+                                .map_err(|e| Error::artifact(format!("layer {l} feat: {e}")))?,
+                        );
+                    }
+                }
+                if let Some(p) = &lay.feat2 {
+                    if grouped(p) {
+                        nns2 = Some(
+                            NnsTable::try_new(&p.steps, &p.bits, p.signed)
+                                .map_err(|e| Error::artifact(format!("layer {l} feat2: {e}")))?,
+                        );
+                    }
+                }
+            }
+            layers.push(PreparedLayer {
+                wq,
+                w2q,
+                w2_codes,
+                w2_steps_clamped,
+                nns,
+                nns2,
+            });
+        }
+
+        let head = match &model.head {
+            None => None,
+            Some(h) => {
+                check_wsteps("head w1", &h.w1, &h.w1_steps, method)?;
+                check_wsteps("head w2", &h.w2, &h.w2_steps, method)?;
+                let nns = match (&h.feat, method) {
+                    (Some(p), QuantMethod::A2q) => Some(
+                        NnsTable::try_new(&p.steps, &p.bits, p.signed)
+                            .map_err(|e| Error::artifact(format!("head feat: {e}")))?,
+                    ),
+                    _ => None,
+                };
+                Some(PreparedHead {
+                    w1q: quantize_weights(&h.w1, &h.w1_steps, method),
+                    w2q: quantize_weights(&h.w2, &h.w2_steps, method),
+                    nns,
+                })
+            }
+        };
+
+        // The derived matrices (wq/w2q/w2_codes) are the serving source of
+        // truth from here on; release the raw layer weight tensors so a
+        // prepared session doesn't keep two f32 copies of every weight
+        // resident.  Everything the forwards still read from the model —
+        // biases, eps, feat params, attention vectors, head tensors (whose
+        // fields are not optional) — stays.
+        let mut model = model;
+        for lay in model.layers.iter_mut() {
+            lay.w = None;
+            lay.w2 = None;
+        }
+
+        Ok(PreparedModel {
+            model,
+            layers,
+            head,
+        })
+    }
+
+    pub fn model(&self) -> &GnnModel {
+        &self.model
+    }
+
+    /// Rough resident-size accounting of the prepared (request-invariant)
+    /// state in bytes — what a serving process pays per loaded session.
+    pub fn prepared_bytes(&self) -> usize {
+        let mat_f = |m: &Option<Matrix<f32>>| m.as_ref().map_or(0, |m| m.data.len() * 4);
+        let mat_i = |m: &Option<Matrix<i32>>| m.as_ref().map_or(0, |m| m.data.len() * 4);
+        let mut total = 0usize;
+        for pl in &self.layers {
+            total += mat_f(&pl.wq) + mat_f(&pl.w2q) + mat_i(&pl.w2_codes);
+            total += pl.w2_steps_clamped.len() * 4;
+            total += pl.nns.as_ref().map_or(0, |t| t.len() * 12);
+            total += pl.nns2.as_ref().map_or(0, |t| t.len() * 12);
+        }
+        if let Some(h) = &self.head {
+            total += h.w1q.data.len() * 4 + h.w2q.data.len() * 4;
+            total += h.nns.as_ref().map_or(0, |t| t.len() * 12);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::model::LayerParams;
+    use crate::quant::mixed::NodeQuantParams;
+    use crate::util::json::Json;
+
+    fn tiny_gcn(method: QuantMethod) -> GnnModel {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 0.5, -0.5, 1.0]).unwrap();
+        GnnModel {
+            name: "tiny".into(),
+            arch: "gcn".into(),
+            dataset: "unit".into(),
+            method,
+            layers: vec![LayerParams {
+                w: Some(w),
+                b: vec![0.1, -0.1],
+                w_steps: vec![0.05, 0.05],
+                feat: Some(NodeQuantParams::new(vec![0.1; 3], vec![4; 3], true).unwrap()),
+                ..Default::default()
+            }],
+            head: None,
+            dq_steps: vec![0.05, 0.05],
+            skip_input_quant: false,
+            node_level: true,
+            num_nodes: 3,
+            in_dim: 2,
+            out_dim: 2,
+            heads: 1,
+            graph_capacity: 0,
+            accuracy: 0.0,
+            avg_bits: 4.0,
+            expected_head: vec![],
+            manifest: Json::Null,
+        }
+    }
+
+    #[test]
+    fn prepare_precomputes_quantized_weights_once() {
+        let model = tiny_gcn(QuantMethod::A2q);
+        let want = quantize_weights(
+            model.layers[0].w.as_ref().unwrap(),
+            &model.layers[0].w_steps,
+            QuantMethod::A2q,
+        );
+        let prep = PreparedModel::prepare(model).unwrap();
+        assert_eq!(prep.layers.len(), 1);
+        assert_eq!(prep.layers[0].wq.as_ref().unwrap().data, want.data);
+        // per-node params (len == num_nodes on a node-level model) never
+        // hit the NNS branch, so no table is built or kept resident
+        assert!(prep.layers[0].nns.is_none());
+        assert!(prep.prepared_bytes() > 0);
+    }
+
+    #[test]
+    fn prepare_builds_nns_table_only_for_grouped_params() {
+        // 4 NNS groups for a 3-node model: the grouped lookup is live
+        let mut model = tiny_gcn(QuantMethod::A2q);
+        model.layers[0].feat =
+            Some(NodeQuantParams::new(vec![0.05, 0.1, 0.2, 0.4], vec![4; 4], true).unwrap());
+        let prep = PreparedModel::prepare(model).unwrap();
+        let table = prep.layers[0].nns.as_ref().expect("grouped params need a table");
+        assert_eq!(table.len(), 4);
+    }
+
+    #[test]
+    fn prepare_rejects_missing_layer_weight() {
+        let mut model = tiny_gcn(QuantMethod::A2q);
+        model.layers[0].w = None;
+        let err = PreparedModel::prepare(model).unwrap_err();
+        assert!(format!("{err}").contains("missing w"));
+    }
+
+    #[test]
+    fn prepare_rejects_unknown_arch() {
+        let mut model = tiny_gcn(QuantMethod::A2q);
+        model.arch = "transformer".into();
+        let err = PreparedModel::prepare(model).unwrap_err();
+        assert!(format!("{err}").contains("unknown arch"));
+    }
+
+    #[test]
+    fn prepare_rejects_step_column_mismatch() {
+        let mut model = tiny_gcn(QuantMethod::A2q);
+        model.layers[0].w_steps = vec![0.05];
+        let err = PreparedModel::prepare(model).unwrap_err();
+        assert!(format!("{err}").contains("output columns"));
+    }
+
+    #[test]
+    fn fp32_prepare_needs_no_steps() {
+        let mut model = tiny_gcn(QuantMethod::Fp32);
+        model.layers[0].w_steps = Vec::new();
+        // garbage steps are harmless for methods that never read them
+        let mut binary = tiny_gcn(QuantMethod::Binary);
+        binary.layers[0].w_steps = vec![f32::NAN, f32::NAN];
+        assert!(PreparedModel::prepare(binary).is_ok());
+
+        let raw = model.layers[0].w.as_ref().unwrap().data.clone();
+        let prep = PreparedModel::prepare(model).unwrap();
+        // fp32 wq is a verbatim copy...
+        assert_eq!(prep.layers[0].wq.as_ref().unwrap().data, raw);
+        assert!(prep.layers[0].nns.is_none());
+        // ...and the raw tensor is released from the retained model
+        assert!(prep.model.layers[0].w.is_none());
+    }
+
+    #[test]
+    fn weight_quantization_is_per_column() {
+        let w = Matrix::from_vec(2, 2, vec![0.123, 0.9, -0.07, -0.9]).unwrap();
+        let wq = quantize_weights(&w, &[0.1, 0.5], QuantMethod::A2q);
+        // column 0 step 0.1: 0.123 -> 0.1; column 1 step 0.5: 0.9 -> 1.0
+        assert!((wq.at(0, 0) - 0.1).abs() < 1e-6);
+        assert!((wq.at(0, 1) - 1.0).abs() < 1e-6);
+    }
+}

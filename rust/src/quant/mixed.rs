@@ -13,6 +13,14 @@ use crate::error::{Error, Result};
 use super::uniform;
 
 /// Learned per-node quantization parameters for one feature map.
+///
+/// Steps are validated and clamped **once at construction** (the model-load
+/// boundary): non-finite steps are rejected with a descriptive artifact
+/// error, and every step is floored to [`uniform::MIN_STEP`].  This keeps
+/// the fp fake-quant path and the integer-code path (which records the
+/// step for the Eq. 2 rescale) working off the *same* step value — a raw
+/// 0.0 step would otherwise make `rescale_outer` silently zero rows that
+/// the fp path quantizes with the clamped step.
 #[derive(Debug, Clone)]
 pub struct NodeQuantParams {
     pub steps: Vec<f32>,
@@ -25,6 +33,16 @@ impl NodeQuantParams {
         if steps.len() != bits.len() {
             return Err(Error::shape("steps/bits length mismatch"));
         }
+        if let Some(i) = steps.iter().position(|s| !s.is_finite()) {
+            return Err(Error::artifact(format!(
+                "non-finite quantization step {} at node {i} (corrupt artifact?)",
+                steps[i]
+            )));
+        }
+        let steps = steps
+            .into_iter()
+            .map(|s| s.max(uniform::MIN_STEP))
+            .collect();
         Ok(NodeQuantParams {
             steps,
             bits,
@@ -189,6 +207,62 @@ mod tests {
         let den = 3.0 * 16.0 + 2.0 * 32.0;
         assert!((bf.avg_bits() - want / den).abs() < 1e-12);
         assert_eq!(bf.histogram()[0], 2); // two 1-bit nodes
+    }
+
+    #[test]
+    fn non_finite_steps_rejected_at_construction() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = NodeQuantParams::new(vec![0.1, bad], vec![4, 4], true).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("non-finite"), "unexpected error: {msg}");
+            assert!(msg.contains("node 1"), "should name the offending node: {msg}");
+        }
+    }
+
+    #[test]
+    fn zero_and_negative_steps_clamped_once() {
+        use crate::util::prop::{property, Gen};
+        let p = NodeQuantParams::new(vec![0.0, -0.3, 0.2], vec![4, 4, 4], true).unwrap();
+        assert_eq!(p.steps[0], crate::quant::uniform::MIN_STEP);
+        assert_eq!(p.steps[1], crate::quant::uniform::MIN_STEP);
+        assert_eq!(p.steps[2], 0.2);
+        // the recorded step (Eq. 2 sx) always equals the step the codes
+        // were computed with — with a raw 0.0 recorded step the int path
+        // would zero rows the fp path doesn't.  Values may diverge by at
+        // most ONE code (quantize_value divides by s, fake_quantize_row
+        // multiplies by 1/s; the two roundings can straddle a floor
+        // boundary), never by a wrong scale.
+        property("codes * recorded step tracks fake quant", 50, |g: &mut Gen| {
+            let n = g.usize_range(1, 12);
+            let f = g.usize_range(1, 8);
+            let mut steps = g.vec_uniform(n, 0.0, 0.2);
+            for s in steps.iter_mut() {
+                if g.bool(0.3) {
+                    *s = 0.0; // inject the degenerate case
+                }
+            }
+            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
+            let signed = g.bool(0.5);
+            let p = NodeQuantParams::new(steps, bits, signed).unwrap();
+            let x = g.vec_normal(n * f, 1.0);
+            let mut fake = x.clone();
+            p.fake_quantize(&mut fake, f);
+            let (codes, rec_steps) = p.quantize_codes(&x, f);
+            // the recorded steps ARE the construction-clamped steps
+            assert_eq!(rec_steps, p.steps);
+            for v in 0..n {
+                for j in 0..f {
+                    let deq = codes[v * f + j] as f32 * rec_steps[v];
+                    let diff = (deq - fake[v * f + j]).abs();
+                    assert!(
+                        diff <= rec_steps[v] + 1e-12,
+                        "node {v} col {j}: |{deq} - {}| > step {}",
+                        fake[v * f + j],
+                        rec_steps[v]
+                    );
+                }
+            }
+        });
     }
 
     #[test]

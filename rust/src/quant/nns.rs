@@ -5,6 +5,8 @@
 //! binary searching"; the ASIC overlaps it with a comparator array).  This
 //! is that lookup: O(log m) per node, allocation-free per query.
 
+use crate::error::{Error, Result};
+
 use super::uniform::levels;
 
 /// Sorted NNS lookup table over m (step, bits) groups.
@@ -29,13 +31,41 @@ impl NnsTable {
             .map(|(i, (&s, &b))| (s * levels(b, signed) as f32, (s, b), i as u32))
             .collect();
         // stable sort keeps the python argmin tie-break (lower original
-        // index wins among equal qmax)
-        rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.2.cmp(&b.2)));
+        // index wins among equal qmax); total_cmp keeps construction
+        // panic-free even on NaN/Inf steps (a corrupt artifact must not be
+        // able to DoS a runner thread — rejection happens at model-load
+        // time via [`Self::try_new`] / `NodeQuantParams::new`)
+        rows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.2.cmp(&b.2)));
         NnsTable {
             qmax: rows.iter().map(|r| r.0).collect(),
             params: rows.iter().map(|r| r.1).collect(),
             orig_index: rows.iter().map(|r| r.2).collect(),
         }
+    }
+
+    /// Validating constructor for the model-load / session-prepare
+    /// boundary: rejects zero-length tables, length mismatches, and
+    /// non-finite steps with a descriptive artifact error instead of
+    /// leaving a table that panics (empty `select`) or mis-sorts at
+    /// request time.
+    pub fn try_new(steps: &[f32], bits: &[u8], signed: bool) -> Result<NnsTable> {
+        if steps.is_empty() {
+            return Err(Error::artifact("NNS table has no (step, bits) groups"));
+        }
+        if steps.len() != bits.len() {
+            return Err(Error::artifact(format!(
+                "NNS steps/bits length mismatch: {} vs {}",
+                steps.len(),
+                bits.len()
+            )));
+        }
+        if let Some(i) = steps.iter().position(|s| !s.is_finite()) {
+            return Err(Error::artifact(format!(
+                "non-finite NNS step {} in group {i} (corrupt artifact?)",
+                steps[i]
+            )));
+        }
+        Ok(NnsTable::new(steps, bits, signed))
     }
 
     pub fn len(&self) -> usize {
@@ -171,5 +201,44 @@ mod tests {
         // duplicate qmax values: groups 0 and 1 identical
         let t = NnsTable::new(&[0.1, 0.1, 0.2], &[4, 4, 4], true);
         assert_eq!(t.select(0.7).0, 0);
+    }
+
+    #[test]
+    fn nan_steps_do_not_panic_construction() {
+        // a corrupt artifact must not be able to DoS the runner: new()
+        // sorts with total_cmp (NaN sorts last) instead of unwrapping
+        let t = NnsTable::new(&[0.1, f32::NAN, 0.2], &[4, 4, 4], true);
+        assert_eq!(t.len(), 3);
+        // finite queries still resolve to a finite group
+        let (_, s, _) = t.select(0.7);
+        assert!(s.is_finite());
+    }
+
+    #[test]
+    fn try_new_rejects_corrupt_tables() {
+        let empty = NnsTable::try_new(&[], &[], true).unwrap_err();
+        assert!(format!("{empty}").contains("no (step, bits) groups"));
+        let mismatch = NnsTable::try_new(&[0.1, 0.2], &[4], true).unwrap_err();
+        assert!(format!("{mismatch}").contains("length mismatch"));
+        for bad in [f32::NAN, f32::INFINITY] {
+            let err = NnsTable::try_new(&[0.1, bad], &[4, 4], true).unwrap_err();
+            assert!(format!("{err}").contains("non-finite"));
+        }
+        assert!(NnsTable::try_new(&[0.1, 0.2], &[4, 4], true).is_ok());
+    }
+
+    #[test]
+    fn nan_property_select_never_picks_nan_for_finite_query() {
+        property("nns with NaN groups still serves finite queries", 50, |g: &mut Gen| {
+            let m = g.usize_range(2, 40);
+            let mut steps = g.vec_uniform(m, 0.01, 0.4);
+            let poison = g.usize_range(0, m);
+            steps[poison] = f32::NAN;
+            let bits: Vec<u8> = (0..m).map(|_| g.usize_range(2, 9) as u8).collect();
+            let t = NnsTable::new(&steps, &bits, true);
+            let f = g.f32_range(0.0, 3.0);
+            let (_, s, _) = t.select(f);
+            assert!(s.is_finite(), "selected NaN group for finite f={f}");
+        });
     }
 }

@@ -21,6 +21,13 @@ pub struct PackedFeatures {
 /// Pack integer codes row-wise; row v uses bits[v] bits per element.
 /// Signed codes c ∈ [−(2^{b−1}−1), 2^{b−1}−1] are stored biased by
 /// +(2^{b−1}−1); unsigned codes stored raw.
+///
+/// `steps` are recorded verbatim as each row's dequantization scale (the
+/// `sx` of the Eq. 2 rescale), so callers must pass the *same* clamped
+/// steps the codes were quantized with — `NodeQuantParams` guarantees this
+/// by flooring steps to [`crate::quant::uniform::MIN_STEP`] at
+/// construction (a raw 0.0 step here would silently zero the row in
+/// `rescale_outer`).
 pub fn pack_rows(
     codes: &[i32],
     steps: &[f32],
@@ -30,6 +37,10 @@ pub fn pack_rows(
 ) -> PackedFeatures {
     assert_eq!(codes.len(), steps.len() * feat_dim);
     assert_eq!(steps.len(), bits.len());
+    debug_assert!(
+        steps.iter().all(|s| s.is_finite() && *s > 0.0),
+        "pack_rows expects clamped finite steps (see NodeQuantParams::new)"
+    );
     let total_bits: usize = bits.iter().map(|&b| b as usize * feat_dim).sum();
     let mut data = vec![0u8; total_bits.div_ceil(8)];
     let mut rows = Vec::with_capacity(bits.len());

@@ -10,6 +10,15 @@ pub struct Quantized {
     pub signed: bool,
 }
 
+/// Smallest admissible quantization step.  Every code path that divides or
+/// multiplies by a step clamps to this floor, and `NodeQuantParams::new`
+/// applies it once at construction so the *recorded* step (the `sx` of the
+/// Eq. 2 rescale, the step stored by `quant::pack`) always equals the step
+/// the codes were computed with — a raw 0.0 step would otherwise zero the
+/// integer path's output rows while the fp path quantizes with the clamped
+/// value.
+pub const MIN_STEP: f32 = 1e-9;
+
 /// Positive level count: 2^{b-1}-1 signed, 2^b-1 unsigned (post-ReLU maps).
 #[inline]
 pub fn levels(bits: u8, signed: bool) -> i32 {
@@ -23,7 +32,7 @@ pub fn levels(bits: u8, signed: bool) -> i32 {
 /// Quantize one value (Eq. 1): code = sign(x)·min(⌊|x|/s + 0.5⌋, levels).
 #[inline]
 pub fn quantize_value(x: f32, step: f32, bits: u8, signed: bool) -> i32 {
-    let s = step.max(1e-9);
+    let s = step.max(MIN_STEP);
     let lv = levels(bits, signed);
     let mag = ((x.abs() / s) + 0.5).floor().min(lv as f32) as i32;
     let code = if x < 0.0 { -mag } else { mag };
@@ -60,7 +69,7 @@ pub fn dequantize(q: &Quantized) -> Vec<f32> {
 /// 3.4× over the naive per-element `quantize_value` loop (EXPERIMENTS.md
 /// §Perf iteration 1).
 pub fn fake_quantize_row(row: &mut [f32], step: f32, bits: u8, signed: bool) {
-    let s = step.max(1e-9);
+    let s = step.max(MIN_STEP);
     let inv = 1.0 / s;
     let lv = levels(bits, signed) as f32;
     if signed {
@@ -82,7 +91,7 @@ pub fn quant_error(row: &[f32], step: f32, bits: u8, signed: bool) -> f32 {
     if row.is_empty() {
         return 0.0;
     }
-    let s = step.max(1e-9);
+    let s = step.max(MIN_STEP);
     let sum: f32 = row
         .iter()
         .map(|&x| (quantize_value(x, s, bits, signed) as f32 * s - x).abs())

@@ -3,7 +3,11 @@
 //! quantization tolerance on random GCN/GIN models, and both paths must be
 //! bitwise independent of the parallelism budget (threads ∈ {1, 4}).
 
-use a2q::gnn::{forward_fp_with, forward_int_with, GnnModel, GraphInput, LayerParams, QuantMethod};
+use a2q::gnn::{
+    forward_fp_prepared, forward_fp_prepared_with_plan, forward_fp_with, forward_int_prepared,
+    forward_int_prepared_with_plan, forward_int_with, GnnModel, GraphInput, LayerParams,
+    PreparedModel, QuantMethod,
+};
 use a2q::graph::generate::preferential_attachment;
 use a2q::graph::norm::EdgeForm;
 use a2q::quant::mixed::NodeQuantParams;
@@ -145,6 +149,98 @@ fn int_path_matches_fp_within_quant_tolerance_and_threads() {
             assert_eq!(fp_s.data, fp_p.data, "{arch}: fp parallel != serial");
             assert_eq!(int_s.data, int_p.data, "{arch}: int parallel != serial");
         }
+    });
+}
+
+#[test]
+fn prepared_sessions_bitwise_match_unprepared_path() {
+    // the tentpole guarantee: preparing once (quantized weights, integer
+    // codes, NNS tables, cached AggregationPlan) and serving many requests
+    // is bitwise identical to the per-call re-derive-everything shim
+    property("prepared == unprepared, bitwise", 10, |g: &mut Gen| {
+        let n = g.usize_range(24, 100);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr = preferential_attachment(&mut rng, n, 2);
+        let ef = EdgeForm::from_csr(&csr);
+        let in_dim = g.usize_range(2, 8);
+        let hidden = g.usize_range(2, 10);
+        let out_dim = g.usize_range(2, 5);
+        let n_layers = g.usize_range(1, 4);
+        let x = g.vec_normal(n * in_dim, 0.5);
+        let cfg = ParallelConfig {
+            threads: g.usize_range(1, 5),
+            min_rows_per_task: 8,
+        };
+
+        for arch in ["gcn", "gin"] {
+            let model = random_model(g, arch, n, in_dim, hidden, out_dim, n_layers);
+            let input = GraphInput::node_level(&x, in_dim, &ef);
+            let prep = PreparedModel::prepare(model.clone()).expect("prepare");
+            let plan = ef.plan();
+
+            let fp_shim = forward_fp_with(&model, &input, &cfg);
+            let fp_prep = forward_fp_prepared(&prep, &input, &cfg);
+            let fp_planned = forward_fp_prepared_with_plan(&prep, &input, Some(&plan), &cfg);
+            assert_eq!(fp_shim.data, fp_prep.data, "{arch}: fp prepared diverged");
+            assert_eq!(fp_shim.data, fp_planned.data, "{arch}: fp cached-plan diverged");
+
+            let int_shim = forward_int_with(&model, &input, &cfg);
+            let int_prep = forward_int_prepared(&prep, &input, &cfg);
+            let int_planned = forward_int_prepared_with_plan(&prep, &input, Some(&plan), &cfg);
+            assert_eq!(int_shim.data, int_prep.data, "{arch}: int prepared diverged");
+            assert_eq!(int_shim.data, int_planned.data, "{arch}: int cached-plan diverged");
+
+            // session reuse is stable across repeated requests
+            let again = forward_fp_prepared(&prep, &input, &cfg);
+            assert_eq!(fp_prep.data, again.data, "{arch}: session reuse drifted");
+        }
+    });
+}
+
+#[test]
+fn zero_step_params_keep_int_and_fp_paths_consistent() {
+    // degenerate learned steps (0.0 / negative) are clamped once at
+    // NodeQuantParams construction, so the integer path's recorded rescale
+    // step always matches the step the codes were computed with — no more
+    // silently zeroed rows on the int side only
+    property("zero-step int ≈ fp", 10, |g: &mut Gen| {
+        let n = g.usize_range(24, 80);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr = preferential_attachment(&mut rng, n, 2);
+        let ef = EdgeForm::from_csr(&csr);
+        let in_dim = g.usize_range(2, 6);
+        let hidden = g.usize_range(2, 8);
+        let out_dim = g.usize_range(2, 4);
+        let x = g.vec_normal(n * in_dim, 0.5);
+        // GIN exercises the true integer matmul (the path that rescaled by
+        // the raw recorded step); poison its hidden-map params with zeros
+        let mut model = random_model(g, "gin", n, in_dim, hidden, out_dim, 2);
+        for lay in model.layers.iter_mut() {
+            let p = lay.feat2.take().unwrap();
+            let mut steps = p.steps.clone();
+            for (i, s) in steps.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *s = 0.0;
+                }
+            }
+            lay.feat2 = Some(NodeQuantParams::new(steps, p.bits.clone(), p.signed).unwrap());
+        }
+        let cfg = ParallelConfig::serial();
+        let input = GraphInput::node_level(&x, in_dim, &ef);
+        let fp = forward_fp_with(&model, &input, &cfg);
+        let int = forward_int_with(&model, &input, &cfg);
+        assert!(fp.data.iter().all(|v| v.is_finite()), "fp not finite");
+        assert!(int.data.iter().all(|v| v.is_finite()), "int not finite");
+        // a zero step quantizes to (±levels · MIN_STEP) ≈ 0 on *both*
+        // paths; systematic divergence would show up in the mean
+        let mean_diff = fp
+            .data
+            .iter()
+            .zip(&int.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / fp.data.len() as f64;
+        assert!(mean_diff <= 2e-3, "zero-step int path diverged: {mean_diff}");
     });
 }
 
