@@ -1,0 +1,231 @@
+//! Bench: dynamic-graph serving — incremental [`GraphDelta`] application
+//! vs full rebuild.
+//!
+//! Two levels, both recorded into `BENCH_incremental_update.json`:
+//!
+//! 1. **Structural** (headline, 100k-node power-law graph): incremental
+//!    CSR row repair + GCN-weight splice + sort-free plan reconstruction
+//!    vs `Csr::from_edges` + `EdgeForm::from_csr` + counting-sort plan
+//!    from the full post-delta edge set.  The incremental path skips the
+//!    O(E log E) edge sort and the per-edge `(d̃_s·d̃_d)^{-1/2}` work, so
+//!    small deltas should win by a wide margin
+//!    (`delta/incremental_vs_rebuild_speedup/...`).
+//! 2. **Serving** (native executor): `apply_delta` (L-hop frontier logits
+//!    patch against the resident activation cache) vs the epoch-bump full
+//!    recompute a frozen-graph server would pay for the same mutation.
+//!
+//! `--quick` (CI) shrinks graphs and the measurement budget to a smoke
+//! test: regressions in the delta path break the build, not just numbers.
+
+use a2q::coordinator::{BatchExecutor, NativeExecutor};
+use a2q::gnn::{GnnModel, LayerParams, QuantMethod};
+use a2q::graph::delta::GraphDelta;
+use a2q::graph::generate::preferential_attachment;
+use a2q::graph::io::{Dataset, NodeData};
+use a2q::graph::norm::{AggregationPlan, EdgeForm};
+use a2q::graph::Csr;
+use a2q::quant::mixed::NodeQuantParams;
+use a2q::tensor::Matrix;
+use a2q::util::bench::{black_box, BenchConfig, BenchRunner};
+use a2q::util::json::Json;
+use a2q::util::prop::Gen;
+use a2q::util::rng::Rng;
+
+fn median_of(runner: &BenchRunner, name: &str) -> f64 {
+    runner
+        .results
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.median_ns())
+        .unwrap_or(0.0)
+}
+
+/// Random node-level A²Q GCN + its resident dataset (mirrors the
+/// generator in rust/tests/forward_parity.rs).
+fn synth_gcn(n: usize, in_dim: usize, hidden: usize, out_dim: usize) -> (GnnModel, Dataset) {
+    let mut g = Gen::new(42);
+    let mut rng = Rng::new(7);
+    let csr = preferential_attachment(&mut rng, n, 3);
+    let features = g.vec_normal(n * in_dim, 0.5);
+    let layer = |g: &mut Gen, d_in: usize, d_out: usize, signed: bool| LayerParams {
+        w: Some(Matrix::from_vec(d_in, d_out, g.vec_normal(d_in * d_out, 0.5)).unwrap()),
+        b: g.vec_uniform(d_out, -0.1, 0.1),
+        w_steps: g.vec_uniform(d_out, 0.02, 0.08),
+        feat: Some(
+            NodeQuantParams::new(
+                g.vec_uniform(n, 0.02, 0.1),
+                (0..n).map(|_| g.usize_range(2, 9) as u8).collect(),
+                signed,
+            )
+            .unwrap(),
+        ),
+        ..Default::default()
+    };
+    let layers = vec![
+        layer(&mut g, in_dim, hidden, true),
+        layer(&mut g, hidden, out_dim, false),
+    ];
+    let model = GnnModel {
+        name: "bench-delta-gcn".into(),
+        arch: "gcn".into(),
+        dataset: "synthetic".into(),
+        method: QuantMethod::A2q,
+        layers,
+        head: None,
+        dq_steps: Vec::new(),
+        skip_input_quant: false,
+        node_level: true,
+        num_nodes: n,
+        in_dim,
+        out_dim,
+        heads: 1,
+        graph_capacity: 0,
+        accuracy: 0.0,
+        avg_bits: 4.0,
+        expected_head: Vec::new(),
+        manifest: Json::Null,
+    };
+    let ds = Dataset::Node(NodeData {
+        name: "synthetic".into(),
+        csr,
+        num_features: in_dim,
+        num_classes: out_dim,
+        features,
+        labels: vec![0; n],
+        train_mask: vec![false; n],
+        val_mask: vec![false; n],
+        test_mask: vec![false; n],
+    });
+    (model, ds)
+}
+
+/// A small delta against an `n`-node graph: a few appended nodes, a batch
+/// of new edges, a batch of removals of existing edges.
+fn small_delta(csr: &Csr, add_nodes: usize, k: usize) -> GraphDelta {
+    let n = csr.num_nodes();
+    let n_new = n + add_nodes;
+    let existing = csr.edge_list();
+    let mut add_edges = Vec::with_capacity(k + add_nodes);
+    for i in 0..k {
+        add_edges.push((
+            ((i * 2654435761) % n_new) as u32,
+            ((i * 40503 + 17) % n_new) as u32,
+        ));
+    }
+    for v in 0..add_nodes {
+        // anchor each appended node to the resident graph
+        add_edges.push(((n + v) as u32, ((v * 7919) % n) as u32));
+    }
+    let remove_edges: Vec<(u32, u32)> = (0..k)
+        .map(|i| existing[(i * 104729) % existing.len()])
+        .collect();
+    GraphDelta {
+        add_nodes,
+        new_features: vec![],
+        add_edges,
+        remove_edges,
+    }
+}
+
+fn main() {
+    let quick = BenchConfig::quick_requested();
+    let mut runner = BenchRunner::new(BenchConfig::from_args());
+    let mut rng = Rng::new(11);
+
+    // -----------------------------------------------------------------
+    // 1. structural: 100k-node graph, ~16-edge delta
+    // -----------------------------------------------------------------
+    let n = if quick { 2_000 } else { 100_000 };
+    let csr = preferential_attachment(&mut rng, n, 3);
+    let ef = EdgeForm::from_csr(&csr);
+    let delta = small_delta(&csr, 4, 16);
+
+    let inc_name = format!("delta/incremental_structural/n={n}");
+    runner.bench(&inc_name, || {
+        let applied = delta.apply_to_csr(&csr).expect("apply");
+        let edges2 = ef.apply_delta(&csr, &applied);
+        let plan2 = AggregationPlan::for_csr_edge_form(&applied.csr);
+        black_box((edges2, plan2));
+    });
+
+    // the full-rebuild baseline gets the post-delta edge set for free
+    // (assembled once, outside the timed region)
+    let applied = delta.apply_to_csr(&csr).expect("apply");
+    let full_edges = applied.csr.edge_list();
+    let n_new = applied.csr.num_nodes();
+    let reb_name = format!("delta/full_rebuild_structural/n={n}");
+    runner.bench(&reb_name, || {
+        let csr2 = Csr::from_edges(n_new, &full_edges).expect("rebuild");
+        let ef2 = EdgeForm::from_csr(&csr2);
+        let plan2 = ef2.plan();
+        black_box((ef2, plan2));
+    });
+    let inc_ns = median_of(&runner, &inc_name);
+    let reb_ns = median_of(&runner, &reb_name);
+    runner.report_metric(
+        &format!("delta/incremental_vs_rebuild_speedup/n={n}"),
+        if inc_ns > 0.0 { reb_ns / inc_ns } else { 0.0 },
+        "x incremental delta apply vs full structural rebuild",
+    );
+    runner.report_metric(
+        &format!("delta/touched_rows/n={n}"),
+        applied.num_changed_rows() as f64,
+        "rows repaired by the delta",
+    );
+
+    // -----------------------------------------------------------------
+    // 2. serving path: frontier patch vs epoch-bump full recompute
+    // -----------------------------------------------------------------
+    let (n2, in_dim, hidden, out_dim) = if quick {
+        (512, 8, 16, 4)
+    } else {
+        (16_384, 32, 64, 8)
+    };
+    let (model, dataset) = synth_gcn(n2, in_dim, hidden, out_dim);
+    let exec = NativeExecutor::new(model.clone(), Some(&dataset)).expect("prepare session");
+    exec.run_node_batch(&[0]).expect("warm the activation cache");
+    let Dataset::Node(nd) = &dataset else { unreachable!() };
+    // toggle one edge batch on and off so each timed call applies exactly
+    // one delta and the resident graph returns to base every two calls
+    let toggle = small_delta(&nd.csr, 0, 8);
+    let delta_add = GraphDelta {
+        add_edges: toggle.add_edges.clone(),
+        ..Default::default()
+    };
+    let delta_remove = GraphDelta {
+        remove_edges: toggle.add_edges.clone(),
+        ..Default::default()
+    };
+    // one untimed delta pair first: the session's first apply pays a
+    // one-time full recording forward (activation-cache warm-up) that
+    // would otherwise skew the --quick medians
+    exec.apply_delta(&delta_add).expect("warm-up apply");
+    exec.apply_delta(&delta_remove).expect("warm-up apply");
+    let apply_name = format!("delta/executor_apply/n={n2}");
+    let mut flip = false;
+    runner.bench(&apply_name, || {
+        let d = if flip { &delta_remove } else { &delta_add };
+        flip = !flip;
+        black_box(exec.apply_delta(d).expect("delta applies"));
+    });
+
+    let exec_full = NativeExecutor::new(model, Some(&dataset)).expect("prepare session");
+    let full_name = format!("delta/executor_full_recompute/n={n2}");
+    runner.bench(&full_name, || {
+        // what a frozen-graph server pays per mutation: invalidate, then
+        // recompute the whole graph on the next batch
+        exec_full.bump_epoch();
+        black_box(exec_full.run_node_batch(&[0]).expect("full recompute"));
+    });
+    let apply_ns = median_of(&runner, &apply_name);
+    let full_ns = median_of(&runner, &full_name);
+    runner.report_metric(
+        &format!("delta/executor_patch_speedup/n={n2}"),
+        if apply_ns > 0.0 { full_ns / apply_ns } else { 0.0 },
+        "x frontier patch vs whole-graph recompute per delta",
+    );
+
+    runner
+        .write_json(std::path::Path::new("BENCH_incremental_update.json"))
+        .expect("write BENCH_incremental_update.json");
+}

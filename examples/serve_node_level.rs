@@ -39,7 +39,7 @@ fn main() -> a2q::Result<()> {
     println!(
         "prepared serving session in {:?} ({} bytes of static state)",
         t_prep.elapsed(),
-        exec.prepared().prepared_bytes()
+        exec.prepared_bytes()
     );
 
     let mut coord = Coordinator::new();

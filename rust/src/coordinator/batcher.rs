@@ -50,6 +50,7 @@ pub struct DynamicBatcher {
     cfg: BatcherConfig,
     pending: Vec<Request>,
     pending_nodes: usize,
+    pending_updates: usize,
 }
 
 impl DynamicBatcher {
@@ -58,6 +59,7 @@ impl DynamicBatcher {
             cfg,
             pending: Vec::new(),
             pending_nodes: 0,
+            pending_updates: 0,
         }
     }
 
@@ -70,6 +72,9 @@ impl DynamicBatcher {
     /// queue, the single backpressure point.
     pub fn offer(&mut self, req: Request) {
         self.pending_nodes += req.num_nodes();
+        if req.is_update() {
+            self.pending_updates += 1;
+        }
         self.pending.push(req);
     }
 
@@ -89,17 +94,43 @@ impl DynamicBatcher {
     /// Pull the next batch if a flush condition holds (or `force`).
     /// Greedy packing in arrival order; a graph that would overflow the
     /// node budget closes the batch (it stays queued for the next one).
+    ///
+    /// Resident-graph **updates are ordering barriers**: an update never
+    /// shares a batch with anything else.  A pending update both forces a
+    /// flush (mutations should not sit out the deadline) and closes the
+    /// batch being packed right before itself; when it reaches the front
+    /// it ships as a singleton.  Since the runner executes batches in
+    /// formation order, every request admitted after an update's reply
+    /// observes the post-update state.
     pub fn flush(&mut self, now: Instant, force: bool) -> Option<Vec<Request>> {
         if self.pending.is_empty() {
             return None;
         }
-        if !(force || self.over_budget() || self.deadline_expired(now)) {
+        if !(force
+            || self.over_budget()
+            || self.deadline_expired(now)
+            || self.pending_updates > 0)
+        {
             return None;
         }
         let mut batch = Vec::new();
         let mut nodes = 0usize;
         let mut rest = Vec::new();
+        let mut closed = false;
         for req in self.pending.drain(..) {
+            if closed {
+                rest.push(req);
+                continue;
+            }
+            if req.is_update() {
+                if batch.is_empty() && rest.is_empty() {
+                    batch.push(req); // ships alone
+                } else {
+                    rest.push(req); // close the batch just before it
+                }
+                closed = true;
+                continue;
+            }
             let n = req.num_nodes();
             let fits = batch.len() < self.cfg.graph_slots
                 && (nodes + n <= self.cfg.node_budget || batch.is_empty());
@@ -112,11 +143,14 @@ impl DynamicBatcher {
         }
         self.pending = rest;
         self.pending_nodes = self.pending.iter().map(|r| r.num_nodes()).sum();
+        self.pending_updates = self.pending.iter().filter(|r| r.is_update()).count();
         Some(batch)
     }
 
     /// Split a batch into (classify, predict) sub-batches — mixed payloads
     /// execute separately but are accounted as one admission batch.
+    /// Updates never reach here (they flush as singletons; `server`
+    /// partitions them out first).
     pub fn split_payloads(batch: Vec<Request>) -> (Vec<Request>, Vec<Request>) {
         batch
             .into_iter()
@@ -234,5 +268,57 @@ mod tests {
         b.offer(graph_req(50)); // bigger than the whole budget
         let batch = b.flush(Instant::now(), true).unwrap();
         assert_eq!(batch.len(), 1);
+    }
+
+    fn update_req() -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            model: "m".into(),
+            payload: Payload::UpdateGraph(crate::graph::delta::GraphDelta {
+                add_edges: vec![(0, 1)],
+                ..Default::default()
+            }),
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn update_is_a_batch_barrier_in_arrival_order() {
+        let mut b = DynamicBatcher::new(cfg(10_000, 16));
+        b.offer(graph_req(1));
+        b.offer(graph_req(1));
+        b.offer(update_req());
+        b.offer(graph_req(1));
+        // a pending update forces flushing even before budget/deadline
+        let first = b.flush(Instant::now(), false).unwrap();
+        assert_eq!(first.len(), 2);
+        assert!(first.iter().all(|r| !r.is_update()));
+        // the update ships strictly alone…
+        let second = b.flush(Instant::now(), false).unwrap();
+        assert_eq!(second.len(), 1);
+        assert!(second[0].is_update());
+        // …and whatever arrived after it stays behind it
+        let third = b.flush(Instant::now(), true).unwrap();
+        assert_eq!(third.len(), 1);
+        assert!(!third[0].is_update());
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn leading_update_flushes_immediately_and_alone() {
+        let mut b = DynamicBatcher::new(cfg(10_000, 16));
+        b.offer(update_req());
+        b.offer(update_req());
+        b.offer(graph_req(1));
+        let first = b.flush(Instant::now(), false).unwrap();
+        assert_eq!(first.len(), 1);
+        assert!(first[0].is_update());
+        let second = b.flush(Instant::now(), false).unwrap();
+        assert_eq!(second.len(), 1);
+        assert!(second[0].is_update());
+        let third = b.flush(Instant::now(), true).unwrap();
+        assert_eq!(third.len(), 1);
+        assert!(!third[0].is_update());
     }
 }

@@ -12,24 +12,51 @@
 //! [`AggregationPlan`]), and full-graph node-level logits are cached under
 //! an explicit **epoch** version — `run_node_batch` is a slice-copy after
 //! the first batch of an epoch, and [`NativeExecutor::bump_epoch`] /
-//! [`PjrtExecutor::bump_epoch`] invalidate the cache when a future weight
-//! or feature swap mutates the resident state.
+//! [`PjrtExecutor::bump_epoch`] invalidate the cache when a weight or
+//! feature swap mutates the resident state.
+//!
+//! [`NativeExecutor::apply_delta`] is the **dynamic-graph serving path**:
+//! a [`GraphDelta`] is applied incrementally (CSR row repair, GCN-weight
+//! splice, sort-free plan reconstruction — all bitwise-identical to a
+//! from-scratch rebuild), unseen nodes get their quantization parameters
+//! assigned online through the paper's NNS, the epoch bumps exactly once,
+//! and only the delta's L-hop reverse frontier of logits rows is
+//! recomputed against the resident per-layer activation cache — untouched
+//! rows survive the epoch change bit-for-bit.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::error::{Error, Result};
+use crate::gnn::incremental::{build_assign_tables, patch_activations, NnsAssignTables};
 use crate::gnn::{
-    forward_fp_prepared_with_plan, forward_int_prepared_with_plan, GnnModel, GraphInput,
-    PreparedModel,
+    forward_fp_prepared_recording, forward_fp_prepared_with_plan,
+    forward_int_prepared_recording, forward_int_prepared_with_plan, GnnModel, GraphInput,
+    PreparedModel, QuantMethod,
 };
 use crate::graph::batch::GraphBatch;
+use crate::graph::csr::Csr;
+use crate::graph::delta::{dirty_frontier, GraphDelta};
 use crate::graph::io::{Dataset, NodeData, SmallGraph};
 use crate::graph::norm::{AggregationPlan, EdgeForm};
+use crate::quant::mixed::NodeQuantParams;
 use crate::runtime::engine::EngineHandle;
 use crate::runtime::{ExecInput, ModelArtifact};
 use crate::tensor::Matrix;
 use crate::util::threadpool::ParallelConfig;
+
+/// Outcome of one applied [`GraphDelta`].
+#[derive(Debug, Clone)]
+pub struct DeltaReport {
+    /// logits-cache epoch after the update (bumps exactly once per delta)
+    pub epoch: u64,
+    /// resident node count after the update
+    pub num_nodes: usize,
+    /// final-layer logits rows recomputed (the L-hop reverse frontier)
+    pub recomputed_rows: usize,
+    /// nodes appended (each got NNS-assigned quantization parameters)
+    pub new_nodes: usize,
+}
 
 /// A backend able to run the two batch kinds.
 pub trait BatchExecutor: Send + Sync {
@@ -37,6 +64,13 @@ pub trait BatchExecutor: Send + Sync {
     fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>>;
     /// Batched graph-level prediction; returns per-graph outputs.
     fn run_graph_batch(&self, graphs: &[&SmallGraph]) -> Result<Vec<Vec<f32>>>;
+    /// Mutate the resident graph.  Backends without a mutable resident
+    /// graph keep this default rejection.
+    fn apply_delta(&self, _delta: &GraphDelta) -> Result<DeltaReport> {
+        Err(Error::coordinator(
+            "this executor does not support resident-graph updates",
+        ))
+    }
     /// Executable batch capacity (nodes, graph slots); node-level models
     /// report (N, 0).
     fn capacity(&self) -> (usize, usize);
@@ -68,22 +102,33 @@ impl<T> LogitsCache<T> {
     }
 
     /// Fetch the cached value for the current epoch, computing (outside the
-    /// lock) and installing it on miss.  A concurrent [`Self::bump`] during
-    /// compute keeps the stale result out of the cache — the caller still
-    /// gets the value it computed.
-    fn get_or_compute(&self, compute: impl FnOnce() -> Result<T>) -> Result<Arc<T>> {
+    /// lock) and installing it on miss.  The closure receives the epoch
+    /// the computation is for.  A concurrent [`Self::bump`] during compute
+    /// keeps the stale result out of the cache — the caller still gets the
+    /// value it computed.
+    fn get_or_compute(&self, compute: impl FnOnce(u64) -> Result<T>) -> Result<Arc<T>> {
         let epoch = self.epoch();
         if let Some((e, cached)) = self.slot.lock().unwrap().as_ref() {
             if *e == epoch {
                 return Ok(Arc::clone(cached));
             }
         }
-        let value = Arc::new(compute()?);
+        let value = Arc::new(compute(epoch)?);
         let mut guard = self.slot.lock().unwrap();
         if self.epoch() == epoch {
             *guard = Some((epoch, Arc::clone(&value)));
         }
         Ok(value)
+    }
+
+    /// Install a value for `epoch` (no-op if the epoch already moved on) —
+    /// the partial-invalidation path primes the new epoch with its patched
+    /// logits so the next batch is a slice-copy, not a recompute.
+    fn set(&self, epoch: u64, value: Arc<T>) {
+        let mut guard = self.slot.lock().unwrap();
+        if self.epoch() == epoch {
+            *guard = Some((epoch, value));
+        }
     }
 }
 
@@ -95,7 +140,7 @@ impl<T> LogitsCache<T> {
 pub struct PjrtExecutor {
     engine: EngineHandle,
     key: String,
-    node: Option<NodeSide>,
+    node: Option<PjrtNodeSide>,
     graph_caps: Option<(usize, usize, usize)>, // (nodes, edges, graphs)
     feat_dim: usize,
     out_dim: usize,
@@ -107,7 +152,7 @@ pub struct PjrtExecutor {
     logits: LogitsCache<Vec<f32>>,
 }
 
-struct NodeSide {
+struct PjrtNodeSide {
     features: Vec<f32>,
     edges: EdgeForm,
     num_nodes: usize,
@@ -135,7 +180,7 @@ impl PjrtExecutor {
                     ))
                 }
             };
-            node = Some(NodeSide {
+            node = Some(PjrtNodeSide {
                 features: ds.features.clone(),
                 edges: EdgeForm::from_csr(&ds.csr),
                 num_nodes: ds.num_nodes(),
@@ -205,7 +250,9 @@ impl BatchExecutor for PjrtExecutor {
     fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
         // PJRT execution of the full graph is identical for every node
         // batch of an epoch — serve subsequent batches from the cache.
-        let logits = self.logits.get_or_compute(|| self.logits_full_graph())?;
+        let logits = self
+            .logits
+            .get_or_compute(|_epoch| self.logits_full_graph())?;
         let c = self.out_dim;
         node_ids
             .iter()
@@ -255,21 +302,52 @@ impl BatchExecutor for PjrtExecutor {
 // Native
 // ---------------------------------------------------------------------------
 
+/// Resident graph state of a node-level session.
+struct NodeSide {
+    csr: Csr,
+    features: Vec<f32>,
+    edges: EdgeForm,
+    num_nodes: usize,
+}
+
+/// Everything [`NativeExecutor::apply_delta`] mutates, behind one lock:
+/// prepared model state (per-node quantization parameters grow with the
+/// graph), the resident graph, its plan, the per-layer activation cache,
+/// and the frozen NNS assignment tables.
+struct Resident {
+    prepared: PreparedModel,
+    node: Option<NodeSide>,
+    /// destination-grouped plan of the resident graph (node-level gcn/gin)
+    plan: Option<AggregationPlan>,
+    caps: (usize, usize, usize),
+    /// per-layer activations of the resident graph, tagged with the
+    /// logits-cache epoch they belong to (`acts[0]` input features,
+    /// `acts[L]` logits) — what incremental deltas patch
+    acts: Option<(u64, Vec<Matrix<f32>>)>,
+    /// NNS lookup tables over the originally-learned per-node params,
+    /// frozen at the first delta (later deltas must not search previously
+    /// assigned copies)
+    assign_tables: Option<Vec<NnsAssignTables>>,
+}
+
 /// Pure-rust backend over `gnn::infer` (fp emulation by default, true
 /// integer path opt-in), holding a prepared session: quantized weights,
 /// integer codes, and NNS tables are computed once in [`Self::new`], the
 /// resident graph's [`AggregationPlan`] is built once, and full-graph
 /// node-level logits are cached per epoch.  Carries its own
 /// [`ParallelConfig`] so the serving stack controls the intra-op
-/// parallelism budget per executor.
+/// parallelism budget per executor.  [`Self::apply_delta`] mutates the
+/// resident graph in place (reads block only for the duration of the
+/// incremental repair).
 pub struct NativeExecutor {
-    prepared: PreparedModel,
-    node: Option<NodeSide>,
-    caps: (usize, usize, usize),
+    state: RwLock<Resident>,
     parallel: ParallelConfig,
     use_int_path: bool,
-    /// destination-grouped plan of the resident graph (node-level gcn/gin)
-    resident_plan: Option<AggregationPlan>,
+    /// set by the first [`Self::apply_delta`]: only dynamic sessions pay
+    /// the per-layer activation recording (L+1 matrix clones + a write
+    /// lock) on the epoch's first classify batch — static sessions keep
+    /// the plain forward
+    dynamic: std::sync::atomic::AtomicBool,
     /// versioned full-graph logits (node-level serving hot path)
     logits: LogitsCache<Matrix<f32>>,
 }
@@ -291,6 +369,7 @@ impl NativeExecutor {
                 }
             };
             node = Some(NodeSide {
+                csr: ds.csr.clone(),
                 features: ds.features.clone(),
                 edges: EdgeForm::from_csr(&ds.csr),
                 num_nodes: ds.num_nodes(),
@@ -307,17 +386,22 @@ impl NativeExecutor {
                 .unwrap_or(model.num_nodes * 8),
             model.graph_capacity.max(1),
         );
-        let resident_plan = node.as_ref().and_then(|side: &NodeSide| {
+        let plan = node.as_ref().and_then(|side: &NodeSide| {
             (model.arch != "gat")
                 .then(|| AggregationPlan::build(&side.edges.dst, side.edges.num_nodes))
         });
         Ok(NativeExecutor {
-            prepared,
-            node,
-            caps,
+            state: RwLock::new(Resident {
+                prepared,
+                node,
+                plan,
+                caps,
+                acts: None,
+                assign_tables: None,
+            }),
             parallel: ParallelConfig::from_env(),
             use_int_path: false,
-            resident_plan,
+            dynamic: std::sync::atomic::AtomicBool::new(false),
             logits: LogitsCache::new(),
         })
     }
@@ -339,16 +423,40 @@ impl NativeExecutor {
         self.parallel
     }
 
-    /// The prepared session this executor serves from.
-    pub fn prepared(&self) -> &PreparedModel {
-        &self.prepared
+    /// Resident-size accounting of the prepared session in bytes.
+    pub fn prepared_bytes(&self) -> usize {
+        self.state.read().unwrap().prepared.prepared_bytes()
     }
 
-    /// The retained model metadata (note: raw layer weight tensors are
-    /// released at preparation — the prepared matrices are the serving
-    /// source of truth).
-    pub fn model(&self) -> &GnnModel {
-        &self.prepared.model
+    /// Current resident node count (grows with applied deltas).
+    pub fn resident_nodes(&self) -> usize {
+        let st = self.state.read().unwrap();
+        st.node
+            .as_ref()
+            .map(|s| s.num_nodes)
+            .unwrap_or(st.caps.0)
+    }
+
+    /// Clone of the resident graph's aggregation plan (tests/diagnostics).
+    pub fn resident_plan(&self) -> Option<AggregationPlan> {
+        self.state.read().unwrap().plan.clone()
+    }
+
+    /// Per-layer clones of the resident feature-quantization parameters
+    /// (`(feat, feat2)` per layer) — after deltas these include the
+    /// NNS-assigned entries for appended nodes, which is exactly what a
+    /// from-scratch rebuild needs to reproduce the served logits
+    /// (`rust/tests/delta_parity.rs`).
+    pub fn resident_quant_params(
+        &self,
+    ) -> Vec<(Option<NodeQuantParams>, Option<NodeQuantParams>)> {
+        let st = self.state.read().unwrap();
+        st.prepared
+            .model
+            .layers
+            .iter()
+            .map(|l| (l.feat.clone(), l.feat2.clone()))
+            .collect()
     }
 
     /// Invalidate the full-graph logits cache.  Call after a weight or
@@ -363,23 +471,281 @@ impl NativeExecutor {
         self.logits.epoch()
     }
 
-    fn forward(&self, input: &GraphInput, plan: Option<&AggregationPlan>) -> Matrix<f32> {
-        if self.use_int_path {
-            forward_int_prepared_with_plan(&self.prepared, input, plan, &self.parallel)
-        } else {
-            forward_fp_prepared_with_plan(&self.prepared, input, plan, &self.parallel)
-        }
+    /// Whether the integer-path replication (vs. the fp fallback) governs
+    /// this session's resident activations.
+    fn int_semantics(model: &GnnModel, use_int_path: bool) -> bool {
+        use_int_path
+            && model.method == QuantMethod::A2q
+            && model.head.is_none()
+            && model.arch != "gat"
     }
 
     fn full_graph_logits(&self) -> Result<Arc<Matrix<f32>>> {
-        let side = self
-            .node
-            .as_ref()
-            .ok_or_else(|| Error::coordinator("not a node-level executor"))?;
-        self.logits.get_or_compute(|| {
+        // Static sessions (no delta ever applied) take the plain forward;
+        // once the session turns dynamic, epoch recomputes also record the
+        // per-layer activations so the next delta patches instead of
+        // recomputing.  A cold first delta warms its own cache either way.
+        let record = self.dynamic.load(Ordering::Acquire);
+        self.logits.get_or_compute(|epoch| {
+            let st = self.state.read().unwrap();
+            let side = st
+                .node
+                .as_ref()
+                .ok_or_else(|| Error::coordinator("not a node-level executor"))?;
             let input =
-                GraphInput::node_level(&side.features, self.prepared.model.in_dim, &side.edges);
-            Ok(self.forward(&input, self.resident_plan.as_ref()))
+                GraphInput::node_level(&side.features, st.prepared.model.in_dim, &side.edges);
+            let mut acts = Vec::new();
+            let out = match (self.use_int_path, record) {
+                (true, true) => forward_int_prepared_recording(
+                    &st.prepared,
+                    &input,
+                    st.plan.as_ref(),
+                    &self.parallel,
+                    &mut acts,
+                ),
+                (false, true) => forward_fp_prepared_recording(
+                    &st.prepared,
+                    &input,
+                    st.plan.as_ref(),
+                    &self.parallel,
+                    &mut acts,
+                ),
+                (true, false) => forward_int_prepared_with_plan(
+                    &st.prepared,
+                    &input,
+                    st.plan.as_ref(),
+                    &self.parallel,
+                ),
+                (false, false) => forward_fp_prepared_with_plan(
+                    &st.prepared,
+                    &input,
+                    st.plan.as_ref(),
+                    &self.parallel,
+                ),
+            };
+            drop(st);
+            if record {
+                // stash the per-layer activations so a later delta patches
+                // instead of recomputing; skip if an update raced us
+                let mut st = self.state.write().unwrap();
+                if self.logits.epoch() == epoch {
+                    st.acts = Some((epoch, acts));
+                }
+            }
+            Ok(out)
+        })
+    }
+
+    /// Apply a [`GraphDelta`] to the resident graph (node-level gcn/gin
+    /// sessions).  The epoch bumps exactly once; only the delta's L-hop
+    /// reverse frontier of logits rows is recomputed, and the patched
+    /// logits are installed for the new epoch so the next classify batch
+    /// is a slice-copy.  Appended nodes receive `(step, bits)` via the
+    /// paper's NNS against the learned per-node parameters.  All repairs
+    /// are staged and committed atomically — a rejected delta (shape
+    /// mismatch, non-finite features/activations) leaves the resident
+    /// state untouched.
+    pub fn apply_delta(&self, delta: &GraphDelta) -> Result<DeltaReport> {
+        let mut guard = self.state.write().unwrap();
+        let st = &mut *guard;
+        if st.prepared.model.arch == "gat" {
+            return Err(Error::coordinator(
+                "resident-graph updates are not supported for gat sessions",
+            ));
+        }
+        if st.prepared.model.head.is_some() {
+            // graph-level readout models have no resident graph to mutate,
+            // and their logits are a pooled head output, not acts.last()
+            return Err(Error::coordinator(
+                "resident-graph updates need a node-level session",
+            ));
+        }
+        let side = st.node.as_mut().ok_or_else(|| {
+            Error::coordinator("resident-graph updates need a node-level session")
+        })?;
+        let in_dim = st.prepared.model.in_dim;
+        let n_layers = st.prepared.model.layers.len();
+        let int_path = Self::int_semantics(&st.prepared.model, self.use_int_path);
+        delta.validate(side.num_nodes, in_dim)?;
+        // this session is dynamic from here on: epoch recomputes keep the
+        // per-layer activation cache warm for future deltas
+        self.dynamic.store(true, Ordering::Release);
+
+        // Empty delta: nothing to repair — honour the one-bump-per-delta
+        // contract and carry the current state forward untouched.
+        if delta.is_empty() {
+            let epoch = self.logits.epoch();
+            self.logits.bump();
+            let new_epoch = self.logits.epoch();
+            if let Some((e, acts)) = st.acts.as_mut() {
+                if *e == epoch {
+                    *e = new_epoch;
+                    let logits_mat =
+                        acts.last().expect("at least the input features").clone();
+                    self.logits.set(new_epoch, Arc::new(logits_mat));
+                }
+            }
+            return Ok(DeltaReport {
+                epoch: new_epoch,
+                num_nodes: side.num_nodes,
+                recomputed_rows: 0,
+                new_nodes: 0,
+            });
+        }
+
+        // 1. incremental structural repair (all staged)
+        let applied = delta.apply_to_csr(&side.csr)?;
+        let new_edges = side.edges.apply_delta(&side.csr, &applied);
+        let new_plan = AggregationPlan::for_csr_edge_form(&applied.csr);
+        let n_new = applied.csr.num_nodes();
+        let mut new_features = side.features.clone();
+        new_features.extend_from_slice(&delta.new_features);
+        let dirty = dirty_frontier(&applied.csr, &applied, n_layers);
+        let frontier_rows = dirty.last().map(|d| d.len()).unwrap_or(0);
+
+        // Near-full frontier without appended nodes: the serial row patch
+        // would touch most of the graph, so the row-parallel recording
+        // forward over the post-delta structure is cheaper and produces the
+        // identical (bitwise) result.  With appended nodes the patch is
+        // required — NNS assignment interleaves with layer computation.
+        if delta.add_nodes == 0 && frontier_rows.saturating_mul(2) > n_new {
+            let input = GraphInput::node_level(&new_features, in_dim, &new_edges);
+            let mut rec = Vec::new();
+            if self.use_int_path {
+                forward_int_prepared_recording(
+                    &st.prepared,
+                    &input,
+                    Some(&new_plan),
+                    &self.parallel,
+                    &mut rec,
+                );
+            } else {
+                forward_fp_prepared_recording(
+                    &st.prepared,
+                    &input,
+                    Some(&new_plan),
+                    &self.parallel,
+                    &mut rec,
+                );
+            }
+            side.csr = applied.csr;
+            side.features = new_features;
+            side.edges = new_edges;
+            side.num_nodes = n_new;
+            st.plan = Some(new_plan);
+            self.logits.bump();
+            let new_epoch = self.logits.epoch();
+            let logits_mat = rec.last().expect("at least the input features").clone();
+            st.acts = Some((new_epoch, rec));
+            self.logits.set(new_epoch, Arc::new(logits_mat));
+            return Ok(DeltaReport {
+                epoch: new_epoch,
+                num_nodes: n_new,
+                recomputed_rows: frontier_rows,
+                new_nodes: 0,
+            });
+        }
+
+        // 2. make sure the per-layer activation cache matches this epoch
+        //    (cold sessions pay one full forward on the pre-delta graph —
+        //    the same warm-up the first classify batch would have done)
+        let epoch = self.logits.epoch();
+        if st.acts.as_ref().map(|(e, _)| *e) != Some(epoch) {
+            let input = GraphInput::node_level(&side.features, in_dim, &side.edges);
+            let mut rec = Vec::new();
+            if self.use_int_path {
+                forward_int_prepared_recording(
+                    &st.prepared,
+                    &input,
+                    st.plan.as_ref(),
+                    &self.parallel,
+                    &mut rec,
+                );
+            } else {
+                forward_fp_prepared_recording(
+                    &st.prepared,
+                    &input,
+                    st.plan.as_ref(),
+                    &self.parallel,
+                    &mut rec,
+                );
+            }
+            st.acts = Some((epoch, rec));
+        }
+
+        // 3. freeze the NNS assignment tables over the learned params
+        if st.assign_tables.is_none() {
+            st.assign_tables = Some(build_assign_tables(&st.prepared)?);
+        }
+
+        // 4. staged activations (pre-delta rows carried over, appended
+        //    rows zeroed until patched)
+        let (_, old_acts) = st.acts.as_ref().expect("warmed above");
+        let mut acts: Vec<Matrix<f32>> = Vec::with_capacity(n_layers + 1);
+        acts.push(
+            Matrix::from_vec(n_new, in_dim, new_features.clone()).expect("feature shape"),
+        );
+        for m in &old_acts[1..] {
+            let mut grown = Matrix::zeros(n_new, m.cols);
+            grown.data[..m.data.len()].copy_from_slice(&m.data);
+            acts.push(grown);
+        }
+
+        // 5. staged per-node quant params (cloned; appended entries are
+        //    NNS-assigned inside the patch as their rows materialize)
+        let tables = st.assign_tables.as_ref().expect("frozen above");
+        let mut staged: Vec<(Option<NodeQuantParams>, Option<NodeQuantParams>)> = st
+            .prepared
+            .model
+            .layers
+            .iter()
+            .zip(tables.iter())
+            .map(|(lay, t)| {
+                (
+                    t.feat.as_ref().and(lay.feat.clone()),
+                    t.feat2.as_ref().and(lay.feat2.clone()),
+                )
+            })
+            .collect();
+
+        // 6. row repair over the frontier (bitwise == full recompute)
+        let recomputed = patch_activations(
+            &st.prepared,
+            &mut staged,
+            tables,
+            &new_edges,
+            &new_plan,
+            &mut acts,
+            &dirty,
+            int_path,
+        )?;
+
+        // 7. commit + single epoch bump
+        side.csr = applied.csr;
+        side.features = new_features;
+        side.edges = new_edges;
+        side.num_nodes = n_new;
+        st.plan = Some(new_plan);
+        for (lay, (f, f2)) in st.prepared.model.layers.iter_mut().zip(staged) {
+            if let Some(p) = f {
+                lay.feat = Some(p);
+            }
+            if let Some(p) = f2 {
+                lay.feat2 = Some(p);
+            }
+        }
+        st.prepared.model.num_nodes = n_new;
+        st.caps.0 = n_new;
+        self.logits.bump();
+        let new_epoch = self.logits.epoch();
+        let logits_mat = acts.last().expect("at least input + one layer").clone();
+        st.acts = Some((new_epoch, acts));
+        self.logits.set(new_epoch, Arc::new(logits_mat));
+        Ok(DeltaReport {
+            epoch: new_epoch,
+            num_nodes: n_new,
+            recomputed_rows: recomputed,
+            new_nodes: delta.add_nodes,
         })
     }
 }
@@ -402,24 +768,37 @@ impl BatchExecutor for NativeExecutor {
     }
 
     fn run_graph_batch(&self, graphs: &[&SmallGraph]) -> Result<Vec<Vec<f32>>> {
-        let (cap_n, cap_e, cap_g) = self.caps;
-        let batch = GraphBatch::pack(graphs, self.prepared.model.in_dim, cap_n, cap_e, cap_g)?;
+        let st = self.state.read().unwrap();
+        let (cap_n, cap_e, cap_g) = st.caps;
+        let batch = GraphBatch::pack(graphs, st.prepared.model.in_dim, cap_n, cap_e, cap_g)?;
         let input = GraphInput::batch(&batch);
         // client-supplied edges differ per batch, so no resident plan here
-        let out = self.forward(&input, None);
+        let out = if self.use_int_path {
+            forward_int_prepared_with_plan(&st.prepared, &input, None, &self.parallel)
+        } else {
+            forward_fp_prepared_with_plan(&st.prepared, &input, None, &self.parallel)
+        };
         Ok((0..graphs.len()).map(|g| out.row(g).to_vec()).collect())
     }
 
+    fn apply_delta(&self, delta: &GraphDelta) -> Result<DeltaReport> {
+        NativeExecutor::apply_delta(self, delta)
+    }
+
     fn capacity(&self) -> (usize, usize) {
-        if self.prepared.model.node_level {
-            (self.caps.0, 0)
+        let st = self.state.read().unwrap();
+        if st.prepared.model.node_level {
+            (
+                st.node.as_ref().map(|s| s.num_nodes).unwrap_or(st.caps.0),
+                0,
+            )
         } else {
-            (self.caps.0, self.caps.2)
+            (st.caps.0, st.caps.2)
         }
     }
 
     fn out_dim(&self) -> usize {
-        self.prepared.model.out_dim
+        self.state.read().unwrap().prepared.model.out_dim
     }
 }
 
@@ -480,8 +859,7 @@ impl BatchExecutor for MockExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gnn::{forward_fp_with, LayerParams, QuantMethod};
-    use crate::graph::csr::Csr;
+    use crate::gnn::{forward_fp_with, LayerParams};
     use crate::quant::mixed::NodeQuantParams;
     use crate::util::json::Json;
 
@@ -492,6 +870,16 @@ mod tests {
         assert_eq!(out[0], vec![1.0, 0.0]);
         assert_eq!(out[1], vec![0.0, 1.0]);
         assert_eq!(out[2], vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn mock_rejects_deltas() {
+        let err = BatchExecutor::apply_delta(
+            &MockExecutor::default(),
+            &GraphDelta::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("does not support"));
     }
 
     fn tiny_session() -> (GnnModel, Dataset) {
@@ -533,6 +921,58 @@ mod tests {
             train_mask: vec![false; 3],
             val_mask: vec![false; 3],
             test_mask: vec![false; 3],
+        });
+        (model, ds)
+    }
+
+    /// 6-node path graph session (1-layer GCN) — long enough that a delta
+    /// at one end leaves a genuinely untouched far end.
+    fn path_session() -> (GnnModel, Dataset) {
+        let n = 6;
+        let w = Matrix::from_vec(2, 2, vec![1.0, 0.5, -0.5, 1.0]).unwrap();
+        let model = GnnModel {
+            name: "path".into(),
+            arch: "gcn".into(),
+            dataset: "unit".into(),
+            method: QuantMethod::A2q,
+            layers: vec![LayerParams {
+                w: Some(w),
+                b: vec![0.1, -0.1],
+                w_steps: vec![0.05, 0.05],
+                feat: Some(NodeQuantParams::new(vec![0.1; 6], vec![4; 6], true).unwrap()),
+                ..Default::default()
+            }],
+            head: None,
+            dq_steps: vec![],
+            skip_input_quant: false,
+            node_level: true,
+            num_nodes: n,
+            in_dim: 2,
+            out_dim: 2,
+            heads: 1,
+            graph_capacity: 0,
+            accuracy: 0.0,
+            avg_bits: 4.0,
+            expected_head: vec![],
+            manifest: Json::Null,
+        };
+        let mut edges = Vec::new();
+        for i in 0..n as u32 - 1 {
+            edges.push((i, i + 1));
+            edges.push((i + 1, i));
+        }
+        let csr = Csr::from_edges(n, &edges).unwrap();
+        let features: Vec<f32> = (0..n * 2).map(|i| 0.05 * (i as f32 + 1.0) - 0.3).collect();
+        let ds = Dataset::Node(NodeData {
+            name: "unit".into(),
+            csr,
+            num_features: 2,
+            num_classes: 2,
+            features,
+            labels: vec![0; n],
+            train_mask: vec![false; n],
+            val_mask: vec![false; n],
+            test_mask: vec![false; n],
         });
         (model, ds)
     }
@@ -585,5 +1025,161 @@ mod tests {
         model.layers[0].w = None;
         let err = NativeExecutor::new(model, Some(&ds)).unwrap_err();
         assert!(format!("{err}").contains("missing w"));
+    }
+
+    #[test]
+    fn delta_recomputes_frontier_and_preserves_untouched_rows_bitwise() {
+        let (model, ds) = path_session();
+        let exec = NativeExecutor::new(model, Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+        let all: Vec<u32> = (0..6).collect();
+        let before = exec.run_node_batch(&all).unwrap();
+        assert_eq!(exec.epoch(), 0);
+
+        // add a directed edge 5→0: node 0's row + degree change; the
+        // 1-layer frontier is {0} ∪ out-neighbours of {0} = {0, 1}
+        let report = exec
+            .apply_delta(&GraphDelta {
+                add_edges: vec![(5, 0)],
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(report.epoch, 1);
+        assert_eq!(exec.epoch(), 1, "epoch bumps exactly once per delta");
+        assert_eq!(report.recomputed_rows, 2, "only the frontier recomputes");
+        assert_eq!(report.num_nodes, 6);
+
+        let after = exec.run_node_batch(&all).unwrap();
+        // untouched rows survive the epoch change bit-for-bit
+        for v in 2..6 {
+            assert_eq!(before[v], after[v], "row {v} should be untouched");
+        }
+        // the mutated destination genuinely moved
+        assert_ne!(before[0], after[0], "row 0 must reflect the new edge");
+
+        // a second (empty) delta still bumps exactly once and touches no rows
+        let report = exec.apply_delta(&GraphDelta::default()).unwrap();
+        assert_eq!(report.epoch, 2);
+        assert_eq!(report.recomputed_rows, 0);
+        let again = exec.run_node_batch(&all).unwrap();
+        assert_eq!(after, again);
+
+        // a manual epoch bump on a now-dynamic session recomputes AND
+        // re-records the activation cache on the next batch; a further
+        // delta then patches off that recorded recompute
+        exec.bump_epoch();
+        assert_eq!(exec.epoch(), 3);
+        let recomputed = exec.run_node_batch(&all).unwrap();
+        assert_eq!(after, recomputed, "recompute must reproduce the patched state");
+        let report = exec
+            .apply_delta(&GraphDelta {
+                add_edges: vec![(0, 5)],
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(report.epoch, 4);
+        let last = exec.run_node_batch(&all).unwrap();
+        // frontier of (0,5): {5} ∪ out-neighbours of deg-changed {5} =
+        // {0, 4, 5} (0 gained 5 as in-neighbour in the first delta); the
+        // middle of the path stays bit-identical
+        for v in 1..4 {
+            assert_eq!(recomputed[v], last[v], "row {v} should be untouched");
+        }
+        assert_ne!(recomputed[5], last[5], "row 5 must reflect the new edge");
+    }
+
+    #[test]
+    fn delta_appends_node_with_nns_assigned_params() {
+        let (model, ds) = path_session();
+        let exec = NativeExecutor::new(model, Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+        // node 6 arrives with features and links to node 0
+        let report = exec
+            .apply_delta(&GraphDelta {
+                add_nodes: 1,
+                new_features: vec![0.2, -0.1],
+                add_edges: vec![(6, 0), (0, 6)],
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(report.num_nodes, 7);
+        assert_eq!(report.new_nodes, 1);
+        assert_eq!(exec.resident_nodes(), 7);
+        assert_eq!(exec.capacity().0, 7);
+        // the unseen node serves logits like any resident node
+        let out = exec.run_node_batch(&[6]).unwrap();
+        assert_eq!(out[0].len(), 2);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+        // and its quantization params were assigned from the learned table
+        let params = exec.resident_quant_params();
+        let feat = params[0].0.as_ref().unwrap();
+        assert_eq!(feat.len(), 7);
+        assert!(feat.steps[6].is_finite() && feat.steps[6] > 0.0);
+        assert!(feat.bits[6] >= 1);
+    }
+
+    #[test]
+    fn delta_rejects_malformed_input_without_mutating() {
+        let (model, ds) = path_session();
+        let exec = NativeExecutor::new(model, Some(&ds)).unwrap();
+        let all: Vec<u32> = (0..6).collect();
+        let before = exec.run_node_batch(&all).unwrap();
+        // wrong feature arity
+        assert!(exec
+            .apply_delta(&GraphDelta {
+                add_nodes: 1,
+                new_features: vec![0.0; 3],
+                ..Default::default()
+            })
+            .is_err());
+        // non-finite features
+        assert!(exec
+            .apply_delta(&GraphDelta {
+                add_nodes: 1,
+                new_features: vec![0.0, f32::NAN],
+                ..Default::default()
+            })
+            .is_err());
+        // out-of-range edge
+        assert!(exec
+            .apply_delta(&GraphDelta {
+                add_edges: vec![(0, 42)],
+                ..Default::default()
+            })
+            .is_err());
+        // nothing changed: same epoch, same logits
+        assert_eq!(exec.epoch(), 0);
+        assert_eq!(exec.run_node_batch(&all).unwrap(), before);
+    }
+
+    #[test]
+    fn cold_session_delta_then_first_batch_is_consistent() {
+        // apply a delta before any classify batch: the executor warms its
+        // own activation cache, and the first served batch must equal a
+        // freshly-built session over the post-delta graph
+        let (model, ds) = path_session();
+        let exec = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+        let delta = GraphDelta {
+            add_edges: vec![(5, 0), (0, 5)],
+            ..Default::default()
+        };
+        exec.apply_delta(&delta).unwrap();
+        let got = exec.run_node_batch(&(0..6).collect::<Vec<u32>>()).unwrap();
+
+        let Dataset::Node(nd) = &ds else { unreachable!() };
+        let mut edges = nd.csr.edge_list();
+        edges.push((5, 0));
+        edges.push((0, 5));
+        let csr = Csr::from_edges(6, &edges).unwrap();
+        let ef = EdgeForm::from_csr(&csr);
+        let input = GraphInput::node_level(&nd.features, 2, &ef);
+        let want = forward_fp_with(&model, &input, &ParallelConfig::serial());
+        for (v, row) in got.iter().enumerate() {
+            assert_eq!(row.as_slice(), want.row(v), "row {v}");
+        }
     }
 }

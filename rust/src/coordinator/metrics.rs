@@ -15,6 +15,7 @@ struct Inner {
     errors: u64,
     batches: u64,
     batched_requests: u64,
+    updates: u64,
     started: Option<Instant>,
 }
 
@@ -32,6 +33,8 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub errors: u64,
     pub batches: u64,
+    /// successfully applied resident-graph updates
+    pub updates: u64,
     pub mean_batch_size: f64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
@@ -55,6 +58,10 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn record_update(&self) {
+        self.inner.lock().unwrap().updates += 1;
     }
 
     pub fn record_batch(&self, batch_size: usize) {
@@ -83,6 +90,7 @@ impl Metrics {
             rejected: m.rejected,
             errors: m.errors,
             batches: m.batches,
+            updates: m.updates,
             mean_batch_size: if m.batches == 0 {
                 0.0
             } else {
@@ -100,7 +108,7 @@ impl Metrics {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "requests={} responses={} rejected={} errors={} batches={} \
+            "requests={} responses={} rejected={} errors={} batches={} updates={} \
              mean_batch={:.2} latency(mean/p50/p99)={:.0}/{:.0}/{:.0}µs \
              queue_mean={:.0}µs throughput={:.1} rps",
             self.requests,
@@ -108,6 +116,7 @@ impl MetricsSnapshot {
             self.rejected,
             self.errors,
             self.batches,
+            self.updates,
             self.mean_batch_size,
             self.mean_latency_us,
             self.p50_latency_us,

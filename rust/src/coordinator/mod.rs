@@ -3,11 +3,13 @@
 //! The deployable inference service in front of the AOT artifacts:
 //!
 //! * [`request`] — typed requests/responses (node classification over the
-//!   resident graph; graph-level prediction for client-supplied graphs).
+//!   resident graph; graph-level prediction for client-supplied graphs;
+//!   resident-graph mutation via `Payload::UpdateGraph`).
 //! * [`batcher`] — dynamic batching: graph-level requests accumulate until
 //!   a node-count budget fills or a deadline expires (static-shape batches
 //!   for the PJRT executable); node-level queries coalesce onto one
-//!   full-graph forward.
+//!   full-graph forward; graph updates are ordering barriers that execute
+//!   alone so inference and mutation interleave without stale reads.
 //! * [`router`] — dispatches to per-model runners, bounded queues give
 //!   admission-control backpressure.
 //! * [`executor`] — pluggable execution backends: PJRT artifact, native
@@ -23,7 +25,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use executor::{BatchExecutor, MockExecutor, NativeExecutor, PjrtExecutor};
+pub use executor::{BatchExecutor, DeltaReport, MockExecutor, NativeExecutor, PjrtExecutor};
 pub use metrics::Metrics;
-pub use request::{Prediction, Request, Response};
+pub use request::{Payload, Prediction, Request, Response};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -3,6 +3,7 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::graph::delta::GraphDelta;
 use crate::graph::io::SmallGraph;
 
 /// A prediction for one request.
@@ -50,6 +51,12 @@ pub enum Payload {
     ClassifyNodes(Vec<u32>),
     /// predict for a client-supplied small graph
     PredictGraph(SmallGraph),
+    /// mutate the model's resident graph (dynamic-graph serving).  The
+    /// batcher never batches an update with other requests: it executes
+    /// alone, in arrival order, so a classify admitted after an update's
+    /// reply always observes the post-update epoch.  The reply carries no
+    /// predictions.
+    UpdateGraph(GraphDelta),
 }
 
 /// Internal envelope: payload + reply channel + admission timestamp.
@@ -66,7 +73,13 @@ impl Request {
         match &self.payload {
             Payload::ClassifyNodes(ids) => ids.len(),
             Payload::PredictGraph(g) => g.num_nodes(),
+            Payload::UpdateGraph(d) => d.add_nodes,
         }
+    }
+
+    /// Whether this request mutates the resident graph (executes alone).
+    pub fn is_update(&self) -> bool {
+        matches!(self.payload, Payload::UpdateGraph(_))
     }
 }
 

@@ -238,7 +238,29 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Metrics) {
     metrics.record_batch(batch.len());
     let batch_size = batch.len();
-    let (classify, predict) = DynamicBatcher::split_payloads(batch);
+    // Resident-graph updates: the batcher flushes them as singleton
+    // batches (ordering barriers), so this partition normally yields the
+    // whole batch or nothing; handling it generically keeps a misbehaving
+    // batcher from ever feeding an update into split_payloads.  A reply
+    // carries no predictions; failures take the ordinary error path.
+    let (updates, rest): (Vec<Request>, Vec<Request>) =
+        batch.into_iter().partition(|r| r.is_update());
+    for req in updates {
+        let t0 = Instant::now();
+        let result = run_caught(|| match &req.payload {
+            Payload::UpdateGraph(delta) => executor.apply_delta(delta),
+            _ => unreachable!("partitioned as update"),
+        });
+        let exec_us = t0.elapsed().as_micros() as u64;
+        match result {
+            Ok(_report) => {
+                metrics.record_update();
+                respond(req, Vec::new(), batch_size, exec_us, metrics);
+            }
+            Err(e) => fail_all(vec![req], e, metrics),
+        }
+    }
+    let (classify, predict) = DynamicBatcher::split_payloads(rest);
 
     if !classify.is_empty() {
         // coalesce all node queries onto one full-graph forward
@@ -537,5 +559,166 @@ mod tests {
         // request either answered before shutdown or during drain
         let out = rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert!(out.is_ok());
+    }
+
+    /// A mutable resident "graph": apply_delta bumps the version, node
+    /// batches report the version they were served under — so a reply
+    /// proves which updates the executor had applied when it ran.
+    struct VersionedExecutor {
+        version: std::sync::atomic::AtomicU64,
+        latency: Duration,
+    }
+
+    impl VersionedExecutor {
+        fn new(latency: Duration) -> Self {
+            VersionedExecutor {
+                version: std::sync::atomic::AtomicU64::new(0),
+                latency,
+            }
+        }
+    }
+
+    impl BatchExecutor for VersionedExecutor {
+        fn run_node_batch(&self, node_ids: &[u32]) -> crate::error::Result<Vec<Vec<f32>>> {
+            std::thread::sleep(self.latency);
+            let v = self.version.load(Ordering::SeqCst) as f32;
+            Ok(node_ids.iter().map(|_| vec![v]).collect())
+        }
+        fn run_graph_batch(
+            &self,
+            graphs: &[&SmallGraph],
+        ) -> crate::error::Result<Vec<Vec<f32>>> {
+            Ok(graphs.iter().map(|_| vec![0.0]).collect())
+        }
+        fn apply_delta(
+            &self,
+            _delta: &crate::graph::delta::GraphDelta,
+        ) -> crate::error::Result<super::super::executor::DeltaReport> {
+            std::thread::sleep(self.latency);
+            let epoch = self.version.fetch_add(1, Ordering::SeqCst) + 1;
+            Ok(super::super::executor::DeltaReport {
+                epoch,
+                num_nodes: 8,
+                recomputed_rows: 1,
+                new_nodes: 0,
+            })
+        }
+        fn capacity(&self) -> (usize, usize) {
+            (1024, 16)
+        }
+        fn out_dim(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn update_then_classify_never_serves_stale_logits() {
+        let mut c = Coordinator::new();
+        c.add_model(
+            "dyn",
+            Arc::new(VersionedExecutor::new(Duration::ZERO)),
+            batcher_cfg(),
+        );
+        for i in 1..=5u64 {
+            let resp = c
+                .submit_blocking(
+                    "dyn",
+                    Payload::UpdateGraph(crate::graph::delta::GraphDelta::default()),
+                )
+                .unwrap();
+            assert!(resp.predictions.is_empty(), "updates carry no predictions");
+            // a classify admitted after the update's reply must see it
+            let resp = c
+                .submit_blocking("dyn", Payload::ClassifyNodes(vec![0]))
+                .unwrap();
+            assert!(
+                resp.predictions[0].output[0] >= i as f32,
+                "stale logits: saw {} after update {i}",
+                resp.predictions[0].output[0]
+            );
+        }
+        assert_eq!(c.metrics().updates, 5);
+        c.shutdown();
+    }
+
+    #[test]
+    fn interleaved_updates_and_classifies_under_overload_account_exactly_once() {
+        // tiny queue + slow executor forces overload rejections while a
+        // mutator interleaves updates: the invariants are (1) a classify
+        // admitted after update i completed never reports a version < i,
+        // and (2) every submit is counted exactly once as admitted or
+        // rejected, with every admitted request answered exactly once.
+        let mut cfg = batcher_cfg();
+        cfg.queue_cap = 2;
+        cfg.max_wait = Duration::from_micros(200);
+        let mut c = Coordinator::new();
+        c.add_model(
+            "dyn",
+            Arc::new(VersionedExecutor::new(Duration::from_micros(400))),
+            cfg,
+        );
+        let c = Arc::new(c);
+        let completed_updates = Arc::new(std::sync::atomic::AtomicU64::new(0));
+
+        let mut joins = Vec::new();
+        {
+            // the mutating client
+            let c = Arc::clone(&c);
+            let completed = Arc::clone(&completed_updates);
+            joins.push(thread::spawn(move || {
+                let (mut ok, mut rejected) = (0u64, 0u64);
+                for _ in 0..30 {
+                    match c.submit(
+                        "dyn",
+                        Payload::UpdateGraph(crate::graph::delta::GraphDelta::default()),
+                    ) {
+                        Ok(rx) => {
+                            let resp = rx.recv().expect("runner alive").expect("update ok");
+                            assert!(resp.predictions.is_empty());
+                            completed.fetch_add(1, Ordering::SeqCst);
+                            ok += 1;
+                        }
+                        Err(_) => rejected += 1,
+                    }
+                }
+                (ok, rejected, 0u64)
+            }));
+        }
+        for t in 0..3 {
+            let c = Arc::clone(&c);
+            let completed = Arc::clone(&completed_updates);
+            joins.push(thread::spawn(move || {
+                let (mut ok, mut rejected, mut stale) = (0u64, 0u64, 0u64);
+                for i in 0..40 {
+                    let floor = completed.load(Ordering::SeqCst);
+                    match c.submit("dyn", Payload::ClassifyNodes(vec![(t * 40 + i) as u32])) {
+                        Ok(rx) => {
+                            let resp = rx.recv().expect("runner alive").expect("classify ok");
+                            ok += 1;
+                            if resp.predictions[0].output[0] < floor as f32 {
+                                stale += 1;
+                            }
+                        }
+                        Err(_) => rejected += 1,
+                    }
+                }
+                (ok, rejected, stale)
+            }));
+        }
+        let (mut admitted, mut rejected, mut stale) = (0u64, 0u64, 0u64);
+        for j in joins {
+            let (ok, rej, st) = j.join().unwrap();
+            admitted += ok;
+            rejected += rej;
+            stale += st;
+        }
+        assert_eq!(stale, 0, "served logits older than a completed update");
+        assert_eq!(admitted + rejected, 30 + 3 * 40, "every submit counted once");
+        let snap = c.metrics();
+        assert_eq!(snap.requests, admitted, "admitted counted exactly once");
+        assert_eq!(snap.rejected, rejected, "rejected counted exactly once");
+        assert_eq!(snap.responses, admitted, "every admitted request answered");
+        assert_eq!(snap.errors, 0);
+        Arc::try_unwrap(c).ok().map(|c| c.shutdown());
     }
 }

@@ -1,0 +1,715 @@
+//! Incremental activation repair + online NNS assignment for dynamic
+//! resident graphs.
+//!
+//! The serving path keeps every layer's activation matrix resident
+//! (recorded by `forward_{fp,int}_prepared_recording`).  When a
+//! [`crate::graph::GraphDelta`] mutates the graph, only the delta's L-hop
+//! reverse frontier (`graph::delta::dirty_frontier`) can change, so
+//! [`patch_activations`] recomputes exactly those rows, layer by layer —
+//! **bitwise identical** to rerunning the full forward on the post-delta
+//! graph (each helper below replicates the corresponding full-pass kernel
+//! element-for-element: same accumulation order, same zero-skips, same
+//! rounding expressions).
+//!
+//! Nodes that arrive after training have no learned quantization
+//! parameters.  Per the paper's Nearest Neighbor Strategy (Algorithm 1),
+//! each appended node is assigned the learned `(step, bits)` group whose
+//! `q_max = s·(2^{b−1}−1)` is nearest to the node's max-|x| at that layer
+//! — evaluated *online* against [`NnsAssignTables`] frozen over the
+//! originally-learned per-node parameters, then persisted into the
+//! resident `NodeQuantParams` so later full recomputes (epoch bumps,
+//! from-scratch rebuilds with the same extended parameters) reproduce the
+//! patched values exactly.  Topology-fixed schemes (Degree-Quant, SGQuant
+//! — see PAPERS.md) have no analogue of this: A²Q's value-keyed lookup is
+//! what makes unseen-node serving well-defined.
+
+use std::borrow::Cow;
+
+use crate::error::{Error, Result};
+use crate::graph::norm::{AggregationPlan, EdgeForm};
+use crate::quant::mixed::NodeQuantParams;
+use crate::quant::nns::NnsTable;
+use crate::quant::uniform;
+use crate::tensor::dense::Matrix;
+
+use super::infer::{model_uses_skip, nns_or_build};
+use super::model::{GnnModel, QuantMethod};
+use super::prepared::PreparedModel;
+
+/// Frozen NNS lookup tables over the *originally learned* per-node
+/// parameters of one layer (`None` for maps that are absent, grouped, or
+/// non-A²Q).  Built once per session at the first delta; assignments for
+/// appended nodes always search the learned groups, never previously
+/// assigned copies (which carry no new `(step, bits)` values anyway).
+#[derive(Debug, Clone, Default)]
+pub struct NnsAssignTables {
+    pub feat: Option<NnsTable>,
+    pub feat2: Option<NnsTable>,
+}
+
+/// Build the per-layer assignment tables for a prepared session.  Only
+/// A²Q per-node maps (length == resident node count of a node-level
+/// model) get a table — grouped maps already serve any row count through
+/// the prepared `NnsTable`s in [`PreparedModel`].
+pub fn build_assign_tables(prep: &PreparedModel) -> Result<Vec<NnsAssignTables>> {
+    let model = &prep.model;
+    let per_node =
+        |p: &NodeQuantParams| model.node_level && p.len() == model.num_nodes;
+    let mut out = Vec::with_capacity(model.layers.len());
+    for (l, lay) in model.layers.iter().enumerate() {
+        let mut t = NnsAssignTables::default();
+        if model.method == QuantMethod::A2q {
+            if let Some(p) = &lay.feat {
+                if per_node(p) {
+                    t.feat = Some(NnsTable::try_new(&p.steps, &p.bits, p.signed).map_err(
+                        |e| Error::artifact(format!("layer {l} feat NNS table: {e}")),
+                    )?);
+                }
+            }
+            if let Some(p) = &lay.feat2 {
+                if per_node(p) {
+                    t.feat2 = Some(NnsTable::try_new(&p.steps, &p.bits, p.signed).map_err(
+                        |e| Error::artifact(format!("layer {l} feat2 NNS table: {e}")),
+                    )?);
+                }
+            }
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// One output row of `a @ b`, replicating `ops::matmul_rows_f32`
+/// element-for-element for a single row: ascending-k accumulation with
+/// the same `aik == 0.0` skip (blocking over k does not reorder a single
+/// row's adds).
+fn row_matmul_f32(a: &[f32], b: &Matrix<f32>, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.rows);
+    debug_assert_eq!(out.len(), b.cols);
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    let n = b.cols;
+    for (kk, &aik) in a.iter().enumerate() {
+        if aik == 0.0 {
+            continue;
+        }
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for (o, &bv) in out.iter_mut().zip(brow) {
+            *o += aik * bv;
+        }
+    }
+}
+
+fn relu_row(row: &mut [f32]) {
+    for v in row.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn add_bias_row(row: &mut [f32], bias: &[f32]) {
+    debug_assert_eq!(row.len(), bias.len());
+    for (v, b) in row.iter_mut().zip(bias) {
+        *v += b;
+    }
+}
+
+/// Row mirror of `infer::quantize_features` — identical per-method
+/// expressions, applied to one row `v`.
+fn quantize_row(
+    model: &GnnModel,
+    layer: usize,
+    p: Option<&NodeQuantParams>,
+    per_node: bool,
+    nns: Option<&NnsTable>,
+    row: &mut [f32],
+    v: usize,
+) {
+    match model.method {
+        QuantMethod::Fp32 => {}
+        QuantMethod::Binary => {
+            let mean = row.iter().map(|x| x.abs()).sum::<f32>() / row.len() as f32;
+            for x in row.iter_mut() {
+                *x = if *x >= 0.0 { mean } else { -mean };
+            }
+        }
+        QuantMethod::Dq => {
+            let step = model.dq_steps.get(layer).copied().unwrap_or(0.05);
+            let signed = layer == 0 || model.arch == "gat";
+            for x in row.iter_mut() {
+                *x = uniform::quantize_value(*x, step, 4, signed) as f32
+                    * step.max(uniform::MIN_STEP);
+            }
+        }
+        QuantMethod::A2q => {
+            if let Some(p) = p {
+                if per_node {
+                    uniform::fake_quantize_row(row, p.steps[v], p.bits[v], p.signed);
+                } else {
+                    let table = nns.expect("grouped A2q params need an NNS table");
+                    let f = row.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                    let (_, s, b) = table.select(f);
+                    uniform::fake_quantize_row(row, s, b, p.signed);
+                }
+            }
+        }
+    }
+}
+
+/// Row mirror of the integer GIN hidden-map matmul in `forward_int`:
+/// quantize to codes → i32-accumulate against the prepared weight codes
+/// (ascending k, zero-code skip) → Eq. 2 rescale `acc·sx·sw[j]`.
+/// `codes`/`acc` are caller-provided scratch (the patch loop reuses one
+/// pair across all dirty rows instead of allocating per row).
+#[allow(clippy::too_many_arguments)]
+fn int_mm_row(
+    hid: &[f32],
+    p: Option<&NodeQuantParams>,
+    per_node: bool,
+    nns: Option<&NnsTable>,
+    v: usize,
+    wcodes: &Matrix<i32>,
+    sw: &[f32],
+    codes: &mut [i32],
+    acc: &mut [i32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(hid.len(), wcodes.rows);
+    debug_assert_eq!(codes.len(), hid.len());
+    debug_assert_eq!(acc.len(), wcodes.cols);
+    debug_assert_eq!(out.len(), wcodes.cols);
+    let cols = wcodes.cols;
+    let sx: f32 = match p {
+        // unquantized hidden map (no feat2 params): codes are the raw
+        // values truncated to i32 with unit step, as in forward_int
+        None => {
+            for (c, &x) in codes.iter_mut().zip(hid) {
+                *c = x as i32;
+            }
+            1.0
+        }
+        Some(p) if per_node => {
+            let (s, b) = (p.steps[v], p.bits[v]);
+            for (c, &x) in codes.iter_mut().zip(hid) {
+                *c = uniform::quantize_value(x, s, b, p.signed);
+            }
+            s
+        }
+        Some(p) => {
+            let table = nns.expect("grouped feat2 params need an NNS table");
+            let fmax = hid.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let (_, s, b) = table.select(fmax);
+            for (c, &x) in codes.iter_mut().zip(hid) {
+                *c = uniform::quantize_value(x, s, b, p.signed);
+            }
+            s
+        }
+    };
+    for a in acc.iter_mut() {
+        *a = 0;
+    }
+    for (kk, &c) in codes.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let brow = &wcodes.data[kk * cols..(kk + 1) * cols];
+        for (o, &bv) in acc.iter_mut().zip(brow) {
+            *o += c * bv;
+        }
+    }
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = acc[j] as f32 * sx * sw[j];
+    }
+}
+
+/// Recompute rows `dirty[l]` of every layer's output in `acts`, in place.
+///
+/// * `acts` — per-layer activation matrices over the **post-delta** graph:
+///   `acts[0]` the full feature matrix (appended rows included), deeper
+///   matrices carried over from the pre-delta state with zeroed rows for
+///   appended nodes.  `acts.len() == model.layers.len() + 1`.
+/// * `staged` — per-layer clones of the A²Q per-node quantization
+///   parameters (`None` where [`build_assign_tables`] built no table);
+///   appended nodes are assigned and appended here via the frozen
+///   `tables`, so the caller can commit them atomically on success.
+/// * `edges`/`plan` — the post-delta [`EdgeForm`] and its grouped plan.
+/// * `dirty` — per-layer sorted dirty row ids from
+///   `graph::delta::dirty_frontier`; every appended node must appear in
+///   every layer's set (the frontier guarantees this).
+/// * `int_path` — replicate `forward_int` (true for the A²Q integer
+///   executor path; fp fallback archs/methods pass false).
+///
+/// Returns the number of final-layer rows recomputed.  On error (only
+/// non-finite activations hitting the NNS assignment) `acts`/`staged` are
+/// partially written — callers stage both and discard on failure.
+#[allow(clippy::too_many_arguments)]
+pub fn patch_activations(
+    prep: &PreparedModel,
+    staged: &mut [(Option<NodeQuantParams>, Option<NodeQuantParams>)],
+    tables: &[NnsAssignTables],
+    edges: &EdgeForm,
+    plan: &AggregationPlan,
+    acts: &mut [Matrix<f32>],
+    dirty: &[Vec<u32>],
+    int_path: bool,
+) -> Result<usize> {
+    let model = &prep.model;
+    let n_layers = model.layers.len();
+    if model.arch == "gat" {
+        return Err(Error::coordinator(
+            "incremental patching is not supported for gat",
+        ));
+    }
+    assert_eq!(acts.len(), n_layers + 1, "acts must hold input + every layer");
+    assert_eq!(staged.len(), n_layers);
+    assert_eq!(tables.len(), n_layers);
+    assert_eq!(dirty.len(), n_layers);
+    let n_new = acts[0].rows;
+
+    for l in 0..n_layers {
+        let lay = &model.layers[l];
+        let pl = &prep.layers[l];
+        let last = l + 1 == n_layers;
+        let tail = last && model.head.is_none();
+        let skip_q = l == 0 && model.skip_input_quant;
+        let (before, after) = acts.split_at_mut(l + 1);
+        let h_in = &before[l];
+        let h_out = &mut after[0];
+
+        // Online NNS assignment for appended nodes at this layer's input
+        // map (Algorithm 1 keyed by the row's max |x|, which the frontier
+        // patch of layer l-1 has already produced).
+        if let (Some(p), Some(table)) =
+            (staged[l].0.as_mut(), tables[l].feat.as_ref())
+        {
+            for v in p.len()..n_new {
+                let fmax = h_in.row_abs_max(v);
+                let (_, s, b) = table
+                    .try_select(fmax)
+                    .map_err(|e| Error::coordinator(format!("layer {l} node {v}: {e}")))?;
+                p.push(s, b);
+            }
+        }
+        let (sf, sf2) = {
+            let s = &mut staged[l];
+            (&s.0, &mut s.1)
+        };
+        let (feat_p, feat_per_node): (Option<&NodeQuantParams>, bool) =
+            match (sf.as_ref(), lay.feat.as_ref()) {
+                (Some(p), _) => (Some(p), true),
+                (None, Some(p)) => (Some(p), p.len() == n_new),
+                (None, None) => (None, false),
+            };
+        let feat_nns: Option<Cow<NnsTable>> = match (feat_p, feat_per_node) {
+            (Some(p), false) if model.method == QuantMethod::A2q => {
+                Some(nns_or_build(pl.nns.as_ref(), p))
+            }
+            _ => None,
+        };
+        // grouped feat2 table (per-node feat2 lives in `sf2` and needs no
+        // lookup at quantize time)
+        let feat2_grouped_nns: Option<Cow<NnsTable>> =
+            match (sf2.is_some(), lay.feat2.as_ref()) {
+                (false, Some(p))
+                    if model.method == QuantMethod::A2q && p.len() != n_new =>
+                {
+                    Some(nns_or_build(pl.nns2.as_ref(), p))
+                }
+                _ => None,
+            };
+
+        match model.arch.as_str() {
+            "gcn" => {
+                let wq = pl.wq.as_ref().expect("gcn weight");
+                let fin = h_in.cols;
+                let dout = wq.cols;
+                debug_assert_eq!(lay.b.len(), dout);
+                let uses_skip =
+                    !int_path && model_uses_skip(model) && dout == fin;
+                let mut qrow = vec![0.0f32; fin];
+                let mut agg = vec![0.0f32; fin];
+                let mut out = vec![0.0f32; dout];
+                for &v in &dirty[l] {
+                    let v = v as usize;
+                    for a in agg.iter_mut() {
+                        *a = 0.0;
+                    }
+                    for &e in plan.in_edges(v) {
+                        let e = e as usize;
+                        let w = edges.gcn_w[e];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let s = edges.src[e] as usize;
+                        qrow.copy_from_slice(h_in.row(s));
+                        if !skip_q {
+                            quantize_row(
+                                model,
+                                l,
+                                feat_p,
+                                feat_per_node,
+                                feat_nns.as_deref(),
+                                &mut qrow,
+                                s,
+                            );
+                        }
+                        for (o, x) in agg.iter_mut().zip(&qrow) {
+                            *o += w * *x;
+                        }
+                    }
+                    row_matmul_f32(&agg, wq, &mut out);
+                    add_bias_row(&mut out, &lay.b);
+                    if !tail {
+                        if uses_skip {
+                            qrow.copy_from_slice(h_in.row(v));
+                            if !skip_q {
+                                quantize_row(
+                                    model,
+                                    l,
+                                    feat_p,
+                                    feat_per_node,
+                                    feat_nns.as_deref(),
+                                    &mut qrow,
+                                    v,
+                                );
+                            }
+                            for (o, x) in out.iter_mut().zip(&qrow) {
+                                *o += *x;
+                            }
+                        }
+                        relu_row(&mut out);
+                    }
+                    h_out.row_mut(v).copy_from_slice(&out);
+                }
+            }
+            "gin" => {
+                let w1q = pl.wq.as_ref().expect("gin w1");
+                let fin = h_in.cols;
+                let hidden = w1q.cols;
+                debug_assert_eq!(lay.b.len(), hidden);
+                let mut qrow = vec![0.0f32; fin];
+                let mut neigh = vec![0.0f32; fin];
+                let mut agg = vec![0.0f32; fin];
+                let mut hid = vec![0.0f32; hidden];
+                let mut hqv = vec![0.0f32; fin];
+                // int-path scratch, reused across rows
+                let (mut codes_buf, mut acc_buf) = if int_path {
+                    let wc = pl.w2_codes.as_ref().expect("gin w2 codes");
+                    (vec![0i32; hidden], vec![0i32; wc.cols])
+                } else {
+                    (Vec::new(), Vec::new())
+                };
+                for &v in &dirty[l] {
+                    let v = v as usize;
+                    hqv.copy_from_slice(h_in.row(v));
+                    if !skip_q {
+                        quantize_row(
+                            model,
+                            l,
+                            feat_p,
+                            feat_per_node,
+                            feat_nns.as_deref(),
+                            &mut hqv,
+                            v,
+                        );
+                    }
+                    for nv in neigh.iter_mut() {
+                        *nv = 0.0;
+                    }
+                    for &e in plan.in_edges(v) {
+                        let e = e as usize;
+                        let w = edges.sum_w[e];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let s = edges.src[e] as usize;
+                        qrow.copy_from_slice(h_in.row(s));
+                        if !skip_q {
+                            quantize_row(
+                                model,
+                                l,
+                                feat_p,
+                                feat_per_node,
+                                feat_nns.as_deref(),
+                                &mut qrow,
+                                s,
+                            );
+                        }
+                        for (o, x) in neigh.iter_mut().zip(&qrow) {
+                            *o += w * *x;
+                        }
+                    }
+                    for (k, a) in agg.iter_mut().enumerate() {
+                        *a = (1.0 + lay.eps) * hqv[k] + neigh[k];
+                    }
+                    row_matmul_f32(&agg, w1q, &mut hid);
+                    add_bias_row(&mut hid, &lay.b);
+                    relu_row(&mut hid);
+                    // assignment for an appended node's hidden map happens
+                    // here — its hidden row now exists for the first time.
+                    // Enforced hard (not debug-only): pushing at an index
+                    // other than v would silently misalign every later
+                    // per-node lookup of the resident params.
+                    if let (Some(p2), Some(t2)) =
+                        (sf2.as_mut(), tables[l].feat2.as_ref())
+                    {
+                        if v > p2.len() {
+                            return Err(Error::coordinator(format!(
+                                "layer {l}: appended node {v} patched out of \
+                                 order ({} params assigned — dirty sets must \
+                                 contain every appended node, ascending)",
+                                p2.len()
+                            )));
+                        }
+                        if v == p2.len() {
+                            let fmax =
+                                hid.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                            let (_, s, b) = t2.try_select(fmax).map_err(|e| {
+                                Error::coordinator(format!(
+                                    "layer {l} node {v} hidden map: {e}"
+                                ))
+                            })?;
+                            p2.push(s, b);
+                        }
+                    }
+                    let (feat2_p, feat2_per_node): (Option<&NodeQuantParams>, bool) =
+                        match (sf2.as_ref(), lay.feat2.as_ref()) {
+                            (Some(p), _) => (Some(p), true),
+                            (None, Some(p)) => (Some(p), p.len() == n_new),
+                            (None, None) => (None, false),
+                        };
+                    let out_slice: &mut [f32] = h_out.row_mut(v);
+                    if int_path {
+                        let wcodes =
+                            pl.w2_codes.as_ref().expect("gin w2 codes");
+                        debug_assert_eq!(lay.b2.len(), wcodes.cols);
+                        int_mm_row(
+                            &hid,
+                            feat2_p,
+                            feat2_per_node,
+                            feat2_grouped_nns.as_deref(),
+                            v,
+                            wcodes,
+                            &pl.w2_steps_clamped,
+                            &mut codes_buf,
+                            &mut acc_buf,
+                            out_slice,
+                        );
+                        add_bias_row(out_slice, &lay.b2);
+                        if !tail {
+                            relu_row(out_slice);
+                        }
+                    } else {
+                        let w2q = pl.w2q.as_ref().expect("gin w2");
+                        debug_assert_eq!(lay.b2.len(), w2q.cols);
+                        if model.method != QuantMethod::Fp32 {
+                            quantize_row(
+                                model,
+                                l,
+                                feat2_p,
+                                feat2_per_node,
+                                feat2_grouped_nns.as_deref(),
+                                &mut hid,
+                                v,
+                            );
+                        }
+                        row_matmul_f32(&hid, w2q, out_slice);
+                        add_bias_row(out_slice, &lay.b2);
+                        if !tail {
+                            if model_uses_skip(model) && w2q.cols == fin {
+                                for (o, x) in out_slice.iter_mut().zip(&hqv) {
+                                    *o += *x;
+                                }
+                            }
+                            relu_row(out_slice);
+                        }
+                    }
+                }
+            }
+            other => {
+                return Err(Error::coordinator(format!(
+                    "incremental patching unsupported for arch '{other}'"
+                )))
+            }
+        }
+    }
+    Ok(dirty.last().map(|d| d.len()).unwrap_or(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::infer::{
+        forward_fp_prepared_recording, forward_int_prepared_recording, GraphInput,
+    };
+    use crate::gnn::model::LayerParams;
+    use crate::graph::csr::Csr;
+    use crate::util::json::Json;
+    use crate::util::prop::{property, Gen};
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::ParallelConfig;
+
+    fn random_model(g: &mut Gen, arch: &str, n: usize, in_dim: usize, hidden: usize) -> GnnModel {
+        let n_layers = g.usize_range(1, 4);
+        let mut layers = Vec::new();
+        for l in 0..n_layers {
+            let d_in = if l == 0 { in_dim } else { hidden };
+            let steps = g.vec_uniform(n, 0.02, 0.1);
+            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(2, 9) as u8).collect();
+            let feat = NodeQuantParams::new(steps, bits, l == 0).unwrap();
+            let lay = match arch {
+                "gcn" => LayerParams {
+                    w: Some(
+                        Matrix::from_vec(d_in, hidden, g.vec_normal(d_in * hidden, 0.5)).unwrap(),
+                    ),
+                    b: g.vec_uniform(hidden, -0.1, 0.1),
+                    w_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                    feat: Some(feat),
+                    ..Default::default()
+                },
+                _ => LayerParams {
+                    w: Some(
+                        Matrix::from_vec(d_in, hidden, g.vec_normal(d_in * hidden, 0.5)).unwrap(),
+                    ),
+                    b: g.vec_uniform(hidden, -0.1, 0.1),
+                    w_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                    w2: Some(
+                        Matrix::from_vec(hidden, hidden, g.vec_normal(hidden * hidden, 0.5))
+                            .unwrap(),
+                    ),
+                    b2: g.vec_uniform(hidden, -0.1, 0.1),
+                    w2_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                    eps: g.f32_range(0.0, 0.2),
+                    feat: Some(feat),
+                    feat2: Some(
+                        NodeQuantParams::new(
+                            g.vec_uniform(n, 0.02, 0.1),
+                            (0..n).map(|_| g.usize_range(2, 9) as u8).collect(),
+                            false,
+                        )
+                        .unwrap(),
+                    ),
+                    ..Default::default()
+                },
+            };
+            layers.push(lay);
+        }
+        GnnModel {
+            name: format!("inc-{arch}"),
+            arch: arch.into(),
+            dataset: "unit".into(),
+            method: QuantMethod::A2q,
+            layers,
+            head: None,
+            dq_steps: vec![],
+            skip_input_quant: false,
+            node_level: true,
+            num_nodes: n,
+            in_dim,
+            out_dim: hidden,
+            heads: 1,
+            graph_capacity: 0,
+            accuracy: 0.0,
+            avg_bits: 4.0,
+            expected_head: vec![],
+            manifest: Json::Null,
+        }
+    }
+
+    /// The foundational bitwise guarantee: patching *every* row from
+    /// zeroed output matrices reproduces the recording forward exactly,
+    /// for both archs and both execution paths.
+    #[test]
+    fn patch_all_rows_reproduces_full_forward_bitwise() {
+        property("row patch == full forward", 12, |g: &mut Gen| {
+            let n = g.usize_range(8, 60);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+            let csr = crate::graph::generate::preferential_attachment(&mut rng, n, 2);
+            let ef = EdgeForm::from_csr(&csr);
+            let plan = ef.plan();
+            let in_dim = g.usize_range(2, 6);
+            let hidden = g.usize_range(2, 8);
+            let x = g.vec_normal(n * in_dim, 0.5);
+            let cfg = ParallelConfig::serial();
+            for arch in ["gcn", "gin"] {
+                for int_path in [false, true] {
+                    let model = random_model(g, arch, n, in_dim, hidden);
+                    let n_layers = model.layers.len();
+                    let prep = PreparedModel::prepare(model.clone()).unwrap();
+                    let input = GraphInput::node_level(&x, in_dim, &ef);
+                    let mut want = Vec::new();
+                    if int_path {
+                        forward_int_prepared_recording(&prep, &input, Some(&plan), &cfg, &mut want);
+                    } else {
+                        forward_fp_prepared_recording(&prep, &input, Some(&plan), &cfg, &mut want);
+                    }
+                    assert_eq!(want.len(), n_layers + 1);
+
+                    let mut acts: Vec<Matrix<f32>> = Vec::new();
+                    acts.push(want[0].clone());
+                    for m in &want[1..] {
+                        acts.push(Matrix::zeros(m.rows, m.cols));
+                    }
+                    let tables = build_assign_tables(&prep).unwrap();
+                    let mut staged: Vec<_> = prep
+                        .model
+                        .layers
+                        .iter()
+                        .zip(&tables)
+                        .map(|(lay, t)| {
+                            (
+                                t.feat.as_ref().and(lay.feat.clone()),
+                                t.feat2.as_ref().and(lay.feat2.clone()),
+                            )
+                        })
+                        .collect();
+                    let all: Vec<u32> = (0..n as u32).collect();
+                    let dirty = vec![all; n_layers];
+                    let done = patch_activations(
+                        &prep, &mut staged, &tables, &ef, &plan, &mut acts, &dirty, int_path,
+                    )
+                    .unwrap();
+                    assert_eq!(done, n);
+                    for (l, (got, exp)) in acts.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            got.data, exp.data,
+                            "{arch} int={int_path} layer {l} diverged"
+                        );
+                    }
+                    // no nodes appended → no params assigned
+                    for (l, (sf, sf2)) in staged.iter().enumerate() {
+                        if let Some(p) = sf {
+                            assert_eq!(p.len(), n, "layer {l} feat grew");
+                        }
+                        if let Some(p) = sf2 {
+                            assert_eq!(p.len(), n, "layer {l} feat2 grew");
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn assign_tables_cover_only_per_node_a2q_maps() {
+        let mut g = Gen::new(11);
+        let model = random_model(&mut g, "gin", 12, 3, 4);
+        let prep = PreparedModel::prepare(model).unwrap();
+        let tables = build_assign_tables(&prep).unwrap();
+        for t in &tables {
+            assert!(t.feat.is_some());
+            assert!(t.feat2.is_some());
+            assert_eq!(t.feat.as_ref().unwrap().len(), 12);
+        }
+        // non-A2q methods never assign
+        let mut g = Gen::new(12);
+        let mut model = random_model(&mut g, "gcn", 8, 3, 4);
+        model.method = QuantMethod::Fp32;
+        let prep = PreparedModel::prepare(model).unwrap();
+        for t in build_assign_tables(&prep).unwrap() {
+            assert!(t.feat.is_none() && t.feat2.is_none());
+        }
+    }
+}

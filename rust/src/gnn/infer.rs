@@ -100,7 +100,7 @@ fn aggregate(
 /// session prepared these params as per-node (a node-level model run on
 /// an input sized differently than its resident graph) — shared by the fp
 /// and int paths so the fallback semantics can't diverge.
-fn nns_or_build<'a>(
+pub(crate) fn nns_or_build<'a>(
     nns: Option<&'a NnsTable>,
     p: &NodeQuantParams,
 ) -> std::borrow::Cow<'a, NnsTable> {
@@ -294,6 +294,34 @@ pub fn forward_fp_prepared_with_plan(
     resident_plan: Option<&AggregationPlan>,
     cfg: &ParallelConfig,
 ) -> Matrix<f32> {
+    forward_fp_impl(prep, input, resident_plan, cfg, None)
+}
+
+/// [`forward_fp_prepared_with_plan`] that additionally records every
+/// layer's *unquantized* activation matrix into `acts`: `acts[0]` is the
+/// raw input feature matrix and `acts[l]` the output of layer `l`
+/// (post-skip/activation, before the next layer's feature quantization).
+/// The dynamic-graph serving path keeps these resident so a `GraphDelta`
+/// can repair only the dirty rows (`gnn::incremental`) instead of
+/// recomputing the whole graph.  For graph-level (head) models only the
+/// layer stack is recorded, not the pooled readout.
+pub fn forward_fp_prepared_recording(
+    prep: &PreparedModel,
+    input: &GraphInput,
+    resident_plan: Option<&AggregationPlan>,
+    cfg: &ParallelConfig,
+    acts: &mut Vec<Matrix<f32>>,
+) -> Matrix<f32> {
+    forward_fp_impl(prep, input, resident_plan, cfg, Some(acts))
+}
+
+fn forward_fp_impl(
+    prep: &PreparedModel,
+    input: &GraphInput,
+    resident_plan: Option<&AggregationPlan>,
+    cfg: &ParallelConfig,
+    mut record: Option<&mut Vec<Matrix<f32>>>,
+) -> Matrix<f32> {
     let model = &prep.model;
     // GAT aggregates inside gat_layer (per-head attention weights), so the
     // shared destination-grouped plan is only built for gcn/gin.
@@ -312,6 +340,10 @@ pub fn forward_fp_prepared_with_plan(
         input.features.to_vec(),
     )
     .expect("feature shape");
+    if let Some(r) = record.as_deref_mut() {
+        r.clear();
+        r.push(h.clone());
+    }
     let n_layers = model.layers.len();
 
     for (l, lay) in model.layers.iter().enumerate() {
@@ -357,6 +389,9 @@ pub fn forward_fp_prepared_with_plan(
         let last = l == n_layers - 1;
         if model.head.is_none() && last {
             h = out;
+            if let Some(r) = record.as_deref_mut() {
+                r.push(h.clone());
+            }
             break;
         }
         // skip connection (python: only when shapes match)
@@ -373,6 +408,9 @@ pub fn forward_fp_prepared_with_plan(
             }
         }
         h = out;
+        if let Some(r) = record.as_deref_mut() {
+            r.push(h.clone());
+        }
     }
 
     match (&model.head, &prep.head) {
@@ -425,7 +463,7 @@ pub fn forward_fp_prepared_with_plan(
     }
 }
 
-fn model_uses_skip(model: &GnnModel) -> bool {
+pub(crate) fn model_uses_skip(model: &GnnModel) -> bool {
     model
         .manifest
         .get("skip")
@@ -465,12 +503,37 @@ pub fn forward_int_prepared_with_plan(
     resident_plan: Option<&AggregationPlan>,
     cfg: &ParallelConfig,
 ) -> Matrix<f32> {
+    forward_int_impl(prep, input, resident_plan, cfg, None)
+}
+
+/// Integer-path analogue of [`forward_fp_prepared_recording`]: same
+/// `acts` convention (`acts[0]` raw input, `acts[l]` layer `l` output).
+/// When the model falls back to fp (GAT / non-A²Q / graph-level), the
+/// recorded activations are the fp ones — matching what the executor
+/// actually served.
+pub fn forward_int_prepared_recording(
+    prep: &PreparedModel,
+    input: &GraphInput,
+    resident_plan: Option<&AggregationPlan>,
+    cfg: &ParallelConfig,
+    acts: &mut Vec<Matrix<f32>>,
+) -> Matrix<f32> {
+    forward_int_impl(prep, input, resident_plan, cfg, Some(acts))
+}
+
+fn forward_int_impl(
+    prep: &PreparedModel,
+    input: &GraphInput,
+    resident_plan: Option<&AggregationPlan>,
+    cfg: &ParallelConfig,
+    mut record: Option<&mut Vec<Matrix<f32>>>,
+) -> Matrix<f32> {
     let model = &prep.model;
     if model.arch == "gat" || model.method != QuantMethod::A2q || model.head.is_some() {
         // GAT and non-A2q run fp; graph-level (head) models delegate their
         // pooling + readout to the fp implementation entirely, so skip the
         // integer layer loop rather than computing and discarding it.
-        return forward_fp_prepared_with_plan(prep, input, resident_plan, cfg);
+        return forward_fp_impl(prep, input, resident_plan, cfg, record);
     }
     let built;
     let plan: &AggregationPlan = match resident_plan {
@@ -482,6 +545,10 @@ pub fn forward_int_prepared_with_plan(
     };
     let mut h = Matrix::from_vec(input.num_nodes, input.feat_dim, input.features.to_vec())
         .expect("feature shape");
+    if let Some(r) = record.as_deref_mut() {
+        r.clear();
+        r.push(h.clone());
+    }
     let n_layers = model.layers.len();
 
     for (l, lay) in model.layers.iter().enumerate() {
@@ -597,6 +664,9 @@ pub fn forward_int_prepared_with_plan(
             ops::relu_inplace(&mut out);
         }
         h = out;
+        if let Some(r) = record.as_deref_mut() {
+            r.push(h.clone());
+        }
     }
 
     h

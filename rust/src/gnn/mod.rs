@@ -17,13 +17,16 @@
 //! entry points against it; the `*_with` signatures remain as per-call
 //! shims.
 
+pub mod incremental;
 pub mod infer;
 pub mod model;
 pub mod prepared;
 
+pub use incremental::{build_assign_tables, patch_activations, NnsAssignTables};
 pub use infer::{
-    forward_fp, forward_fp_prepared, forward_fp_prepared_with_plan, forward_fp_with,
-    forward_int, forward_int_prepared, forward_int_prepared_with_plan, forward_int_with,
+    forward_fp, forward_fp_prepared, forward_fp_prepared_recording,
+    forward_fp_prepared_with_plan, forward_fp_with, forward_int, forward_int_prepared,
+    forward_int_prepared_recording, forward_int_prepared_with_plan, forward_int_with,
     GraphInput,
 };
 pub use model::{GnnModel, LayerParams, QuantMethod};

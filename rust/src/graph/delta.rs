@@ -1,0 +1,435 @@
+//! Incremental graph mutations for dynamic-graph serving.
+//!
+//! A [`GraphDelta`] appends nodes (with their feature rows) and
+//! adds/removes directed edges.  [`GraphDelta::apply_to_csr`] repairs the
+//! dst-major CSR **incrementally** — only the rows whose in-neighbour list
+//! actually changes are re-merged; clean rows are spliced through verbatim
+//! — and the result is *bitwise identical* to rebuilding the CSR from the
+//! full post-delta edge set with [`Csr::from_edges`] (set semantics:
+//! `(old ∪ added) \ removed`, per-row sorted + deduplicated either way).
+//!
+//! [`DeltaApplied`] carries the per-node dirty information (which rows
+//! changed, which in-degrees changed) that downstream incremental repairs
+//! key off: `EdgeForm::apply_delta` recomputes GCN weights only for edges
+//! touching a degree-changed endpoint, and [`dirty_frontier`] expands the
+//! mutated rows into the L-hop reverse frontier that an L-layer
+//! aggregation model must recompute (everything outside the frontier is
+//! provably unaffected, which is what lets the serving path patch its
+//! logits cache instead of recomputing the whole graph).
+
+use crate::error::{Error, Result};
+
+use super::csr::Csr;
+
+/// A batch of topology/feature mutations against a resident graph.
+///
+/// New nodes are appended at the end of the id space: if the graph has
+/// `n` nodes, the delta's nodes get ids `n .. n + add_nodes`, and
+/// `new_features` holds their row-major `[add_nodes, F]` feature rows.
+/// Edge endpoints may reference both existing and new ids.  Edge
+/// semantics are set-like: the post-delta edge set is
+/// `(old ∪ add_edges) \ remove_edges` (adding an existing edge or
+/// removing an absent one is a no-op; an edge both added and removed in
+/// the same delta ends up removed).
+#[derive(Debug, Clone, Default)]
+pub struct GraphDelta {
+    /// number of nodes appended (ids `n .. n + add_nodes`)
+    pub add_nodes: usize,
+    /// row-major `[add_nodes, F]` features of the appended nodes
+    pub new_features: Vec<f32>,
+    /// directed `(src, dst)` edges to add
+    pub add_edges: Vec<(u32, u32)>,
+    /// directed `(src, dst)` edges to remove
+    pub remove_edges: Vec<(u32, u32)>,
+}
+
+impl GraphDelta {
+    /// Whether the delta mutates anything at all.
+    pub fn is_empty(&self) -> bool {
+        self.add_nodes == 0 && self.add_edges.is_empty() && self.remove_edges.is_empty()
+    }
+
+    /// Full validation against a resident graph of `prev_nodes` nodes with
+    /// `feat_dim` features per node: feature-row shape, finite features,
+    /// and edge endpoints within the post-delta id space.
+    pub fn validate(&self, prev_nodes: usize, feat_dim: usize) -> Result<()> {
+        if self.new_features.len() != self.add_nodes * feat_dim {
+            return Err(Error::coordinator(format!(
+                "delta adds {} nodes but carries {} feature values ({} expected at {} per node)",
+                self.add_nodes,
+                self.new_features.len(),
+                self.add_nodes * feat_dim,
+                feat_dim
+            )));
+        }
+        if let Some(i) = self.new_features.iter().position(|v| !v.is_finite()) {
+            return Err(Error::coordinator(format!(
+                "delta feature value {} at offset {i} is not finite",
+                self.new_features[i]
+            )));
+        }
+        self.check_edge_range(prev_nodes)
+    }
+
+    /// Shared endpoint bounds check (used by [`Self::validate`] and, for
+    /// callers that apply topology without features, [`Self::apply_to_csr`]).
+    fn check_edge_range(&self, prev_nodes: usize) -> Result<()> {
+        let n_new = prev_nodes + self.add_nodes;
+        for &(s, d) in self.add_edges.iter().chain(&self.remove_edges) {
+            if s as usize >= n_new || d as usize >= n_new {
+                return Err(Error::coordinator(format!(
+                    "delta edge ({s},{d}) out of range for {n_new} post-delta nodes"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the topology part to a CSR incrementally.  Only rows with
+    /// pending adds/removes are re-merged (a sorted three-way merge per
+    /// dirty destination); every other row's index block is copied
+    /// through.  The output equals `Csr::from_edges` over the post-delta
+    /// edge set bitwise (property-tested in this module and in
+    /// `rust/tests/delta_parity.rs`).
+    pub fn apply_to_csr(&self, csr: &Csr) -> Result<DeltaApplied> {
+        let n_old = csr.num_nodes();
+        let n_new = n_old + self.add_nodes;
+        self.check_edge_range(n_old)?;
+        // (dst, src)-sorted, deduplicated mutation lists, consumed by two
+        // cursors as the destination walk advances
+        let mut adds: Vec<(u32, u32)> = self.add_edges.iter().map(|&(s, d)| (d, s)).collect();
+        adds.sort_unstable();
+        adds.dedup();
+        let mut rems: Vec<(u32, u32)> = self.remove_edges.iter().map(|&(s, d)| (d, s)).collect();
+        rems.sort_unstable();
+        rems.dedup();
+
+        let mut indptr = vec![0u32; n_new + 1];
+        let mut indices: Vec<u32> =
+            Vec::with_capacity(csr.num_edges() + adds.len());
+        let mut row_changed = vec![false; n_new];
+        let mut deg_changed = vec![false; n_new];
+        let (mut ai, mut ri) = (0usize, 0usize);
+        for v in 0..n_new {
+            let old_row: &[u32] = if v < n_old { csr.in_neighbors(v) } else { &[] };
+            let a0 = ai;
+            while ai < adds.len() && adds[ai].0 == v as u32 {
+                ai += 1;
+            }
+            let r0 = ri;
+            while ri < rems.len() && rems[ri].0 == v as u32 {
+                ri += 1;
+            }
+            let row_adds = &adds[a0..ai];
+            let row_rems = &rems[r0..ri];
+            let start = indices.len();
+            if row_adds.is_empty() && row_rems.is_empty() {
+                indices.extend_from_slice(old_row);
+            } else {
+                merge_row(old_row, row_adds, row_rems, &mut indices);
+            }
+            let new_row = &indices[start..];
+            let changed = new_row != old_row;
+            // appended nodes count as changed even when isolated: their
+            // row, degree, and feature row are all new state
+            row_changed[v] = changed || v >= n_old;
+            deg_changed[v] = new_row.len() != old_row.len() || v >= n_old;
+            indptr[v + 1] = indices.len() as u32;
+        }
+        Ok(DeltaApplied {
+            csr: Csr { indptr, indices },
+            prev_nodes: n_old,
+            row_changed,
+            deg_changed,
+        })
+    }
+}
+
+/// Sorted merge of one destination row: `(old ∪ adds) \ rems`, ascending,
+/// deduplicated.  All three inputs are sorted ascending (adds/rems by the
+/// src component).
+fn merge_row(old: &[u32], adds: &[(u32, u32)], rems: &[(u32, u32)], out: &mut Vec<u32>) {
+    let base = out.len();
+    let (mut oi, mut ai) = (0usize, 0usize);
+    let mut ri = 0usize;
+    while oi < old.len() || ai < adds.len() {
+        let take_old = match (old.get(oi), adds.get(ai)) {
+            (Some(&o), Some(&(_, a))) => o <= a,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        let s = if take_old {
+            let s = old[oi];
+            oi += 1;
+            s
+        } else {
+            let s = adds[ai].1;
+            ai += 1;
+            s
+        };
+        while ri < rems.len() && rems[ri].1 < s {
+            ri += 1;
+        }
+        if ri < rems.len() && rems[ri].1 == s {
+            continue; // removed
+        }
+        // dedup within THIS row only (out is the shared indices vec)
+        if out.len() == base || out[out.len() - 1] != s {
+            out.push(s);
+        }
+    }
+}
+
+/// Result of applying a [`GraphDelta`] to a CSR: the repaired structure
+/// plus the dirty-row bookkeeping downstream incremental repairs need.
+#[derive(Debug, Clone)]
+pub struct DeltaApplied {
+    /// post-delta CSR (bitwise equal to a from-scratch rebuild)
+    pub csr: Csr,
+    /// node count before the delta
+    pub prev_nodes: usize,
+    /// per post-delta node: in-neighbour list changed (appended nodes
+    /// always true)
+    pub row_changed: Vec<bool>,
+    /// per post-delta node: in-degree changed (⊆ `row_changed`; appended
+    /// nodes always true).  A degree change moves the node's d̃ and hence
+    /// the GCN weight of *every* edge incident to it.
+    pub deg_changed: Vec<bool>,
+}
+
+impl DeltaApplied {
+    pub fn num_changed_rows(&self) -> usize {
+        self.row_changed.iter().filter(|&&c| c).count()
+    }
+}
+
+/// Per-layer dirty row sets for an `layers`-deep aggregation model over
+/// the **post-delta** CSR.
+///
+/// Layer 1's output row changes for: mutated destinations (`row_changed`),
+/// and destinations with a degree-changed in-neighbour (their GCN edge
+/// weight moved).  Each further layer expands one reverse hop: a row is
+/// dirty at layer `l+1` if it was dirty at `l` (self term) or any of its
+/// in-neighbours was (aggregation term).  Everything outside `out[l]` is
+/// unaffected at that depth, so a serving cache may keep those rows —
+/// the sets are deliberately *sound supersets*: re-computing a member row
+/// whose inputs happen to be unchanged reproduces its value bitwise.
+pub fn dirty_frontier(csr: &Csr, applied: &DeltaApplied, layers: usize) -> Vec<Vec<u32>> {
+    let n = csr.num_nodes();
+    let mut mask = applied.row_changed.clone();
+    debug_assert_eq!(mask.len(), n);
+    for v in 0..n {
+        if mask[v] {
+            continue;
+        }
+        if csr
+            .in_neighbors(v)
+            .iter()
+            .any(|&u| applied.deg_changed[u as usize])
+        {
+            mask[v] = true;
+        }
+    }
+    let collect = |m: &[bool]| -> Vec<u32> {
+        m.iter()
+            .enumerate()
+            .filter_map(|(v, &d)| d.then_some(v as u32))
+            .collect()
+    };
+    let mut out = Vec::with_capacity(layers);
+    if layers == 0 {
+        return out;
+    }
+    out.push(collect(&mask));
+    for _ in 1..layers {
+        let prev = mask.clone();
+        for v in 0..n {
+            if mask[v] {
+                continue;
+            }
+            if csr.in_neighbors(v).iter().any(|&u| prev[u as usize]) {
+                mask[v] = true;
+            }
+        }
+        out.push(collect(&mask));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{property, Gen};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeSet;
+
+    fn path4() -> Csr {
+        // 0 <-> 1 <-> 2 <-> 3
+        Csr::from_edges(4, &[(0, 1), (1, 0), (1, 2), (2, 1), (2, 3), (3, 2)]).unwrap()
+    }
+
+    #[test]
+    fn add_edge_repairs_one_row() {
+        let csr = path4();
+        let delta = GraphDelta {
+            add_edges: vec![(3, 0)],
+            ..Default::default()
+        };
+        let applied = delta.apply_to_csr(&csr).unwrap();
+        assert_eq!(applied.csr.in_neighbors(0), &[1, 3]);
+        assert!(applied.row_changed[0] && applied.deg_changed[0]);
+        assert!(!applied.row_changed[1] && !applied.deg_changed[3]);
+        let rebuilt = Csr::from_edges(
+            4,
+            &[(0, 1), (1, 0), (1, 2), (2, 1), (2, 3), (3, 2), (3, 0)],
+        )
+        .unwrap();
+        assert_eq!(applied.csr, rebuilt);
+    }
+
+    #[test]
+    fn add_existing_edge_is_a_clean_noop() {
+        let csr = path4();
+        let delta = GraphDelta {
+            add_edges: vec![(0, 1)],
+            ..Default::default()
+        };
+        let applied = delta.apply_to_csr(&csr).unwrap();
+        assert_eq!(applied.csr, csr);
+        assert_eq!(applied.num_changed_rows(), 0);
+    }
+
+    #[test]
+    fn remove_and_simultaneous_add_remove() {
+        let csr = path4();
+        let applied = GraphDelta {
+            remove_edges: vec![(1, 2), (9, 9)],
+            ..Default::default()
+        };
+        assert!(applied.apply_to_csr(&csr).is_err()); // out of range
+        let applied = GraphDelta {
+            // (3,0) both added and removed → ends removed
+            add_edges: vec![(3, 0)],
+            remove_edges: vec![(3, 0), (1, 2)],
+            ..Default::default()
+        }
+        .apply_to_csr(&csr)
+        .unwrap();
+        assert_eq!(applied.csr.in_neighbors(0), &[1]);
+        assert_eq!(applied.csr.in_neighbors(2), &[3]);
+        assert!(applied.row_changed[2] && applied.deg_changed[2]);
+        assert!(!applied.row_changed[0]);
+    }
+
+    #[test]
+    fn appended_nodes_are_always_dirty() {
+        let csr = path4();
+        let applied = GraphDelta {
+            add_nodes: 2,
+            new_features: vec![],
+            add_edges: vec![(4, 0), (0, 5)],
+            ..Default::default()
+        }
+        .apply_to_csr(&csr)
+        .unwrap();
+        assert_eq!(applied.csr.num_nodes(), 6);
+        assert_eq!(applied.csr.in_neighbors(5), &[0]);
+        assert!(applied.row_changed[4] && applied.deg_changed[4]); // isolated but new
+        assert!(applied.row_changed[5]);
+        assert!(applied.row_changed[0]); // gained in-edge from 4
+    }
+
+    #[test]
+    fn validate_checks_features() {
+        let d = GraphDelta {
+            add_nodes: 2,
+            new_features: vec![0.0; 3],
+            ..Default::default()
+        };
+        assert!(d.validate(4, 2).is_err()); // wrong length
+        let d = GraphDelta {
+            add_nodes: 1,
+            new_features: vec![0.0, f32::NAN],
+            ..Default::default()
+        };
+        assert!(d.validate(4, 2).is_err()); // non-finite
+        let d = GraphDelta {
+            add_nodes: 1,
+            new_features: vec![0.0, 1.0],
+            add_edges: vec![(4, 0)],
+            ..Default::default()
+        };
+        d.validate(4, 2).unwrap();
+    }
+
+    #[test]
+    fn dirty_frontier_expands_by_reverse_hops() {
+        // path 0-1-2-3, edge added at (3,0): layer-1 dirty = {0} ∪
+        // out-neighbours of deg-changed {0} = {0, 1}; layer 2 adds 2.
+        let csr = path4();
+        let applied = GraphDelta {
+            add_edges: vec![(3, 0)],
+            ..Default::default()
+        }
+        .apply_to_csr(&csr)
+        .unwrap();
+        let dirty = dirty_frontier(&applied.csr, &applied, 3);
+        assert_eq!(dirty[0], vec![0, 1]);
+        assert_eq!(dirty[1], vec![0, 1, 2]);
+        assert_eq!(dirty[2], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn incremental_apply_matches_full_rebuild_property() {
+        property("delta csr == from_edges rebuild", 60, |g: &mut Gen| {
+            let n0 = g.usize_range(2, 50);
+            let seed = g.usize_range(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let csr = crate::graph::generate::preferential_attachment(&mut rng, n0, 2);
+            let mut edge_set: BTreeSet<(u32, u32)> = csr.edge_list().into_iter().collect();
+
+            let add_nodes = g.usize_range(0, 4);
+            let n1 = n0 + add_nodes;
+            let adds: Vec<(u32, u32)> = (0..g.usize_range(0, 12))
+                .map(|_| (g.usize_range(0, n1) as u32, g.usize_range(0, n1) as u32))
+                .collect();
+            // removals: mix of existing and absent edges
+            let existing: Vec<(u32, u32)> = edge_set.iter().copied().collect();
+            let mut rems: Vec<(u32, u32)> = (0..g.usize_range(0, 6))
+                .map(|_| existing[g.usize_range(0, existing.len())])
+                .collect();
+            rems.push((
+                g.usize_range(0, n1) as u32,
+                g.usize_range(0, n1) as u32,
+            ));
+
+            let delta = GraphDelta {
+                add_nodes,
+                new_features: vec![],
+                add_edges: adds.clone(),
+                remove_edges: rems.clone(),
+            };
+            let applied = delta.apply_to_csr(&csr).unwrap();
+            applied.csr.validate().unwrap();
+
+            for e in adds {
+                edge_set.insert(e);
+            }
+            for e in rems {
+                edge_set.remove(&e);
+            }
+            let full: Vec<(u32, u32)> = edge_set.into_iter().collect();
+            let rebuilt = Csr::from_edges(n1, &full).unwrap();
+            assert_eq!(applied.csr, rebuilt, "seed {seed}");
+
+            // dirty bookkeeping is consistent with the structural diff
+            for v in 0..n1 {
+                let old_row: &[u32] = if v < n0 { csr.in_neighbors(v) } else { &[] };
+                let changed = rebuilt.in_neighbors(v) != old_row || v >= n0;
+                assert_eq!(applied.row_changed[v], changed, "row {v}");
+                let degc = rebuilt.in_degree(v) != old_row.len() || v >= n0;
+                assert_eq!(applied.deg_changed[v], degc, "deg {v}");
+            }
+        });
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod batch;
 pub mod csr;
+pub mod delta;
 pub mod generate;
 pub mod io;
 pub mod norm;
@@ -13,4 +14,5 @@ pub mod stats;
 
 pub use batch::GraphBatch;
 pub use csr::Csr;
+pub use delta::{dirty_frontier, DeltaApplied, GraphDelta};
 pub use io::{load_dataset, Dataset, GraphSet, NodeData};

@@ -10,6 +10,7 @@
 use crate::util::threadpool::{self, ParallelConfig};
 
 use super::csr::Csr;
+use super::delta::DeltaApplied;
 
 /// Edge-form graph with precomputed normalization weights.
 #[derive(Debug, Clone)]
@@ -98,6 +99,72 @@ impl EdgeForm {
     pub fn plan(&self) -> AggregationPlan {
         AggregationPlan::build(&self.dst, self.num_nodes)
     }
+
+    /// Incrementally splice this edge form (which must be
+    /// `EdgeForm::from_csr(old_csr)`) into the post-delta one — bitwise
+    /// identical to `EdgeForm::from_csr(&applied.csr)`, property-tested
+    /// below.
+    ///
+    /// [`Self::from_csr`] pays one `(d̃_s·d̃_d)^{-1/2}` (f64 mul + sqrt)
+    /// per edge; after a small delta almost every weight is unchanged, so
+    /// this splice copies clean weights through and recomputes only edges
+    /// with a degree-changed endpoint (plus the rows whose neighbour list
+    /// itself changed).  d̃ is integer-valued (`1 + in_degree` in f64), so
+    /// a freshly computed weight for an untouched edge would reproduce the
+    /// old bits anyway — copying just skips the arithmetic.
+    pub fn apply_delta(&self, old_csr: &Csr, applied: &DeltaApplied) -> EdgeForm {
+        let new_csr = &applied.csr;
+        let n_old = applied.prev_nodes;
+        let n_new = new_csr.num_nodes();
+        let e_old = old_csr.num_edges();
+        let e_new = new_csr.num_edges();
+        debug_assert_eq!(old_csr.num_nodes(), n_old);
+        debug_assert_eq!(self.num_edges(), e_old + n_old);
+
+        let mut dtilde = vec![1.0f64; n_new];
+        for (v, d) in dtilde.iter_mut().enumerate() {
+            *d += new_csr.in_degree(v) as f64;
+        }
+        let mut src = Vec::with_capacity(e_new + n_new);
+        let mut dst = Vec::with_capacity(e_new + n_new);
+        let mut gcn_w = Vec::with_capacity(e_new + n_new);
+        for v in 0..n_new {
+            let clean_row = v < n_old && !applied.row_changed[v];
+            for (k, &s) in new_csr.in_neighbors(v).iter().enumerate() {
+                src.push(s as i32);
+                dst.push(v as i32);
+                let su = s as usize;
+                if clean_row && !applied.deg_changed[su] {
+                    // clean row ⇒ same (src, dst) pair at the same in-row
+                    // offset of the old form, and neither endpoint's d̃
+                    // moved ⇒ the old weight is bit-exact
+                    gcn_w.push(self.gcn_w[old_csr.indptr[v] as usize + k]);
+                } else {
+                    gcn_w.push((1.0 / (dtilde[su] * dtilde[v]).sqrt()) as f32);
+                }
+            }
+        }
+        for v in 0..n_new {
+            src.push(v as i32);
+            dst.push(v as i32);
+            if v < n_old && !applied.deg_changed[v] {
+                gcn_w.push(self.gcn_w[e_old + v]);
+            } else {
+                gcn_w.push((1.0 / (dtilde[v] * dtilde[v]).sqrt()) as f32);
+            }
+        }
+        let mut sum_w = vec![1.0f32; e_new + n_new];
+        for w in sum_w[e_new..].iter_mut() {
+            *w = 0.0;
+        }
+        EdgeForm {
+            src,
+            dst,
+            gcn_w,
+            sum_w,
+            num_nodes: n_new,
+        }
+    }
 }
 
 /// Destination-grouped view of an edge list: for every destination node,
@@ -107,7 +174,7 @@ impl EdgeForm {
 /// embarrassingly row-parallel.  Building the plan is O(E) (a stable
 /// counting sort) — ~1/F of one aggregation pass — and the plan is
 /// reusable across layers and requests since it depends only on `dst`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AggregationPlan {
     /// edge indices grouped by destination, stable within a group
     edge_order: Vec<u32>,
@@ -137,6 +204,33 @@ impl AggregationPlan {
             edge_order,
             offsets,
             num_nodes,
+        }
+    }
+
+    /// Repair-free plan construction for the edge form of a CSR.  The
+    /// dst-major layout [`EdgeForm::from_csr`] emits (per-destination real
+    /// edges in CSR order, then the `n` self-loops) makes the grouped plan
+    /// an affine function of `indptr`: destination `v` owns edge slots
+    /// `indptr[v] .. indptr[v+1]` plus self-loop slot `E + v`, at offset
+    /// `indptr[v] + v`.  Writing that directly is a sequential O(E + N)
+    /// pass — no counting sort, no random scatter — and is bitwise equal
+    /// to [`Self::build`] over the same edge form (property-tested below),
+    /// which is what the incremental delta path relies on.
+    pub fn for_csr_edge_form(csr: &Csr) -> AggregationPlan {
+        let n = csr.num_nodes();
+        let e = csr.num_edges();
+        let mut offsets = vec![0u32; n + 1];
+        let mut edge_order = Vec::with_capacity(e + n);
+        for v in 0..n {
+            offsets[v] = csr.indptr[v] + v as u32;
+            edge_order.extend(csr.indptr[v]..csr.indptr[v + 1]);
+            edge_order.push((e + v) as u32);
+        }
+        offsets[n] = (e + n) as u32;
+        AggregationPlan {
+            edge_order,
+            offsets,
+            num_nodes: n,
         }
     }
 
@@ -245,6 +339,58 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn plan_for_csr_edge_form_matches_counting_sort() {
+        use crate::util::prop::{property, Gen};
+        use crate::util::rng::Rng;
+        property("direct plan == built plan", 40, |g: &mut Gen| {
+            let n = g.usize_range(1, 80);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+            let csr = crate::graph::generate::preferential_attachment(&mut rng, n, 2);
+            let ef = EdgeForm::from_csr(&csr);
+            assert_eq!(AggregationPlan::for_csr_edge_form(&csr), ef.plan());
+        });
+    }
+
+    #[test]
+    fn edge_form_delta_splice_matches_from_scratch() {
+        use crate::graph::delta::GraphDelta;
+        use crate::util::prop::{property, Gen};
+        use crate::util::rng::Rng;
+        property("edge-form splice == from_csr rebuild", 40, |g: &mut Gen| {
+            let n0 = g.usize_range(2, 60);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+            let csr = crate::graph::generate::preferential_attachment(&mut rng, n0, 2);
+            let ef = EdgeForm::from_csr(&csr);
+            let add_nodes = g.usize_range(0, 3);
+            let n1 = n0 + add_nodes;
+            let edges = csr.edge_list();
+            let delta = GraphDelta {
+                add_nodes,
+                new_features: vec![],
+                add_edges: (0..g.usize_range(0, 8))
+                    .map(|_| (g.usize_range(0, n1) as u32, g.usize_range(0, n1) as u32))
+                    .collect(),
+                remove_edges: (0..g.usize_range(0, 4))
+                    .map(|_| edges[g.usize_range(0, edges.len())])
+                    .collect(),
+            };
+            let applied = delta.apply_to_csr(&csr).unwrap();
+            let spliced = ef.apply_delta(&csr, &applied);
+            let want = EdgeForm::from_csr(&applied.csr);
+            assert_eq!(spliced.src, want.src);
+            assert_eq!(spliced.dst, want.dst);
+            assert_eq!(spliced.gcn_w, want.gcn_w); // bitwise: both f32 from same f64 exprs
+            assert_eq!(spliced.sum_w, want.sum_w);
+            assert_eq!(spliced.num_nodes, want.num_nodes);
+            // and the repaired plan matches the counting-sort rebuild
+            assert_eq!(
+                AggregationPlan::for_csr_edge_form(&applied.csr),
+                want.plan()
+            );
+        });
     }
 
     #[test]

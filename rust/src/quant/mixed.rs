@@ -54,6 +54,16 @@ impl NodeQuantParams {
         self.steps.len()
     }
 
+    /// Append one node's `(step, bits)` — the online NNS assignment path
+    /// for nodes that arrive after training (`gnn::incremental`).  The
+    /// step gets the same [`uniform::MIN_STEP`] floor as construction so
+    /// the fp/int step invariant holds for appended entries too (table
+    /// steps already carry the floor, making this a no-op in practice).
+    pub fn push(&mut self, step: f32, bits: u8) {
+        self.steps.push(step.max(uniform::MIN_STEP));
+        self.bits.push(bits);
+    }
+
     pub fn is_empty(&self) -> bool {
         self.steps.is_empty()
     }

@@ -108,6 +108,23 @@ impl NnsTable {
         (self.orig_index[idx] as usize, s, b)
     }
 
+    /// Checked [`Self::select`] for *online* assignment (unseen nodes at
+    /// serving time, Algorithm 1 over a live aggregation value): a
+    /// non-finite query means the caller's feature/activation row is
+    /// corrupt, and silently assigning it a bitwidth would bake garbage
+    /// into the resident quantization state — reject it instead.
+    pub fn try_select(&self, f: f32) -> Result<(usize, f32, u8)> {
+        if self.qmax.is_empty() {
+            return Err(Error::artifact("NNS selection over an empty table"));
+        }
+        if !f.is_finite() {
+            return Err(Error::dataset(format!(
+                "non-finite aggregation value {f} rejected by NNS assignment"
+            )));
+        }
+        Ok(self.select(f))
+    }
+
     /// Select per row of a [N, F] matrix using the row max-|x| (Algorithm 1
     /// line 4-5). Returns (orig_index, step, bits) per row.
     pub fn select_rows(&self, x: &[f32], feat_dim: usize) -> Vec<(usize, f32, u8)> {
@@ -225,6 +242,57 @@ mod tests {
             assert!(format!("{err}").contains("non-finite"));
         }
         assert!(NnsTable::try_new(&[0.1, 0.2], &[4, 4], true).is_ok());
+    }
+
+    #[test]
+    fn unseen_node_assignment_matches_brute_force_scan() {
+        // Online assignment for a node the model never saw: the chosen
+        // (step, bits) must be exactly the argmin of |s·levels(b) − f|
+        // over the learned table, with ties resolved to the lowest
+        // original group index — an independent brute-force scan here, not
+        // select_linear, so the two implementations can't share a bug.
+        property("unseen-node NNS == brute force", 80, |g: &mut Gen| {
+            let m = g.usize_range(1, 120);
+            let mut steps = g.vec_uniform(m, 0.005, 0.5);
+            if m >= 3 {
+                // force exact duplicates so ties actually occur
+                steps[m / 2] = steps[0];
+            }
+            let bits: Vec<u8> = (0..m)
+                .map(|i| if i == m / 2 || i == 0 { 4 } else { g.usize_range(1, 9) as u8 })
+                .collect();
+            let t = NnsTable::new(&steps, &bits, true);
+            for _ in 0..10 {
+                let f = g.f32_range(0.0, 5.0);
+                let (idx, s, b) = t.try_select(f).unwrap();
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for (i, (st, bt)) in steps.iter().zip(&bits).enumerate() {
+                    let d = (st * levels(*bt, true) as f32 - f).abs();
+                    if d < best_d {
+                        best_d = d;
+                        best = i;
+                    }
+                }
+                assert_eq!(idx, best, "f={f}");
+                assert_eq!((s, b), (steps[best], bits[best]), "f={f}");
+            }
+        });
+    }
+
+    #[test]
+    fn try_select_rejects_non_finite_aggregation_values() {
+        let t = NnsTable::new(&[0.1, 1.0], &[4, 4], true);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = t.try_select(bad).unwrap_err();
+            assert!(
+                format!("{err}").contains("non-finite"),
+                "expected non-finite rejection, got: {err}"
+            );
+        }
+        // finite values (including 0 and the far tail) still assign
+        assert_eq!(t.try_select(0.0).unwrap().0, 0);
+        assert_eq!(t.try_select(1e30).unwrap().0, 1);
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Dynamic-graph serving parity: random [`GraphDelta`] sequences applied
+//! **incrementally** to a live `NativeExecutor` (CSR row repair, GCN-weight
+//! splice, sort-free plan reconstruction, L-hop-frontier logits patching,
+//! online NNS bitwidth assignment for appended nodes) must be **bitwise
+//! identical** to rebuilding everything from scratch over the post-delta
+//! edge set: the aggregation plan, the fp logits, and the true-integer-path
+//! logits.  The executors run at 1 and 4 threads while the rebuilds run at
+//! the *other* thread count, so every assertion simultaneously checks
+//! incremental-vs-rebuild and thread-count invariance.
+//!
+//! The from-scratch reference uses the executor's own post-delta
+//! quantization parameters (`resident_quant_params`): the NNS-assigned
+//! `(step, bits)` of appended nodes are resident model state, exactly like
+//! the learned entries — a rebuild with the same state must reproduce the
+//! served logits bit-for-bit.
+
+use std::collections::BTreeSet;
+
+use a2q::coordinator::{BatchExecutor, NativeExecutor};
+use a2q::gnn::{forward_fp_with, forward_int_with, GnnModel, GraphInput, LayerParams, QuantMethod};
+use a2q::graph::delta::GraphDelta;
+use a2q::graph::generate::preferential_attachment;
+use a2q::graph::io::{Dataset, NodeData};
+use a2q::graph::norm::EdgeForm;
+use a2q::graph::Csr;
+use a2q::quant::mixed::NodeQuantParams;
+use a2q::tensor::Matrix;
+use a2q::util::json::Json;
+use a2q::util::prop::{property, Gen};
+use a2q::util::rng::Rng;
+use a2q::util::threadpool::ParallelConfig;
+
+fn random_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix<f32> {
+    Matrix::from_vec(rows, cols, g.vec_normal(rows * cols, 0.5)).unwrap()
+}
+
+fn node_quant(g: &mut Gen, n: usize, signed: bool) -> NodeQuantParams {
+    let steps = g.vec_uniform(n, 0.02, 0.1);
+    let bits: Vec<u8> = (0..n).map(|_| g.usize_range(2, 9) as u8).collect();
+    NodeQuantParams::new(steps, bits, signed).unwrap()
+}
+
+fn random_model(
+    g: &mut Gen,
+    arch: &str,
+    n: usize,
+    in_dim: usize,
+    hidden: usize,
+    out_dim: usize,
+    n_layers: usize,
+) -> GnnModel {
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let d_in = if l == 0 { in_dim } else { hidden };
+        let d_out = if l == n_layers - 1 { out_dim } else { hidden };
+        let lay = match arch {
+            "gcn" => LayerParams {
+                w: Some(random_matrix(g, d_in, d_out)),
+                b: g.vec_uniform(d_out, -0.1, 0.1),
+                w_steps: g.vec_uniform(d_out, 0.02, 0.08),
+                feat: Some(node_quant(g, n, l == 0)),
+                ..Default::default()
+            },
+            "gin" => LayerParams {
+                w: Some(random_matrix(g, d_in, hidden)),
+                b: g.vec_uniform(hidden, -0.1, 0.1),
+                w_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                w2: Some(random_matrix(g, hidden, d_out)),
+                b2: g.vec_uniform(d_out, -0.1, 0.1),
+                w2_steps: g.vec_uniform(d_out, 0.02, 0.08),
+                eps: g.f32_range(0.0, 0.2),
+                feat: Some(node_quant(g, n, l == 0)),
+                feat2: Some(node_quant(g, n, false)),
+                ..Default::default()
+            },
+            other => panic!("unexpected arch {other}"),
+        };
+        layers.push(lay);
+    }
+    GnnModel {
+        name: format!("delta-{arch}"),
+        arch: arch.to_string(),
+        dataset: "synthetic".to_string(),
+        method: QuantMethod::A2q,
+        layers,
+        head: None,
+        dq_steps: Vec::new(),
+        skip_input_quant: false,
+        node_level: true,
+        num_nodes: n,
+        in_dim,
+        out_dim,
+        heads: 1,
+        graph_capacity: 0,
+        accuracy: 0.0,
+        avg_bits: 4.0,
+        expected_head: Vec::new(),
+        manifest: Json::Null,
+    }
+}
+
+fn node_dataset(csr: Csr, features: Vec<f32>, feat_dim: usize) -> Dataset {
+    let n = csr.num_nodes();
+    Dataset::Node(NodeData {
+        name: "synthetic".into(),
+        csr,
+        num_features: feat_dim,
+        num_classes: 2,
+        features,
+        labels: vec![0; n],
+        train_mask: vec![false; n],
+        val_mask: vec![false; n],
+        test_mask: vec![false; n],
+    })
+}
+
+fn random_delta(
+    g: &mut Gen,
+    n_cur: usize,
+    in_dim: usize,
+    edge_set: &BTreeSet<(u32, u32)>,
+) -> GraphDelta {
+    let add_nodes = g.usize_range(0, 3);
+    let n_new = n_cur + add_nodes;
+    let existing: Vec<(u32, u32)> = edge_set.iter().copied().collect();
+    let add_edges: Vec<(u32, u32)> = (0..g.usize_range(0, 10))
+        .map(|_| (g.usize_range(0, n_new) as u32, g.usize_range(0, n_new) as u32))
+        .collect();
+    let mut remove_edges: Vec<(u32, u32)> = if existing.is_empty() {
+        Vec::new()
+    } else {
+        (0..g.usize_range(0, 5))
+            .map(|_| existing[g.usize_range(0, existing.len())])
+            .collect()
+    };
+    // one absent removal exercises the no-op path
+    remove_edges.push((g.usize_range(0, n_new) as u32, g.usize_range(0, n_new) as u32));
+    GraphDelta {
+        add_nodes,
+        new_features: g.vec_normal(add_nodes * in_dim, 0.5),
+        add_edges,
+        remove_edges,
+    }
+}
+
+/// Clone the original model with the executor's post-delta quantization
+/// parameters and node count — the state a from-scratch rebuild serves.
+fn extended_model(original: &GnnModel, exec: &NativeExecutor, n_cur: usize) -> GnnModel {
+    let mut m = original.clone();
+    for (lay, (f, f2)) in m.layers.iter_mut().zip(exec.resident_quant_params()) {
+        lay.feat = f;
+        lay.feat2 = f2;
+    }
+    m.num_nodes = n_cur;
+    m
+}
+
+#[test]
+fn incremental_deltas_bitwise_match_full_rebuild() {
+    property("delta sequence == rebuild (plan/fp/int)", 6, |g: &mut Gen| {
+        let n0 = g.usize_range(16, 48);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr0 = preferential_attachment(&mut rng, n0, 2);
+        let in_dim = g.usize_range(2, 6);
+        let hidden = g.usize_range(2, 8);
+        let out_dim = g.usize_range(2, 5);
+        let n_layers = g.usize_range(1, 4);
+        let features0 = g.vec_normal(n0 * in_dim, 0.5);
+
+        let one = ParallelConfig::serial();
+        let four = ParallelConfig {
+            threads: 4,
+            min_rows_per_task: 8,
+        };
+
+        for arch in ["gcn", "gin"] {
+            let model = random_model(g, arch, n0, in_dim, hidden, out_dim, n_layers);
+            let ds = node_dataset(csr0.clone(), features0.clone(), in_dim);
+            // fp executor patched at 4 threads, verified against 1-thread
+            // rebuilds; int executor the other way around — every compare
+            // is simultaneously a threads ∈ {1,4} bitwise check
+            let exec_fp = NativeExecutor::new(model.clone(), Some(&ds))
+                .unwrap()
+                .with_parallelism(four);
+            let exec_int = NativeExecutor::new(model.clone(), Some(&ds))
+                .unwrap()
+                .with_int_path(true)
+                .with_parallelism(one);
+            // warm the fp session (delta patches a served cache); leave the
+            // int session cold (delta warms it itself)
+            exec_fp.run_node_batch(&[0]).unwrap();
+
+            let mut edge_set: BTreeSet<(u32, u32)> = csr0.edge_list().into_iter().collect();
+            let mut features = features0.clone();
+            let mut n_cur = n0;
+
+            for step in 0..2 {
+                let delta = random_delta(g, n_cur, in_dim, &edge_set);
+                exec_fp.apply_delta(&delta).unwrap();
+                exec_int.apply_delta(&delta).unwrap();
+                // mirror the delta set-wise for the from-scratch rebuild
+                n_cur += delta.add_nodes;
+                features.extend_from_slice(&delta.new_features);
+                for &e in &delta.add_edges {
+                    edge_set.insert(e);
+                }
+                for &e in &delta.remove_edges {
+                    edge_set.remove(&e);
+                }
+
+                let full: Vec<(u32, u32)> = edge_set.iter().copied().collect();
+                let rebuilt = Csr::from_edges(n_cur, &full).unwrap();
+                let ef = EdgeForm::from_csr(&rebuilt);
+
+                // 1. plans bitwise identical
+                let plan = exec_fp.resident_plan().expect("resident plan");
+                assert_eq!(plan, ef.plan(), "{arch} step {step}: plan diverged");
+                assert_eq!(exec_fp.resident_nodes(), n_cur);
+
+                // 2. fp logits bitwise identical to a 1-thread rebuild
+                let input = GraphInput::node_level(&features, in_dim, &ef);
+                let fp_model = extended_model(&model, &exec_fp, n_cur);
+                let want_fp = forward_fp_with(&fp_model, &input, &one);
+                let all: Vec<u32> = (0..n_cur as u32).collect();
+                let got_fp = exec_fp.run_node_batch(&all).unwrap();
+                for (v, row) in got_fp.iter().enumerate() {
+                    assert_eq!(
+                        row.as_slice(),
+                        want_fp.row(v),
+                        "{arch} step {step}: fp row {v} diverged"
+                    );
+                }
+
+                // 3. int logits bitwise identical to a 4-thread rebuild
+                let int_model = extended_model(&model, &exec_int, n_cur);
+                let want_int = forward_int_with(&int_model, &input, &four);
+                let got_int = exec_int.run_node_batch(&all).unwrap();
+                for (v, row) in got_int.iter().enumerate() {
+                    assert_eq!(
+                        row.as_slice(),
+                        want_int.row(v),
+                        "{arch} step {step}: int row {v} diverged"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn appended_nodes_serve_like_retrained_residents() {
+    // After a delta appends nodes, a *fresh* executor built over the
+    // post-delta graph + the post-delta (NNS-extended) parameters must
+    // serve the exact logits the incrementally-updated executor serves —
+    // i.e. assignment is persistent resident state, not a per-request hack.
+    property("unseen-node assignment is persistent state", 4, |g: &mut Gen| {
+        let n0 = g.usize_range(12, 30);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr0 = preferential_attachment(&mut rng, n0, 2);
+        let in_dim = g.usize_range(2, 5);
+        let features0 = g.vec_normal(n0 * in_dim, 0.5);
+        let model = random_model(g, "gin", n0, in_dim, 4, 3, 2);
+        let ds = node_dataset(csr0.clone(), features0.clone(), in_dim);
+        let exec = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+
+        let delta = GraphDelta {
+            add_nodes: 2,
+            new_features: g.vec_normal(2 * in_dim, 0.5),
+            add_edges: vec![
+                (n0 as u32, 0),
+                (0, n0 as u32),
+                (n0 as u32 + 1, 1),
+                (1, n0 as u32 + 1),
+            ],
+            remove_edges: vec![],
+        };
+        exec.apply_delta(&delta).unwrap();
+        let n_cur = n0 + 2;
+        let mut features = features0.clone();
+        features.extend_from_slice(&delta.new_features);
+        let mut edges = csr0.edge_list();
+        edges.extend_from_slice(&delta.add_edges);
+        let rebuilt = Csr::from_edges(n_cur, &edges).unwrap();
+
+        let ext = extended_model(&model, &exec, n_cur);
+        let fresh = NativeExecutor::new(
+            ext,
+            Some(&node_dataset(rebuilt, features, in_dim)),
+        )
+        .unwrap()
+        .with_parallelism(ParallelConfig::serial());
+
+        let all: Vec<u32> = (0..n_cur as u32).collect();
+        assert_eq!(
+            exec.run_node_batch(&all).unwrap(),
+            fresh.run_node_batch(&all).unwrap(),
+            "fresh session over extended state diverged from patched session"
+        );
+    });
+}
