@@ -1,0 +1,169 @@
+//! Bench: shard-parallel forward over a partitioned resident graph.
+//!
+//! Records into `BENCH_sharded_forward.json`:
+//!
+//! * `sharded/forward_fp/s=S` — one full fp forward at S ∈ {1, 2, 4, 8}
+//!   shards (thread budget = S, so S = 1 is the single-shard serial
+//!   baseline the others are bitwise-identical to);
+//! * `sharded/scaling_vs_s1/s=S` — speedup over S = 1;
+//! * `sharded/halo_fraction/s=S` — fraction of edges whose source is a
+//!   halo mirror (the cross-shard traffic a distributed deployment pays);
+//! * `sharded/halo_nodes/s=S`, `sharded/partition_imbalance/s=S` — halo
+//!   mirror count and max/mean load of the degree-aware partitioner;
+//! * `sharded/build/s=S` — partition + local-view build time;
+//! * `sharded/forward_int/s=S_max` — the integer path (per-shard packed
+//!   slabs) at the widest fan-out.
+//!
+//! Default profile runs a 1M-node power-law graph (the ROADMAP's
+//! production-scale shape); `--quick` (CI) shrinks it to a smoke test so
+//! regressions in the shard path break the build, not just numbers.
+
+use a2q::gnn::{
+    forward_fp_sharded, forward_int_sharded, GnnModel, LayerParams, PreparedModel, QuantMethod,
+};
+use a2q::graph::generate::preferential_attachment;
+use a2q::graph::norm::EdgeForm;
+use a2q::graph::shard::ShardedGraph;
+use a2q::quant::mixed::NodeQuantParams;
+use a2q::tensor::Matrix;
+use a2q::util::bench::{black_box, BenchConfig, BenchRunner};
+use a2q::util::json::Json;
+use a2q::util::prop::Gen;
+use a2q::util::rng::Rng;
+use a2q::util::threadpool::ParallelConfig;
+
+fn median_of(runner: &BenchRunner, name: &str) -> f64 {
+    runner
+        .results
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.median_ns())
+        .unwrap_or(0.0)
+}
+
+/// Random node-level A²Q GCN over `n` nodes (per-node learned bitwidths,
+/// the layout whose low-bit rows keep shard payloads small).
+fn synth_gcn(n: usize, in_dim: usize, hidden: usize, out_dim: usize) -> GnnModel {
+    let mut g = Gen::new(42);
+    let layer = |g: &mut Gen, d_in: usize, d_out: usize, signed: bool| LayerParams {
+        w: Some(Matrix::from_vec(d_in, d_out, g.vec_normal(d_in * d_out, 0.5)).unwrap()),
+        b: g.vec_uniform(d_out, -0.1, 0.1),
+        w_steps: g.vec_uniform(d_out, 0.02, 0.08),
+        feat: Some(
+            NodeQuantParams::new(
+                g.vec_uniform(n, 0.02, 0.1),
+                (0..n).map(|_| g.usize_range(2, 9) as u8).collect(),
+                signed,
+            )
+            .unwrap(),
+        ),
+        ..Default::default()
+    };
+    let layers = vec![
+        layer(&mut g, in_dim, hidden, true),
+        layer(&mut g, hidden, out_dim, false),
+    ];
+    GnnModel {
+        name: "bench-sharded-gcn".into(),
+        arch: "gcn".into(),
+        dataset: "synthetic".into(),
+        method: QuantMethod::A2q,
+        layers,
+        head: None,
+        dq_steps: Vec::new(),
+        skip_input_quant: false,
+        node_level: true,
+        num_nodes: n,
+        in_dim,
+        out_dim,
+        heads: 1,
+        graph_capacity: 0,
+        accuracy: 0.0,
+        avg_bits: 4.0,
+        expected_head: Vec::new(),
+        manifest: Json::Null,
+    }
+}
+
+fn main() {
+    let quick = BenchConfig::quick_requested();
+    let mut runner = BenchRunner::new(BenchConfig::from_args());
+    let mut rng = Rng::new(11);
+
+    let (n, in_dim, hidden, out_dim) = if quick {
+        (10_000, 8, 16, 4)
+    } else {
+        (1_000_000, 8, 16, 4)
+    };
+    let csr = preferential_attachment(&mut rng, n, 3);
+    let ef = EdgeForm::from_csr(&csr);
+    let mut g = Gen::new(7);
+    let features = g.vec_normal(n * in_dim, 0.5);
+    let model = synth_gcn(n, in_dim, hidden, out_dim);
+    let prep = PreparedModel::prepare(model).expect("prepare session");
+
+    let shard_counts = [1usize, 2, 4, 8];
+    let mut fp_medians = Vec::with_capacity(shard_counts.len());
+    let mut last_graph: Option<ShardedGraph> = None;
+    for &s in &shard_counts {
+        // partition + local-view build cost
+        let build_name = format!("sharded/build/s={s}");
+        runner.bench(&build_name, || {
+            black_box(ShardedGraph::build(&csr, &ef, s).expect("shard build"));
+        });
+        let sg = ShardedGraph::build(&csr, &ef, s).expect("shard build");
+        let stats = sg.halo_stats();
+        runner.report_metric(
+            &format!("sharded/halo_fraction/s={s}"),
+            stats.halo_fraction(),
+            "fraction of edges crossing shards",
+        );
+        runner.report_metric(
+            &format!("sharded/halo_nodes/s={s}"),
+            stats.halo_nodes as f64,
+            "total halo mirror nodes",
+        );
+        let max_load = *sg.partition.load.iter().max().unwrap_or(&0) as f64;
+        let mean_load = sg.partition.load.iter().sum::<u64>() as f64
+            / sg.partition.load.len().max(1) as f64;
+        runner.report_metric(
+            &format!("sharded/partition_imbalance/s={s}"),
+            if mean_load > 0.0 { max_load / mean_load } else { 0.0 },
+            "max/mean shard load (degree-weighted)",
+        );
+
+        let cfg = ParallelConfig {
+            threads: s,
+            min_rows_per_task: 1,
+        };
+        let fp_name = format!("sharded/forward_fp/s={s}");
+        runner.bench(&fp_name, || {
+            black_box(forward_fp_sharded(&prep, &features, &sg, &cfg));
+        });
+        fp_medians.push(median_of(&runner, &fp_name));
+        last_graph = Some(sg);
+    }
+    let base = fp_medians[0];
+    for (&s, &med) in shard_counts.iter().zip(&fp_medians) {
+        runner.report_metric(
+            &format!("sharded/scaling_vs_s1/s={s}"),
+            if med > 0.0 { base / med } else { 0.0 },
+            "x speedup of S shards over the single-shard forward",
+        );
+    }
+
+    // the integer path (per-shard packed slabs) at the widest fan-out
+    let s_max = *shard_counts.last().unwrap();
+    let sg = last_graph.expect("built above");
+    let cfg = ParallelConfig {
+        threads: s_max,
+        min_rows_per_task: 1,
+    };
+    runner.bench(&format!("sharded/forward_int/s={s_max}"), || {
+        black_box(forward_int_sharded(&prep, &features, &sg, &cfg));
+    });
+
+    runner
+        .write_json(std::path::Path::new("BENCH_sharded_forward.json"))
+        .expect("write BENCH_sharded_forward.json");
+}

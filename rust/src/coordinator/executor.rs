@@ -23,6 +23,15 @@
 //! and only the delta's L-hop reverse frontier of logits rows is
 //! recomputed against the resident per-layer activation cache — untouched
 //! rows survive the epoch change bit-for-bit.
+//!
+//! [`NativeExecutor::with_shards`] turns a node-level session into a
+//! **sharded resident**: the graph is partitioned degree-aware
+//! (`graph::shard`), epoch recomputes run shard-parallel with a
+//! halo-exchange step between layers (`gnn::forward_{fp,int}_sharded`,
+//! bitwise identical to the single-shard path), node batches are served
+//! from per-shard logits blocks, and `apply_delta` rebuilds only the
+//! owning shards' local views — the epoch bump stays exactly-once and
+//! atomic *across* shards.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -30,15 +39,17 @@ use std::sync::{Arc, Mutex, RwLock};
 use crate::error::{Error, Result};
 use crate::gnn::incremental::{build_assign_tables, patch_activations, NnsAssignTables};
 use crate::gnn::{
-    forward_fp_prepared_recording, forward_fp_prepared_with_plan,
-    forward_int_prepared_recording, forward_int_prepared_with_plan, GnnModel, GraphInput,
-    PreparedModel, QuantMethod,
+    forward_fp_prepared_recording, forward_fp_prepared_with_plan, forward_fp_sharded,
+    forward_fp_sharded_recording, forward_int_prepared_recording,
+    forward_int_prepared_with_plan, forward_int_sharded, forward_int_sharded_recording,
+    GnnModel, GraphInput, PreparedModel,
 };
 use crate::graph::batch::GraphBatch;
 use crate::graph::csr::Csr;
 use crate::graph::delta::{dirty_frontier, GraphDelta};
 use crate::graph::io::{Dataset, NodeData, SmallGraph};
 use crate::graph::norm::{AggregationPlan, EdgeForm};
+use crate::graph::shard::{HaloStats, ShardedGraph};
 use crate::quant::mixed::NodeQuantParams;
 use crate::runtime::engine::EngineHandle;
 use crate::runtime::{ExecInput, ModelArtifact};
@@ -56,6 +67,12 @@ pub struct DeltaReport {
     pub recomputed_rows: usize,
     /// nodes appended (each got NNS-assigned quantization parameters)
     pub new_nodes: usize,
+    /// sharded residents: shards whose local view was rebuilt (owners of
+    /// dirty rows + shards mirroring a degree-changed node); 0 unsharded
+    pub shards_touched: usize,
+    /// sharded residents: Σ mirrored halo nodes after the update; 0
+    /// unsharded
+    pub halo_nodes: usize,
 }
 
 /// A backend able to run the two batch kinds.
@@ -310,10 +327,22 @@ struct NodeSide {
     num_nodes: usize,
 }
 
+/// Sharded resident state: the partitioned graph plus one epoch-tagged
+/// logits block per shard (rows in the shard's `owned` order).  Blocks
+/// are installed atomically under the state lock with the session's
+/// single epoch counter — the epoch bump of a delta is exactly-once
+/// *across* shards, never per shard.
+struct ShardedState {
+    graph: ShardedGraph,
+    /// per-shard `LogitsCache` slot: `(epoch, owned-row logits block)`
+    logits: Vec<Option<(u64, Arc<Matrix<f32>>)>>,
+}
+
 /// Everything [`NativeExecutor::apply_delta`] mutates, behind one lock:
 /// prepared model state (per-node quantization parameters grow with the
 /// graph), the resident graph, its plan, the per-layer activation cache,
-/// and the frozen NNS assignment tables.
+/// the frozen NNS assignment tables, and (sharded sessions) the per-shard
+/// local views + logits blocks.
 struct Resident {
     prepared: PreparedModel,
     node: Option<NodeSide>,
@@ -328,6 +357,71 @@ struct Resident {
     /// frozen at the first delta (later deltas must not search previously
     /// assigned copies)
     assign_tables: Option<Vec<NnsAssignTables>>,
+    /// sharded resident mode ([`NativeExecutor::with_shards`])
+    sharded: Option<ShardedState>,
+}
+
+/// Scatter a full `[N, C]` logits matrix into per-shard owned-row blocks
+/// tagged with `epoch`.  Untouched rows land bit-identically (the block is
+/// a row copy), so a delta's unaffected shards keep serving the same bits.
+fn refresh_shard_logits(sh: &mut ShardedState, logits: &Matrix<f32>, epoch: u64) {
+    debug_assert_eq!(sh.logits.len(), sh.graph.num_shards());
+    for (s, local) in sh.graph.shards.iter().enumerate() {
+        let mut block = Matrix::zeros(local.owned.len(), logits.cols);
+        for (li, &gid) in local.owned.iter().enumerate() {
+            block.row_mut(li).copy_from_slice(logits.row(gid as usize));
+        }
+        sh.logits[s] = Some((epoch, Arc::new(block)));
+    }
+}
+
+/// Frontier-proportional alternative to [`refresh_shard_logits`] for the
+/// delta patch path: rows outside the recomputed `frontier` are
+/// bit-identical across the epoch (the partial-invalidation invariant),
+/// so only frontier rows are rewritten in place and blocks whose shard
+/// gained appended nodes grow at the tail (owned lists grow append-only
+/// with maximal ids, so existing row positions are stable; the frontier
+/// contains every appended node by construction).  Returns `false` —
+/// leaving the blocks untouched — when any block is missing or stale for
+/// `old_epoch`, in which case the caller falls back to the full scatter.
+fn patch_shard_logits(
+    sh: &mut ShardedState,
+    logits: &Matrix<f32>,
+    old_epoch: u64,
+    new_epoch: u64,
+    frontier: &[u32],
+) -> bool {
+    debug_assert_eq!(sh.logits.len(), sh.graph.num_shards());
+    let patchable = sh.logits.iter().zip(&sh.graph.shards).all(|(b, local)| {
+        matches!(b, Some((e, blk))
+            if *e == old_epoch
+                && blk.cols == logits.cols
+                && blk.rows <= local.owned.len())
+    });
+    if !patchable {
+        return false;
+    }
+    for (slot, local) in sh.logits.iter_mut().zip(&sh.graph.shards) {
+        let (e, blk) = slot.as_mut().expect("checked patchable above");
+        if blk.rows < local.owned.len() {
+            let old = Arc::make_mut(blk);
+            let mut grown = Matrix::zeros(local.owned.len(), logits.cols);
+            grown.data[..old.data.len()].copy_from_slice(&old.data);
+            for (li, &gid) in local.owned.iter().enumerate().skip(old.rows) {
+                grown.row_mut(li).copy_from_slice(logits.row(gid as usize));
+            }
+            *old = grown;
+        }
+        *e = new_epoch;
+    }
+    for &v in frontier {
+        let (s, pos) = sh.graph.locate(v);
+        let (_, blk) = sh.logits[s].as_mut().expect("checked patchable above");
+        Arc::make_mut(blk)
+            .row_mut(pos)
+            .copy_from_slice(logits.row(v as usize));
+    }
+    true
 }
 
 /// Pure-rust backend over `gnn::infer` (fp emulation by default, true
@@ -398,6 +492,7 @@ impl NativeExecutor {
                 caps,
                 acts: None,
                 assign_tables: None,
+                sharded: None,
             }),
             parallel: ParallelConfig::from_env(),
             use_int_path: false,
@@ -417,6 +512,43 @@ impl NativeExecutor {
     pub fn with_int_path(mut self, on: bool) -> NativeExecutor {
         self.use_int_path = on;
         self
+    }
+
+    /// Switch this session into **sharded resident mode**: the resident
+    /// graph is partitioned into `num_shards` shards by the degree-aware
+    /// partitioner, full-graph recomputes run shard-parallel
+    /// (`forward_{fp,int}_sharded`, bitwise identical to the single-shard
+    /// path), node batches are served from per-shard logits blocks, and
+    /// [`Self::apply_delta`] rebuilds only the owning shards' local views.
+    /// Node-level gcn/gin sessions only.
+    pub fn with_shards(self, num_shards: usize) -> Result<NativeExecutor> {
+        {
+            let mut st = self.state.write().unwrap();
+            let model = &st.prepared.model;
+            if model.arch == "gat" || model.head.is_some() || !model.node_level {
+                return Err(Error::coordinator(
+                    "sharded residents need a node-level gcn/gin session",
+                ));
+            }
+            let side = st.node.as_ref().ok_or_else(|| {
+                Error::coordinator("sharded residents need a resident node dataset")
+            })?;
+            let graph = ShardedGraph::build(&side.csr, &side.edges, num_shards)?;
+            let s = graph.num_shards();
+            st.sharded = Some(ShardedState {
+                graph,
+                logits: vec![None; s],
+            });
+        }
+        Ok(self)
+    }
+
+    /// Shard layout of a sharded session: `(num_shards, halo stats)`.
+    pub fn shard_stats(&self) -> Option<(usize, HaloStats)> {
+        let st = self.state.read().unwrap();
+        st.sharded
+            .as_ref()
+            .map(|s| (s.graph.num_shards(), s.graph.halo_stats()))
     }
 
     pub fn parallelism(&self) -> ParallelConfig {
@@ -471,13 +603,92 @@ impl NativeExecutor {
         self.logits.epoch()
     }
 
-    /// Whether the integer-path replication (vs. the fp fallback) governs
-    /// this session's resident activations.
-    fn int_semantics(model: &GnnModel, use_int_path: bool) -> bool {
-        use_int_path
-            && model.method == QuantMethod::A2q
-            && model.head.is_none()
-            && model.arch != "gat"
+    /// Serve node rows of a sharded session from the per-shard logits
+    /// blocks, recomputing with one shard-parallel forward when the
+    /// blocks are stale for the current epoch.  The recompute runs outside
+    /// the write lock and installs epoch-checked, mirroring
+    /// [`LogitsCache::get_or_compute`]: a concurrent delta keeps a stale
+    /// result out of the blocks while this call still serves what it
+    /// computed.
+    fn sharded_node_rows(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let epoch = self.logits.epoch();
+        {
+            let st = self.state.read().unwrap();
+            let sh = st.sharded.as_ref().expect("sharded session");
+            if sh
+                .logits
+                .iter()
+                .all(|b| matches!(b, Some((e, _)) if *e == epoch))
+            {
+                return node_ids
+                    .iter()
+                    .map(|&v| {
+                        if v as usize >= sh.graph.num_nodes {
+                            return Err(Error::coordinator(format!(
+                                "node {v} out of range"
+                            )));
+                        }
+                        let (s, pos) = sh.graph.locate(v);
+                        let (_, block) =
+                            sh.logits[s].as_ref().expect("checked fresh above");
+                        Ok(block.row(pos).to_vec())
+                    })
+                    .collect();
+            }
+        }
+        let record = self.dynamic.load(Ordering::Acquire);
+        let (out, acts) = {
+            let st = self.state.read().unwrap();
+            let side = st
+                .node
+                .as_ref()
+                .ok_or_else(|| Error::coordinator("not a node-level executor"))?;
+            let shg = &st.sharded.as_ref().expect("sharded session").graph;
+            let mut acts = Vec::new();
+            let out = match (self.use_int_path, record) {
+                (true, true) => forward_int_sharded_recording(
+                    &st.prepared,
+                    &side.features,
+                    shg,
+                    &self.parallel,
+                    &mut acts,
+                ),
+                (false, true) => forward_fp_sharded_recording(
+                    &st.prepared,
+                    &side.features,
+                    shg,
+                    &self.parallel,
+                    &mut acts,
+                ),
+                (true, false) => {
+                    forward_int_sharded(&st.prepared, &side.features, shg, &self.parallel)
+                }
+                (false, false) => {
+                    forward_fp_sharded(&st.prepared, &side.features, shg, &self.parallel)
+                }
+            };
+            (out, record.then_some(acts))
+        };
+        {
+            let mut st = self.state.write().unwrap();
+            if self.logits.epoch() == epoch {
+                if let Some(acts) = acts {
+                    st.acts = Some((epoch, acts));
+                }
+                let sh = st.sharded.as_mut().expect("sharded session");
+                refresh_shard_logits(sh, &out, epoch);
+            }
+        }
+        node_ids
+            .iter()
+            .map(|&v| {
+                let v = v as usize;
+                if v >= out.rows {
+                    return Err(Error::coordinator(format!("node {v} out of range")));
+                }
+                Ok(out.row(v).to_vec())
+            })
+            .collect()
     }
 
     fn full_graph_logits(&self) -> Result<Arc<Matrix<f32>>> {
@@ -565,7 +776,7 @@ impl NativeExecutor {
         })?;
         let in_dim = st.prepared.model.in_dim;
         let n_layers = st.prepared.model.layers.len();
-        let int_path = Self::int_semantics(&st.prepared.model, self.use_int_path);
+        let int_path = st.prepared.int_path_semantics(self.use_int_path);
         delta.validate(side.num_nodes, in_dim)?;
         // this session is dynamic from here on: epoch recomputes keep the
         // per-layer activation cache warm for future deltas
@@ -585,11 +796,27 @@ impl NativeExecutor {
                     self.logits.set(new_epoch, Arc::new(logits_mat));
                 }
             }
+            // sharded blocks carry over bit-for-bit under the new epoch
+            let halo_nodes = match st.sharded.as_mut() {
+                Some(sh) => {
+                    for slot in sh.logits.iter_mut() {
+                        if let Some((e, _)) = slot {
+                            if *e == epoch {
+                                *e = new_epoch;
+                            }
+                        }
+                    }
+                    sh.graph.halo_stats().halo_nodes
+                }
+                None => 0,
+            };
             return Ok(DeltaReport {
                 epoch: new_epoch,
                 num_nodes: side.num_nodes,
                 recomputed_rows: 0,
                 new_nodes: 0,
+                shards_touched: 0,
+                halo_nodes,
             });
         }
 
@@ -628,6 +855,24 @@ impl NativeExecutor {
                     &mut rec,
                 );
             }
+            // sharded resident: rebuild only the affected shards' local
+            // views against the post-delta structure (before it moves)
+            let (shards_touched, halo_nodes) = match st.sharded.as_mut() {
+                Some(sh) => {
+                    let touched = sh
+                        .graph
+                        .apply_delta(
+                            &applied.csr,
+                            &new_edges,
+                            0,
+                            &applied.row_changed,
+                            &applied.deg_changed,
+                        )
+                        .len();
+                    (touched, sh.graph.halo_stats().halo_nodes)
+                }
+                None => (0, 0),
+            };
             side.csr = applied.csr;
             side.features = new_features;
             side.edges = new_edges;
@@ -637,12 +882,17 @@ impl NativeExecutor {
             let new_epoch = self.logits.epoch();
             let logits_mat = rec.last().expect("at least the input features").clone();
             st.acts = Some((new_epoch, rec));
+            if let Some(sh) = st.sharded.as_mut() {
+                refresh_shard_logits(sh, &logits_mat, new_epoch);
+            }
             self.logits.set(new_epoch, Arc::new(logits_mat));
             return Ok(DeltaReport {
                 epoch: new_epoch,
                 num_nodes: n_new,
                 recomputed_rows: frontier_rows,
                 new_nodes: 0,
+                shards_touched,
+                halo_nodes,
             });
         }
 
@@ -720,7 +970,25 @@ impl NativeExecutor {
             int_path,
         )?;
 
-        // 7. commit + single epoch bump
+        // 7. commit + single epoch bump.  Sharded residents first repair
+        //    their partition (appended nodes go to the least-loaded
+        //    shards) and rebuild only the affected shards' local views.
+        let (shards_touched, halo_nodes) = match st.sharded.as_mut() {
+            Some(sh) => {
+                let touched = sh
+                    .graph
+                    .apply_delta(
+                        &applied.csr,
+                        &new_edges,
+                        delta.add_nodes,
+                        &applied.row_changed,
+                        &applied.deg_changed,
+                    )
+                    .len();
+                (touched, sh.graph.halo_stats().halo_nodes)
+            }
+            None => (0, 0),
+        };
         side.csr = applied.csr;
         side.features = new_features;
         side.edges = new_edges;
@@ -740,18 +1008,31 @@ impl NativeExecutor {
         let new_epoch = self.logits.epoch();
         let logits_mat = acts.last().expect("at least input + one layer").clone();
         st.acts = Some((new_epoch, acts));
+        if let Some(sh) = st.sharded.as_mut() {
+            let frontier: &[u32] = dirty.last().map(|d| d.as_slice()).unwrap_or(&[]);
+            if !patch_shard_logits(sh, &logits_mat, epoch, new_epoch, frontier) {
+                refresh_shard_logits(sh, &logits_mat, new_epoch);
+            }
+        }
         self.logits.set(new_epoch, Arc::new(logits_mat));
         Ok(DeltaReport {
             epoch: new_epoch,
             num_nodes: n_new,
             recomputed_rows: recomputed,
             new_nodes: delta.add_nodes,
+            shards_touched,
+            halo_nodes,
         })
     }
 }
 
 impl BatchExecutor for NativeExecutor {
     fn run_node_batch(&self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        // sharded sessions serve from per-shard logits blocks, recomputing
+        // with the shard-parallel forward when the epoch moved
+        if self.state.read().unwrap().sharded.is_some() {
+            return self.sharded_node_rows(node_ids);
+        }
         // full forward once per epoch; every batch after that is a
         // row slice-copy off the cached logits
         let logits = self.full_graph_logits()?;
@@ -859,7 +1140,7 @@ impl BatchExecutor for MockExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gnn::{forward_fp_with, LayerParams};
+    use crate::gnn::{forward_fp_with, LayerParams, QuantMethod};
     use crate::quant::mixed::NodeQuantParams;
     use crate::util::json::Json;
 
@@ -1118,6 +1399,70 @@ mod tests {
         assert_eq!(feat.len(), 7);
         assert!(feat.steps[6].is_finite() && feat.steps[6] > 0.0);
         assert!(feat.bits[6] >= 1);
+    }
+
+    #[test]
+    fn sharded_session_serves_and_patches_like_unsharded() {
+        let (model, ds) = path_session();
+        let plain = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+        let sharded = NativeExecutor::new(model, Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial())
+            .with_shards(3)
+            .unwrap();
+        let all: Vec<u32> = (0..6).collect();
+        // per-shard block serving == single-shard cache serving, bitwise
+        assert_eq!(
+            plain.run_node_batch(&all).unwrap(),
+            sharded.run_node_batch(&all).unwrap()
+        );
+        let (s, _stats) = sharded.shard_stats().unwrap();
+        assert_eq!(s, 3);
+        assert!(plain.shard_stats().is_none());
+
+        // a delta patches both sessions to the same bits; shard accounting
+        // only reports on the sharded one, and the epoch bump is
+        // exactly-once across shards
+        let delta = GraphDelta {
+            add_nodes: 1,
+            new_features: vec![0.2, -0.1],
+            add_edges: vec![(6, 0), (0, 6)],
+            ..Default::default()
+        };
+        let rp = plain.apply_delta(&delta).unwrap();
+        let rs = sharded.apply_delta(&delta).unwrap();
+        assert_eq!(rp.epoch, rs.epoch);
+        assert_eq!(rs.num_nodes, 7);
+        assert_eq!(rp.shards_touched, 0);
+        assert!(rs.shards_touched >= 1, "the owning shard must rebuild");
+        assert_eq!(sharded.epoch(), 1, "one bump per delta across shards");
+        let all7: Vec<u32> = (0..7).collect();
+        let want = plain.run_node_batch(&all7).unwrap();
+        let got = sharded.run_node_batch(&all7).unwrap();
+        assert_eq!(want, got, "post-delta sharded rows diverged");
+
+        // empty delta: blocks retag under the new epoch, rows bit-identical
+        let re = sharded.apply_delta(&GraphDelta::default()).unwrap();
+        assert_eq!(re.shards_touched, 0);
+        assert_eq!(sharded.epoch(), 2);
+        assert_eq!(got, sharded.run_node_batch(&all7).unwrap());
+
+        // manual epoch bump: the shard-parallel recompute reproduces the
+        // patched state bit-for-bit
+        sharded.bump_epoch();
+        assert_eq!(got, sharded.run_node_batch(&all7).unwrap());
+    }
+
+    #[test]
+    fn with_shards_rejects_non_node_level_sessions() {
+        let (mut model, _ds) = tiny_session();
+        model.node_level = false;
+        model.num_nodes = 0;
+        let exec = NativeExecutor::new(model, None).unwrap();
+        let err = exec.with_shards(2).unwrap_err();
+        assert!(format!("{err}").contains("node-level"), "got: {err}");
     }
 
     #[test]

@@ -16,6 +16,11 @@ struct Inner {
     batches: u64,
     batched_requests: u64,
     updates: u64,
+    /// cumulative shard local-view rebuilds across applied deltas
+    /// (sharded residents; 0 for unsharded sessions)
+    shard_rebuilds: u64,
+    /// last observed Σ halo mirror nodes of the sharded resident (gauge)
+    halo_nodes: u64,
     started: Option<Instant>,
 }
 
@@ -35,6 +40,10 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// successfully applied resident-graph updates
     pub updates: u64,
+    /// cumulative shard local-view rebuilds (sharded residents)
+    pub shard_rebuilds: u64,
+    /// last observed Σ halo mirror nodes of the sharded resident (gauge)
+    pub halo_nodes: u64,
     pub mean_batch_size: f64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
@@ -60,8 +69,14 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
-    pub fn record_update(&self) {
-        self.inner.lock().unwrap().updates += 1;
+    /// Count one successfully applied resident-graph update.  Sharded
+    /// executors report how many shard local views the delta rebuilt and
+    /// the post-delta halo size (unsharded sessions pass 0, 0).
+    pub fn record_update(&self, shards_touched: u64, halo_nodes: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.updates += 1;
+        m.shard_rebuilds += shards_touched;
+        m.halo_nodes = halo_nodes;
     }
 
     pub fn record_batch(&self, batch_size: usize) {
@@ -91,6 +106,8 @@ impl Metrics {
             errors: m.errors,
             batches: m.batches,
             updates: m.updates,
+            shard_rebuilds: m.shard_rebuilds,
+            halo_nodes: m.halo_nodes,
             mean_batch_size: if m.batches == 0 {
                 0.0
             } else {
@@ -109,6 +126,7 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "requests={} responses={} rejected={} errors={} batches={} updates={} \
+             shard_rebuilds={} halo_nodes={} \
              mean_batch={:.2} latency(mean/p50/p99)={:.0}/{:.0}/{:.0}µs \
              queue_mean={:.0}µs throughput={:.1} rps",
             self.requests,
@@ -117,6 +135,8 @@ impl MetricsSnapshot {
             self.errors,
             self.batches,
             self.updates,
+            self.shard_rebuilds,
+            self.halo_nodes,
             self.mean_batch_size,
             self.mean_latency_us,
             self.p50_latency_us,
@@ -140,12 +160,18 @@ mod tests {
         m.record_batch(2);
         m.record_response(100, 10);
         m.record_response(300, 30);
+        m.record_update(3, 17);
+        m.record_update(2, 21);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.responses, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.updates, 2);
+        assert_eq!(s.shard_rebuilds, 5, "shard rebuilds accumulate");
+        assert_eq!(s.halo_nodes, 21, "halo gauge tracks the last report");
         assert_eq!(s.mean_batch_size, 2.0);
         assert!((s.mean_latency_us - 200.0).abs() < 1.0);
         assert!(s.render().contains("requests=2"));
+        assert!(s.render().contains("shard_rebuilds=5"));
     }
 }

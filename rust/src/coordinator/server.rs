@@ -253,8 +253,11 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
         });
         let exec_us = t0.elapsed().as_micros() as u64;
         match result {
-            Ok(_report) => {
-                metrics.record_update();
+            Ok(report) => {
+                metrics.record_update(
+                    report.shards_touched as u64,
+                    report.halo_nodes as u64,
+                );
                 respond(req, Vec::new(), batch_size, exec_us, metrics);
             }
             Err(e) => fail_all(vec![req], e, metrics),
@@ -601,6 +604,8 @@ mod tests {
                 num_nodes: 8,
                 recomputed_rows: 1,
                 new_nodes: 0,
+                shards_touched: 0,
+                halo_nodes: 0,
             })
         }
         fn capacity(&self) -> (usize, usize) {

@@ -117,8 +117,10 @@ fn add_bias_row(row: &mut [f32], bias: &[f32]) {
 }
 
 /// Row mirror of `infer::quantize_features` — identical per-method
-/// expressions, applied to one row `v`.
-fn quantize_row(
+/// expressions, applied to one row `v`.  Shared with the shard-parallel
+/// forward (`super::sharded`), whose mirror buffers hold rows at local
+/// indices but must quantize with the row's *global* per-node parameters.
+pub(crate) fn quantize_row(
     model: &GnnModel,
     layer: usize,
     p: Option<&NodeQuantParams>,

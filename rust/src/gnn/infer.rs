@@ -16,6 +16,12 @@
 //! should hold a `PreparedModel` (as `coordinator::NativeExecutor` does)
 //! and call the `*_prepared` entry points.  Preparation is deterministic,
 //! so both routes are bitwise identical.
+//!
+//! For partitioned resident graphs, [`super::sharded`] provides
+//! `forward_{fp,int}_sharded` — shard-parallel variants with a
+//! halo-exchange step between layers that are bitwise identical to the
+//! prepared paths here (every output row has one owning shard, and all
+//! per-row kernels accumulate in a row-local order).
 
 use crate::graph::norm::AggregationPlan;
 use crate::quant::mixed::NodeQuantParams;

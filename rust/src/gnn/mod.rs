@@ -21,6 +21,7 @@ pub mod incremental;
 pub mod infer;
 pub mod model;
 pub mod prepared;
+pub mod sharded;
 
 pub use incremental::{build_assign_tables, patch_activations, NnsAssignTables};
 pub use infer::{
@@ -31,3 +32,7 @@ pub use infer::{
 };
 pub use model::{GnnModel, LayerParams, QuantMethod};
 pub use prepared::{PreparedHead, PreparedLayer, PreparedModel};
+pub use sharded::{
+    forward_fp_sharded, forward_fp_sharded_recording, forward_int_sharded,
+    forward_int_sharded_recording,
+};

@@ -292,6 +292,19 @@ impl PreparedModel {
         &self.model
     }
 
+    /// Whether the **true integer path** (packed codes, i32-accumulate,
+    /// Eq. 2 rescale) governs execution for this session when the caller
+    /// requests the int route: A²Q method, non-GAT arch, no graph-level
+    /// head.  Everything else falls back to the fp emulation — shared by
+    /// `forward_int_*`, the sharded forwards, and the executor's delta
+    /// path so the fallback decision cannot diverge between them.
+    pub fn int_path_semantics(&self, use_int_path: bool) -> bool {
+        use_int_path
+            && self.model.method == QuantMethod::A2q
+            && self.model.head.is_none()
+            && self.model.arch != "gat"
+    }
+
     /// Rough resident-size accounting of the prepared (request-invariant)
     /// state in bytes — what a serving process pays per loaded session.
     pub fn prepared_bytes(&self) -> usize {

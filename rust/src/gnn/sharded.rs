@@ -1,0 +1,472 @@
+//! Shard-parallel forward passes over a partitioned resident graph.
+//!
+//! `forward_{fp,int}_sharded` run the same network as
+//! [`super::infer::forward_fp_prepared`] / `forward_int_prepared`, but
+//! layer-by-layer across the shards of a [`ShardedGraph`]: each layer,
+//! every shard **gathers** its mirror block (owned rows + halo rows — the
+//! halo exchange) out of the global activation matrix, computes its owned
+//! output rows against its local [`AggregationPlan`], and the owned blocks
+//! are scattered back into the next global matrix before the next layer.
+//!
+//! **Bitwise identity** with the single-shard prepared path holds by
+//! construction and is property-tested in `rust/tests/shard_parity.rs`:
+//!
+//! * every output row has exactly one owning shard, and the per-row f32
+//!   kernels (`ops::matmul_with` row blocks, `AggregationPlan` gathers,
+//!   bias/skip/ReLU, the Eq. 2 rescale) accumulate per row in an order
+//!   independent of which rows share the call;
+//! * the shard builder preserves the global per-destination edge order
+//!   (real CSR edges, then the self-loop) and bit-copies the edge weights;
+//! * mirror rows are bit-copies of the global activations, quantized with
+//!   the row's *global* per-node `(step, bits)` (the same
+//!   `incremental::quantize_row` expressions the frontier patcher uses).
+//!
+//! The integer path additionally stores each shard's quantized hidden map
+//! as a **per-shard packed slab** (`quant::pack::pack_rows_subset`) — the
+//! at-rest layout a distributed deployment would ship between machines —
+//! and streams the i32 matmul straight off it, exactly like the
+//! single-shard path does off its full-graph slab.
+
+use std::borrow::Cow;
+
+use crate::graph::shard::{ShardLocal, ShardedGraph};
+use crate::quant::mixed::NodeQuantParams;
+use crate::quant::nns::NnsTable;
+use crate::quant::{pack, uniform};
+use crate::tensor::{dense::Matrix, ops};
+use crate::util::threadpool::{self, ParallelConfig};
+
+use super::incremental::quantize_row;
+use super::infer::{model_uses_skip, nns_or_build};
+use super::model::QuantMethod;
+use super::prepared::PreparedModel;
+
+/// Shard-parallel fp-emulation forward.  `features` is the full resident
+/// `[N, in_dim]` feature matrix; returns the `[N, out]` logits, bitwise
+/// identical to [`super::infer::forward_fp_prepared`] over the same graph
+/// at any thread count.  Node-level gcn/gin sessions only.
+pub fn forward_fp_sharded(
+    prep: &PreparedModel,
+    features: &[f32],
+    graph: &ShardedGraph,
+    cfg: &ParallelConfig,
+) -> Matrix<f32> {
+    forward_sharded_impl(prep, features, graph, cfg, false, None)
+}
+
+/// [`forward_fp_sharded`] that also records every layer's global
+/// activation matrix (`acts[0]` input, `acts[l]` layer `l` output) — the
+/// same convention as `forward_fp_prepared_recording`, so a sharded
+/// resident session can feed the incremental delta patcher.
+pub fn forward_fp_sharded_recording(
+    prep: &PreparedModel,
+    features: &[f32],
+    graph: &ShardedGraph,
+    cfg: &ParallelConfig,
+    acts: &mut Vec<Matrix<f32>>,
+) -> Matrix<f32> {
+    forward_sharded_impl(prep, features, graph, cfg, false, Some(acts))
+}
+
+/// Shard-parallel integer-path forward.  Falls back to the fp kernels for
+/// sessions the integer path does not govern (non-A²Q methods), exactly
+/// like [`super::infer::forward_int_prepared`].
+pub fn forward_int_sharded(
+    prep: &PreparedModel,
+    features: &[f32],
+    graph: &ShardedGraph,
+    cfg: &ParallelConfig,
+) -> Matrix<f32> {
+    forward_sharded_impl(prep, features, graph, cfg, prep.int_path_semantics(true), None)
+}
+
+/// Recording variant of [`forward_int_sharded`].
+pub fn forward_int_sharded_recording(
+    prep: &PreparedModel,
+    features: &[f32],
+    graph: &ShardedGraph,
+    cfg: &ParallelConfig,
+    acts: &mut Vec<Matrix<f32>>,
+) -> Matrix<f32> {
+    forward_sharded_impl(
+        prep,
+        features,
+        graph,
+        cfg,
+        prep.int_path_semantics(true),
+        Some(acts),
+    )
+}
+
+fn forward_sharded_impl(
+    prep: &PreparedModel,
+    features: &[f32],
+    graph: &ShardedGraph,
+    cfg: &ParallelConfig,
+    int_path: bool,
+    mut record: Option<&mut Vec<Matrix<f32>>>,
+) -> Matrix<f32> {
+    let model = &prep.model;
+    assert!(
+        model.arch != "gat" && model.head.is_none() && model.node_level,
+        "sharded forward supports node-level gcn/gin sessions"
+    );
+    let n = graph.num_nodes;
+    let mut h = Matrix::from_vec(n, model.in_dim, features.to_vec()).expect("feature shape");
+    if let Some(r) = record.as_deref_mut() {
+        r.clear();
+        r.push(h.clone());
+    }
+    let n_layers = model.layers.len();
+    // shard fan-out is the parallelism; parallel_map clamps to the shard
+    // count, and per-row determinism makes the thread count invisible
+    let threads = cfg.threads.max(1);
+    for l in 0..n_layers {
+        let last = l == n_layers - 1;
+        // shard-parallel: each shard gathers its mirror (halo exchange),
+        // computes its owned rows, and hands the block back
+        let blocks: Vec<Matrix<f32>> =
+            threadpool::parallel_map(graph.num_shards(), threads, |s| {
+                shard_layer(prep, l, last, &h, &graph.shards[s], int_path)
+            });
+        // scatter: every global row has exactly one owner
+        let d_out = blocks[0].cols;
+        let mut h_next = Matrix::zeros(n, d_out);
+        for (sh, block) in graph.shards.iter().zip(&blocks) {
+            for (li, &gid) in sh.owned.iter().enumerate() {
+                h_next.row_mut(gid as usize).copy_from_slice(block.row(li));
+            }
+        }
+        h = h_next;
+        if let Some(r) = record.as_deref_mut() {
+            r.push(h.clone());
+        }
+    }
+    h
+}
+
+/// Quantize a mirror (or hidden) block row-by-row with each row's
+/// **global** per-node parameters — the row mirror of
+/// `infer::quantize_features` over a gathered block whose local row `li`
+/// holds global node `gids(li)`.
+fn quantize_block(
+    prep: &PreparedModel,
+    layer: usize,
+    p: Option<&NodeQuantParams>,
+    prepared_nns: Option<&NnsTable>,
+    block: &mut Matrix<f32>,
+    n_global: usize,
+    gids: impl Fn(usize) -> usize,
+) {
+    let model = &prep.model;
+    let per_node = p.map(|p| p.len() == n_global).unwrap_or(false);
+    let table: Option<Cow<NnsTable>> = match (p, per_node, model.method) {
+        (Some(p), false, QuantMethod::A2q) => Some(nns_or_build(prepared_nns, p)),
+        _ => None,
+    };
+    for li in 0..block.rows {
+        let gid = gids(li);
+        quantize_row(
+            model,
+            layer,
+            p,
+            per_node,
+            table.as_deref(),
+            block.row_mut(li),
+            gid,
+        );
+    }
+}
+
+/// Global id of mirror-local row `li` of a shard.
+fn mirror_gid(sh: &ShardLocal, li: usize) -> usize {
+    if li < sh.owned.len() {
+        sh.owned[li] as usize
+    } else {
+        sh.halo[li - sh.owned.len()] as usize
+    }
+}
+
+/// One layer of one shard: gather → quantize → aggregate → transform,
+/// returning the owned output block (rows in `sh.owned` order).  All
+/// kernels run serially inside the shard — the shard fan-out *is* the
+/// parallelism — and replicate the single-shard op sequence per row.
+fn shard_layer(
+    prep: &PreparedModel,
+    l: usize,
+    last: bool,
+    h: &Matrix<f32>,
+    sh: &ShardLocal,
+    int_path: bool,
+) -> Matrix<f32> {
+    let model = &prep.model;
+    let lay = &model.layers[l];
+    let pl = &prep.layers[l];
+    let serial = ParallelConfig::serial();
+    let skip_q = l == 0 && model.skip_input_quant;
+    let n_own = sh.owned.len();
+    let n_global = h.rows;
+    let cols = h.cols;
+
+    // halo exchange: bit-copy owned + halo rows of the global activations
+    let mut hq = Matrix {
+        rows: sh.mirror_rows(),
+        cols,
+        data: sh.gather_mirror(&h.data, cols),
+    };
+    if !skip_q {
+        quantize_block(prep, l, lay.feat.as_ref(), pl.nns.as_ref(), &mut hq, n_global, |li| {
+            mirror_gid(sh, li)
+        });
+    }
+
+    let mut out = match model.arch.as_str() {
+        "gcn" => {
+            let wq = pl.wq.as_ref().expect("gcn weight");
+            let agg = Matrix {
+                rows: n_own,
+                cols,
+                data: sh.plan.aggregate_with(&hq.data, cols, &sh.src, &sh.gcn_w, &serial),
+            };
+            let mut out = ops::matmul_with(&agg, wq, &serial);
+            ops::add_bias(&mut out, &lay.b);
+            out
+        }
+        "gin" => {
+            let w1q = pl.wq.as_ref().expect("gin w1");
+            let neigh = sh.plan.aggregate_with(&hq.data, cols, &sh.src, &sh.sum_w, &serial);
+            // (1 + eps)·own + neighbour sum, over the owned mirror block
+            let mut agg = Matrix {
+                rows: n_own,
+                cols,
+                data: hq.data[..n_own * cols].to_vec(),
+            };
+            for (a, nv) in agg.data.iter_mut().zip(&neigh) {
+                *a = (1.0 + lay.eps) * *a + nv;
+            }
+            let mut hid = ops::matmul_with(&agg, w1q, &serial);
+            ops::add_bias(&mut hid, &lay.b);
+            ops::relu_inplace(&mut hid);
+
+            if int_path {
+                // true integer hidden-map matmul off the shard's packed slab
+                let wcodes = pl.w2_codes.as_ref().expect("gin w2 codes");
+                let (acc, sx) = match lay.feat2.as_ref() {
+                    None => {
+                        // unquantized hidden map: unit-step codes (the
+                        // forward_int `feat.is_none()` branch)
+                        let codes: Vec<i32> =
+                            hid.data.iter().map(|&v| v as i32).collect();
+                        let a = Matrix::from_vec(hid.rows, hid.cols, codes).unwrap();
+                        (ops::matmul_i32_with(&a, wcodes, &serial), vec![1.0f32; hid.rows])
+                    }
+                    Some(p) => {
+                        let slab = pack_shard_hidden(p, pl.nns2.as_ref(), sh, &hid, n_global);
+                        let sx = slab.steps();
+                        (slab.matmul_i32(wcodes, &serial), sx)
+                    }
+                };
+                let mut out = ops::rescale_outer(&acc, &sx, &pl.w2_steps_clamped);
+                ops::add_bias(&mut out, &lay.b2);
+                out
+            } else {
+                let w2q = pl.w2q.as_ref().expect("gin w2");
+                if model.method != QuantMethod::Fp32 {
+                    quantize_block(
+                        prep,
+                        l,
+                        lay.feat2.as_ref(),
+                        pl.nns2.as_ref(),
+                        &mut hid,
+                        n_global,
+                        |li| sh.owned[li] as usize,
+                    );
+                }
+                let mut out = ops::matmul_with(&hid, w2q, &serial);
+                ops::add_bias(&mut out, &lay.b2);
+                out
+            }
+        }
+        other => panic!("sharded forward unsupported for arch {other}"),
+    };
+    // shared epilogue, mirroring the single-shard tail: skip connection
+    // (fp only — the int path never takes it) then ReLU on every
+    // non-final layer; the final layer of a node-level model is the
+    // logits and gets neither
+    if !last {
+        if !int_path && model_uses_skip(model) && out.cols == cols {
+            for li in 0..n_own {
+                let orow = out.row_mut(li);
+                for (o, v) in orow.iter_mut().zip(&hq.data[li * cols..(li + 1) * cols]) {
+                    *o += *v;
+                }
+            }
+        }
+        ops::relu_inplace(&mut out);
+    }
+    out
+}
+
+/// Quantize a shard's owned hidden rows to codes and pack them as the
+/// shard's slab.  Per-node parameters are indexed by the rows' global
+/// ids ([`pack::pack_rows_subset`]); grouped parameters run the per-row
+/// NNS lookup — both identical to the single-shard `forward_int` `mm`.
+fn pack_shard_hidden(
+    p: &NodeQuantParams,
+    prepared_nns: Option<&NnsTable>,
+    sh: &ShardLocal,
+    hid: &Matrix<f32>,
+    n_global: usize,
+) -> pack::PackedFeatures {
+    let f = hid.cols;
+    let mut codes = vec![0i32; hid.rows * f];
+    if p.len() == n_global {
+        for (li, &gid) in sh.owned.iter().enumerate() {
+            let (s, b) = (p.steps[gid as usize], p.bits[gid as usize]);
+            for (c, &v) in codes[li * f..(li + 1) * f].iter_mut().zip(hid.row(li)) {
+                *c = uniform::quantize_value(v, s, b, p.signed);
+            }
+        }
+        pack::pack_rows_subset(&codes, &p.steps, &p.bits, &sh.owned, f, p.signed)
+    } else {
+        let table = nns_or_build(prepared_nns, p);
+        let mut steps = vec![0.0f32; hid.rows];
+        let mut bits = vec![0u8; hid.rows];
+        for li in 0..hid.rows {
+            let row = hid.row(li);
+            let fmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let (_, s, b) = table.select(fmax);
+            steps[li] = s;
+            bits[li] = b;
+            for (c, &v) in codes[li * f..(li + 1) * f].iter_mut().zip(row) {
+                *c = uniform::quantize_value(v, s, b, p.signed);
+            }
+        }
+        pack::pack_rows(&codes, &steps, &bits, f, p.signed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::infer::{forward_fp_prepared, forward_int_prepared, GraphInput};
+    use crate::gnn::model::{GnnModel, LayerParams};
+    use crate::graph::norm::EdgeForm;
+    use crate::util::json::Json;
+    use crate::util::prop::{property, Gen};
+    use crate::util::rng::Rng;
+
+    fn random_model(g: &mut Gen, arch: &str, n: usize, in_dim: usize, hidden: usize) -> GnnModel {
+        let n_layers = g.usize_range(1, 4);
+        let mut layers = Vec::new();
+        for l in 0..n_layers {
+            let d_in = if l == 0 { in_dim } else { hidden };
+            let feat = NodeQuantParams::new(
+                g.vec_uniform(n, 0.02, 0.1),
+                (0..n).map(|_| g.usize_range(2, 9) as u8).collect(),
+                l == 0,
+            )
+            .unwrap();
+            let lay = match arch {
+                "gcn" => LayerParams {
+                    w: Some(
+                        Matrix::from_vec(d_in, hidden, g.vec_normal(d_in * hidden, 0.5)).unwrap(),
+                    ),
+                    b: g.vec_uniform(hidden, -0.1, 0.1),
+                    w_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                    feat: Some(feat),
+                    ..Default::default()
+                },
+                _ => LayerParams {
+                    w: Some(
+                        Matrix::from_vec(d_in, hidden, g.vec_normal(d_in * hidden, 0.5)).unwrap(),
+                    ),
+                    b: g.vec_uniform(hidden, -0.1, 0.1),
+                    w_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                    w2: Some(
+                        Matrix::from_vec(hidden, hidden, g.vec_normal(hidden * hidden, 0.5))
+                            .unwrap(),
+                    ),
+                    b2: g.vec_uniform(hidden, -0.1, 0.1),
+                    w2_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                    eps: g.f32_range(0.0, 0.2),
+                    feat: Some(feat),
+                    feat2: Some(
+                        NodeQuantParams::new(
+                            g.vec_uniform(n, 0.02, 0.1),
+                            (0..n).map(|_| g.usize_range(2, 9) as u8).collect(),
+                            false,
+                        )
+                        .unwrap(),
+                    ),
+                    ..Default::default()
+                },
+            };
+            layers.push(lay);
+        }
+        GnnModel {
+            name: format!("shard-{arch}"),
+            arch: arch.into(),
+            dataset: "unit".into(),
+            method: QuantMethod::A2q,
+            layers,
+            head: None,
+            dq_steps: vec![],
+            skip_input_quant: false,
+            node_level: true,
+            num_nodes: n,
+            in_dim,
+            out_dim: hidden,
+            heads: 1,
+            graph_capacity: 0,
+            accuracy: 0.0,
+            avg_bits: 4.0,
+            expected_head: vec![],
+            manifest: Json::Null,
+        }
+    }
+
+    /// The module-level bitwise anchor (the full matrix runs in
+    /// `rust/tests/shard_parity.rs`): fp and int sharded forwards at
+    /// several shard counts reproduce the single-shard prepared path
+    /// exactly, and recording captures the same per-layer matrices.
+    #[test]
+    fn sharded_forward_bitwise_matches_prepared() {
+        property("sharded == single-shard (fp/int)", 8, |g: &mut Gen| {
+            let n = g.usize_range(8, 60);
+            let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+            let csr = crate::graph::generate::preferential_attachment(&mut rng, n, 2);
+            let ef = EdgeForm::from_csr(&csr);
+            let in_dim = g.usize_range(2, 6);
+            let hidden = g.usize_range(2, 8);
+            let x = g.vec_normal(n * in_dim, 0.5);
+            let cfg = ParallelConfig {
+                threads: g.usize_range(1, 5),
+                min_rows_per_task: 1,
+            };
+            for arch in ["gcn", "gin"] {
+                let model = random_model(g, arch, n, in_dim, hidden);
+                let prep = PreparedModel::prepare(model).unwrap();
+                let input = GraphInput::node_level(&x, in_dim, &ef);
+                let want_fp = forward_fp_prepared(&prep, &input, &ParallelConfig::serial());
+                let want_int = forward_int_prepared(&prep, &input, &ParallelConfig::serial());
+                for s in [1usize, 2, 4] {
+                    let sg = ShardedGraph::build(&csr, &ef, s).unwrap();
+                    let got_fp = forward_fp_sharded(&prep, &x, &sg, &cfg);
+                    assert_eq!(want_fp.data, got_fp.data, "{arch} S={s} fp diverged");
+                    let mut acts = Vec::new();
+                    let got_int =
+                        forward_int_sharded_recording(&prep, &x, &sg, &cfg, &mut acts);
+                    assert_eq!(want_int.data, got_int.data, "{arch} S={s} int diverged");
+                    assert_eq!(acts.len(), prep.model.layers.len() + 1);
+                    assert_eq!(acts[0].data, x, "acts[0] is the raw input");
+                    assert_eq!(
+                        acts.last().unwrap().data,
+                        got_int.data,
+                        "acts[L] is the logits"
+                    );
+                }
+            }
+        });
+    }
+}

@@ -10,9 +10,11 @@ pub mod delta;
 pub mod generate;
 pub mod io;
 pub mod norm;
+pub mod shard;
 pub mod stats;
 
 pub use batch::GraphBatch;
 pub use csr::Csr;
 pub use delta::{dirty_frontier, DeltaApplied, GraphDelta};
 pub use io::{load_dataset, Dataset, GraphSet, NodeData};
+pub use shard::{HaloStats, ShardLocal, ShardPartition, ShardedGraph};

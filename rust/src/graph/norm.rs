@@ -100,6 +100,23 @@ impl EdgeForm {
         AggregationPlan::build(&self.dst, self.num_nodes)
     }
 
+    /// The real-edge block of a [`Self::from_csr`]-shaped form: GCN
+    /// weights of the CSR's `e` edges, in dst-major CSR order (the layout
+    /// `from_csr` emits — real edges first, self-loops last).  The shard
+    /// builder (`graph::shard`) copies per-edge weights through these
+    /// views so sharded and global aggregation read identical bits.
+    pub fn gcn_w_real(&self, e: usize) -> &[f32] {
+        debug_assert_eq!(e + self.num_nodes, self.gcn_w.len());
+        &self.gcn_w[..e]
+    }
+
+    /// The trailing self-loop block of a [`Self::from_csr`]-shaped form:
+    /// one GCN weight per node, indexed by node id.
+    pub fn gcn_w_self(&self, e: usize) -> &[f32] {
+        debug_assert_eq!(e + self.num_nodes, self.gcn_w.len());
+        &self.gcn_w[e..]
+    }
+
     /// Incrementally splice this edge form (which must be
     /// `EdgeForm::from_csr(old_csr)`) into the post-delta one — bitwise
     /// identical to `EdgeForm::from_csr(&applied.csr)`, property-tested

@@ -62,6 +62,28 @@ pub fn pack_rows(
     }
 }
 
+/// Pack a **gathered subset** of rows — a shard's owned slab.  `codes`
+/// holds the subset's rows contiguously (`ids.len() × feat_dim`), while
+/// `steps`/`bits` are the *full* resident per-node vectors indexed by the
+/// global ids in `ids`.  This is the sharded serving layout: each shard
+/// keeps its owned rows bit-packed at their learned per-node widths, so a
+/// mirror/halo payload is `Σ bits[v]·F` bits, not f32 rows.  Row `i` of
+/// the result corresponds to global id `ids[i]`.
+pub fn pack_rows_subset(
+    codes: &[i32],
+    steps: &[f32],
+    bits: &[u8],
+    ids: &[u32],
+    feat_dim: usize,
+    signed: bool,
+) -> PackedFeatures {
+    assert_eq!(codes.len(), ids.len() * feat_dim);
+    assert_eq!(steps.len(), bits.len());
+    let sub_steps: Vec<f32> = ids.iter().map(|&v| steps[v as usize]).collect();
+    let sub_bits: Vec<u8> = ids.iter().map(|&v| bits[v as usize]).collect();
+    pack_rows(codes, &sub_steps, &sub_bits, feat_dim, signed)
+}
+
 impl PackedFeatures {
     /// Number of packed rows.
     pub fn num_rows(&self) -> usize {
@@ -232,6 +254,38 @@ mod tests {
         }
         assert_eq!(p.num_rows(), 2);
         assert_eq!(p.steps(), vec![0.1, 0.2]);
+    }
+
+    #[test]
+    fn pack_rows_subset_matches_full_pack() {
+        property("shard slab == sliced full pack", 25, |g: &mut Gen| {
+            let n = g.usize_range(2, 30);
+            let f = g.usize_range(1, 16);
+            let signed = g.bool(0.5);
+            let steps = g.vec_uniform(n, 0.01, 0.3);
+            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
+            let x = g.vec_normal(n * f, 1.0);
+            let mut codes = vec![0i32; n * f];
+            for v in 0..n {
+                for j in 0..f {
+                    codes[v * f + j] = quantize_value(x[v * f + j], steps[v], bits[v], signed);
+                }
+            }
+            // a random ascending subset of rows (a shard's owned block)
+            let ids: Vec<u32> =
+                (0..n as u32).filter(|_| g.bool(0.6)).collect();
+            let sub_codes: Vec<i32> = ids
+                .iter()
+                .flat_map(|&v| codes[v as usize * f..(v as usize + 1) * f].to_vec())
+                .collect();
+            let slab = pack_rows_subset(&sub_codes, &steps, &bits, &ids, f, signed);
+            let full = pack_rows(&codes, &steps, &bits, f, signed);
+            assert_eq!(slab.num_rows(), ids.len());
+            for (li, &v) in ids.iter().enumerate() {
+                assert_eq!(slab.unpack_row(li), full.unpack_row(v as usize), "row {v}");
+                assert_eq!(slab.steps()[li], steps[v as usize]);
+            }
+        });
     }
 
     #[test]

@@ -2,8 +2,8 @@
 //! set).
 //!
 //! A property is a closure over a [`Gen`] (seeded value source).  The runner
-//! executes it for `cases` random seeds; on failure it reports the seed so
-//! the case can be replayed deterministically:
+//! executes it for `cases` random seeds; on failure it reports the exact
+//! failing seed so the case can be replayed deterministically:
 //!
 //! ```no_run
 //! // (no_run: the doctest harness lacks the xla_extension rpath)
@@ -13,6 +13,17 @@
 //!     assert!(x.abs() >= 0.0);
 //! });
 //! ```
+//!
+//! Two environment knobs, honored by **every** property test in the repo
+//! (forward_parity, delta_parity, shard_parity, incremental, and the unit
+//! properties) because they are applied inside [`property`] itself:
+//!
+//! * `A2Q_PROP_SEED=<seed>` — **one-line replay**: run exactly one case
+//!   with that seed (the failure message prints it verbatim), e.g.
+//!   `A2Q_PROP_SEED=12345 cargo test -q shard_parity`.
+//! * `A2Q_PROP_CASES=<n>` — override every property's case count (crank
+//!   up for a soak run, turn down for a smoke pass); the per-test number
+//!   is the default when unset.
 
 use super::rng::Rng;
 
@@ -74,15 +85,32 @@ impl Gen {
     }
 }
 
-/// Run `f` for `cases` seeds.  Panics (with the failing seed) on failure.
-pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut f: F) {
-    // Base seed can be pinned for replay: A2Q_PROP_SEED=<n>
-    let base = std::env::var("A2Q_PROP_SEED")
+/// The effective case count for a property whose in-code default is
+/// `default`: `A2Q_PROP_CASES` overrides it process-wide (soak up, smoke
+/// down), floored at 1.
+pub fn cases(default: u64) -> u64 {
+    std::env::var("A2Q_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+/// The pinned replay seed, if `A2Q_PROP_SEED` is set.
+fn replay_seed() -> Option<u64> {
+    std::env::var("A2Q_PROP_SEED")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(0xa2a2_0001u64);
-    for case in 0..cases {
-        let seed = base.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+}
+
+const BASE_SEED: u64 = 0xa2a2_0001;
+
+/// Run `f` for [`cases`]`(default_cases)` derived seeds.  Panics on
+/// failure naming the failing case's **exact seed**; re-running any test
+/// binary with `A2Q_PROP_SEED=<that seed>` executes precisely that one
+/// case — a one-line replay, no case counting.
+pub fn property<F: FnMut(&mut Gen)>(name: &str, default_cases: u64, mut f: F) {
+    let mut run_case = |case: u64, seed: u64| {
         let mut gen = Gen::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             f(&mut gen)
@@ -94,10 +122,19 @@ pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut f: F) {
                 .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
             panic!(
-                "property '{name}' failed at case {case} (replay with \
-                 A2Q_PROP_SEED={base} — failing seed {seed}): {msg}"
+                "property '{name}' failed at case {case} — replay this exact \
+                 case with A2Q_PROP_SEED={seed}: {msg}"
             );
         }
+    };
+    if let Some(seed) = replay_seed() {
+        // pinned replay: exactly the one failing case, nothing else
+        run_case(0, seed);
+        return;
+    }
+    for case in 0..cases(default_cases) {
+        let seed = BASE_SEED.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+        run_case(case, seed);
     }
 }
 
@@ -120,6 +157,14 @@ mod tests {
         property("always fails", 3, |_g| {
             panic!("boom");
         });
+    }
+
+    #[test]
+    fn cases_is_floored_at_one() {
+        // no set_var here (UB with concurrent getenv in parallel tests);
+        // whatever the environment says, the floor must hold
+        assert!(cases(7) >= 1);
+        assert!(cases(0) >= 1);
     }
 
     #[test]

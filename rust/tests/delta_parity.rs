@@ -13,6 +13,10 @@
 //! `(step, bits)` of appended nodes are resident model state, exactly like
 //! the learned entries — a rebuild with the same state must reproduce the
 //! served logits bit-for-bit.
+//!
+//! Runs on the `util::prop` harness: `A2Q_PROP_SEED=<seed>` replays one
+//! failing case exactly (the failure message prints the seed),
+//! `A2Q_PROP_CASES=<n>` overrides every property's case count.
 
 use std::collections::BTreeSet;
 

@@ -2,6 +2,10 @@
 //! bit-packed codes) must track `forward_fp` (fake-quant emulation) within
 //! quantization tolerance on random GCN/GIN models, and both paths must be
 //! bitwise independent of the parallelism budget (threads ∈ {1, 4}).
+//!
+//! Runs on the `util::prop` harness: `A2Q_PROP_SEED=<seed>` replays one
+//! failing case exactly (the failure message prints the seed),
+//! `A2Q_PROP_CASES=<n>` overrides every property's case count.
 
 use a2q::gnn::{
     forward_fp_prepared, forward_fp_prepared_with_plan, forward_fp_with, forward_int_prepared,

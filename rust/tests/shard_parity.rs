@@ -1,0 +1,592 @@
+//! Sharded-resident parity: the shard-parallel execution path (degree-aware
+//! partition, per-shard plans, halo exchange between layers, per-shard
+//! logits blocks) must be **bitwise identical** to the single-shard
+//! prepared path — for fp AND int logits, S ∈ {1, 2, 4}, thread counts
+//! crossed 1 ↔ 4, and across random [`GraphDelta`] sequences applied to a
+//! sharded `NativeExecutor` versus a fresh unsharded session over the
+//! extended graph.  Plus adversarial delta edge cases and a mixed
+//! inference+update soak against a sharded executor behind the
+//! coordinator (metrics conservation, exactly-once epochs, no stale or
+//! torn reads).
+//!
+//! Runs on the `util::prop` harness: `A2Q_PROP_SEED=<seed>` replays one
+//! failing case exactly (the failure message prints the seed),
+//! `A2Q_PROP_CASES=<n>` overrides every property's case count.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use a2q::coordinator::{BatchExecutor, BatcherConfig, Coordinator, NativeExecutor, Payload};
+use a2q::gnn::{
+    forward_fp_prepared, forward_fp_sharded, forward_fp_with, forward_int_prepared,
+    forward_int_sharded, forward_int_with, GnnModel, GraphInput, LayerParams, PreparedModel,
+    QuantMethod,
+};
+use a2q::graph::delta::GraphDelta;
+use a2q::graph::generate::preferential_attachment;
+use a2q::graph::io::{Dataset, NodeData};
+use a2q::graph::norm::EdgeForm;
+use a2q::graph::shard::ShardedGraph;
+use a2q::graph::Csr;
+use a2q::quant::mixed::NodeQuantParams;
+use a2q::tensor::Matrix;
+use a2q::util::json::Json;
+use a2q::util::prop::{property, Gen};
+use a2q::util::rng::Rng;
+use a2q::util::threadpool::ParallelConfig;
+
+fn random_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix<f32> {
+    Matrix::from_vec(rows, cols, g.vec_normal(rows * cols, 0.5)).unwrap()
+}
+
+fn node_quant(g: &mut Gen, n: usize, signed: bool) -> NodeQuantParams {
+    let steps = g.vec_uniform(n, 0.02, 0.1);
+    let bits: Vec<u8> = (0..n).map(|_| g.usize_range(2, 9) as u8).collect();
+    NodeQuantParams::new(steps, bits, signed).unwrap()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn random_model(
+    g: &mut Gen,
+    arch: &str,
+    n: usize,
+    in_dim: usize,
+    hidden: usize,
+    out_dim: usize,
+    n_layers: usize,
+) -> GnnModel {
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let d_in = if l == 0 { in_dim } else { hidden };
+        let d_out = if l == n_layers - 1 { out_dim } else { hidden };
+        let lay = match arch {
+            "gcn" => LayerParams {
+                w: Some(random_matrix(g, d_in, d_out)),
+                b: g.vec_uniform(d_out, -0.1, 0.1),
+                w_steps: g.vec_uniform(d_out, 0.02, 0.08),
+                feat: Some(node_quant(g, n, l == 0)),
+                ..Default::default()
+            },
+            "gin" => LayerParams {
+                w: Some(random_matrix(g, d_in, hidden)),
+                b: g.vec_uniform(hidden, -0.1, 0.1),
+                w_steps: g.vec_uniform(hidden, 0.02, 0.08),
+                w2: Some(random_matrix(g, hidden, d_out)),
+                b2: g.vec_uniform(d_out, -0.1, 0.1),
+                w2_steps: g.vec_uniform(d_out, 0.02, 0.08),
+                eps: g.f32_range(0.0, 0.2),
+                feat: Some(node_quant(g, n, l == 0)),
+                feat2: Some(node_quant(g, n, false)),
+                ..Default::default()
+            },
+            other => panic!("unexpected arch {other}"),
+        };
+        layers.push(lay);
+    }
+    GnnModel {
+        name: format!("shard-{arch}"),
+        arch: arch.to_string(),
+        dataset: "synthetic".to_string(),
+        method: QuantMethod::A2q,
+        layers,
+        head: None,
+        dq_steps: Vec::new(),
+        skip_input_quant: false,
+        node_level: true,
+        num_nodes: n,
+        in_dim,
+        out_dim,
+        heads: 1,
+        graph_capacity: 0,
+        accuracy: 0.0,
+        avg_bits: 4.0,
+        expected_head: Vec::new(),
+        manifest: Json::Null,
+    }
+}
+
+fn node_dataset(csr: Csr, features: Vec<f32>, feat_dim: usize) -> Dataset {
+    let n = csr.num_nodes();
+    Dataset::Node(NodeData {
+        name: "synthetic".into(),
+        csr,
+        num_features: feat_dim,
+        num_classes: 2,
+        features,
+        labels: vec![0; n],
+        train_mask: vec![false; n],
+        val_mask: vec![false; n],
+        test_mask: vec![false; n],
+    })
+}
+
+fn random_delta(
+    g: &mut Gen,
+    n_cur: usize,
+    in_dim: usize,
+    edge_set: &BTreeSet<(u32, u32)>,
+) -> GraphDelta {
+    let add_nodes = g.usize_range(0, 3);
+    let n_new = n_cur + add_nodes;
+    let existing: Vec<(u32, u32)> = edge_set.iter().copied().collect();
+    let add_edges: Vec<(u32, u32)> = (0..g.usize_range(0, 10))
+        .map(|_| (g.usize_range(0, n_new) as u32, g.usize_range(0, n_new) as u32))
+        .collect();
+    let mut remove_edges: Vec<(u32, u32)> = if existing.is_empty() {
+        Vec::new()
+    } else {
+        (0..g.usize_range(0, 5))
+            .map(|_| existing[g.usize_range(0, existing.len())])
+            .collect()
+    };
+    remove_edges.push((g.usize_range(0, n_new) as u32, g.usize_range(0, n_new) as u32));
+    GraphDelta {
+        add_nodes,
+        new_features: g.vec_normal(add_nodes * in_dim, 0.5),
+        add_edges,
+        remove_edges,
+    }
+}
+
+/// Clone the original model with the executor's post-delta quantization
+/// parameters and node count (NNS-assigned entries for appended nodes are
+/// resident state a rebuild needs).
+fn extended_model(original: &GnnModel, exec: &NativeExecutor, n_cur: usize) -> GnnModel {
+    let mut m = original.clone();
+    for (lay, (f, f2)) in m.layers.iter_mut().zip(exec.resident_quant_params()) {
+        lay.feat = f;
+        lay.feat2 = f2;
+    }
+    m.num_nodes = n_cur;
+    m
+}
+
+/// Tentpole guarantee, forward level: fp and int sharded logits are
+/// bitwise equal to the single-shard prepared path for S ∈ {1, 2, 4},
+/// with the thread counts crossed 1 ↔ 4 so every compare simultaneously
+/// checks shard-parallel vs single-shard AND thread-count invariance.
+#[test]
+fn sharded_forward_bitwise_vs_prepared_path() {
+    property("sharded == prepared (fp/int, S∈{1,2,4}, threads 1↔4)", 6, |g: &mut Gen| {
+        let n = g.usize_range(24, 80);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr = preferential_attachment(&mut rng, n, 2);
+        let ef = EdgeForm::from_csr(&csr);
+        let in_dim = g.usize_range(2, 6);
+        let hidden = g.usize_range(2, 8);
+        let out_dim = g.usize_range(2, 5);
+        let n_layers = g.usize_range(1, 4);
+        let x = g.vec_normal(n * in_dim, 0.5);
+
+        let one = ParallelConfig::serial();
+        let four = ParallelConfig {
+            threads: 4,
+            min_rows_per_task: 8,
+        };
+
+        for arch in ["gcn", "gin"] {
+            let model = random_model(g, arch, n, in_dim, hidden, out_dim, n_layers);
+            let prep = PreparedModel::prepare(model).expect("prepare");
+            let input = GraphInput::node_level(&x, in_dim, &ef);
+            // references at one thread count, sharded runs at the other
+            let want_fp = forward_fp_prepared(&prep, &input, &one);
+            let want_int = forward_int_prepared(&prep, &input, &four);
+            for s in [1usize, 2, 4] {
+                let sg = ShardedGraph::build(&csr, &ef, s).expect("shard build");
+                assert_eq!(sg.num_shards(), s);
+                let got_fp = forward_fp_sharded(&prep, &x, &sg, &four);
+                assert_eq!(want_fp.data, got_fp.data, "{arch} S={s}: fp diverged");
+                let got_int = forward_int_sharded(&prep, &x, &sg, &one);
+                assert_eq!(want_int.data, got_int.data, "{arch} S={s}: int diverged");
+                // S = 1 has no halo; S > 1 on a connected power-law graph
+                // must exchange something
+                let stats = sg.halo_stats();
+                if s == 1 {
+                    assert_eq!(stats.halo_edges, 0);
+                } else {
+                    assert!(stats.halo_edges > 0, "{arch} S={s}: no halo on a connected graph");
+                }
+            }
+        }
+    });
+}
+
+/// Tentpole guarantee, serving level: random delta sequences applied to
+/// **sharded** executors match a fresh unsharded session over the
+/// extended graph bitwise, fp and int, thread counts crossed 1 ↔ 4.
+#[test]
+fn sharded_executor_delta_sequences_match_fresh_unsharded() {
+    property("sharded deltas == fresh unsharded rebuild", 4, |g: &mut Gen| {
+        let n0 = g.usize_range(16, 40);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr0 = preferential_attachment(&mut rng, n0, 2);
+        let in_dim = g.usize_range(2, 5);
+        let hidden = g.usize_range(2, 6);
+        let out_dim = g.usize_range(2, 4);
+        let n_layers = g.usize_range(1, 3);
+        let features0 = g.vec_normal(n0 * in_dim, 0.5);
+
+        let one = ParallelConfig::serial();
+        let four = ParallelConfig {
+            threads: 4,
+            min_rows_per_task: 8,
+        };
+
+        for arch in ["gcn", "gin"] {
+            let s = *g.choose(&[2usize, 4]);
+            let model = random_model(g, arch, n0, in_dim, hidden, out_dim, n_layers);
+            let ds = node_dataset(csr0.clone(), features0.clone(), in_dim);
+            // fp sharded executor at 4 threads vs 1-thread rebuilds; int
+            // sharded executor at 1 thread vs 4-thread rebuilds
+            let exec_fp = NativeExecutor::new(model.clone(), Some(&ds))
+                .unwrap()
+                .with_parallelism(four)
+                .with_shards(s)
+                .unwrap();
+            let exec_int = NativeExecutor::new(model.clone(), Some(&ds))
+                .unwrap()
+                .with_int_path(true)
+                .with_parallelism(one)
+                .with_shards(s)
+                .unwrap();
+            // warm the fp session through the per-shard blocks; leave the
+            // int session cold (its first delta warms the acts itself)
+            exec_fp.run_node_batch(&[0]).unwrap();
+
+            let mut edge_set: BTreeSet<(u32, u32)> = csr0.edge_list().into_iter().collect();
+            let mut features = features0.clone();
+            let mut n_cur = n0;
+
+            for step in 0..2 {
+                let delta = random_delta(g, n_cur, in_dim, &edge_set);
+                let rep_fp = exec_fp.apply_delta(&delta).unwrap();
+                exec_int.apply_delta(&delta).unwrap();
+                n_cur += delta.add_nodes;
+                features.extend_from_slice(&delta.new_features);
+                for &e in &delta.add_edges {
+                    edge_set.insert(e);
+                }
+                for &e in &delta.remove_edges {
+                    edge_set.remove(&e);
+                }
+                assert_eq!(rep_fp.num_nodes, n_cur);
+
+                let full: Vec<(u32, u32)> = edge_set.iter().copied().collect();
+                let rebuilt = Csr::from_edges(n_cur, &full).unwrap();
+                let ef = EdgeForm::from_csr(&rebuilt);
+                let input = GraphInput::node_level(&features, in_dim, &ef);
+                let all: Vec<u32> = (0..n_cur as u32).collect();
+
+                let fp_model = extended_model(&model, &exec_fp, n_cur);
+                let want_fp = forward_fp_with(&fp_model, &input, &one);
+                for (v, row) in exec_fp.run_node_batch(&all).unwrap().iter().enumerate() {
+                    assert_eq!(
+                        row.as_slice(),
+                        want_fp.row(v),
+                        "{arch} S={s} step {step}: fp row {v} diverged"
+                    );
+                }
+
+                let int_model = extended_model(&model, &exec_int, n_cur);
+                let want_int = forward_int_with(&int_model, &input, &four);
+                for (v, row) in exec_int.run_node_batch(&all).unwrap().iter().enumerate() {
+                    assert_eq!(
+                        row.as_slice(),
+                        want_int.row(v),
+                        "{arch} S={s} step {step}: int row {v} diverged"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Adversarial delta edge cases on a sharded resident, each checked
+/// incremental-vs-rebuild bitwise: add+remove of the same edge in one
+/// delta, a self-loop on an appended node, edges between two nodes
+/// appended in the same delta, and an empty delta.
+#[test]
+fn adversarial_deltas_on_sharded_residents_match_rebuild() {
+    property("adversarial deltas == rebuild (sharded)", 4, |g: &mut Gen| {
+        let n0 = g.usize_range(10, 26);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr0 = preferential_attachment(&mut rng, n0, 2);
+        let in_dim = g.usize_range(2, 4);
+        let features0 = g.vec_normal(n0 * in_dim, 0.5);
+        let model = random_model(g, "gin", n0, in_dim, 4, 3, 2);
+        let ds = node_dataset(csr0.clone(), features0.clone(), in_dim);
+        let s = *g.choose(&[2usize, 3]);
+        let exec = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial())
+            .with_shards(s)
+            .unwrap();
+        exec.run_node_batch(&[0]).unwrap();
+
+        let mut edge_set: BTreeSet<(u32, u32)> = csr0.edge_list().into_iter().collect();
+        let mut features = features0.clone();
+        let mut n_cur = n0;
+
+        let existing = *g.choose(&edge_set.iter().copied().collect::<Vec<_>>());
+        let scenarios: Vec<(&str, GraphDelta)> = vec![
+            (
+                "same edge added and removed in one delta (ends removed)",
+                GraphDelta {
+                    add_edges: vec![existing],
+                    remove_edges: vec![existing],
+                    ..Default::default()
+                },
+            ),
+            (
+                "self-loop on an appended node",
+                GraphDelta {
+                    add_nodes: 1,
+                    new_features: g.vec_normal(in_dim, 0.5),
+                    add_edges: vec![
+                        (n_cur as u32, n_cur as u32),
+                        (n_cur as u32, 0),
+                        (0, n_cur as u32),
+                    ],
+                    ..Default::default()
+                },
+            ),
+            (
+                "edges between two nodes appended in the same delta",
+                GraphDelta {
+                    add_nodes: 2,
+                    new_features: g.vec_normal(2 * in_dim, 0.5),
+                    add_edges: vec![
+                        ((n_cur + 1) as u32, (n_cur + 2) as u32),
+                        ((n_cur + 2) as u32, (n_cur + 1) as u32),
+                        (0, (n_cur + 1) as u32),
+                    ],
+                    ..Default::default()
+                },
+            ),
+            ("empty delta on a sharded resident", GraphDelta::default()),
+        ];
+
+        let mut last_rows: Option<Vec<Vec<f32>>> = None;
+        for (what, delta) in scenarios {
+            let before_epoch = exec.epoch();
+            let report = exec.apply_delta(&delta).unwrap();
+            assert_eq!(report.epoch, before_epoch + 1, "{what}: epoch not exactly-once");
+            // mirror set-wise
+            n_cur += delta.add_nodes;
+            features.extend_from_slice(&delta.new_features);
+            for &e in &delta.add_edges {
+                edge_set.insert(e);
+            }
+            for &e in &delta.remove_edges {
+                edge_set.remove(&e);
+            }
+            let full: Vec<(u32, u32)> = edge_set.iter().copied().collect();
+            let rebuilt = Csr::from_edges(n_cur, &full).unwrap();
+            let all: Vec<u32> = (0..n_cur as u32).collect();
+            let got = exec.run_node_batch(&all).unwrap();
+
+            let ext = extended_model(&model, &exec, n_cur);
+            let fresh = NativeExecutor::new(
+                ext,
+                Some(&node_dataset(rebuilt, features.clone(), in_dim)),
+            )
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+            let want = fresh.run_node_batch(&all).unwrap();
+            assert_eq!(got, want, "{what}: sharded incremental diverged from rebuild");
+            if delta.is_empty() {
+                // the empty delta must carry every row over bit-for-bit
+                assert_eq!(
+                    Some(&got),
+                    last_rows.as_ref(),
+                    "{what}: rows moved across an empty delta"
+                );
+                assert_eq!(report.recomputed_rows, 0);
+                assert_eq!(report.shards_touched, 0);
+            }
+            last_rows = Some(got);
+        }
+    });
+}
+
+/// Soak: mixed inference + update clients against a **sharded**
+/// `NativeExecutor` behind the coordinator.  Asserts metric conservation
+/// (every submit counted exactly once as admitted or rejected, every
+/// admitted request answered exactly once, updates counted exactly once),
+/// exactly-once epoch bumps across shards (final epoch == successful
+/// updates), and that every served probe row equals a committed state —
+/// never a stale mix or a torn read.
+#[test]
+fn soak_sharded_executor_under_mixed_load() {
+    let n = 48;
+    let in_dim = 2;
+    let mut g = Gen::new(0xa2a2_5042);
+    let mut rng = Rng::new(9);
+    let csr = preferential_attachment(&mut rng, n, 2);
+    let features = g.vec_normal(n * in_dim, 0.5);
+    let model = random_model(&mut g, "gcn", n, in_dim, 4, 3, 1);
+    let ds = node_dataset(csr.clone(), features.clone(), in_dim);
+
+    // an edge not present in the base graph, toggled by the updater
+    let probe_src = (1..n as u32)
+        .find(|src| !csr.in_neighbors(0).contains(src))
+        .expect("node 0 has a non-neighbour");
+    let toggled: Vec<(u32, u32)> = {
+        let mut e = csr.edge_list();
+        e.push((probe_src, 0));
+        e
+    };
+    let csr_b = Csr::from_edges(n, &toggled).unwrap();
+
+    // the two committed states of the probe row (node 0)
+    let serial = ParallelConfig::serial();
+    let row_for = |csr: &Csr| -> Vec<f32> {
+        let ef = EdgeForm::from_csr(csr);
+        let input = GraphInput::node_level(&features, in_dim, &ef);
+        forward_fp_with(&model, &input, &serial).row(0).to_vec()
+    };
+    let a_row = row_for(&csr);
+    let b_row = row_for(&csr_b);
+    assert_ne!(a_row, b_row, "the toggled edge must move the probe row");
+
+    let exec = Arc::new(
+        NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(serial)
+            .with_shards(4)
+            .unwrap(),
+    );
+    let mut c = Coordinator::new();
+    c.add_model(
+        "sharded",
+        exec.clone() as Arc<dyn BatchExecutor>,
+        BatcherConfig {
+            node_budget: 64,
+            graph_slots: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 4,
+        },
+    );
+    let c = Arc::new(c);
+
+    // the mutating client: toggles the probe edge, flipping only on success
+    let updater = {
+        let c = Arc::clone(&c);
+        thread::spawn(move || {
+            let (mut ok, mut rejected) = (0u64, 0u64);
+            let mut present = false;
+            for _ in 0..24 {
+                let delta = if present {
+                    GraphDelta {
+                        remove_edges: vec![(probe_src, 0)],
+                        ..Default::default()
+                    }
+                } else {
+                    GraphDelta {
+                        add_edges: vec![(probe_src, 0)],
+                        ..Default::default()
+                    }
+                };
+                match c.submit("sharded", Payload::UpdateGraph(delta)) {
+                    Ok(rx) => {
+                        let resp = rx.recv().expect("runner alive").expect("update ok");
+                        assert!(resp.predictions.is_empty());
+                        present = !present;
+                        ok += 1;
+                    }
+                    Err(_) => rejected += 1,
+                }
+            }
+            (ok, rejected, present)
+        })
+    };
+    let mut classifiers = Vec::new();
+    for _ in 0..3 {
+        let c = Arc::clone(&c);
+        let a_row = a_row.clone();
+        let b_row = b_row.clone();
+        classifiers.push(thread::spawn(move || {
+            let (mut ok, mut rejected, mut torn) = (0u64, 0u64, 0u64);
+            for _ in 0..40 {
+                match c.submit("sharded", Payload::ClassifyNodes(vec![0])) {
+                    Ok(rx) => {
+                        let resp = rx.recv().expect("runner alive").expect("classify ok");
+                        ok += 1;
+                        let row = &resp.predictions[0].output;
+                        if row != &a_row && row != &b_row {
+                            torn += 1;
+                        }
+                    }
+                    Err(_) => rejected += 1,
+                }
+            }
+            (ok, rejected, torn)
+        }));
+    }
+
+    let (update_ok, update_rej, mut present) = updater.join().unwrap();
+    let (mut admitted, mut rejected, mut torn) = (update_ok, update_rej, 0u64);
+    for j in classifiers {
+        let (ok, rej, t) = j.join().unwrap();
+        admitted += ok;
+        rejected += rej;
+        torn += t;
+    }
+    assert_eq!(torn, 0, "served probe rows must equal a committed state");
+    assert_eq!(admitted + rejected, 24 + 3 * 40, "every submit counted once");
+    let snap = c.metrics();
+    assert_eq!(snap.requests, admitted, "admitted counted exactly once");
+    assert_eq!(snap.rejected, rejected, "rejected counted exactly once");
+    assert_eq!(snap.responses, admitted, "every admitted request answered once");
+    assert_eq!(snap.errors, 0, "no executor errors under the soak");
+    assert_eq!(snap.updates, update_ok, "updates counted exactly once");
+    assert_eq!(
+        exec.epoch(),
+        update_ok,
+        "epoch bumps exactly once per update across shards"
+    );
+
+    // sequential tail: a classify admitted after an update's reply must
+    // observe exactly the post-update state (never stale)
+    for _ in 0..4 {
+        let delta = if present {
+            GraphDelta {
+                remove_edges: vec![(probe_src, 0)],
+                ..Default::default()
+            }
+        } else {
+            GraphDelta {
+                add_edges: vec![(probe_src, 0)],
+                ..Default::default()
+            }
+        };
+        c.submit_blocking("sharded", Payload::UpdateGraph(delta)).unwrap();
+        present = !present;
+        let resp = c
+            .submit_blocking("sharded", Payload::ClassifyNodes(vec![0]))
+            .unwrap();
+        let want = if present { &b_row } else { &a_row };
+        assert_eq!(&resp.predictions[0].output, want, "stale probe row");
+    }
+    assert_eq!(exec.epoch(), update_ok + 4);
+    assert!(
+        c.metrics().shard_rebuilds > 0,
+        "sharded updates must report shard rebuilds"
+    );
+
+    // final full parity against a fresh unsharded session over the end state
+    let final_csr = if present { csr_b } else { csr };
+    let fresh = NativeExecutor::new(model, Some(&node_dataset(final_csr, features, in_dim)))
+        .unwrap()
+        .with_parallelism(ParallelConfig::serial());
+    let all: Vec<u32> = (0..n as u32).collect();
+    assert_eq!(
+        exec.run_node_batch(&all).unwrap(),
+        fresh.run_node_batch(&all).unwrap(),
+        "end-state sharded logits diverged from a fresh unsharded session"
+    );
+
+    Arc::try_unwrap(c).ok().map(|c| c.shutdown());
+}
