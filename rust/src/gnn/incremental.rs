@@ -31,6 +31,7 @@ use crate::quant::mixed::NodeQuantParams;
 use crate::quant::nns::NnsTable;
 use crate::quant::uniform;
 use crate::tensor::dense::Matrix;
+use crate::tensor::ops;
 
 use super::infer::{model_uses_skip, nns_or_build};
 use super::model::{GnnModel, QuantMethod};
@@ -161,10 +162,16 @@ pub(crate) fn quantize_row(
 }
 
 /// Row mirror of the integer GIN hidden-map matmul in `forward_int`:
-/// quantize to codes → i32-accumulate against the prepared weight codes
-/// (ascending k, zero-code skip) → Eq. 2 rescale `acc·sx·sw[j]`.
-/// `codes`/`acc` are caller-provided scratch (the patch loop reuses one
-/// pair across all dirty rows instead of allocating per row).
+/// quantize to codes → i32-accumulate against the session-cached
+/// weight-code panel → Eq. 2 rescale `acc·sx·sw[j]`.  The accumulation
+/// runs through the *same* [`ops::accumulate_code_row`] helper as the
+/// bucketed bucket kernels — including the add/sub-only fast path when
+/// this row's bitwidth keeps codes in {−1, 0, 1} — so the patcher
+/// replicates the bucketed path element-for-element by construction
+/// (i32 sums are exact either way; sharing the helper makes it one code
+/// path, not two provably-equal ones).  `codes`/`acc` are caller-provided
+/// scratch (the patch loop reuses one pair across all dirty rows instead
+/// of allocating per row).
 #[allow(clippy::too_many_arguments)]
 fn int_mm_row(
     hid: &[f32],
@@ -172,32 +179,32 @@ fn int_mm_row(
     per_node: bool,
     nns: Option<&NnsTable>,
     v: usize,
-    wcodes: &Matrix<i32>,
+    panel: &ops::WeightPanel,
     sw: &[f32],
     codes: &mut [i32],
     acc: &mut [i32],
     out: &mut [f32],
 ) {
-    debug_assert_eq!(hid.len(), wcodes.rows);
+    debug_assert_eq!(hid.len(), panel.rows());
     debug_assert_eq!(codes.len(), hid.len());
-    debug_assert_eq!(acc.len(), wcodes.cols);
-    debug_assert_eq!(out.len(), wcodes.cols);
-    let cols = wcodes.cols;
-    let sx: f32 = match p {
+    debug_assert_eq!(acc.len(), panel.cols());
+    debug_assert_eq!(out.len(), panel.cols());
+    let cols = panel.cols();
+    let (sx, pm_one): (f32, bool) = match p {
         // unquantized hidden map (no feat2 params): codes are the raw
         // values truncated to i32 with unit step, as in forward_int
         None => {
             for (c, &x) in codes.iter_mut().zip(hid) {
                 *c = x as i32;
             }
-            1.0
+            (1.0, false)
         }
         Some(p) if per_node => {
             let (s, b) = (p.steps[v], p.bits[v]);
             for (c, &x) in codes.iter_mut().zip(hid) {
                 *c = uniform::quantize_value(x, s, b, p.signed);
             }
-            s
+            (s, ops::codes_fit_pm_one(b, p.signed))
         }
         Some(p) => {
             let table = nns.expect("grouped feat2 params need an NNS table");
@@ -206,21 +213,13 @@ fn int_mm_row(
             for (c, &x) in codes.iter_mut().zip(hid) {
                 *c = uniform::quantize_value(x, s, b, p.signed);
             }
-            s
+            (s, ops::codes_fit_pm_one(b, p.signed))
         }
     };
     for a in acc.iter_mut() {
         *a = 0;
     }
-    for (kk, &c) in codes.iter().enumerate() {
-        if c == 0 {
-            continue;
-        }
-        let brow = &wcodes.data[kk * cols..(kk + 1) * cols];
-        for (o, &bv) in acc.iter_mut().zip(brow) {
-            *o += c * bv;
-        }
-    }
+    ops::accumulate_code_row(codes, panel.data(), cols, pm_one, acc);
     for (j, o) in out.iter_mut().enumerate() {
         *o = acc[j] as f32 * sx * sw[j];
     }
@@ -398,8 +397,8 @@ pub fn patch_activations(
                 let mut hqv = vec![0.0f32; fin];
                 // int-path scratch, reused across rows
                 let (mut codes_buf, mut acc_buf) = if int_path {
-                    let wc = pl.w2_codes.as_ref().expect("gin w2 codes");
-                    (vec![0i32; hidden], vec![0i32; wc.cols])
+                    let panel = pl.w2_panel.as_ref().expect("gin w2 codes");
+                    (vec![0i32; hidden], vec![0i32; panel.cols()])
                 } else {
                     (Vec::new(), Vec::new())
                 };
@@ -484,16 +483,16 @@ pub fn patch_activations(
                         };
                     let out_slice: &mut [f32] = h_out.row_mut(v);
                     if int_path {
-                        let wcodes =
-                            pl.w2_codes.as_ref().expect("gin w2 codes");
-                        debug_assert_eq!(lay.b2.len(), wcodes.cols);
+                        let panel =
+                            pl.w2_panel.as_ref().expect("gin w2 codes");
+                        debug_assert_eq!(lay.b2.len(), panel.cols());
                         int_mm_row(
                             &hid,
                             feat2_p,
                             feat2_per_node,
                             feat2_grouped_nns.as_deref(),
                             v,
-                            wcodes,
+                            panel,
                             &pl.w2_steps_clamped,
                             &mut codes_buf,
                             &mut acc_buf,

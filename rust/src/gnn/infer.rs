@@ -565,22 +565,25 @@ fn forward_int_impl(
         let mm = |x: &Matrix<f32>,
                   feat: Option<&NodeQuantParams>,
                   nns: Option<&NnsTable>,
-                  wcodes: &Matrix<i32>,
+                  panel: &ops::WeightPanel,
                   sw: &[f32],
                   bias: &[f32],
                   skip_quant: bool| {
             // Activation codes, bit-packed row-wise at each node's learned
-            // bitwidth (quant::pack — the serving at-rest layout).  The
-            // integer matmul streams rows straight off the packed payload,
-            // so the dense [N, F] i32 code matrix is never materialized.
-            // Weight codes and the clamped sw come precomputed from the
-            // prepared session.
-            let (acc, sx) = if skip_quant || feat.is_none() {
+            // bitwidth (quant::pack — the serving at-rest layout, bucketed
+            // by bitwidth).  The integer matmul streams rows straight off
+            // the bucketed payload through per-bitwidth kernels, so the
+            // dense [N, F] i32 code matrix is never materialized and
+            // low-bit rows cost less.  The transposed/widened weight-code
+            // panel and the clamped sw come precomputed from the prepared
+            // session.
+            let mut out = if skip_quant || feat.is_none() {
                 // unquantized input (binary bag-of-words): treat as codes
                 // with unit step — values are already 0/1 integers.
                 let codes: Vec<i32> = x.data.iter().map(|&v| v as i32).collect();
                 let a = Matrix::from_vec(x.rows, x.cols, codes).unwrap();
-                (ops::matmul_i32_with(&a, wcodes, cfg), vec![1.0f32; x.rows])
+                let acc = ops::matmul_codes_with(&a, panel, cfg);
+                ops::rescale_outer(&acc, &vec![1.0f32; x.rows], sw)
             } else {
                 let p = feat.unwrap();
                 let packed = if p.len() == x.rows {
@@ -607,10 +610,11 @@ fn forward_int_impl(
                     }
                     pack::pack_rows(&codes, &steps, &bits, x.cols, p.signed)
                 };
-                let sx = packed.steps();
-                (packed.matmul_i32(wcodes, cfg), sx)
+                let acc = packed.matmul_panel(panel, cfg);
+                // steps() is a borrowed slice of the packed slab — the
+                // Eq. 2 rescale reads it in place, no per-layer sx Vec
+                ops::rescale_outer(&acc, packed.steps(), sw)
             };
-            let mut out = ops::rescale_outer(&acc, &sx, sw);
             ops::add_bias(&mut out, bias);
             out
         };
@@ -656,7 +660,7 @@ fn forward_int_impl(
                     &hid,
                     lay.feat2.as_ref(),
                     pl.nns2.as_ref(),
-                    pl.w2_codes.as_ref().expect("gin w2 codes"),
+                    pl.w2_panel.as_ref().expect("gin w2 codes"),
                     &pl.w2_steps_clamped,
                     &lay.b2,
                     false,

@@ -26,6 +26,7 @@ use crate::error::{Error, Result};
 use crate::quant::nns::NnsTable;
 use crate::quant::uniform::{self, MIN_STEP};
 use crate::tensor::dense::Matrix;
+use crate::tensor::ops::WeightPanel;
 
 use super::model::{GnnModel, QuantMethod};
 
@@ -116,8 +117,10 @@ pub struct PreparedLayer {
     pub wq: Option<Matrix<f32>>,
     /// fake-quantized GIN `w2` (fp path)
     pub w2q: Option<Matrix<f32>>,
-    /// integer codes of GIN `w2` (true integer path)
-    pub w2_codes: Option<Matrix<i32>>,
+    /// integer codes of GIN `w2` as a k-major/widened [`WeightPanel`]
+    /// (true integer path) — derived once here; the panel type freezes
+    /// the layout contract every bucketed kernel streams
+    pub w2_panel: Option<WeightPanel>,
     /// clamped per-output-column steps of `w2` (the Eq. 2 `sw`)
     pub w2_steps_clamped: Vec<f32>,
     /// sorted NNS lookup over the layer-input feature params (used when
@@ -141,7 +144,7 @@ pub struct PreparedHead {
 /// requests (`&PreparedModel` is all the forward passes need).
 ///
 /// The retained `model` has its raw layer weight tensors (`w`/`w2`)
-/// released — the derived `wq`/`w2q`/`w2_codes` replace them — so a
+/// released — the derived `wq`/`w2q`/`w2_panel` replace them — so a
 /// session holds one resident copy of each weight, not two.  Re-preparing
 /// from `prep.model` is therefore not supported; prepare from the loaded
 /// model.
@@ -204,9 +207,9 @@ impl PreparedModel {
                 }
                 None => None,
             };
-            let (w2_codes, w2_steps_clamped) = match (&lay.w2, int_gin) {
+            let (w2_panel, w2_steps_clamped) = match (&lay.w2, int_gin) {
                 (Some(w2), true) => (
-                    Some(weight_codes(w2, &lay.w2_steps)),
+                    Some(WeightPanel::from_codes(weight_codes(w2, &lay.w2_steps))),
                     clamp_steps(&lay.w2_steps),
                 ),
                 _ => (None, Vec::new()),
@@ -242,7 +245,7 @@ impl PreparedModel {
             layers.push(PreparedLayer {
                 wq,
                 w2q,
-                w2_codes,
+                w2_panel,
                 w2_steps_clamped,
                 nns,
                 nns2,
@@ -269,7 +272,7 @@ impl PreparedModel {
             }
         };
 
-        // The derived matrices (wq/w2q/w2_codes) are the serving source of
+        // The derived matrices/panels (wq/w2q/w2_panel) are the serving source of
         // truth from here on; release the raw layer weight tensors so a
         // prepared session doesn't keep two f32 copies of every weight
         // resident.  Everything the forwards still read from the model —
@@ -309,10 +312,10 @@ impl PreparedModel {
     /// state in bytes — what a serving process pays per loaded session.
     pub fn prepared_bytes(&self) -> usize {
         let mat_f = |m: &Option<Matrix<f32>>| m.as_ref().map_or(0, |m| m.data.len() * 4);
-        let mat_i = |m: &Option<Matrix<i32>>| m.as_ref().map_or(0, |m| m.data.len() * 4);
+        let panel = |p: &Option<WeightPanel>| p.as_ref().map_or(0, |p| p.bytes());
         let mut total = 0usize;
         for pl in &self.layers {
-            total += mat_f(&pl.wq) + mat_f(&pl.w2q) + mat_i(&pl.w2_codes);
+            total += mat_f(&pl.wq) + mat_f(&pl.w2q) + panel(&pl.w2_panel);
             total += pl.w2_steps_clamped.len() * 4;
             total += pl.nns.as_ref().map_or(0, |t| t.len() * 12);
             total += pl.nns2.as_ref().map_or(0, |t| t.len() * 12);

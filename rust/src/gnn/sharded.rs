@@ -249,24 +249,27 @@ fn shard_layer(
             ops::relu_inplace(&mut hid);
 
             if int_path {
-                // true integer hidden-map matmul off the shard's packed slab
-                let wcodes = pl.w2_codes.as_ref().expect("gin w2 codes");
-                let (acc, sx) = match lay.feat2.as_ref() {
+                // true integer hidden-map matmul off the shard's packed
+                // slab, through the session-cached weight-code panel and
+                // the same bucketed per-bitwidth kernels as the
+                // single-shard path
+                let panel = pl.w2_panel.as_ref().expect("gin w2 codes");
+                let mut out = match lay.feat2.as_ref() {
                     None => {
                         // unquantized hidden map: unit-step codes (the
                         // forward_int `feat.is_none()` branch)
                         let codes: Vec<i32> =
                             hid.data.iter().map(|&v| v as i32).collect();
                         let a = Matrix::from_vec(hid.rows, hid.cols, codes).unwrap();
-                        (ops::matmul_i32_with(&a, wcodes, &serial), vec![1.0f32; hid.rows])
+                        let acc = ops::matmul_codes_with(&a, panel, &serial);
+                        ops::rescale_outer(&acc, &vec![1.0f32; hid.rows], &pl.w2_steps_clamped)
                     }
                     Some(p) => {
                         let slab = pack_shard_hidden(p, pl.nns2.as_ref(), sh, &hid, n_global);
-                        let sx = slab.steps();
-                        (slab.matmul_i32(wcodes, &serial), sx)
+                        let acc = slab.matmul_panel(panel, &serial);
+                        ops::rescale_outer(&acc, slab.steps(), &pl.w2_steps_clamped)
                     }
                 };
-                let mut out = ops::rescale_outer(&acc, &sx, &pl.w2_steps_clamped);
                 ops::add_bias(&mut out, &lay.b2);
                 out
             } else {

@@ -39,6 +39,16 @@ impl NodeQuantParams {
                 steps[i]
             )));
         }
+        // the bucketed integer kernels (quant::pack) dispatch on widths
+        // 1..=8; reject wider artifacts here — the load-time validation
+        // boundary — instead of panicking per forward in a runner thread
+        // (b = 0 stays tolerated: it quantizes every code to 0)
+        if let Some(i) = bits.iter().position(|&b| b > 8) {
+            return Err(Error::artifact(format!(
+                "bitwidth {} at node {i} exceeds the supported 1..=8 range",
+                bits[i]
+            )));
+        }
         let steps = steps
             .into_iter()
             .map(|s| s.max(uniform::MIN_STEP))
@@ -171,6 +181,16 @@ impl BitsFile {
 mod tests {
     use super::*;
     use std::io::Write;
+
+    #[test]
+    fn rejects_bits_above_eight() {
+        // the bucketed kernels dispatch on widths 1..=8 — wider artifacts
+        // must fail at the load boundary, not panic per forward
+        let err = NodeQuantParams::new(vec![0.1, 0.1], vec![4, 9], true).unwrap_err();
+        assert!(format!("{err}").contains("1..=8"));
+        // zero stays tolerated (quantizes every code to 0)
+        assert!(NodeQuantParams::new(vec![0.1], vec![0], true).is_ok());
+    }
 
     #[test]
     fn fake_quantize_per_row() {

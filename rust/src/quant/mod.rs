@@ -4,9 +4,9 @@
 //! build-time python); it applies them: uniform fake-quant (Eq. 1),
 //! per-node mixed precision, the Nearest Neighbor Strategy runtime lookup
 //! (Algorithm 1, binary search over sorted q_max exactly as the paper's
-//! comparator array), bit-packed feature storage, and the compression
-//! accounting behind the paper's "Average bits" / "Compression ratio"
-//! columns.
+//! comparator array), bitwidth-bucketed bit-packed feature storage with
+//! per-bitwidth integer matmul kernels, and the compression accounting
+//! behind the paper's "Average bits" / "Compression ratio" columns.
 
 pub mod compress;
 pub mod mixed;
@@ -17,5 +17,5 @@ pub mod uniform;
 pub use compress::{average_bits, compression_ratio, feature_memory_bytes};
 pub use mixed::{BitsFile, NodeQuantParams};
 pub use nns::NnsTable;
-pub use pack::{pack_rows, PackedFeatures};
+pub use pack::{pack_rows, pack_rows_subset, PackedFeatures};
 pub use uniform::{dequantize, quantize_row, quantize_value, Quantized};

@@ -1,19 +1,104 @@
-//! Bit-packed feature storage.
+//! Bit-packed feature storage, **bucketed by bitwidth** so compute cost
+//! scales with each node's assigned bits.
 //!
 //! The paper's compression ratios are *memory* ratios: an m-bit node stores
-//! its F features in m·F bits.  This module actually packs/unpacks codes at
-//! arbitrary bitwidths 1..=8 (sign-magnitude is avoided by biasing signed
-//! codes), proving the claimed memory layout is realizable and giving the
-//! serving path a compact at-rest representation.
+//! its F features in m·F bits.  Its headline hardware result (§5.4, up to
+//! 2× on a dedicated accelerator) additionally *exploits* the learned
+//! widths at compute time.  This module realizes both on CPU:
+//!
+//! * **Layout** — rows are grouped into per-bitwidth buckets (b ∈ 1..=8).
+//!   Each bucket owns a word-aligned `u64` slab: every row starts at a
+//!   fresh 64-bit word (`words_per_row = ⌈b·F/64⌉`, one trailing pad word
+//!   per slab so decoders may over-read one word), with codes packed
+//!   contiguously inside the row.  `Bucket::rows` is the permutation from
+//!   bucket-local row order back to global row ids.
+//! * **Decode** — per-bitwidth specialized unpackers (const-generic
+//!   `b = 1..=8`, match-dispatched once per bucket) extract each code from
+//!   a 64-bit window with shifts and a mask: no per-bit loop, no
+//!   data-dependent branches.  The old element-by-element [`read_bits`]
+//!   decoder survives as the *reference kernel*
+//!   ([`PackedFeatures::matmul_i32_scratch`]) — the parity oracle the
+//!   bucketed kernels are property-tested against and the baseline the
+//!   `quant/bucketed_speedup` bench metric is measured from.
+//! * **Accumulate** — buckets whose codes lie in {−1, 0, 1} (signed b ≤ 2,
+//!   unsigned b = 1) take an add/sub-only inner loop
+//!   ([`crate::tensor::ops::accumulate_code_row`], shared with the
+//!   incremental row patcher so the arithmetic cannot diverge).
+//!
+//! **Reordering is bitwise safe:** the integer matmul accumulates in
+//! `i32`, which is exact — every row's output is a sum of integer products
+//! independent of which bucket computed it or in what order, and each
+//! global row lives in exactly one bucket, so scattering bucket-local
+//! results back through the permutation reproduces the unbucketed kernel
+//! bit for bit (property-tested here and in `rust/tests/forward_parity.rs`
+//! / `shard_parity.rs` / `delta_parity.rs`).
+//!
+//! Sign-magnitude is avoided by biasing signed codes before packing.
 
+use crate::tensor::dense::Matrix;
+use crate::tensor::ops::{self, WeightPanel};
 use crate::util::threadpool::{self, ParallelConfig};
 
-/// Packed feature map: each row packed at its own bitwidth.
+/// Bias added to signed codes before packing so the stored value is
+/// non-negative: `c ∈ [−levels, levels]` maps to `[0, 2·levels]`.
+#[inline]
+fn bias_for(bits: u8, signed: bool) -> i32 {
+    if signed {
+        (1i32 << (bits.max(1) - 1)) - 1
+    } else {
+        0
+    }
+}
+
+/// One bitwidth's rows: a word-aligned slab plus the permutation back to
+/// global row order.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    /// Effective bitwidth of every row in this bucket (1..=8).
+    pub bits: u8,
+    /// `⌈bits · feat_dim / 64⌉` — each bucket-local row starts at word
+    /// `local · words_per_row`.
+    pub words_per_row: usize,
+    /// The slab: `rows.len() · words_per_row` payload words plus one
+    /// trailing pad word (decoders read one word past a code's start).
+    pub words: Vec<u64>,
+    /// Permutation: bucket-local row `li` holds global row `rows[li]`.
+    pub rows: Vec<u32>,
+}
+
+impl Bucket {
+    /// Number of rows in this bucket.
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    #[inline]
+    fn base_bit(&self, local: usize) -> usize {
+        local * self.words_per_row * 64
+    }
+
+    /// Decode bucket-local row `local` into `out` (length = feat_dim),
+    /// through the per-bitwidth specialized unpacker.
+    #[inline]
+    fn unpack_local_into(&self, local: usize, signed: bool, out: &mut [i32]) {
+        let bias = bias_for(self.bits, signed);
+        unpack_span(self.bits, &self.words, self.base_bit(local), bias, out);
+    }
+}
+
+/// Packed feature map: rows grouped into per-bitwidth buckets.
 #[derive(Debug, Clone)]
 pub struct PackedFeatures {
-    pub data: Vec<u8>,
-    /// per row: (bit offset into data, bits, step)
-    pub rows: Vec<(usize, u8, f32)>,
+    /// Non-empty buckets in ascending bitwidth order.
+    pub buckets: Vec<Bucket>,
+    /// Per global row: (bucket index, bucket-local row).
+    row_loc: Vec<(u32, u32)>,
+    /// Per-row quantization steps in **global row order** — the dedicated
+    /// slice-returnable field behind [`Self::steps`] (the integer forward
+    /// reads it per layer; no per-call Vec is built).
+    steps: Vec<f32>,
+    /// Per-row recorded bitwidths, global row order.
+    bits: Vec<u8>,
     pub feat_dim: usize,
     pub signed: bool,
 }
@@ -28,6 +113,10 @@ pub struct PackedFeatures {
 /// by flooring steps to [`crate::quant::uniform::MIN_STEP`] at
 /// construction (a raw 0.0 step here would silently zero the row in
 /// `rescale_outer`).
+///
+/// Widths above 8 are a hard error here (the bucketed kernels dispatch on
+/// 1..=8); `NodeQuantParams::new` rejects such artifacts at load time so
+/// the serving path never reaches this assert.
 pub fn pack_rows(
     codes: &[i32],
     steps: &[f32],
@@ -41,22 +130,61 @@ pub fn pack_rows(
         steps.iter().all(|s| s.is_finite() && *s > 0.0),
         "pack_rows expects clamped finite steps (see NodeQuantParams::new)"
     );
-    let total_bits: usize = bits.iter().map(|&b| b as usize * feat_dim).sum();
-    let mut data = vec![0u8; total_bits.div_ceil(8)];
-    let mut rows = Vec::with_capacity(bits.len());
-    let mut bitpos = 0usize;
-    for (v, (&b, &s)) in bits.iter().zip(steps).enumerate() {
-        rows.push((bitpos, b, s));
-        let bias = if signed { (1i32 << (b.max(1) - 1)) - 1 } else { 0 };
+    let n = bits.len();
+    // first pass: rows per effective width (b = 0 is tolerated as an
+    // all-zero-codes row and folded into the 1-bit bucket — same bias,
+    // same decode)
+    let mut count = [0usize; 9];
+    for &b in bits {
+        let be = b.max(1) as usize;
+        assert!(be <= 8, "bitwidths are 1..=8, got {b}");
+        count[be] += 1;
+    }
+    let mut bucket_of_width = [usize::MAX; 9];
+    let mut buckets = Vec::new();
+    for (be, &cnt) in count.iter().enumerate().skip(1) {
+        if cnt > 0 {
+            bucket_of_width[be] = buckets.len();
+            let wpr = (be * feat_dim).div_ceil(64);
+            buckets.push(Bucket {
+                bits: be as u8,
+                words_per_row: wpr,
+                words: vec![0u64; cnt * wpr + 1],
+                rows: Vec::with_capacity(cnt),
+            });
+        }
+    }
+    // second pass: scatter each row into its bucket's slab
+    let mut row_loc = vec![(0u32, 0u32); n];
+    for (v, &b) in bits.iter().enumerate() {
+        let be = b.max(1) as usize;
+        let bi = bucket_of_width[be];
+        let bk = &mut buckets[bi];
+        let local = bk.rows.len();
+        bk.rows.push(v as u32);
+        row_loc[v] = (bi as u32, local as u32);
+        let bias = bias_for(b, signed);
+        let lv = crate::quant::uniform::levels(b.max(1), signed);
+        let mut bit = local * bk.words_per_row * 64;
         for &c in &codes[v * feat_dim..(v + 1) * feat_dim] {
-            let raw = (c + bias) as u32;
-            write_bits(&mut data, bitpos, b, raw);
-            bitpos += b as usize;
+            // codes must be quantizer output (|c| <= levels, unsigned >= 0):
+            // the pm-one fast path relies on low-bit codes really being in
+            // {-1, 0, 1}, so an out-of-range code would silently diverge
+            // from the scratch reference in release builds
+            debug_assert!(
+                c.abs() <= lv && (signed || c >= 0),
+                "code {c} out of range for {b}-bit signed={signed} row {v}"
+            );
+            let raw = (c + bias) as u32 as u64;
+            write_bits(&mut bk.words, bit, be as u8, raw);
+            bit += be;
         }
     }
     PackedFeatures {
-        data,
-        rows,
+        buckets,
+        row_loc,
+        steps: steps.to_vec(),
+        bits: bits.to_vec(),
         feat_dim,
         signed,
     }
@@ -81,36 +209,42 @@ pub fn pack_rows_subset(
     assert_eq!(steps.len(), bits.len());
     let sub_steps: Vec<f32> = ids.iter().map(|&v| steps[v as usize]).collect();
     let sub_bits: Vec<u8> = ids.iter().map(|&v| bits[v as usize]).collect();
+    // the same clamped-steps invariant pack_rows enforces — intentionally
+    // re-asserted here on the *gathered* steps (shadowing the downstream
+    // check) so a violation names the shard-slab gather, not the generic
+    // pack: a slab must not smuggle a raw 0.0 step past the Eq. 2 rescale
+    debug_assert!(
+        sub_steps.iter().all(|s| s.is_finite() && *s > 0.0),
+        "pack_rows_subset expects clamped finite steps for every gathered id"
+    );
     pack_rows(codes, &sub_steps, &sub_bits, feat_dim, signed)
 }
 
 impl PackedFeatures {
     /// Number of packed rows.
     pub fn num_rows(&self) -> usize {
-        self.rows.len()
+        self.row_loc.len()
     }
 
-    /// Per-row quantization steps, in row order (the `sx` of the Eq. 2
-    /// rescale).
-    pub fn steps(&self) -> Vec<f32> {
-        self.rows.iter().map(|&(_, _, s)| s).collect()
+    /// Per-row quantization steps, in global row order (the `sx` of the
+    /// Eq. 2 rescale).  A borrowed slice of the dedicated field — callers
+    /// feed it straight to `rescale_outer` without allocating.
+    pub fn steps(&self) -> &[f32] {
+        &self.steps
+    }
+
+    /// Per-row recorded bitwidths, global row order.
+    pub fn bits(&self) -> &[u8] {
+        &self.bits
     }
 
     /// Unpack one row into a caller-provided buffer (no allocation — the
-    /// integer inference path reuses one scratch row per worker).
+    /// integer inference path reuses one scratch row per worker).  Routes
+    /// through the bucketed per-bitwidth unpacker.
     pub fn unpack_row_into(&self, v: usize, out: &mut [i32]) {
         assert_eq!(out.len(), self.feat_dim);
-        let (start, b, _s) = self.rows[v];
-        let bias = if self.signed {
-            (1i32 << (b.max(1) - 1)) - 1
-        } else {
-            0
-        };
-        let mut pos = start;
-        for slot in out.iter_mut() {
-            *slot = read_bits(&self.data, pos, b) as i32 - bias;
-            pos += b as usize;
-        }
+        let (bi, li) = self.row_loc[v];
+        self.buckets[bi as usize].unpack_local_into(li as usize, self.signed, out);
     }
 
     /// Unpack one row back to integer codes.
@@ -120,33 +254,99 @@ impl PackedFeatures {
         out
     }
 
-    /// Integer matmul straight off the packed payload: `acc = codes(self) @
-    /// w`, i32-accumulated, row-parallel under `cfg`.  This is the serving
-    /// hot path — the at-rest bit-packed representation feeds the update
-    /// phase without ever materializing a dense `[N, F]` code matrix; each
-    /// worker streams rows through one scratch buffer.  Rescale the result
-    /// with [`crate::tensor::ops::rescale_outer`] using [`Self::steps`].
-    pub fn matmul_i32(
-        &self,
-        w: &crate::tensor::Matrix<i32>,
-        cfg: &ParallelConfig,
-    ) -> crate::tensor::Matrix<i32> {
+    /// Reference decode of one row through the per-element bit loop
+    /// ([`read_bits`]) — the pre-bucketing kernel, kept as the parity
+    /// oracle and bench baseline.
+    fn unpack_row_into_ref(&self, v: usize, out: &mut [i32]) {
+        assert_eq!(out.len(), self.feat_dim);
+        let (bi, li) = self.row_loc[v];
+        let bk = &self.buckets[bi as usize];
+        let bias = bias_for(bk.bits, self.signed);
+        let mut pos = bk.base_bit(li as usize);
+        for slot in out.iter_mut() {
+            *slot = read_bits(&bk.words, pos, bk.bits) as i32 - bias;
+            pos += bk.bits as usize;
+        }
+    }
+
+    /// Bucketed integer matmul: `acc = codes(self) @ w`, i32-accumulated.
+    /// This is the serving hot path — each bucket streams its word-aligned
+    /// slab through the per-bitwidth unpacker (add/sub-only accumulation
+    /// when codes fit {−1, 0, 1}), computes a bucket-local output block
+    /// row-parallel under `cfg`, and the blocks are scattered back through
+    /// the bucket permutation into global row order.  Bitwise identical to
+    /// [`Self::matmul_i32_scratch`] and to the dense-code
+    /// [`ops::matmul_i32_with`] at any thread count (i32 sums are exact;
+    /// every global row has exactly one bucket).  Rescale the result with
+    /// [`crate::tensor::ops::rescale_outer`] using [`Self::steps`].
+    pub fn matmul_i32(&self, w: &Matrix<i32>, cfg: &ParallelConfig) -> Matrix<i32> {
         assert_eq!(self.feat_dim, w.rows, "packed matmul shape mismatch");
-        let (m, n) = (self.rows.len(), w.cols);
-        let mut c = crate::tensor::Matrix::zeros(m, n);
+        self.matmul_impl(w.cols, &w.data, cfg)
+    }
+
+    /// [`Self::matmul_i32`] against a session-cached [`WeightPanel`] (the
+    /// weight-code layout `PreparedModel` derives once).
+    pub fn matmul_panel(&self, panel: &WeightPanel, cfg: &ParallelConfig) -> Matrix<i32> {
+        assert_eq!(self.feat_dim, panel.rows(), "packed matmul shape mismatch");
+        self.matmul_impl(panel.cols(), panel.data(), cfg)
+    }
+
+    fn matmul_impl(&self, n: usize, wdata: &[i32], cfg: &ParallelConfig) -> Matrix<i32> {
+        let m = self.num_rows();
+        let mut c = Matrix::zeros(m, n);
+        if n == 0 {
+            return c;
+        }
+        let single = self.buckets.len() == 1;
+        for bk in &self.buckets {
+            let bm = bk.num_rows();
+            let pm_one = ops::codes_fit_pm_one(bk.bits, self.signed);
+            // bucket-local rows are contiguous, so the standard row-parallel
+            // dispatch applies; each worker owns disjoint output rows
+            let run = |data: &mut [i32]| {
+                threadpool::parallel_rows(cfg, bm, n, data, |row0, chunk| {
+                    let mut scratch = vec![0i32; self.feat_dim];
+                    for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                        bk.unpack_local_into(row0 + ri, self.signed, &mut scratch);
+                        ops::accumulate_code_row(&scratch, wdata, n, pm_one, crow);
+                    }
+                });
+            };
+            if single {
+                // uniform-bitwidth map: one bucket whose rows were pushed
+                // in global order, so the permutation is the identity —
+                // compute straight into the output, no block + scatter
+                debug_assert!(bk.rows.iter().enumerate().all(|(i, &g)| g as usize == i));
+                run(&mut c.data);
+            } else {
+                let mut local = vec![0i32; bm * n];
+                run(&mut local);
+                // scatter: every global row lives in exactly one bucket
+                for (li, &gid) in bk.rows.iter().enumerate() {
+                    let g = gid as usize;
+                    c.data[g * n..(g + 1) * n].copy_from_slice(&local[li * n..(li + 1) * n]);
+                }
+            }
+        }
+        c
+    }
+
+    /// Reference integer matmul: per-global-row decode through the
+    /// element-by-element [`read_bits`] loop into an i32 scratch row, then
+    /// the uniform multiply inner loop — the exact shape of the
+    /// pre-bucketing kernel.  Kept as the bitwise parity oracle for
+    /// [`Self::matmul_i32`] (property-tested here and in the parity test
+    /// suites) and as the baseline for the `quant/bucketed_speedup` bench
+    /// metric.
+    pub fn matmul_i32_scratch(&self, w: &Matrix<i32>, cfg: &ParallelConfig) -> Matrix<i32> {
+        assert_eq!(self.feat_dim, w.rows, "packed matmul shape mismatch");
+        let (m, n) = (self.num_rows(), w.cols);
+        let mut c = Matrix::zeros(m, n);
         threadpool::parallel_rows(cfg, m, n, &mut c.data, |row0, chunk| {
             let mut scratch = vec![0i32; self.feat_dim];
             for (ri, crow) in chunk.chunks_mut(n).enumerate() {
-                self.unpack_row_into(row0 + ri, &mut scratch);
-                for (kk, &code) in scratch.iter().enumerate() {
-                    if code == 0 {
-                        continue;
-                    }
-                    let brow = &w.data[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        crow[j] += code * brow[j];
-                    }
-                }
+                self.unpack_row_into_ref(row0 + ri, &mut scratch);
+                ops::accumulate_code_row(&scratch, &w.data, n, false, crow);
             }
         });
         c
@@ -154,37 +354,84 @@ impl PackedFeatures {
 
     /// Dequantize one row.
     pub fn dequantize_row(&self, v: usize) -> Vec<f32> {
-        let (_, _, s) = self.rows[v];
+        let s = self.steps[v];
         self.unpack_row(v).into_iter().map(|c| c as f32 * s).collect()
     }
 
-    /// Total storage in bytes (payload only).
+    /// Total storage in bytes (bucket slabs, including per-row word
+    /// alignment and the one pad word per bucket).
     pub fn payload_bytes(&self) -> usize {
-        self.data.len()
+        self.buckets.iter().map(|b| b.words.len() * 8).sum()
     }
 }
 
-fn write_bits(data: &mut [u8], bitpos: usize, nbits: u8, value: u32) {
-    debug_assert!(nbits <= 8 && (nbits == 32 || value < (1u32 << nbits)));
-    let mut pos = bitpos;
-    for i in 0..nbits {
-        if (value >> i) & 1 == 1 {
-            data[pos / 8] |= 1 << (pos % 8);
-        }
-        pos += 1;
+/// Write `nbits` (≤ 8) of `value` at bit offset `bitpos` into a pre-zeroed
+/// `u64` slab.  A value spans at most two words; the spill into the second
+/// word is taken only when the span actually crosses a word boundary.
+/// `value` is masked to `nbits` so an out-of-range caller value is
+/// truncated (as the old per-bit loop did) rather than ORing stray high
+/// bits over neighboring codes.
+fn write_bits(words: &mut [u64], bitpos: usize, nbits: u8, value: u64) {
+    debug_assert!(nbits <= 8 && value < (1u64 << nbits.max(1)));
+    let value = value & ((1u64 << nbits) - 1);
+    let w = bitpos >> 6;
+    let s = bitpos & 63;
+    words[w] |= value << s;
+    if s + nbits as usize > 64 {
+        words[w + 1] |= value >> (64 - s);
     }
 }
 
-fn read_bits(data: &[u8], bitpos: usize, nbits: u8) -> u32 {
+/// Read `nbits` (≤ 8) at bit offset `bitpos` — the element-by-element
+/// reference decoder (one shift/test/branch per *bit*).  The specialized
+/// unpackers below replace it on the hot path; it remains the oracle the
+/// boundary and roundtrip tests pin down.
+fn read_bits(words: &[u64], bitpos: usize, nbits: u8) -> u32 {
     let mut out = 0u32;
-    let mut pos = bitpos;
-    for i in 0..nbits {
-        if (data[pos / 8] >> (pos % 8)) & 1 == 1 {
+    for i in 0..nbits as usize {
+        let pos = bitpos + i;
+        if (words[pos >> 6] >> (pos & 63)) & 1 == 1 {
             out |= 1 << i;
         }
-        pos += 1;
     }
     out
+}
+
+/// Branch-free decode of `out.len()` codes of width `B` starting at
+/// `base_bit`: each code is extracted from a two-word 64-bit window with
+/// two shifts, an or and a mask — no per-bit loop, no data-dependent
+/// branches.  Requires one readable word past the last code's word (the
+/// bucket slab's trailing pad word).  `(hi << 1) << (63 − s)` is
+/// `hi << (64 − s)` computed without an undefined 64-bit shift at `s = 0`
+/// (where the high word must contribute nothing).
+#[inline(always)]
+fn unpack_span_b<const B: usize>(words: &[u64], base_bit: usize, bias: i32, out: &mut [i32]) {
+    let mask = (1u64 << B) - 1;
+    let mut bit = base_bit;
+    for slot in out.iter_mut() {
+        let w = bit >> 6;
+        let s = bit & 63;
+        let lo = words[w] >> s;
+        let hi = (words[w + 1] << 1) << (63 - s);
+        *slot = ((lo | hi) & mask) as i32 - bias;
+        bit += B;
+    }
+}
+
+/// Match-dispatch to the monomorphized per-bitwidth unpacker (once per
+/// bucket, not per element).
+fn unpack_span(bits: u8, words: &[u64], base_bit: usize, bias: i32, out: &mut [i32]) {
+    match bits {
+        1 => unpack_span_b::<1>(words, base_bit, bias, out),
+        2 => unpack_span_b::<2>(words, base_bit, bias, out),
+        3 => unpack_span_b::<3>(words, base_bit, bias, out),
+        4 => unpack_span_b::<4>(words, base_bit, bias, out),
+        5 => unpack_span_b::<5>(words, base_bit, bias, out),
+        6 => unpack_span_b::<6>(words, base_bit, bias, out),
+        7 => unpack_span_b::<7>(words, base_bit, bias, out),
+        8 => unpack_span_b::<8>(words, base_bit, bias, out),
+        other => unreachable!("bucket bitwidths are 1..=8, got {other}"),
+    }
 }
 
 #[cfg(test)]
@@ -192,6 +439,26 @@ mod tests {
     use super::*;
     use crate::quant::uniform::{levels, quantize_value};
     use crate::util::prop::{property, Gen};
+
+    /// Quantize a random [n, f] map with per-row (step, bits) — the input
+    /// shape every packing test starts from.
+    fn random_codes(
+        g: &mut Gen,
+        n: usize,
+        f: usize,
+        signed: bool,
+    ) -> (Vec<i32>, Vec<f32>, Vec<u8>) {
+        let steps = g.vec_uniform(n, 0.01, 0.3);
+        let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
+        let x = g.vec_normal(n * f, 1.0);
+        let mut codes = vec![0i32; n * f];
+        for v in 0..n {
+            for j in 0..f {
+                codes[v * f + j] = quantize_value(x[v * f + j], steps[v], bits[v], signed);
+            }
+        }
+        (codes, steps, bits)
+    }
 
     #[test]
     fn pack_unpack_roundtrip() {
@@ -201,39 +468,61 @@ mod tests {
         let p = pack_rows(&codes, &steps, &bits, 4, true);
         assert_eq!(p.unpack_row(0), &codes[..4]);
         assert_eq!(p.unpack_row(1), &codes[4..]);
+        // two distinct widths -> two buckets, ascending
+        assert_eq!(p.buckets.len(), 2);
+        assert_eq!(p.buckets[0].bits, 3);
+        assert_eq!(p.buckets[1].bits, 5);
     }
 
     #[test]
-    fn payload_matches_bit_accounting() {
+    fn payload_matches_word_accounting() {
+        // 10 rows × 16 feats × 2 bits = 32 bits/row -> 1 word per row,
+        // plus the bucket's trailing pad word
         let steps = vec![0.1f32; 10];
         let bits = vec![2u8; 10];
         let codes = vec![0i32; 10 * 16];
         let p = pack_rows(&codes, &steps, &bits, 16, true);
-        assert_eq!(p.payload_bytes(), (10 * 16 * 2 + 7) / 8);
+        assert_eq!(p.buckets.len(), 1);
+        assert_eq!(p.buckets[0].words_per_row, 1);
+        assert_eq!(p.payload_bytes(), (10 + 1) * 8);
+        // a 5-bit row of 16 feats needs 80 bits -> 2 words
+        let p = pack_rows(&[0i32; 16], &[0.1], &[5], 16, true);
+        assert_eq!(p.buckets[0].words_per_row, 2);
+        assert_eq!(p.payload_bytes(), (2 + 1) * 8);
     }
 
     #[test]
     fn roundtrip_property_with_real_quantizer() {
+        // pack -> bucketed unpack == original codes, over all bitwidths
+        // 1..=8 with mixed-width rows (replayable via A2Q_PROP_SEED)
         property("pack roundtrip", 50, |g: &mut Gen| {
             let n = g.usize_range(1, 20);
             let f = g.usize_range(1, 24);
             let signed = g.bool(0.5);
-            let steps = g.vec_uniform(n, 0.01, 0.3);
-            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
-            let x = g.vec_normal(n * f, 1.0);
-            let mut codes = vec![0i32; n * f];
-            for v in 0..n {
-                for j in 0..f {
-                    codes[v * f + j] =
-                        quantize_value(x[v * f + j], steps[v], bits[v], signed);
-                }
-            }
+            let (codes, steps, bits) = random_codes(g, n, f, signed);
             let p = pack_rows(&codes, &steps, &bits, f, signed);
             for v in 0..n {
                 assert_eq!(p.unpack_row(v), &codes[v * f..(v + 1) * f], "row {v}");
                 let lv = levels(bits[v], signed);
                 assert!(p.unpack_row(v).iter().all(|c| c.abs() <= lv));
+                // the reference decoder agrees with the specialized one
+                let mut refrow = vec![0i32; f];
+                p.unpack_row_into_ref(v, &mut refrow);
+                assert_eq!(refrow, p.unpack_row(v), "ref decode row {v}");
             }
+            // the buckets partition the global rows exactly once, ascending
+            let mut seen = vec![false; n];
+            let mut last_bits = 0u8;
+            for bk in &p.buckets {
+                assert!(bk.bits > last_bits, "buckets must ascend");
+                last_bits = bk.bits;
+                for &gid in &bk.rows {
+                    assert!(!seen[gid as usize], "row {gid} in two buckets");
+                    seen[gid as usize] = true;
+                    assert_eq!(bits[gid as usize].max(1), bk.bits);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "every row has a bucket");
         });
     }
 
@@ -253,7 +542,47 @@ mod tests {
             assert_eq!(buf, p.unpack_row(v));
         }
         assert_eq!(p.num_rows(), 2);
-        assert_eq!(p.steps(), vec![0.1, 0.2]);
+        assert_eq!(p.steps(), &[0.1, 0.2]);
+        assert_eq!(p.bits(), &[3, 5]);
+    }
+
+    #[test]
+    fn write_read_bits_at_byte_and_word_boundaries() {
+        // every width at offsets straddling byte (8k) and word (64k)
+        // boundaries, including the exact boundary and one bit either side
+        for nbits in 1u8..=8 {
+            let max = (1u64 << nbits) - 1;
+            for &pos in &[
+                0usize, 7, 8, 9, 15, 16, 56, 62, 63, 64, 65, 71, 120, 126, 127, 128, 190,
+            ] {
+                for value in [0u64, 1, max / 2, max] {
+                    let mut words = vec![0u64; 4];
+                    write_bits(&mut words, pos, nbits, value);
+                    assert_eq!(
+                        read_bits(&words, pos, nbits) as u64,
+                        value,
+                        "nbits={nbits} pos={pos} value={value}"
+                    );
+                    // the specialized unpacker sees the same value
+                    let mut out = [0i32; 1];
+                    unpack_span(nbits, &words, pos, 0, &mut out);
+                    assert_eq!(out[0] as u64, value, "unpack_span nbits={nbits} pos={pos}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn write_bits_word_straddle_preserves_neighbors() {
+        // a 7-bit value written across the word boundary must not clobber
+        // adjacent codes on either side
+        let mut words = vec![0u64; 3];
+        write_bits(&mut words, 55, 8, 0xA5); // bits 55..63
+        write_bits(&mut words, 63, 7, 0x55); // straddles words 0/1
+        write_bits(&mut words, 70, 8, 0xC3); // bits 70..78 in word 1
+        assert_eq!(read_bits(&words, 55, 8), 0xA5);
+        assert_eq!(read_bits(&words, 63, 7), 0x55);
+        assert_eq!(read_bits(&words, 70, 8), 0xC3);
     }
 
     #[test]
@@ -262,18 +591,9 @@ mod tests {
             let n = g.usize_range(2, 30);
             let f = g.usize_range(1, 16);
             let signed = g.bool(0.5);
-            let steps = g.vec_uniform(n, 0.01, 0.3);
-            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
-            let x = g.vec_normal(n * f, 1.0);
-            let mut codes = vec![0i32; n * f];
-            for v in 0..n {
-                for j in 0..f {
-                    codes[v * f + j] = quantize_value(x[v * f + j], steps[v], bits[v], signed);
-                }
-            }
+            let (codes, steps, bits) = random_codes(g, n, f, signed);
             // a random ascending subset of rows (a shard's owned block)
-            let ids: Vec<u32> =
-                (0..n as u32).filter(|_| g.bool(0.6)).collect();
+            let ids: Vec<u32> = (0..n as u32).filter(|_| g.bool(0.6)).collect();
             let sub_codes: Vec<i32> = ids
                 .iter()
                 .flat_map(|&v| codes[v as usize * f..(v as usize + 1) * f].to_vec())
@@ -289,22 +609,13 @@ mod tests {
     }
 
     #[test]
-    fn packed_matmul_matches_dense_codes_property() {
-        use crate::tensor::{ops, Matrix};
-        property("packed matmul == dense i32 matmul", 25, |g: &mut Gen| {
+    fn bucketed_matmul_matches_scratch_and_dense_property() {
+        property("bucketed == scratch == dense i32 matmul", 25, |g: &mut Gen| {
             let n = g.usize_range(1, 80);
-            let f = g.usize_range(1, 32);
+            let f = g.usize_range(1, 40);
             let cols = g.usize_range(1, 16);
             let signed = g.bool(0.5);
-            let steps = g.vec_uniform(n, 0.01, 0.3);
-            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
-            let x = g.vec_normal(n * f, 1.0);
-            let mut codes = vec![0i32; n * f];
-            for v in 0..n {
-                for j in 0..f {
-                    codes[v * f + j] = quantize_value(x[v * f + j], steps[v], bits[v], signed);
-                }
-            }
+            let (codes, steps, bits) = random_codes(g, n, f, signed);
             let packed = pack_rows(&codes, &steps, &bits, f, signed);
             let w = Matrix::from_vec(
                 f,
@@ -312,14 +623,69 @@ mod tests {
                 (0..f * cols).map(|i| (i % 15) as i32 - 7).collect(),
             )
             .unwrap();
-            let cfg = crate::util::threadpool::ParallelConfig {
+            let cfg = ParallelConfig {
                 threads: g.usize_range(1, 5),
                 min_rows_per_task: g.usize_range(1, 8),
             };
             let dense = Matrix::from_vec(n, f, codes).unwrap();
             let want = ops::matmul_i32_with(&dense, &w, &cfg);
             let got = packed.matmul_i32(&w, &cfg);
-            assert_eq!(got.data, want.data);
+            assert_eq!(got.data, want.data, "bucketed != dense");
+            let scratch = packed.matmul_i32_scratch(&w, &cfg);
+            assert_eq!(scratch.data, want.data, "scratch != dense");
+            let panel = WeightPanel::from_codes(w);
+            let via_panel = packed.matmul_panel(&panel, &cfg);
+            assert_eq!(via_panel.data, want.data, "panel != dense");
         });
+    }
+
+    #[test]
+    fn low_bit_buckets_take_the_pm_one_fast_path_bitwise() {
+        // all rows at b <= 2 signed: the add/sub-only inner loop governs
+        // the whole matmul and must still be exact
+        property("b<=2 fast path bitwise", 20, |g: &mut Gen| {
+            let n = g.usize_range(1, 60);
+            let f = g.usize_range(1, 32);
+            let cols = g.usize_range(1, 12);
+            let steps = g.vec_uniform(n, 0.01, 0.3);
+            let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 3) as u8).collect();
+            let x = g.vec_normal(n * f, 1.0);
+            let mut codes = vec![0i32; n * f];
+            for v in 0..n {
+                for j in 0..f {
+                    codes[v * f + j] = quantize_value(x[v * f + j], steps[v], bits[v], true);
+                }
+            }
+            assert!(codes.iter().all(|c| c.abs() <= 1));
+            let packed = pack_rows(&codes, &steps, &bits, f, true);
+            let w = Matrix::from_vec(
+                f,
+                cols,
+                (0..f * cols).map(|i| (i % 13) as i32 - 6).collect(),
+            )
+            .unwrap();
+            let cfg = ParallelConfig::serial();
+            let dense = Matrix::from_vec(n, f, codes).unwrap();
+            assert_eq!(
+                packed.matmul_i32(&w, &cfg).data,
+                ops::matmul_i32_with(&dense, &w, &cfg).data
+            );
+        });
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        // no rows
+        let p = pack_rows(&[], &[], &[], 4, true);
+        assert_eq!(p.num_rows(), 0);
+        let w = Matrix::from_vec(4, 3, vec![1i32; 12]).unwrap();
+        let out = p.matmul_i32(&w, &ParallelConfig::serial());
+        assert_eq!(out.shape(), (0, 3));
+        // zero feature dim
+        let p = pack_rows(&[], &[0.1, 0.1], &[3, 4], 0, true);
+        assert_eq!(p.num_rows(), 2);
+        let w = Matrix::from_vec(0, 2, vec![]).unwrap();
+        let out = p.matmul_i32(&w, &ParallelConfig::serial());
+        assert_eq!(out.data, vec![0i32; 4]);
     }
 }

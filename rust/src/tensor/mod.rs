@@ -11,5 +11,6 @@ pub mod ops;
 
 pub use dense::Matrix;
 pub use ops::{
-    matmul, matmul_i32, matmul_i32_with, matmul_with, relu_inplace, row_scale, softmax_rows,
+    matmul, matmul_codes_with, matmul_i32, matmul_i32_with, matmul_with, relu_inplace, row_scale,
+    softmax_rows, WeightPanel,
 };

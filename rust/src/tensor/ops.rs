@@ -105,6 +105,129 @@ pub fn matmul_i32_with(a: &Matrix<i32>, b: &Matrix<i32>, cfg: &ParallelConfig) -
     c
 }
 
+/// Request-invariant integer weight codes in the layout the bucketed
+/// kernels stream: quantization is per *output column* (each column has
+/// its own step), but the codes are stored k-major — one contiguous panel
+/// per input feature — and widened from their 4-bit range to `i32`, which
+/// is exactly what the row-streaming accumulators ([`accumulate_code_row`],
+/// `PackedFeatures::matmul_panel`) touch per nonzero activation code.
+/// The type names and freezes that layout contract (the raw `Matrix<i32>`
+/// codes already had it); it is built once at session preparation
+/// (`gnn::prepared::PreparedModel`) and shared by every kernel call.
+#[derive(Debug, Clone)]
+pub struct WeightPanel {
+    rows: usize,
+    cols: usize,
+    data: Vec<i32>,
+}
+
+impl WeightPanel {
+    /// Take ownership of a `[k, n]` code matrix as the cached panel.
+    pub fn from_codes(codes: Matrix<i32>) -> WeightPanel {
+        WeightPanel {
+            rows: codes.rows,
+            cols: codes.cols,
+            data: codes.data,
+        }
+    }
+
+    /// Input dimension k (one panel row per activation feature).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Output dimension n.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The widened codes, k-major: `data()[kk*cols..(kk+1)*cols]` is the
+    /// panel accumulated when activation code `kk` is nonzero.
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// Resident bytes of the cached panel.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Whether every representable code at this bitwidth lies in {−1, 0, 1}
+/// (signed b ≤ 2 has levels ≤ 1; unsigned b = 1 is {0, 1}) — the condition
+/// for the add/sub-only accumulation fast path.
+#[inline]
+pub fn codes_fit_pm_one(bits: u8, signed: bool) -> bool {
+    if signed {
+        bits <= 2
+    } else {
+        bits <= 1
+    }
+}
+
+/// One output row of the integer matmul: `acc[j] += Σ_k codes[k]·w[k][j]`,
+/// ascending k with the zero-code skip.  `wdata` is a k-major panel of
+/// `codes.len() × n` widened weight codes ([`WeightPanel::data`]).  When
+/// `pm_one` (see [`codes_fit_pm_one`]) the inner loop is add/sub-only — no
+/// multiplies.  i32 accumulation is exact, so the fast and general paths
+/// (and any row order around them) are bitwise identical; this one helper
+/// is shared by the bucketed bucket-matmul, the dense-code fallback, and
+/// the incremental row patcher so the arithmetic cannot diverge.
+pub fn accumulate_code_row(codes: &[i32], wdata: &[i32], n: usize, pm_one: bool, acc: &mut [i32]) {
+    debug_assert_eq!(acc.len(), n);
+    debug_assert_eq!(codes.len() * n, wdata.len());
+    if pm_one {
+        for (kk, &c) in codes.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let brow = &wdata[kk * n..(kk + 1) * n];
+            if c > 0 {
+                for (o, &bv) in acc.iter_mut().zip(brow) {
+                    *o += bv;
+                }
+            } else {
+                for (o, &bv) in acc.iter_mut().zip(brow) {
+                    *o -= bv;
+                }
+            }
+        }
+    } else {
+        for (kk, &c) in codes.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let brow = &wdata[kk * n..(kk + 1) * n];
+            for (o, &bv) in acc.iter_mut().zip(brow) {
+                *o += c * bv;
+            }
+        }
+    }
+}
+
+/// Dense-code matmul against a cached [`WeightPanel`]: `acc = a @ panel`,
+/// i32-accumulated, row-parallel under `cfg`.  The unquantized-input branch
+/// of the integer forward (unit-step raw codes) takes this route; quantized
+/// maps stream off the bucketed packed payload instead
+/// (`quant::pack::PackedFeatures::matmul_panel`).  Bitwise identical to
+/// [`matmul_i32_with`] on the same operands (exact i32 sums).
+pub fn matmul_codes_with(
+    a: &Matrix<i32>,
+    panel: &WeightPanel,
+    cfg: &ParallelConfig,
+) -> Matrix<i32> {
+    assert_eq!(a.cols, panel.rows(), "code matmul shape mismatch");
+    let (m, n) = (a.rows, panel.cols());
+    let mut c = Matrix::zeros(m, n);
+    threadpool::parallel_rows(cfg, m, n, &mut c.data, |row0, chunk| {
+        for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a.data[(row0 + ri) * a.cols..(row0 + ri + 1) * a.cols];
+            accumulate_code_row(arow, panel.data(), n, false, crow);
+        }
+    });
+    c
+}
+
 /// Eq. 2 rescale: out[i][j] = acc[i][j] * sx[i] * sw[j].
 pub fn rescale_outer(acc: &Matrix<i32>, sx: &[f32], sw: &[f32]) -> Matrix<f32> {
     assert_eq!(acc.rows, sx.len());
@@ -304,6 +427,64 @@ mod tests {
             let s: f32 = m.row(i).iter().sum();
             assert!((s - 1.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn accumulate_code_row_fast_path_matches_general() {
+        use crate::util::threadpool::ParallelConfig;
+        property("±1 fast path == multiply path == dense matmul", 25, |g: &mut Gen| {
+            let k = g.usize_range(1, 40);
+            let n = g.usize_range(1, 24);
+            // codes restricted to {-1, 0, 1} so both paths are legal
+            let codes: Vec<i32> = (0..k).map(|_| g.usize_range(0, 3) as i32 - 1).collect();
+            let wdata: Vec<i32> = (0..k * n).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
+            let mut fast = vec![0i32; n];
+            let mut slow = vec![0i32; n];
+            accumulate_code_row(&codes, &wdata, n, true, &mut fast);
+            accumulate_code_row(&codes, &wdata, n, false, &mut slow);
+            assert_eq!(fast, slow);
+            let a = Matrix::from_vec(1, k, codes).unwrap();
+            let b = Matrix::from_vec(k, n, wdata.clone()).unwrap();
+            let dense = matmul_i32_with(&a, &b, &ParallelConfig::serial());
+            assert_eq!(fast, dense.data);
+            let panel = WeightPanel::from_codes(b);
+            let via_panel = matmul_codes_with(&a, &panel, &ParallelConfig::serial());
+            assert_eq!(fast, via_panel.data);
+        });
+    }
+
+    #[test]
+    fn codes_fit_pm_one_table() {
+        assert!(codes_fit_pm_one(1, true));
+        assert!(codes_fit_pm_one(2, true));
+        assert!(!codes_fit_pm_one(3, true));
+        assert!(codes_fit_pm_one(1, false));
+        assert!(!codes_fit_pm_one(2, false));
+    }
+
+    #[test]
+    fn matmul_codes_matches_matmul_i32_property() {
+        use crate::util::threadpool::ParallelConfig;
+        property("panel matmul == dense i32 matmul", 20, |g: &mut Gen| {
+            let m = g.usize_range(1, 60);
+            let k = g.usize_range(1, 40);
+            let n = g.usize_range(1, 20);
+            let ai: Vec<i32> = (0..m * k).map(|_| g.usize_range(0, 255) as i32 - 127).collect();
+            let bi: Vec<i32> = (0..k * n).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
+            let a = Matrix::from_vec(m, k, ai).unwrap();
+            let b = Matrix::from_vec(k, n, bi).unwrap();
+            let cfg = ParallelConfig {
+                threads: g.usize_range(1, 5),
+                min_rows_per_task: g.usize_range(1, 8),
+            };
+            let want = matmul_i32_with(&a, &b, &cfg);
+            let panel = WeightPanel::from_codes(b);
+            assert_eq!(panel.rows(), k);
+            assert_eq!(panel.cols(), n);
+            assert_eq!(panel.bytes(), k * n * 4);
+            let got = matmul_codes_with(&a, &panel, &cfg);
+            assert_eq!(want.data, got.data);
+        });
     }
 
     #[test]

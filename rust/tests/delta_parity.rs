@@ -251,6 +251,75 @@ fn incremental_deltas_bitwise_match_full_rebuild() {
     });
 }
 
+/// ISSUE 5: after deltas append nodes (whose `(step, bits)` arrive via the
+/// online NNS assignment, not training), the executor's *post-delta*
+/// resident parameters must drive the bucketed kernels bitwise identically
+/// to the scratch-unpack reference at threads ∈ {1, 4}.  Together with
+/// `incremental_deltas_bitwise_match_full_rebuild` (patcher vs bucketed
+/// rebuild, threads crossed) this closes the loop: patcher == bucketed ==
+/// scratch on the extended parameter set.
+#[test]
+fn post_delta_params_drive_bucketed_kernel_like_scratch() {
+    property("post-delta slab bucketed == scratch", 5, |g: &mut Gen| {
+        let n0 = g.usize_range(12, 36);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr0 = preferential_attachment(&mut rng, n0, 2);
+        let in_dim = g.usize_range(2, 5);
+        let features0 = g.vec_normal(n0 * in_dim, 0.5);
+        let model = random_model(g, "gin", n0, in_dim, 4, 3, 2);
+        let ds = node_dataset(csr0.clone(), features0.clone(), in_dim);
+        let exec = NativeExecutor::new(model, Some(&ds))
+            .unwrap()
+            .with_int_path(true)
+            .with_parallelism(ParallelConfig::serial());
+
+        let add_nodes = g.usize_range(1, 4);
+        let delta = GraphDelta {
+            add_nodes,
+            new_features: g.vec_normal(add_nodes * in_dim, 0.5),
+            add_edges: (0..add_nodes as u32)
+                .flat_map(|i| [(n0 as u32 + i, i), (i, n0 as u32 + i)])
+                .collect(),
+            remove_edges: vec![],
+        };
+        exec.apply_delta(&delta).unwrap();
+        let n_cur = n0 + add_nodes;
+
+        // every per-node map the executor now holds — learned entries plus
+        // the NNS-assigned ones for the appended nodes — must feed the
+        // bucketed kernels exactly like the reference kernel
+        let w_cols = g.usize_range(1, 8);
+        for (f, f2) in exec.resident_quant_params() {
+            for p in [f, f2].into_iter().flatten() {
+                assert_eq!(p.len(), n_cur, "params not extended to appended nodes");
+                let fdim = g.usize_range(1, 12);
+                let x = g.vec_normal(n_cur * fdim, 0.6);
+                let (codes, _) = p.quantize_codes(&x, fdim);
+                let packed =
+                    a2q::quant::pack::pack_rows(&codes, &p.steps, &p.bits, fdim, p.signed);
+                let w = Matrix::from_vec(
+                    fdim,
+                    w_cols,
+                    (0..fdim * w_cols).map(|i| (i % 15) as i32 - 7).collect(),
+                )
+                .unwrap();
+                let want = packed.matmul_i32_scratch(&w, &ParallelConfig::serial());
+                for threads in [1usize, 4] {
+                    let cfg = ParallelConfig {
+                        threads,
+                        min_rows_per_task: 2,
+                    };
+                    assert_eq!(
+                        packed.matmul_i32(&w, &cfg).data,
+                        want.data,
+                        "t={threads}: post-delta bucketed != scratch"
+                    );
+                }
+            }
+        }
+    });
+}
+
 #[test]
 fn appended_nodes_serve_like_retrained_residents() {
     // After a delta appends nodes, a *fresh* executor built over the

@@ -202,6 +202,81 @@ fn prepared_sessions_bitwise_match_unprepared_path() {
 }
 
 #[test]
+fn bucketed_int_kernel_bitwise_matches_scratch_reference() {
+    // ISSUE 5: the bucketed per-bitwidth kernels (word-aligned per-width
+    // slabs, permutation scatter, add/sub fast path for b <= 2) must be
+    // bitwise identical to the pre-bucketing scratch-unpack kernel — the
+    // path forward_int used to run — for threads ∈ {1, 4}, over
+    // model-shaped mixed-width slabs (the same per-node (step, bits)
+    // family the forwards quantize with).  The int *forward* is asserted
+    // thread-invariant alongside, so the end-to-end path inherits the
+    // kernel guarantee.
+    property("bucketed == scratch kernel, threads 1|4", 12, |g: &mut Gen| {
+        let n = g.usize_range(8, 150);
+        let f = g.usize_range(1, 40);
+        let cols = g.usize_range(1, 16);
+        let signed = g.bool(0.5);
+        let params = node_quant_full_range(g, n, signed);
+        let x = g.vec_normal(n * f, 0.6);
+        let (codes, _steps) = params.quantize_codes(&x, f);
+        let packed =
+            a2q::quant::pack::pack_rows(&codes, &params.steps, &params.bits, f, signed);
+        let w = Matrix::from_vec(
+            f,
+            cols,
+            (0..f * cols).map(|i| (i % 15) as i32 - 7).collect(),
+        )
+        .unwrap();
+        let serial = ParallelConfig::serial();
+        let want = packed.matmul_i32_scratch(&w, &serial);
+        for threads in [1usize, 4] {
+            let cfg = ParallelConfig {
+                threads,
+                min_rows_per_task: 4,
+            };
+            assert_eq!(
+                packed.matmul_i32(&w, &cfg).data,
+                want.data,
+                "bucketed diverged from scratch at t={threads}"
+            );
+            assert_eq!(
+                packed.matmul_i32_scratch(&w, &cfg).data,
+                want.data,
+                "scratch not thread-invariant at t={threads}"
+            );
+        }
+
+        // forward-level anchor: the int forward (now running the bucketed
+        // kernels) stays bitwise thread-invariant
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr = preferential_attachment(&mut rng, n, 2);
+        let ef = EdgeForm::from_csr(&csr);
+        let in_dim = g.usize_range(2, 6);
+        let model = random_model(g, "gin", n, in_dim, g.usize_range(2, 8), cols.max(2), 2);
+        let xin = g.vec_normal(n * in_dim, 0.5);
+        let input = GraphInput::node_level(&xin, in_dim, &ef);
+        let int_1 = forward_int_with(&model, &input, &serial);
+        let int_4 = forward_int_with(
+            &model,
+            &input,
+            &ParallelConfig {
+                threads: 4,
+                min_rows_per_task: 4,
+            },
+        );
+        assert_eq!(int_1.data, int_4.data, "int forward not thread-invariant");
+    });
+}
+
+/// Per-node params over the *full* 1..=8 width range (the forwards' helper
+/// starts at 2; the kernel parity test must cover the 1-bit bucket too).
+fn node_quant_full_range(g: &mut Gen, n: usize, signed: bool) -> NodeQuantParams {
+    let steps = g.vec_uniform(n, 0.02, 0.1);
+    let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
+    NodeQuantParams::new(steps, bits, signed).unwrap()
+}
+
+#[test]
 fn zero_step_params_keep_int_and_fp_paths_consistent() {
     // degenerate learned steps (0.0 / negative) are clamped once at
     // NodeQuantParams construction, so the integer path's recorded rescale

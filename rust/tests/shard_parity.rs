@@ -213,6 +213,75 @@ fn sharded_forward_bitwise_vs_prepared_path() {
     });
 }
 
+/// ISSUE 5, shard level: every shard's owned slab (`pack_rows_subset` over
+/// the shard's global ids, mixed per-node bitwidths) must run the bucketed
+/// kernels bitwise identically to the scratch-unpack reference, for
+/// S ∈ {1, 2, 4} and threads ∈ {1, 4}.  Combined with
+/// `sharded_forward_bitwise_vs_prepared_path` (which now runs the bucketed
+/// kernels end-to-end on both sides), this pins the sharded integer path
+/// to the pre-bucketing behaviour.
+#[test]
+fn shard_slabs_bucketed_kernel_matches_scratch_reference() {
+    property("shard slab bucketed == scratch (S∈{1,2,4})", 8, |g: &mut Gen| {
+        let n = g.usize_range(16, 90);
+        let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
+        let csr = preferential_attachment(&mut rng, n, 2);
+        let ef = EdgeForm::from_csr(&csr);
+        let f = g.usize_range(1, 24);
+        let cols = g.usize_range(1, 12);
+        let signed = g.bool(0.5);
+        // full 1..=8 width range (node_quant starts at 2; the kernel
+        // parity must cover the 1-bit bucket)
+        let steps = g.vec_uniform(n, 0.02, 0.1);
+        let bits: Vec<u8> = (0..n).map(|_| g.usize_range(1, 9) as u8).collect();
+        let params = NodeQuantParams::new(steps, bits, signed).unwrap();
+        let x = g.vec_normal(n * f, 0.6);
+        let (codes, _) = params.quantize_codes(&x, f);
+        let w = Matrix::from_vec(
+            f,
+            cols,
+            (0..f * cols).map(|i| (i % 13) as i32 - 6).collect(),
+        )
+        .unwrap();
+        let serial = ParallelConfig::serial();
+        for s in [1usize, 2, 4] {
+            let sg = ShardedGraph::build(&csr, &ef, s).expect("shard build");
+            for sh in &sg.shards {
+                let sub_codes: Vec<i32> = sh
+                    .owned
+                    .iter()
+                    .flat_map(|&v| codes[v as usize * f..(v as usize + 1) * f].to_vec())
+                    .collect();
+                let slab = a2q::quant::pack::pack_rows_subset(
+                    &sub_codes,
+                    &params.steps,
+                    &params.bits,
+                    &sh.owned,
+                    f,
+                    signed,
+                );
+                let want = slab.matmul_i32_scratch(&w, &serial);
+                for threads in [1usize, 4] {
+                    let cfg = ParallelConfig {
+                        threads,
+                        min_rows_per_task: 2,
+                    };
+                    assert_eq!(
+                        slab.matmul_i32(&w, &cfg).data,
+                        want.data,
+                        "S={s} t={threads}: shard slab bucketed != scratch"
+                    );
+                }
+                // the slab's recorded rescale steps are the gathered
+                // clamped per-node steps, in owned order
+                for (li, &gid) in sh.owned.iter().enumerate() {
+                    assert_eq!(slab.steps()[li], params.steps[gid as usize]);
+                }
+            }
+        }
+    });
+}
+
 /// Tentpole guarantee, serving level: random delta sequences applied to
 /// **sharded** executors match a fresh unsharded session over the
 /// extended graph bitwise, fp and int, thread counts crossed 1 ↔ 4.

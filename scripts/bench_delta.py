@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Diff freshly emitted BENCH_*.json files against committed baselines.
+
+Warn-only CI tooling: prints a GitHub-flavoured-markdown speedup/regression
+table (suitable for $GITHUB_STEP_SUMMARY) and ALWAYS exits 0 — bench noise
+on shared runners must never gate a merge.  Regressions beyond the warn
+threshold are flagged with a warning emoji so they are visible in the job
+summary without being load-bearing.
+
+Usage:
+    python3 scripts/bench_delta.py [--baselines bench/baselines] \
+        [--threshold 0.10] BENCH_*.json
+
+Baseline files are byte-identical copies of a trusted run's BENCH_<name>.json
+(the `bench-json` CI artifact), committed under --baselines with the same
+file name.  Benchmarks or metrics without a baseline are listed with their
+current values only.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"> bench-delta: skipping {path}: {exc}")
+        return None
+
+
+def fmt_ns(ns):
+    if ns < 1e3:
+        return f"{ns:.0f} ns"
+    if ns < 1e6:
+        return f"{ns / 1e3:.2f} us"
+    if ns < 1e9:
+        return f"{ns / 1e6:.2f} ms"
+    return f"{ns / 1e9:.3f} s"
+
+
+def by_name(entries):
+    return {e.get("name"): e for e in entries if isinstance(e, dict) and "name" in e}
+
+
+def diff_file(cur_path, base_dir, threshold):
+    cur = load(cur_path)
+    if cur is None:
+        return
+    name = os.path.basename(cur_path)
+    base_path = os.path.join(base_dir, name)
+    base = load(base_path) if os.path.exists(base_path) else None
+
+    print(f"\n### {name}" + ("" if base else "  (no committed baseline)"))
+    print()
+    print("| benchmark | baseline | current | speedup |")
+    print("| --- | ---: | ---: | ---: |")
+    base_benches = by_name(base.get("benchmarks", [])) if base else {}
+    for b in cur.get("benchmarks", []):
+        bname = b.get("name", "?")
+        cur_ns = b.get("median_ns")
+        ref = base_benches.get(bname)
+        if ref is None or not ref.get("median_ns") or not cur_ns:
+            print(f"| `{bname}` | — | {fmt_ns(cur_ns) if cur_ns else '—'} | — |")
+            continue
+        speedup = ref["median_ns"] / cur_ns
+        flag = " ⚠️" if speedup < 1.0 - threshold else ""
+        print(
+            f"| `{bname}` | {fmt_ns(ref['median_ns'])} | {fmt_ns(cur_ns)} "
+            f"| {speedup:.2f}x{flag} |"
+        )
+
+    metrics = cur.get("metrics", [])
+    if metrics:
+        print()
+        print("| metric | baseline | current | delta |")
+        print("| --- | ---: | ---: | ---: |")
+        base_metrics = by_name(base.get("metrics", [])) if base else {}
+        for m in metrics:
+            mname = m.get("name", "?")
+            val = m.get("value")
+            unit = m.get("unit", "")
+            ref = base_metrics.get(mname)
+            if ref is None or ref.get("value") is None or val is None:
+                shown = f"{val:.4g} {unit}" if val is not None else "—"
+                print(f"| `{mname}` | — | {shown} | — |")
+                continue
+            delta = val - ref["value"]
+            rel = delta / ref["value"] if ref["value"] else float("inf")
+            # higher is better for speedup-style metrics; only flag drops
+            flag = " ⚠️" if rel < -threshold else ""
+            print(
+                f"| `{mname}` | {ref['value']:.4g} {unit} | {val:.4g} {unit} "
+                f"| {rel:+.1%}{flag} |"
+            )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baselines", default="bench/baselines")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative regression beyond which a row is flagged")
+    ap.add_argument("files", nargs="*", help="current BENCH_*.json files")
+    args = ap.parse_args()
+
+    files = args.files or sorted(
+        f for f in os.listdir(".") if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    print("## Bench delta (warn-only)")
+    if not files:
+        print("\nno BENCH_*.json files found — nothing to diff")
+        return 0
+    for path in files:
+        diff_file(path, args.baselines, args.threshold)
+    print(
+        "\n_Baselines live in `bench/baselines/`; refresh by committing a "
+        "trusted run's `bench-json` artifact. This step never fails the job._"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except Exception as exc:  # warn-only by contract
+        print(f"> bench-delta: internal error (ignored): {exc}")
+        sys.exit(0)
