@@ -47,6 +47,7 @@ fn main() {
             let cfg = ParallelConfig {
                 threads,
                 min_rows_per_task: 64,
+                ..ParallelConfig::serial()
             };
             runner.bench(&format!("aggregate/parallel/n={n}/f={f}/t={threads}"), || {
                 black_box(plan.aggregate_with(&x, f, &ef.src, &ef.gcn_w, &cfg));
@@ -75,6 +76,7 @@ fn main() {
     let cfg4 = ParallelConfig {
         threads: 4,
         min_rows_per_task: 64,
+        ..ParallelConfig::serial()
     };
     runner.bench(&par_name, || {
         black_box(plan.aggregate_with(&x, f, &ef.src, &ef.gcn_w, &cfg4));
@@ -107,6 +109,7 @@ fn main() {
     let cfg4 = ParallelConfig {
         threads: 4,
         min_rows_per_task: 64,
+        ..ParallelConfig::serial()
     };
     let plan = ef.plan();
     let reuse_name = format!("aggregate/prepared_plan_reuse/n={prep_n}/f={f}/t=4");

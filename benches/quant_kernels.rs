@@ -3,11 +3,18 @@
 //! reference kernel), and the integer vs f32 matmul kernels (serial vs
 //! parallel, §Perf).
 //!
-//! The headline metric is `quant/bucketed_speedup`: bucketed per-bitwidth
-//! kernels vs the element-by-element scratch-unpack reference on a
-//! 100k-node mixed-bitwidth feature map (avg ≤ 4 bits), serial — the CPU
-//! analogue of the paper's §5.4 claim that learned low bitwidths should
-//! make inference *cheaper*, not just smaller.
+//! The headline metrics:
+//!
+//! * `quant/bucketed_speedup` — bucketed per-bitwidth kernels vs the
+//!   element-by-element scratch-unpack reference on a 100k-node
+//!   mixed-bitwidth feature map (avg ≤ 4 bits), serial, **both pinned to
+//!   the scalar ISA** so the number isolates the layout effect — the CPU
+//!   analogue of the paper's §5.4 claim that learned low bitwidths should
+//!   make inference *cheaper*, not just smaller.
+//! * `quant/simd_speedup/<isa>` — the same bucketed kernel, scalar vs the
+//!   active SIMD dispatch (`A2Q_SIMD`), correctness-asserted bitwise
+//!   before timing.  Reports 1.0 under `/scalar` when no vector ISA is
+//!   available (or dispatch is forced scalar).
 //!
 //! `--quick` (used by CI) shrinks shapes and measurement budget to a smoke
 //! test so kernel regressions break the build.
@@ -15,6 +22,7 @@
 use a2q::quant::mixed::NodeQuantParams;
 use a2q::quant::pack::pack_rows;
 use a2q::quant::uniform::quantize_value;
+use a2q::tensor::simd::Isa;
 use a2q::tensor::{matmul_i32_with, matmul_with, ops::rescale_outer, Matrix};
 use a2q::util::bench::{black_box, BenchConfig, BenchRunner};
 use a2q::util::rng::Rng;
@@ -62,6 +70,7 @@ fn main() {
         let cfg = ParallelConfig {
             threads,
             min_rows_per_task: 64,
+            ..ParallelConfig::serial()
         };
         runner.bench(&format!("quant/packed_matmul_{n}x{f}x{w_cols}/t={threads}"), || {
             black_box(packed.matmul_i32(&w_codes, &cfg));
@@ -96,25 +105,54 @@ fn main() {
         (0..gf * gcols).map(|_| rng.range(0, 15) as i32 - 7).collect(),
     )
     .unwrap();
-    let serial = ParallelConfig::serial();
-    // the two kernels must agree bitwise before their timings mean anything
+    // bucketed_speedup is pinned scalar on BOTH sides so it stays a pure
+    // layout number; the SIMD win is reported separately below
+    let scalar = ParallelConfig::serial().with_simd(Isa::Scalar);
+    let active = ParallelConfig::serial();
+    // the kernels must agree bitwise before their timings mean anything —
+    // this also re-checks scalar/SIMD parity on the bench shapes
+    let want = gpacked.matmul_i32_scratch(&gw, &scalar);
     assert_eq!(
-        gpacked.matmul_i32(&gw, &serial).data,
-        gpacked.matmul_i32_scratch(&gw, &serial).data,
+        gpacked.matmul_i32(&gw, &scalar).data,
+        want.data,
         "bucketed kernel diverged from the scratch reference"
+    );
+    assert_eq!(
+        gpacked.matmul_i32(&gw, &active).data,
+        want.data,
+        "SIMD ({}) bucketed kernel diverged from the scalar reference",
+        active.simd.name()
     );
     let t_scratch = runner
         .bench(&format!("quant/packed_matmul_scratch_{gn}x{gf}x{gcols}/t=1"), || {
-            black_box(gpacked.matmul_i32_scratch(&gw, &serial));
+            black_box(gpacked.matmul_i32_scratch(&gw, &scalar));
         })
         .median_ns();
     let t_bucketed = runner
         .bench(&format!("quant/packed_matmul_bucketed_{gn}x{gf}x{gcols}/t=1"), || {
-            black_box(gpacked.matmul_i32(&gw, &serial));
+            black_box(gpacked.matmul_i32(&gw, &scalar));
         })
         .median_ns();
     runner.report_metric("quant/bucketed_speedup", t_scratch / t_bucketed, "x");
     runner.report_metric("quant/bucketed_avg_bits", avg_bits, "bits");
+
+    // SIMD dispatch win on the same kernel: forced-scalar vs the active
+    // ISA (A2Q_SIMD).  When dispatch resolves to scalar the two configs
+    // are identical and the metric pins to exactly 1.0.
+    let isa_name = active.simd.name();
+    let t_simd = if active.simd == Isa::Scalar {
+        t_bucketed
+    } else {
+        runner
+            .bench(
+                &format!("quant/packed_matmul_bucketed_{gn}x{gf}x{gcols}/isa={isa_name}"),
+                || {
+                    black_box(gpacked.matmul_i32(&gw, &active));
+                },
+            )
+            .median_ns()
+    };
+    runner.report_metric(&format!("quant/simd_speedup/{isa_name}"), t_bucketed / t_simd, "x");
 
     // update-phase matmul shapes (cora layer 1: 2708x16 @ 16x7 is tiny;
     // use the arxiv-ish 2048x128 @ 128x64 shape for a meaningful number)
@@ -143,6 +181,7 @@ fn main() {
         let cfg = ParallelConfig {
             threads,
             min_rows_per_task: 64,
+            ..ParallelConfig::serial()
         };
         runner.bench(&format!("matmul/f32_{m}x{k}x{nn}/t={threads}"), || {
             black_box(matmul_with(&a_f, &b_f, &cfg));

@@ -135,6 +135,7 @@ fn main() {
         let cfg = ParallelConfig {
             threads: s,
             min_rows_per_task: 1,
+            ..ParallelConfig::serial()
         };
         let fp_name = format!("sharded/forward_fp/s={s}");
         runner.bench(&fp_name, || {
@@ -158,6 +159,7 @@ fn main() {
     let cfg = ParallelConfig {
         threads: s_max,
         min_rows_per_task: 1,
+        ..ParallelConfig::serial()
     };
     runner.bench(&format!("sharded/forward_int/s={s_max}"), || {
         black_box(forward_int_sharded(&prep, &features, &sg, &cfg));

@@ -968,6 +968,7 @@ impl NativeExecutor {
             &mut acts,
             &dirty,
             int_path,
+            self.parallel.simd,
         )?;
 
         // 7. commit + single epoch bump.  Sharded residents first repair

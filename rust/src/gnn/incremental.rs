@@ -32,6 +32,7 @@ use crate::quant::nns::NnsTable;
 use crate::quant::uniform;
 use crate::tensor::dense::Matrix;
 use crate::tensor::ops;
+use crate::tensor::simd::Isa;
 
 use super::infer::{model_uses_skip, nns_or_build};
 use super::model::{GnnModel, QuantMethod};
@@ -174,6 +175,7 @@ pub(crate) fn quantize_row(
 /// of allocating per row).
 #[allow(clippy::too_many_arguments)]
 fn int_mm_row(
+    isa: Isa,
     hid: &[f32],
     p: Option<&NodeQuantParams>,
     per_node: bool,
@@ -219,7 +221,7 @@ fn int_mm_row(
     for a in acc.iter_mut() {
         *a = 0;
     }
-    ops::accumulate_code_row(codes, panel.data(), cols, pm_one, acc);
+    ops::accumulate_code_row(isa, codes, panel.data(), cols, pm_one, acc);
     for (j, o) in out.iter_mut().enumerate() {
         *o = acc[j] as f32 * sx * sw[j];
     }
@@ -241,6 +243,10 @@ fn int_mm_row(
 ///   every layer's set (the frontier guarantees this).
 /// * `int_path` — replicate `forward_int` (true for the A²Q integer
 ///   executor path; fp fallback archs/methods pass false).
+/// * `simd` — the kernel dispatch ([`Isa`]) used for the integer
+///   matmul rows; callers thread their `ParallelConfig::simd` through so
+///   patched rows use the same (bitwise-identical) kernels as full
+///   forwards.
 ///
 /// Returns the number of final-layer rows recomputed.  On error (only
 /// non-finite activations hitting the NNS assignment) `acts`/`staged` are
@@ -255,6 +261,7 @@ pub fn patch_activations(
     acts: &mut [Matrix<f32>],
     dirty: &[Vec<u32>],
     int_path: bool,
+    simd: Isa,
 ) -> Result<usize> {
     let model = &prep.model;
     let n_layers = model.layers.len();
@@ -487,6 +494,7 @@ pub fn patch_activations(
                             pl.w2_panel.as_ref().expect("gin w2 codes");
                         debug_assert_eq!(lay.b2.len(), panel.cols());
                         int_mm_row(
+                            simd,
                             &hid,
                             feat2_p,
                             feat2_per_node,
@@ -670,6 +678,7 @@ mod tests {
                     let dirty = vec![all; n_layers];
                     let done = patch_activations(
                         &prep, &mut staged, &tables, &ef, &plan, &mut acts, &dirty, int_path,
+                        cfg.simd,
                     )
                     .unwrap();
                     assert_eq!(done, n);

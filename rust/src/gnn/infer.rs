@@ -781,6 +781,7 @@ mod tests {
         let par = ParallelConfig {
             threads: 4,
             min_rows_per_task: 1,
+            ..ParallelConfig::serial()
         };
         let ser = ParallelConfig::serial();
         for method in [QuantMethod::Fp32, QuantMethod::A2q] {

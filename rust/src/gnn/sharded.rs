@@ -127,7 +127,7 @@ fn forward_sharded_impl(
         // computes its owned rows, and hands the block back
         let blocks: Vec<Matrix<f32>> =
             threadpool::parallel_map(graph.num_shards(), threads, |s| {
-                shard_layer(prep, l, last, &h, &graph.shards[s], int_path)
+                shard_layer(prep, l, last, &h, &graph.shards[s], int_path, cfg.simd)
             });
         // scatter: every global row has exactly one owner
         let d_out = blocks[0].cols;
@@ -191,6 +191,10 @@ fn mirror_gid(sh: &ShardLocal, li: usize) -> usize {
 /// returning the owned output block (rows in `sh.owned` order).  All
 /// kernels run serially inside the shard — the shard fan-out *is* the
 /// parallelism — and replicate the single-shard op sequence per row.
+/// `simd` is the caller's kernel dispatch, threaded into the per-shard
+/// serial budget so an ISA forced at the top level governs shard kernels
+/// too (threading and ISA stay orthogonal).
+#[allow(clippy::too_many_arguments)]
 fn shard_layer(
     prep: &PreparedModel,
     l: usize,
@@ -198,11 +202,12 @@ fn shard_layer(
     h: &Matrix<f32>,
     sh: &ShardLocal,
     int_path: bool,
+    simd: crate::tensor::Isa,
 ) -> Matrix<f32> {
     let model = &prep.model;
     let lay = &model.layers[l];
     let pl = &prep.layers[l];
-    let serial = ParallelConfig::serial();
+    let serial = ParallelConfig::serial().with_simd(simd);
     let skip_q = l == 0 && model.skip_input_quant;
     let n_own = sh.owned.len();
     let n_global = h.rows;
@@ -446,6 +451,7 @@ mod tests {
             let cfg = ParallelConfig {
                 threads: g.usize_range(1, 5),
                 min_rows_per_task: 1,
+                ..ParallelConfig::serial()
             };
             for arch in ["gcn", "gin"] {
                 let model = random_model(g, arch, n, in_dim, hidden);

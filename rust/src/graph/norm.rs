@@ -425,6 +425,7 @@ mod tests {
             let cfg = ParallelConfig {
                 threads: g.usize_range(1, 6),
                 min_rows_per_task: g.usize_range(1, 8),
+                ..ParallelConfig::serial()
             };
             let plan = ef.plan();
             for weights in [&ef.gcn_w, &ef.sum_w] {

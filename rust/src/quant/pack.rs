@@ -15,11 +15,14 @@
 //! * **Decode** — per-bitwidth specialized unpackers (const-generic
 //!   `b = 1..=8`, match-dispatched once per bucket) extract each code from
 //!   a 64-bit window with shifts and a mask: no per-bit loop, no
-//!   data-dependent branches.  The old element-by-element [`read_bits`]
-//!   decoder survives as the *reference kernel*
-//!   ([`PackedFeatures::matmul_i32_scratch`]) — the parity oracle the
-//!   bucketed kernels are property-tested against and the baseline the
-//!   `quant/bucketed_speedup` bench metric is measured from.
+//!   data-dependent branches.  Under a vector ISA
+//!   ([`ParallelConfig::simd`], see [`crate::tensor::simd`]) whole spans
+//!   decode eight codes at a time instead — bitwise identical (exact
+//!   integers).  The old element-by-element [`read_bits`] decoder survives
+//!   as the *reference kernel* ([`PackedFeatures::matmul_i32_scratch`],
+//!   pinned fully scalar) — the parity oracle the bucketed kernels are
+//!   property-tested against and the baseline the `quant/bucketed_speedup`
+//!   bench metric is measured from.
 //! * **Accumulate** — buckets whose codes lie in {−1, 0, 1} (signed b ≤ 2,
 //!   unsigned b = 1) take an add/sub-only inner loop
 //!   ([`crate::tensor::ops::accumulate_code_row`], shared with the
@@ -37,6 +40,7 @@
 
 use crate::tensor::dense::Matrix;
 use crate::tensor::ops::{self, WeightPanel};
+use crate::tensor::simd::{self, Isa};
 use crate::util::threadpool::{self, ParallelConfig};
 
 /// Bias added to signed codes before packing so the stored value is
@@ -78,11 +82,12 @@ impl Bucket {
     }
 
     /// Decode bucket-local row `local` into `out` (length = feat_dim),
-    /// through the per-bitwidth specialized unpacker.
+    /// through the per-bitwidth specialized unpacker (or the `isa` vector
+    /// decoder — bitwise identical).
     #[inline]
-    fn unpack_local_into(&self, local: usize, signed: bool, out: &mut [i32]) {
+    fn unpack_local_into(&self, local: usize, signed: bool, isa: Isa, out: &mut [i32]) {
         let bias = bias_for(self.bits, signed);
-        unpack_span(self.bits, &self.words, self.base_bit(local), bias, out);
+        unpack_span(isa, self.bits, &self.words, self.base_bit(local), bias, out);
     }
 }
 
@@ -240,11 +245,13 @@ impl PackedFeatures {
 
     /// Unpack one row into a caller-provided buffer (no allocation — the
     /// integer inference path reuses one scratch row per worker).  Routes
-    /// through the bucketed per-bitwidth unpacker.
+    /// through the bucketed per-bitwidth unpacker under the process-wide
+    /// SIMD dispatch (kernels wanting an explicit ISA go through the
+    /// `ParallelConfig`-taking entry points).
     pub fn unpack_row_into(&self, v: usize, out: &mut [i32]) {
         assert_eq!(out.len(), self.feat_dim);
         let (bi, li) = self.row_loc[v];
-        self.buckets[bi as usize].unpack_local_into(li as usize, self.signed, out);
+        self.buckets[bi as usize].unpack_local_into(li as usize, self.signed, simd::active(), out);
     }
 
     /// Unpack one row back to integer codes.
@@ -307,8 +314,8 @@ impl PackedFeatures {
                 threadpool::parallel_rows(cfg, bm, n, data, |row0, chunk| {
                     let mut scratch = vec![0i32; self.feat_dim];
                     for (ri, crow) in chunk.chunks_mut(n).enumerate() {
-                        bk.unpack_local_into(row0 + ri, self.signed, &mut scratch);
-                        ops::accumulate_code_row(&scratch, wdata, n, pm_one, crow);
+                        bk.unpack_local_into(row0 + ri, self.signed, cfg.simd, &mut scratch);
+                        ops::accumulate_code_row(cfg.simd, &scratch, wdata, n, pm_one, crow);
                     }
                 });
             };
@@ -337,7 +344,8 @@ impl PackedFeatures {
     /// pre-bucketing kernel.  Kept as the bitwise parity oracle for
     /// [`Self::matmul_i32`] (property-tested here and in the parity test
     /// suites) and as the baseline for the `quant/bucketed_speedup` bench
-    /// metric.
+    /// metric; its accumulation is pinned to [`Isa::Scalar`] so the oracle
+    /// never depends on the dispatch under test.
     pub fn matmul_i32_scratch(&self, w: &Matrix<i32>, cfg: &ParallelConfig) -> Matrix<i32> {
         assert_eq!(self.feat_dim, w.rows, "packed matmul shape mismatch");
         let (m, n) = (self.num_rows(), w.cols);
@@ -346,7 +354,7 @@ impl PackedFeatures {
             let mut scratch = vec![0i32; self.feat_dim];
             for (ri, crow) in chunk.chunks_mut(n).enumerate() {
                 self.unpack_row_into_ref(row0 + ri, &mut scratch);
-                ops::accumulate_code_row(&scratch, &w.data, n, false, crow);
+                ops::accumulate_code_row(Isa::Scalar, &scratch, &w.data, n, false, crow);
             }
         });
         c
@@ -418,9 +426,16 @@ fn unpack_span_b<const B: usize>(words: &[u64], base_bit: usize, bias: i32, out:
     }
 }
 
-/// Match-dispatch to the monomorphized per-bitwidth unpacker (once per
-/// bucket, not per element).
-fn unpack_span(bits: u8, words: &[u64], base_bit: usize, bias: i32, out: &mut [i32]) {
+/// ISA dispatch for span decode: the scalar path match-dispatches to the
+/// monomorphized per-bitwidth unpacker (once per bucket, not per element);
+/// vector ISAs route through [`simd::unpack_codes`], which decodes eight
+/// codes per step under the same slab contract (the trailing pad word) and
+/// is bitwise identical — exact integer extraction either way.
+fn unpack_span(isa: Isa, bits: u8, words: &[u64], base_bit: usize, bias: i32, out: &mut [i32]) {
+    if isa != Isa::Scalar {
+        simd::unpack_codes(isa, bits as usize, words, base_bit, bias, out);
+        return;
+    }
     match bits {
         1 => unpack_span_b::<1>(words, base_bit, bias, out),
         2 => unpack_span_b::<2>(words, base_bit, bias, out),
@@ -563,10 +578,16 @@ mod tests {
                         value,
                         "nbits={nbits} pos={pos} value={value}"
                     );
-                    // the specialized unpacker sees the same value
-                    let mut out = [0i32; 1];
-                    unpack_span(nbits, &words, pos, 0, &mut out);
-                    assert_eq!(out[0] as u64, value, "unpack_span nbits={nbits} pos={pos}");
+                    // the specialized unpacker sees the same value on
+                    // every available ISA path
+                    for isa in simd::parity_isas() {
+                        let mut out = [0i32; 1];
+                        unpack_span(isa, nbits, &words, pos, 0, &mut out);
+                        assert_eq!(
+                            out[0] as u64, value,
+                            "unpack_span {isa:?} nbits={nbits} pos={pos}"
+                        );
+                    }
                 }
             }
         }
@@ -623,19 +644,22 @@ mod tests {
                 (0..f * cols).map(|i| (i % 15) as i32 - 7).collect(),
             )
             .unwrap();
-            let cfg = ParallelConfig {
-                threads: g.usize_range(1, 5),
-                min_rows_per_task: g.usize_range(1, 8),
-            };
             let dense = Matrix::from_vec(n, f, codes).unwrap();
-            let want = ops::matmul_i32_with(&dense, &w, &cfg);
-            let got = packed.matmul_i32(&w, &cfg);
-            assert_eq!(got.data, want.data, "bucketed != dense");
-            let scratch = packed.matmul_i32_scratch(&w, &cfg);
-            assert_eq!(scratch.data, want.data, "scratch != dense");
-            let panel = WeightPanel::from_codes(w);
-            let via_panel = packed.matmul_panel(&panel, &cfg);
-            assert_eq!(via_panel.data, want.data, "panel != dense");
+            let panel = WeightPanel::from_codes(w.clone());
+            for isa in simd::parity_isas() {
+                let cfg = ParallelConfig {
+                    threads: g.usize_range(1, 5),
+                    min_rows_per_task: g.usize_range(1, 8),
+                    simd: isa,
+                };
+                let want = ops::matmul_i32_with(&dense, &w, &cfg);
+                let got = packed.matmul_i32(&w, &cfg);
+                assert_eq!(got.data, want.data, "{isa:?}: bucketed != dense");
+                let scratch = packed.matmul_i32_scratch(&w, &cfg);
+                assert_eq!(scratch.data, want.data, "{isa:?}: scratch != dense");
+                let via_panel = packed.matmul_panel(&panel, &cfg);
+                assert_eq!(via_panel.data, want.data, "{isa:?}: panel != dense");
+            }
         });
     }
 
@@ -675,17 +699,74 @@ mod tests {
 
     #[test]
     fn empty_and_degenerate_shapes() {
-        // no rows
-        let p = pack_rows(&[], &[], &[], 4, true);
-        assert_eq!(p.num_rows(), 0);
-        let w = Matrix::from_vec(4, 3, vec![1i32; 12]).unwrap();
-        let out = p.matmul_i32(&w, &ParallelConfig::serial());
-        assert_eq!(out.shape(), (0, 3));
-        // zero feature dim
-        let p = pack_rows(&[], &[0.1, 0.1], &[3, 4], 0, true);
-        assert_eq!(p.num_rows(), 2);
-        let w = Matrix::from_vec(0, 2, vec![]).unwrap();
-        let out = p.matmul_i32(&w, &ParallelConfig::serial());
-        assert_eq!(out.data, vec![0i32; 4]);
+        for isa in simd::parity_isas() {
+            let cfg = ParallelConfig::serial().with_simd(isa);
+            // no rows
+            let p = pack_rows(&[], &[], &[], 4, true);
+            assert_eq!(p.num_rows(), 0);
+            let w = Matrix::from_vec(4, 3, vec![1i32; 12]).unwrap();
+            let out = p.matmul_i32(&w, &cfg);
+            assert_eq!(out.shape(), (0, 3));
+            // zero feature dim
+            let p = pack_rows(&[], &[0.1, 0.1], &[3, 4], 0, true);
+            assert_eq!(p.num_rows(), 2);
+            let w = Matrix::from_vec(0, 2, vec![]).unwrap();
+            let out = p.matmul_i32(&w, &cfg);
+            assert_eq!(out.data, vec![0i32; 4]);
+        }
+    }
+
+    /// Degenerate shapes the vector unpackers must not mishandle: rows
+    /// shorter than one SIMD lane group, feature counts just off the lane
+    /// width, and spans ending flush against the trailing pad word — every
+    /// width 1..=8, bitwise against the scalar scratch oracle.
+    #[test]
+    fn simd_degenerate_shapes_bitwise_equal_scalar() {
+        property("simd bucketed matmul on degenerate shapes", 10, |g: &mut Gen| {
+            let scalar = ParallelConfig::serial().with_simd(Isa::Scalar);
+            for &f in &[1usize, 2, 3, 7, 8, 9, 15, 16, 17, 64] {
+                let n = g.usize_range(1, 6);
+                let cols = g.usize_range(1, 5);
+                let signed = g.bool(0.5);
+                // one row per width 1..=8 cycled over n rows: small buckets,
+                // several of them (some widths stay empty)
+                let bits: Vec<u8> = (0..n).map(|v| (v % 8 + 1) as u8).collect();
+                let steps = g.vec_uniform(n, 0.01, 0.3);
+                let x = g.vec_normal(n * f, 1.0);
+                let mut codes = vec![0i32; n * f];
+                for v in 0..n {
+                    for j in 0..f {
+                        codes[v * f + j] =
+                            quantize_value(x[v * f + j], steps[v], bits[v], signed);
+                    }
+                }
+                let packed = pack_rows(&codes, &steps, &bits, f, signed);
+                let w = Matrix::from_vec(
+                    f,
+                    cols,
+                    (0..f * cols).map(|i| (i % 15) as i32 - 7).collect(),
+                )
+                .unwrap();
+                let want = packed.matmul_i32_scratch(&w, &scalar);
+                for isa in simd::parity_isas() {
+                    let got = packed.matmul_i32(&w, &scalar.with_simd(isa));
+                    assert_eq!(got.data, want.data, "{isa:?} f={f} n={n}");
+                    // row decode parity on the same shapes
+                    let mut a = vec![0i32; f];
+                    let mut b = vec![0i32; f];
+                    for v in 0..n {
+                        packed.unpack_row_into_ref(v, &mut a);
+                        let (bi, li) = packed.row_loc[v];
+                        packed.buckets[bi as usize].unpack_local_into(
+                            li as usize,
+                            signed,
+                            isa,
+                            &mut b,
+                        );
+                        assert_eq!(a, b, "{isa:?} f={f} row {v} decode diverged");
+                    }
+                }
+            }
+        });
     }
 }

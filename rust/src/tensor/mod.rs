@@ -3,14 +3,17 @@
 //! A deliberately small surface: row-major `Matrix` over `f32` or `i32`,
 //! with the kernels the GNN layers and the accelerator model need —
 //! blocked matmul, elementwise ops, row/col scaling, softmax.  The hot
-//! matmul is cache-blocked and written so LLVM auto-vectorizes the inner
-//! loop (see benches/quant_kernels.rs for measured numbers and §Perf).
+//! inner loops run through [`simd`]: explicit AVX2/NEON paths selected
+//! once at runtime (overridable via `A2Q_SIMD`), each bitwise identical
+//! to the scalar oracle (see benches/quant_kernels.rs and §Perf).
 
 pub mod dense;
 pub mod ops;
+pub mod simd;
 
 pub use dense::Matrix;
 pub use ops::{
     matmul, matmul_codes_with, matmul_i32, matmul_i32_with, matmul_with, relu_inplace, row_scale,
     softmax_rows, WeightPanel,
 };
+pub use simd::Isa;

@@ -5,11 +5,16 @@
 //! [`threadpool::parallel_for_chunks`], with a serial fallback below the
 //! [`ParallelConfig::min_rows_per_task`] threshold (scoped-thread spawn
 //! costs dominate tiny kernels).  `matmul`/`matmul_i32` use the process
-//! default budget; the `*_with` variants take an explicit one.
+//! default budget; the `*_with` variants take an explicit one.  Inner
+//! loops dispatch through [`simd`] on [`ParallelConfig::simd`]; every
+//! vector path is bitwise identical to the scalar oracle (exact i32;
+//! f32 keeps the per-element mul-then-add rounding and ascending-k
+//! order), so parity suites pin results across ISAs and thread counts.
 
 use crate::util::threadpool::{self, ParallelConfig};
 
 use super::dense::Matrix;
+use super::simd::{self, Isa};
 
 /// Cache block edge for the matmul kernels (tuned in §Perf; 64 keeps the
 /// working set of a block-panel within L1/L2 on this machine).
@@ -17,8 +22,8 @@ const BLOCK: usize = 64;
 
 /// Serial kernel over the output rows in `out` (which holds rows starting
 /// at logical row `row0` of C), blocked over (i, k) with a j-innermost
-/// loop that LLVM auto-vectorizes (C and B rows are contiguous).
-fn matmul_rows_f32(a: &Matrix<f32>, b: &Matrix<f32>, row0: usize, out: &mut [f32]) {
+/// axpy that runs vectorized under `isa` (C and B rows are contiguous).
+fn matmul_rows_f32(a: &Matrix<f32>, b: &Matrix<f32>, isa: Isa, row0: usize, out: &mut [f32]) {
     let (k, n) = (a.cols, b.cols);
     let rows = out.len() / n;
     for i0 in (0..rows).step_by(BLOCK) {
@@ -34,16 +39,14 @@ fn matmul_rows_f32(a: &Matrix<f32>, b: &Matrix<f32>, row0: usize, out: &mut [f32
                         continue; // features are sparse post-quantization
                     }
                     let brow = &b.data[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
-                    }
+                    simd::axpy_f32(isa, crow, aik, brow);
                 }
             }
         }
     }
 }
 
-fn matmul_rows_i32(a: &Matrix<i32>, b: &Matrix<i32>, row0: usize, out: &mut [i32]) {
+fn matmul_rows_i32(a: &Matrix<i32>, b: &Matrix<i32>, isa: Isa, row0: usize, out: &mut [i32]) {
     let (k, n) = (a.cols, b.cols);
     let rows = out.len() / n;
     for i0 in (0..rows).step_by(BLOCK) {
@@ -59,9 +62,7 @@ fn matmul_rows_i32(a: &Matrix<i32>, b: &Matrix<i32>, row0: usize, out: &mut [i32
                         continue;
                     }
                     let brow = &b.data[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
-                    }
+                    simd::axpy_i32(isa, crow, aik, brow);
                 }
             }
         }
@@ -81,7 +82,7 @@ pub fn matmul_with(a: &Matrix<f32>, b: &Matrix<f32>, cfg: &ParallelConfig) -> Ma
     let (m, n) = (a.rows, b.cols);
     let mut c = Matrix::zeros(m, n);
     threadpool::parallel_rows(cfg, m, n, &mut c.data, |row0, chunk| {
-        matmul_rows_f32(a, b, row0, chunk);
+        matmul_rows_f32(a, b, cfg.simd, row0, chunk);
     });
     c
 }
@@ -100,7 +101,7 @@ pub fn matmul_i32_with(a: &Matrix<i32>, b: &Matrix<i32>, cfg: &ParallelConfig) -
     let (m, n) = (a.rows, b.cols);
     let mut c = Matrix::zeros(m, n);
     threadpool::parallel_rows(cfg, m, n, &mut c.data, |row0, chunk| {
-        matmul_rows_i32(a, b, row0, chunk);
+        matmul_rows_i32(a, b, cfg.simd, row0, chunk);
     });
     c
 }
@@ -165,31 +166,65 @@ pub fn codes_fit_pm_one(bits: u8, signed: bool) -> bool {
     }
 }
 
+/// Column-tile edge for [`accumulate_code_row`]: a 1024-column i32
+/// accumulator tile (4 KB) stays L1-resident while the k-major panel rows
+/// stream past it, so wide output layers do not evict the accumulator
+/// between k steps.  Tiling only splits the j axis — each `acc[j]` still
+/// accumulates over k in ascending order, so results are bitwise
+/// identical to the untiled loop at any tile size.
+const PANEL_TILE_COLS: usize = 1024;
+
 /// One output row of the integer matmul: `acc[j] += Σ_k codes[k]·w[k][j]`,
 /// ascending k with the zero-code skip.  `wdata` is a k-major panel of
-/// `codes.len() × n` widened weight codes ([`WeightPanel::data`]).  When
-/// `pm_one` (see [`codes_fit_pm_one`]) the inner loop is add/sub-only — no
-/// multiplies.  i32 accumulation is exact, so the fast and general paths
-/// (and any row order around them) are bitwise identical; this one helper
-/// is shared by the bucketed bucket-matmul, the dense-code fallback, and
-/// the incremental row patcher so the arithmetic cannot diverge.
-pub fn accumulate_code_row(codes: &[i32], wdata: &[i32], n: usize, pm_one: bool, acc: &mut [i32]) {
+/// `codes.len() × n` widened weight codes ([`WeightPanel::data`]); wide
+/// panels are walked in [`PANEL_TILE_COLS`] column tiles so the streamed
+/// panel stays cache-friendly.  When `pm_one` (see [`codes_fit_pm_one`])
+/// the inner loop is add/sub-only — no multiplies.  The inner loops
+/// dispatch on `isa`; i32 accumulation is exact, so the fast, general and
+/// vector paths (and any row order around them) are bitwise identical.
+/// This one helper is shared by the bucketed bucket-matmul, the
+/// dense-code fallback, and the incremental row patcher so the arithmetic
+/// cannot diverge.
+pub fn accumulate_code_row(
+    isa: Isa,
+    codes: &[i32],
+    wdata: &[i32],
+    n: usize,
+    pm_one: bool,
+    acc: &mut [i32],
+) {
     debug_assert_eq!(acc.len(), n);
     debug_assert_eq!(codes.len() * n, wdata.len());
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + PANEL_TILE_COLS).min(n);
+        accumulate_code_tile(isa, codes, wdata, n, pm_one, j0, &mut acc[j0..j1]);
+        j0 = j1;
+    }
+}
+
+/// One column tile of [`accumulate_code_row`]: `acc_tile` covers output
+/// columns `j0 .. j0 + acc_tile.len()`.
+fn accumulate_code_tile(
+    isa: Isa,
+    codes: &[i32],
+    wdata: &[i32],
+    n: usize,
+    pm_one: bool,
+    j0: usize,
+    acc_tile: &mut [i32],
+) {
+    let j1 = j0 + acc_tile.len();
     if pm_one {
         for (kk, &c) in codes.iter().enumerate() {
             if c == 0 {
                 continue;
             }
-            let brow = &wdata[kk * n..(kk + 1) * n];
+            let brow = &wdata[kk * n + j0..kk * n + j1];
             if c > 0 {
-                for (o, &bv) in acc.iter_mut().zip(brow) {
-                    *o += bv;
-                }
+                simd::add_assign_i32(isa, acc_tile, brow);
             } else {
-                for (o, &bv) in acc.iter_mut().zip(brow) {
-                    *o -= bv;
-                }
+                simd::sub_assign_i32(isa, acc_tile, brow);
             }
         }
     } else {
@@ -197,10 +232,7 @@ pub fn accumulate_code_row(codes: &[i32], wdata: &[i32], n: usize, pm_one: bool,
             if c == 0 {
                 continue;
             }
-            let brow = &wdata[kk * n..(kk + 1) * n];
-            for (o, &bv) in acc.iter_mut().zip(brow) {
-                *o += c * bv;
-            }
+            simd::axpy_i32(isa, acc_tile, c, &wdata[kk * n + j0..kk * n + j1]);
         }
     }
 }
@@ -222,7 +254,7 @@ pub fn matmul_codes_with(
     threadpool::parallel_rows(cfg, m, n, &mut c.data, |row0, chunk| {
         for (ri, crow) in chunk.chunks_mut(n).enumerate() {
             let arow = &a.data[(row0 + ri) * a.cols..(row0 + ri + 1) * a.cols];
-            accumulate_code_row(arow, panel.data(), n, false, crow);
+            accumulate_code_row(cfg.simd, arow, panel.data(), n, false, crow);
         }
     });
     c
@@ -388,11 +420,17 @@ mod tests {
             let m = g.usize_range(1, 200);
             let k = g.usize_range(1, 60);
             let n = g.usize_range(1, 60);
+            // parallel runs the active (possibly SIMD) dispatch, the serial
+            // reference is pinned scalar — one compare crosses both axes
             let par = ParallelConfig {
                 threads: g.usize_range(2, 6),
                 min_rows_per_task: g.usize_range(1, 16),
+                ..ParallelConfig::serial()
             };
-            let ser = ParallelConfig::serial();
+            let ser = ParallelConfig {
+                simd: Isa::Scalar,
+                ..ParallelConfig::serial()
+            };
 
             let a = Matrix::from_vec(m, k, g.vec_normal(m * k, 1.0)).unwrap();
             let b = Matrix::from_vec(k, n, g.vec_normal(k * n, 1.0)).unwrap();
@@ -439,10 +477,18 @@ mod tests {
             let codes: Vec<i32> = (0..k).map(|_| g.usize_range(0, 3) as i32 - 1).collect();
             let wdata: Vec<i32> = (0..k * n).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
             let mut fast = vec![0i32; n];
-            let mut slow = vec![0i32; n];
-            accumulate_code_row(&codes, &wdata, n, true, &mut fast);
-            accumulate_code_row(&codes, &wdata, n, false, &mut slow);
-            assert_eq!(fast, slow);
+            for isa in simd::parity_isas() {
+                let mut f = vec![0i32; n];
+                let mut slow = vec![0i32; n];
+                accumulate_code_row(isa, &codes, &wdata, n, true, &mut f);
+                accumulate_code_row(isa, &codes, &wdata, n, false, &mut slow);
+                assert_eq!(f, slow, "{isa:?}: pm-one != multiply path");
+                if isa == Isa::Scalar {
+                    fast = f;
+                } else {
+                    assert_eq!(f, fast, "{isa:?}: simd != scalar oracle");
+                }
+            }
             let a = Matrix::from_vec(1, k, codes).unwrap();
             let b = Matrix::from_vec(k, n, wdata.clone()).unwrap();
             let dense = matmul_i32_with(&a, &b, &ParallelConfig::serial());
@@ -450,6 +496,32 @@ mod tests {
             let panel = WeightPanel::from_codes(b);
             let via_panel = matmul_codes_with(&a, &panel, &ParallelConfig::serial());
             assert_eq!(fast, via_panel.data);
+        });
+    }
+
+    /// The j-tiled accumulator must agree with an untiled reference even
+    /// when n straddles tile boundaries (and with every ISA).
+    #[test]
+    fn accumulate_code_row_tiling_is_invisible() {
+        property("j-tiled accumulate == untiled reference", 10, |g: &mut Gen| {
+            let k = g.usize_range(1, 12);
+            let n = *g.choose(&[1usize, 7, 1023, 1024, 1025, 2500]);
+            let codes: Vec<i32> = (0..k).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
+            let wdata: Vec<i32> = (0..k * n).map(|_| g.usize_range(0, 15) as i32 - 7).collect();
+            let mut want = vec![0i32; n];
+            for (kk, &c) in codes.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                for (o, &bv) in want.iter_mut().zip(&wdata[kk * n..(kk + 1) * n]) {
+                    *o += c * bv;
+                }
+            }
+            for isa in simd::parity_isas() {
+                let mut got = vec![0i32; n];
+                accumulate_code_row(isa, &codes, &wdata, n, false, &mut got);
+                assert_eq!(want, got, "{isa:?} n={n}");
+            }
         });
     }
 
@@ -476,6 +548,7 @@ mod tests {
             let cfg = ParallelConfig {
                 threads: g.usize_range(1, 5),
                 min_rows_per_task: g.usize_range(1, 8),
+                ..ParallelConfig::serial()
             };
             let want = matmul_i32_with(&a, &b, &cfg);
             let panel = WeightPanel::from_codes(b);

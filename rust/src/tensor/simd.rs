@@ -1,0 +1,679 @@
+//! Runtime-dispatched SIMD kernels (AVX2 on x86_64, NEON on aarch64) for
+//! the three hot loops of the bucketed integer path: packed-code
+//! unpacking, the {−1,0,1} add/sub accumulator, and the axpy inner loops
+//! of the dense matmuls.
+//!
+//! The scalar path is the always-available oracle: every vector kernel
+//! here is **bitwise identical** to it.  For i32 kernels that is automatic
+//! (integer arithmetic is exact and per-element order never changes); for
+//! f32 the vector paths perform one multiply and one add per element —
+//! two separately-rounded IEEE operations, never a fused multiply-add —
+//! in the same ascending-j order as the scalar loop, so every lane rounds
+//! exactly like its scalar counterpart.
+//!
+//! Dispatch is decided once per process by [`active`]: the best ISA the
+//! CPU supports, overridable with `A2Q_SIMD={auto,avx2,neon,scalar}`.
+//! Forcing an ISA the CPU (or build target) cannot run is a hard error,
+//! not a silent scalar fallback — the CI ISA matrix relies on a forced
+//! leg either exercising that ISA or failing loudly.  The decision rides
+//! in [`ParallelConfig::simd`](crate::util::threadpool::ParallelConfig),
+//! so tests can cross scalar/SIMD explicitly regardless of the env.
+
+use std::sync::OnceLock;
+
+/// An instruction-set choice for the kernels in this module.  All
+/// variants exist on every architecture (so configs, logs and tests can
+/// name them portably); [`Isa::available`] says whether the current CPU
+/// can actually run one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Plain Rust loops — the portable oracle every other path must match.
+    Scalar,
+    /// 256-bit AVX2 (x86_64; requires runtime CPU support).
+    Avx2,
+    /// 128-bit NEON (baseline on aarch64).
+    Neon,
+}
+
+impl Isa {
+    /// The `A2Q_SIMD` spelling of this ISA.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Whether this ISA's kernels can run on the current CPU/target.
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 => false,
+            // NEON is part of the aarch64 baseline.
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            #[cfg(not(target_arch = "aarch64"))]
+            Isa::Neon => false,
+        }
+    }
+}
+
+/// Best ISA the current CPU supports — what `A2Q_SIMD=auto` resolves to.
+pub fn detect() -> Isa {
+    if Isa::Avx2.available() {
+        Isa::Avx2
+    } else if Isa::Neon.available() {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Resolve an `A2Q_SIMD` setting to an ISA.  `None`, `""` and `auto` pick
+/// [`detect`]; a named ISA must actually be available — forcing an
+/// unavailable one is an error rather than a silent scalar fallback, so a
+/// forced CI leg can never become vacuous.
+pub fn resolve(request: Option<&str>) -> Result<Isa, String> {
+    let req = request.map(|s| s.trim().to_ascii_lowercase());
+    match req.as_deref() {
+        None | Some("") | Some("auto") => Ok(detect()),
+        Some("scalar") => Ok(Isa::Scalar),
+        Some(name) => {
+            let isa = match name {
+                "avx2" => Isa::Avx2,
+                "neon" => Isa::Neon,
+                other => {
+                    return Err(format!(
+                        "A2Q_SIMD={other}: unknown ISA (expected auto|scalar|avx2|neon)"
+                    ))
+                }
+            };
+            if isa.available() {
+                Ok(isa)
+            } else {
+                Err(format!(
+                    "A2Q_SIMD={name}: {name} is not available on this CPU/target \
+                     (refusing to silently fall back to scalar)"
+                ))
+            }
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Isa> = OnceLock::new();
+
+/// The process-wide dispatch decision: detected once on first use,
+/// overridable via `A2Q_SIMD`.  Panics (descriptively) on an invalid or
+/// unavailable forced value.
+pub fn active() -> Isa {
+    *ACTIVE.get_or_init(|| {
+        resolve(std::env::var("A2Q_SIMD").ok().as_deref()).unwrap_or_else(|e| panic!("{e}"))
+    })
+}
+
+/// The ISAs a parity test should cross on this machine: the scalar oracle
+/// plus the active vector ISA when one is enabled.
+pub fn parity_isas() -> Vec<Isa> {
+    match active() {
+        Isa::Scalar => vec![Isa::Scalar],
+        isa => vec![Isa::Scalar, isa],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// axpy / add / sub
+// ---------------------------------------------------------------------------
+
+/// `acc[j] += a * b[j]` — one multiply then one add per element, ascending
+/// j.  Bitwise identical across ISAs: the vector paths round each element
+/// through the same two IEEE operations as the scalar loop (no FMA).
+#[inline]
+pub fn axpy_f32(isa: Isa, acc: &mut [f32], a: f32, b: &[f32]) {
+    debug_assert_eq!(acc.len(), b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { axpy_f32_avx2(acc, a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { axpy_f32_neon(acc, a, b) },
+        _ => axpy_f32_scalar(acc, a, b),
+    }
+}
+
+/// `acc[j] += c * b[j]`, exact i32.
+#[inline]
+pub fn axpy_i32(isa: Isa, acc: &mut [i32], c: i32, b: &[i32]) {
+    debug_assert_eq!(acc.len(), b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { axpy_i32_avx2(acc, c, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { axpy_i32_neon(acc, c, b) },
+        _ => axpy_i32_scalar(acc, c, b),
+    }
+}
+
+/// `acc[j] += b[j]`, exact i32 (the `+1` arm of the pm-one accumulator).
+#[inline]
+pub fn add_assign_i32(isa: Isa, acc: &mut [i32], b: &[i32]) {
+    debug_assert_eq!(acc.len(), b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { add_assign_i32_avx2(acc, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { add_assign_i32_neon(acc, b) },
+        _ => add_assign_i32_scalar(acc, b),
+    }
+}
+
+/// `acc[j] -= b[j]`, exact i32 (the `−1` arm of the pm-one accumulator).
+#[inline]
+pub fn sub_assign_i32(isa: Isa, acc: &mut [i32], b: &[i32]) {
+    debug_assert_eq!(acc.len(), b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { sub_assign_i32_avx2(acc, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { sub_assign_i32_neon(acc, b) },
+        _ => sub_assign_i32_scalar(acc, b),
+    }
+}
+
+#[inline]
+fn axpy_f32_scalar(acc: &mut [f32], a: f32, b: &[f32]) {
+    for (o, &bv) in acc.iter_mut().zip(b) {
+        *o += a * bv;
+    }
+}
+
+#[inline]
+fn axpy_i32_scalar(acc: &mut [i32], c: i32, b: &[i32]) {
+    for (o, &bv) in acc.iter_mut().zip(b) {
+        *o += c * bv;
+    }
+}
+
+#[inline]
+fn add_assign_i32_scalar(acc: &mut [i32], b: &[i32]) {
+    for (o, &bv) in acc.iter_mut().zip(b) {
+        *o += bv;
+    }
+}
+
+#[inline]
+fn sub_assign_i32_scalar(acc: &mut [i32], b: &[i32]) {
+    for (o, &bv) in acc.iter_mut().zip(b) {
+        *o -= bv;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed-code unpacking
+// ---------------------------------------------------------------------------
+
+/// Decode `out.len()` codes of width `bits` (1..=8) starting at `base_bit`
+/// of the u64 slab `words`, subtracting `bias` (the signed-range rebias).
+///
+/// Contract (same one the scalar const-generic unpackers in
+/// `quant::pack` rely on, guaranteed by the bucket's trailing pad word):
+/// one whole u64 must be readable past the word holding the last code's
+/// first bit.  The AVX2/NEON paths turn that into 4-byte unaligned window
+/// loads — a code spans at most 15 bits of its 32-bit window, and the pad
+/// word keeps every window load inside the slab.
+#[inline]
+pub fn unpack_codes(
+    isa: Isa,
+    bits: usize,
+    words: &[u64],
+    base_bit: usize,
+    bias: i32,
+    out: &mut [i32],
+) {
+    if out.is_empty() {
+        return;
+    }
+    debug_assert!((1..=8).contains(&bits));
+    debug_assert!(
+        ((base_bit + (out.len() - 1) * bits) >> 6) + 2 <= words.len(),
+        "unpack_codes: slab too short for span + pad word"
+    );
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { unpack_codes_avx2(bits, words, base_bit, bias, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { unpack_codes_neon(bits, words, base_bit, bias, out) },
+        _ => unpack_codes_scalar(bits, words, base_bit, bias, out),
+    }
+}
+
+/// Runtime-width scalar decode — same window expression as the
+/// const-generic `unpack_span_b` in `quant::pack` (exact integers, so the
+/// two are trivially identical); also the tail path of the vector kernels.
+#[inline]
+fn unpack_codes_scalar(bits: usize, words: &[u64], base_bit: usize, bias: i32, out: &mut [i32]) {
+    let mask = (1u64 << bits) - 1;
+    let mut bit = base_bit;
+    for slot in out.iter_mut() {
+        let w = bit >> 6;
+        let s = bit & 63;
+        let lo = words[w] >> s;
+        // (x << 1) << (63 - s) == x << (64 - s) without the UB shift at s = 0
+        let hi = (words[w + 1] << 1) << (63 - s);
+        *slot = ((lo | hi) & mask) as i32 - bias;
+        bit += bits;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// SAFETY: caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f32_avx2(acc: &mut [f32], a: f32, b: &[f32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let bp = b.as_ptr();
+        let va = _mm256_set1_ps(a);
+        let mut j = 0;
+        while j + 8 <= n {
+            let vb = _mm256_loadu_ps(bp.add(j));
+            let vc = _mm256_loadu_ps(ap.add(j));
+            // mul then add as two separately-rounded ops (never fmadd):
+            // the scalar oracle rounds twice per element
+            _mm256_storeu_ps(ap.add(j), _mm256_add_ps(vc, _mm256_mul_ps(va, vb)));
+            j += 8;
+        }
+        super::axpy_f32_scalar(&mut acc[j..], a, &b[j..]);
+    }
+
+    /// SAFETY: caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_i32_avx2(acc: &mut [i32], c: i32, b: &[i32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let bp = b.as_ptr();
+        let vc = _mm256_set1_epi32(c);
+        let mut j = 0;
+        while j + 8 <= n {
+            let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
+            let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
+            let r = _mm256_add_epi32(va, _mm256_mullo_epi32(vc, vb));
+            _mm256_storeu_si256(ap.add(j) as *mut __m256i, r);
+            j += 8;
+        }
+        super::axpy_i32_scalar(&mut acc[j..], c, &b[j..]);
+    }
+
+    /// SAFETY: caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_i32_avx2(acc: &mut [i32], b: &[i32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let bp = b.as_ptr();
+        let mut j = 0;
+        while j + 8 <= n {
+            let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
+            let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
+            _mm256_storeu_si256(ap.add(j) as *mut __m256i, _mm256_add_epi32(va, vb));
+            j += 8;
+        }
+        super::add_assign_i32_scalar(&mut acc[j..], &b[j..]);
+    }
+
+    /// SAFETY: caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sub_assign_i32_avx2(acc: &mut [i32], b: &[i32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let bp = b.as_ptr();
+        let mut j = 0;
+        while j + 8 <= n {
+            let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
+            let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
+            _mm256_storeu_si256(ap.add(j) as *mut __m256i, _mm256_sub_epi32(va, vb));
+            j += 8;
+        }
+        super::sub_assign_i32_scalar(&mut acc[j..], &b[j..]);
+    }
+
+    /// Eight codes per step via unaligned 32-bit window loads + a variable
+    /// logical right shift.  Per-lane shift amounts are loop-invariant
+    /// (8·bits is a whole number of bytes, so each lane's bit phase repeats)
+    /// and per-lane byte offsets advance uniformly by `bits` bytes.
+    ///
+    /// SAFETY: caller must ensure AVX2 is available and uphold the
+    /// [`super::unpack_codes`] slab contract (pad word ⇒ every 4-byte
+    /// window load lands inside `words`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_codes_avx2(
+        bits: usize,
+        words: &[u64],
+        base_bit: usize,
+        bias: i32,
+        out: &mut [i32],
+    ) {
+        let n = out.len();
+        let bytes = words.as_ptr() as *const u8;
+        let vmask = _mm256_set1_epi32((1i32 << bits) - 1);
+        let vbias = _mm256_set1_epi32(bias);
+        let mut offs = [0usize; 8];
+        let mut sh = [0i32; 8];
+        for (l, (o, s)) in offs.iter_mut().zip(sh.iter_mut()).enumerate() {
+            let p = base_bit + l * bits;
+            *o = p >> 3;
+            *s = (p & 7) as i32;
+        }
+        let vshift = _mm256_set_epi32(sh[7], sh[6], sh[5], sh[4], sh[3], sh[2], sh[1], sh[0]);
+        let op = out.as_mut_ptr();
+        let mut i = 0usize;
+        let mut cursor = 0usize;
+        while i + 8 <= n {
+            let ld = |l: usize| (bytes.add(offs[l] + cursor) as *const i32).read_unaligned();
+            let win = _mm256_set_epi32(ld(7), ld(6), ld(5), ld(4), ld(3), ld(2), ld(1), ld(0));
+            let v = _mm256_and_si256(_mm256_srlv_epi32(win, vshift), vmask);
+            _mm256_storeu_si256(op.add(i) as *mut __m256i, _mm256_sub_epi32(v, vbias));
+            i += 8;
+            cursor += bits;
+        }
+        super::unpack_codes_scalar(bits, words, base_bit + i * bits, bias, &mut out[i..]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use avx2::{
+    add_assign_i32_avx2, axpy_f32_avx2, axpy_i32_avx2, sub_assign_i32_avx2, unpack_codes_avx2,
+};
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// SAFETY: caller must ensure NEON is available (aarch64 baseline).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f32_neon(acc: &mut [f32], a: f32, b: &[f32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let bp = b.as_ptr();
+        let va = vdupq_n_f32(a);
+        let mut j = 0;
+        while j + 4 <= n {
+            let vb = vld1q_f32(bp.add(j));
+            let vc = vld1q_f32(ap.add(j));
+            // separate mul + add (not vfmaq): two roundings, like scalar
+            vst1q_f32(ap.add(j), vaddq_f32(vc, vmulq_f32(va, vb)));
+            j += 4;
+        }
+        super::axpy_f32_scalar(&mut acc[j..], a, &b[j..]);
+    }
+
+    /// SAFETY: caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_i32_neon(acc: &mut [i32], c: i32, b: &[i32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let bp = b.as_ptr();
+        let vc = vdupq_n_s32(c);
+        let mut j = 0;
+        while j + 4 <= n {
+            let vb = vld1q_s32(bp.add(j));
+            let va = vld1q_s32(ap.add(j));
+            vst1q_s32(ap.add(j), vaddq_s32(va, vmulq_s32(vc, vb)));
+            j += 4;
+        }
+        super::axpy_i32_scalar(&mut acc[j..], c, &b[j..]);
+    }
+
+    /// SAFETY: caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign_i32_neon(acc: &mut [i32], b: &[i32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let bp = b.as_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            vst1q_s32(ap.add(j), vaddq_s32(vld1q_s32(ap.add(j)), vld1q_s32(bp.add(j))));
+            j += 4;
+        }
+        super::add_assign_i32_scalar(&mut acc[j..], &b[j..]);
+    }
+
+    /// SAFETY: caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sub_assign_i32_neon(acc: &mut [i32], b: &[i32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let bp = b.as_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            vst1q_s32(ap.add(j), vsubq_s32(vld1q_s32(ap.add(j)), vld1q_s32(bp.add(j))));
+            j += 4;
+        }
+        super::sub_assign_i32_scalar(&mut acc[j..], &b[j..]);
+    }
+
+    /// Eight codes per step (two 4-lane halves so the stride stays a whole
+    /// number of bytes even at odd widths).  NEON has no variable right
+    /// shift, so `vshlq_u32` by negated amounts performs the logical
+    /// right shift.
+    ///
+    /// SAFETY: caller must ensure NEON is available and uphold the
+    /// [`super::unpack_codes`] slab contract.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack_codes_neon(
+        bits: usize,
+        words: &[u64],
+        base_bit: usize,
+        bias: i32,
+        out: &mut [i32],
+    ) {
+        let n = out.len();
+        let bytes = words.as_ptr() as *const u8;
+        let vmask = vdupq_n_u32((1u32 << bits) - 1);
+        let vbias = vdupq_n_s32(bias);
+        let mut offs = [0usize; 8];
+        let mut sh = [0i32; 8];
+        for (l, (o, s)) in offs.iter_mut().zip(sh.iter_mut()).enumerate() {
+            let p = base_bit + l * bits;
+            *o = p >> 3;
+            // vshlq by a negative amount shifts right (logical on u32)
+            *s = -((p & 7) as i32);
+        }
+        let shift_lo = vld1q_s32(sh.as_ptr());
+        let shift_hi = vld1q_s32(sh.as_ptr().add(4));
+        let op = out.as_mut_ptr();
+        let mut i = 0usize;
+        let mut cursor = 0usize;
+        while i + 8 <= n {
+            let mut win = [0u32; 8];
+            for (l, w) in win.iter_mut().enumerate() {
+                *w = (bytes.add(offs[l] + cursor) as *const u32).read_unaligned();
+            }
+            let lo = vshlq_u32(vld1q_u32(win.as_ptr()), shift_lo);
+            let hi = vshlq_u32(vld1q_u32(win.as_ptr().add(4)), shift_hi);
+            let lo = vsubq_s32(vreinterpretq_s32_u32(vandq_u32(lo, vmask)), vbias);
+            let hi = vsubq_s32(vreinterpretq_s32_u32(vandq_u32(hi, vmask)), vbias);
+            vst1q_s32(op.add(i), lo);
+            vst1q_s32(op.add(i + 4), hi);
+            i += 8;
+            cursor += bits;
+        }
+        super::unpack_codes_scalar(bits, words, base_bit + i * bits, bias, &mut out[i..]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+use neon::{
+    add_assign_i32_neon, axpy_f32_neon, axpy_i32_neon, sub_assign_i32_neon, unpack_codes_neon,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{property, Gen};
+
+    /// The ISA/dispatch CI matrix is only meaningful if a forced
+    /// `A2Q_SIMD` leg really runs on the forced path.  This test reads the
+    /// same env var the dispatcher does and pins the outcome — a silent
+    /// scalar fallback on a forced leg fails here.
+    #[test]
+    fn forced_dispatch_is_honored_no_silent_fallback() {
+        let req = std::env::var("A2Q_SIMD").ok();
+        let got = active();
+        match req.as_deref().map(str::trim) {
+            Some("scalar") => assert_eq!(got, Isa::Scalar, "A2Q_SIMD=scalar not honored"),
+            Some("avx2") => assert_eq!(got, Isa::Avx2, "A2Q_SIMD=avx2 not honored"),
+            Some("neon") => assert_eq!(got, Isa::Neon, "A2Q_SIMD=neon not honored"),
+            _ => assert_eq!(got, detect(), "auto must select the best available ISA"),
+        }
+        assert!(got.available());
+    }
+
+    #[test]
+    fn resolve_accepts_auto_spellings() {
+        assert_eq!(resolve(None).unwrap(), detect());
+        assert_eq!(resolve(Some("")).unwrap(), detect());
+        assert_eq!(resolve(Some("auto")).unwrap(), detect());
+        assert_eq!(resolve(Some(" AUTO ")).unwrap(), detect());
+        assert_eq!(resolve(Some("scalar")).unwrap(), Isa::Scalar);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_and_unavailable() {
+        assert!(resolve(Some("sse9")).is_err());
+        for isa in [Isa::Avx2, Isa::Neon] {
+            let r = resolve(Some(isa.name()));
+            if isa.available() {
+                assert_eq!(r.unwrap(), isa);
+            } else {
+                let msg = r.unwrap_err();
+                assert!(msg.contains(isa.name()), "unhelpful error: {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn parity_isas_starts_with_scalar_oracle() {
+        let isas = parity_isas();
+        assert_eq!(isas[0], Isa::Scalar);
+        assert!(isas.iter().all(|i| i.available()));
+        assert_eq!(isas.len(), if active() == Isa::Scalar { 1 } else { 2 });
+    }
+
+    /// Degenerate and boundary lengths every vector kernel must get right:
+    /// empty, shorter than one lane, exactly one lane, lane+1, and a few
+    /// non-multiples of both 4 (NEON) and 8 (AVX2) lanes.
+    const LENGTHS: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 31, 33, 63, 100];
+
+    #[test]
+    fn axpy_add_sub_i32_bitwise_match_scalar() {
+        property("simd i32 kernels == scalar", 20, |g: &mut Gen| {
+            for &n in LENGTHS {
+                let acc0: Vec<i32> = (0..n).map(|_| g.usize_range(0, 4000) as i32 - 2000).collect();
+                let b: Vec<i32> = (0..n).map(|_| g.usize_range(0, 255) as i32 - 127).collect();
+                let c = g.usize_range(0, 255) as i32 - 127;
+                for isa in parity_isas() {
+                    let mut want = acc0.clone();
+                    axpy_i32_scalar(&mut want, c, &b);
+                    let mut got = acc0.clone();
+                    axpy_i32(isa, &mut got, c, &b);
+                    assert_eq!(want, got, "axpy_i32 {isa:?} n={n}");
+
+                    let mut want = acc0.clone();
+                    add_assign_i32_scalar(&mut want, &b);
+                    let mut got = acc0.clone();
+                    add_assign_i32(isa, &mut got, &b);
+                    assert_eq!(want, got, "add_assign_i32 {isa:?} n={n}");
+
+                    let mut want = acc0.clone();
+                    sub_assign_i32_scalar(&mut want, &b);
+                    let mut got = acc0.clone();
+                    sub_assign_i32(isa, &mut got, &b);
+                    assert_eq!(want, got, "sub_assign_i32 {isa:?} n={n}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn axpy_f32_bitwise_matches_scalar() {
+        property("simd axpy_f32 == scalar (bit patterns)", 20, |g: &mut Gen| {
+            for &n in LENGTHS {
+                let acc0 = g.vec_normal(n, 3.0);
+                let b = g.vec_normal(n, 3.0);
+                let a = g.vec_normal(1, 2.0)[0];
+                for isa in parity_isas() {
+                    let mut want = acc0.clone();
+                    axpy_f32_scalar(&mut want, a, &b);
+                    let mut got = acc0.clone();
+                    axpy_f32(isa, &mut got, a, &b);
+                    let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(wb, gb, "axpy_f32 {isa:?} n={n} not bitwise");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn unpack_codes_bitwise_matches_scalar_all_widths() {
+        property("simd unpack == scalar, widths 1..=8", 20, |g: &mut Gen| {
+            for bits in 1usize..=8 {
+                // enough payload for the longest span at any base_bit, plus
+                // the pad word the slab contract guarantees
+                let n = *g.choose(&[0usize, 1, 3, 7, 8, 9, 17, 40, 101]);
+                let base_bit = g.usize_range(0, 64);
+                let words_needed = (base_bit + n * bits).div_ceil(64) + 1;
+                let words: Vec<u64> = (0..words_needed)
+                    .map(|_| {
+                        (g.usize_range(0, 1 << 16) as u64)
+                            | ((g.usize_range(0, 1 << 16) as u64) << 16)
+                            | ((g.usize_range(0, 1 << 16) as u64) << 32)
+                            | ((g.usize_range(0, 1 << 16) as u64) << 48)
+                    })
+                    .collect();
+                let bias = if g.usize_range(0, 2) == 1 {
+                    1i32 << (bits - 1)
+                } else {
+                    0
+                };
+                let mut want = vec![0i32; n];
+                unpack_codes_scalar(bits, &words, base_bit, bias, &mut want);
+                for isa in parity_isas() {
+                    let mut got = vec![0i32; n];
+                    unpack_codes(isa, bits, &words, base_bit, bias, &mut got);
+                    assert_eq!(want, got, "unpack {isa:?} bits={bits} n={n} base={base_bit}");
+                }
+            }
+        });
+    }
+
+    /// The trailing pad word is the load-bearing part of the slab contract:
+    /// a span ending flush against the last payload word must decode
+    /// without touching anything past the pad.
+    #[test]
+    fn unpack_codes_span_flush_to_pad_word() {
+        for bits in 1usize..=8 {
+            let n = 128 / bits; // exactly fills two payload words
+            let words: Vec<u64> = vec![u64::MAX, 0xAAAA_5555_AAAA_5555, 0]; // + pad
+            let mut want = vec![0i32; n];
+            unpack_codes_scalar(bits, &words, 0, 0, &mut want);
+            for isa in parity_isas() {
+                let mut got = vec![0i32; n];
+                unpack_codes(isa, bits, &words, 0, 0, &mut got);
+                assert_eq!(want, got, "flush span {isa:?} bits={bits}");
+            }
+        }
+    }
+}

@@ -6,6 +6,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
+use crate::tensor::simd::{self, Isa};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A fixed pool of worker threads consuming a shared FIFO of jobs.
@@ -92,16 +94,23 @@ impl Drop for ThreadPool {
 /// `threads` caps the worker count; `min_rows_per_task` is the smallest row
 /// block worth shipping to a worker — inputs smaller than two such blocks
 /// run serially (spawning scoped threads costs ~10µs, which dominates tiny
-/// kernels).  The serving stack owns the budget: `runtime::Engine` and
-/// `coordinator::NativeExecutor` both carry a `ParallelConfig` and pass it
-/// down, so concurrent request handling and intra-op parallelism cannot
-/// oversubscribe the machine unnoticed.
+/// kernels).  `simd` selects the instruction-set path the inner loops run
+/// on — by default the process-wide [`simd::active`] decision (best
+/// available ISA, overridable via `A2Q_SIMD`); tests pin it to cross
+/// scalar/SIMD explicitly.  The serving stack owns the budget:
+/// `runtime::Engine` and `coordinator::NativeExecutor` both carry a
+/// `ParallelConfig` and pass it down, so concurrent request handling,
+/// intra-op parallelism and kernel dispatch are all controlled in one
+/// place.  Threading and ISA are orthogonal: every (threads × simd)
+/// combination is bitwise identical.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelConfig {
     /// Maximum worker threads for one kernel invocation (>= 1).
     pub threads: usize,
     /// Minimum output rows per task; also the serial-fallback threshold.
     pub min_rows_per_task: usize,
+    /// Instruction-set dispatch for the inner kernels.
+    pub simd: Isa,
 }
 
 impl Default for ParallelConfig {
@@ -111,16 +120,19 @@ impl Default for ParallelConfig {
                 .map(|n| n.get())
                 .unwrap_or(1),
             min_rows_per_task: 64,
+            simd: simd::active(),
         }
     }
 }
 
 impl ParallelConfig {
-    /// Single-threaded configuration (the pre-parallel behaviour).
+    /// Single-threaded configuration (the pre-parallel behaviour); still
+    /// runs the active SIMD dispatch — thread count and ISA are orthogonal.
     pub fn serial() -> ParallelConfig {
         ParallelConfig {
             threads: 1,
             min_rows_per_task: usize::MAX,
+            simd: simd::active(),
         }
     }
 
@@ -131,8 +143,14 @@ impl ParallelConfig {
         }
     }
 
-    /// Default budget, overridable via `A2Q_THREADS` and
-    /// `A2Q_MIN_ROWS_PER_TASK` (used by benches and CI).
+    /// Builder-style ISA override (parity tests cross scalar vs active).
+    pub fn with_simd(mut self, isa: Isa) -> ParallelConfig {
+        self.simd = isa;
+        self
+    }
+
+    /// Default budget, overridable via `A2Q_THREADS`,
+    /// `A2Q_MIN_ROWS_PER_TASK` and `A2Q_SIMD` (used by benches and CI).
     pub fn from_env() -> ParallelConfig {
         let mut cfg = ParallelConfig::default();
         if let Some(t) = std::env::var("A2Q_THREADS")
@@ -344,6 +362,7 @@ mod tests {
         let cfg = ParallelConfig {
             threads: 8,
             min_rows_per_task: 64,
+            ..ParallelConfig::serial()
         };
         assert_eq!(cfg.effective_threads(10), 1); // too small
         assert_eq!(cfg.effective_threads(127), 1); // below 2 blocks
@@ -357,6 +376,7 @@ mod tests {
         let cfg = ParallelConfig {
             threads: 4,
             min_rows_per_task: 64,
+            ..ParallelConfig::serial()
         };
         assert!(cfg.rows_per_task(0, 4) >= 1);
         assert!(cfg.rows_per_task(1000, 4) >= 62);
@@ -368,6 +388,7 @@ mod tests {
         let cfg = ParallelConfig {
             threads: 4,
             min_rows_per_task: 0,
+            ..ParallelConfig::serial()
         };
         assert!(cfg.effective_threads(100) >= 1);
         assert!(cfg.rows_per_task(100, 4) >= 1);

@@ -28,6 +28,7 @@ use a2q::graph::io::{Dataset, NodeData};
 use a2q::graph::norm::EdgeForm;
 use a2q::graph::Csr;
 use a2q::quant::mixed::NodeQuantParams;
+use a2q::tensor::simd::{self, Isa};
 use a2q::tensor::Matrix;
 use a2q::util::json::Json;
 use a2q::util::prop::{property, Gen};
@@ -175,6 +176,7 @@ fn incremental_deltas_bitwise_match_full_rebuild() {
         let four = ParallelConfig {
             threads: 4,
             min_rows_per_task: 8,
+            ..ParallelConfig::serial()
         };
 
         for arch in ["gcn", "gin"] {
@@ -303,17 +305,23 @@ fn post_delta_params_drive_bucketed_kernel_like_scratch() {
                     (0..fdim * w_cols).map(|i| (i % 15) as i32 - 7).collect(),
                 )
                 .unwrap();
-                let want = packed.matmul_i32_scratch(&w, &ParallelConfig::serial());
-                for threads in [1usize, 4] {
-                    let cfg = ParallelConfig {
-                        threads,
-                        min_rows_per_task: 2,
-                    };
-                    assert_eq!(
-                        packed.matmul_i32(&w, &cfg).data,
-                        want.data,
-                        "t={threads}: post-delta bucketed != scratch"
-                    );
+                // scalar-pinned oracle, compared across threads × ISA
+                let want = packed
+                    .matmul_i32_scratch(&w, &ParallelConfig::serial().with_simd(Isa::Scalar));
+                for isa in simd::parity_isas() {
+                    for threads in [1usize, 4] {
+                        let cfg = ParallelConfig {
+                            threads,
+                            min_rows_per_task: 2,
+                            simd: isa,
+                        };
+                        assert_eq!(
+                            packed.matmul_i32(&w, &cfg).data,
+                            want.data,
+                            "t={threads} isa={}: post-delta bucketed != scratch",
+                            isa.name()
+                        );
+                    }
                 }
             }
         }

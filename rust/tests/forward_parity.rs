@@ -1,7 +1,9 @@
 //! Property-style parity: `forward_int` (true integer arithmetic over
 //! bit-packed codes) must track `forward_fp` (fake-quant emulation) within
 //! quantization tolerance on random GCN/GIN models, and both paths must be
-//! bitwise independent of the parallelism budget (threads ∈ {1, 4}).
+//! bitwise independent of the parallelism budget (threads ∈ {1, 4}) and of
+//! the SIMD dispatch (`tensor::simd::parity_isas()` — scalar plus the
+//! active ISA when one is available).
 //!
 //! Runs on the `util::prop` harness: `A2Q_PROP_SEED=<seed>` replays one
 //! failing case exactly (the failure message prints the seed),
@@ -15,6 +17,7 @@ use a2q::gnn::{
 use a2q::graph::generate::preferential_attachment;
 use a2q::graph::norm::EdgeForm;
 use a2q::quant::mixed::NodeQuantParams;
+use a2q::tensor::simd::{self, Isa};
 use a2q::tensor::Matrix;
 use a2q::util::json::Json;
 use a2q::util::prop::{property, Gen};
@@ -112,6 +115,7 @@ fn int_path_matches_fp_within_quant_tolerance_and_threads() {
         let parallel = ParallelConfig {
             threads: 4,
             min_rows_per_task: 8,
+            ..ParallelConfig::serial()
         };
 
         for arch in ["gcn", "gin"] {
@@ -174,6 +178,7 @@ fn prepared_sessions_bitwise_match_unprepared_path() {
         let cfg = ParallelConfig {
             threads: g.usize_range(1, 5),
             min_rows_per_task: 8,
+            ..ParallelConfig::serial()
         };
 
         for arch in ["gcn", "gin"] {
@@ -206,12 +211,13 @@ fn bucketed_int_kernel_bitwise_matches_scratch_reference() {
     // ISSUE 5: the bucketed per-bitwidth kernels (word-aligned per-width
     // slabs, permutation scatter, add/sub fast path for b <= 2) must be
     // bitwise identical to the pre-bucketing scratch-unpack kernel — the
-    // path forward_int used to run — for threads ∈ {1, 4}, over
+    // path forward_int used to run — for threads ∈ {1, 4} crossed with
+    // every parity ISA (scalar oracle plus the active SIMD dispatch), over
     // model-shaped mixed-width slabs (the same per-node (step, bits)
     // family the forwards quantize with).  The int *forward* is asserted
-    // thread-invariant alongside, so the end-to-end path inherits the
-    // kernel guarantee.
-    property("bucketed == scratch kernel, threads 1|4", 12, |g: &mut Gen| {
+    // thread- and ISA-invariant alongside, so the end-to-end path inherits
+    // the kernel guarantee.
+    property("bucketed == scratch kernel, threads 1|4 × ISA", 12, |g: &mut Gen| {
         let n = g.usize_range(8, 150);
         let f = g.usize_range(1, 40);
         let cols = g.usize_range(1, 16);
@@ -227,27 +233,34 @@ fn bucketed_int_kernel_bitwise_matches_scratch_reference() {
             (0..f * cols).map(|i| (i % 15) as i32 - 7).collect(),
         )
         .unwrap();
-        let serial = ParallelConfig::serial();
-        let want = packed.matmul_i32_scratch(&w, &serial);
-        for threads in [1usize, 4] {
-            let cfg = ParallelConfig {
-                threads,
-                min_rows_per_task: 4,
-            };
-            assert_eq!(
-                packed.matmul_i32(&w, &cfg).data,
-                want.data,
-                "bucketed diverged from scratch at t={threads}"
-            );
-            assert_eq!(
-                packed.matmul_i32_scratch(&w, &cfg).data,
-                want.data,
-                "scratch not thread-invariant at t={threads}"
-            );
+        // the oracle is pinned scalar so it never depends on the dispatch
+        // under test
+        let scalar = ParallelConfig::serial().with_simd(Isa::Scalar);
+        let want = packed.matmul_i32_scratch(&w, &scalar);
+        for isa in simd::parity_isas() {
+            for threads in [1usize, 4] {
+                let cfg = ParallelConfig {
+                    threads,
+                    min_rows_per_task: 4,
+                    simd: isa,
+                };
+                assert_eq!(
+                    packed.matmul_i32(&w, &cfg).data,
+                    want.data,
+                    "bucketed diverged from scratch at t={threads} isa={}",
+                    isa.name()
+                );
+                assert_eq!(
+                    packed.matmul_i32_scratch(&w, &cfg).data,
+                    want.data,
+                    "scratch not thread/ISA-invariant at t={threads} isa={}",
+                    isa.name()
+                );
+            }
         }
 
         // forward-level anchor: the int forward (now running the bucketed
-        // kernels) stays bitwise thread-invariant
+        // kernels) stays bitwise invariant across threads × ISA
         let mut rng = Rng::new(g.usize_range(0, 1 << 30) as u64);
         let csr = preferential_attachment(&mut rng, n, 2);
         let ef = EdgeForm::from_csr(&csr);
@@ -255,16 +268,22 @@ fn bucketed_int_kernel_bitwise_matches_scratch_reference() {
         let model = random_model(g, "gin", n, in_dim, g.usize_range(2, 8), cols.max(2), 2);
         let xin = g.vec_normal(n * in_dim, 0.5);
         let input = GraphInput::node_level(&xin, in_dim, &ef);
-        let int_1 = forward_int_with(&model, &input, &serial);
-        let int_4 = forward_int_with(
-            &model,
-            &input,
-            &ParallelConfig {
-                threads: 4,
-                min_rows_per_task: 4,
-            },
-        );
-        assert_eq!(int_1.data, int_4.data, "int forward not thread-invariant");
+        let int_ref = forward_int_with(&model, &input, &scalar);
+        for isa in simd::parity_isas() {
+            for threads in [1usize, 4] {
+                let cfg = ParallelConfig {
+                    threads,
+                    min_rows_per_task: 4,
+                    simd: isa,
+                };
+                assert_eq!(
+                    int_ref.data,
+                    forward_int_with(&model, &input, &cfg).data,
+                    "int forward not invariant at t={threads} isa={}",
+                    isa.name()
+                );
+            }
+        }
     });
 }
 

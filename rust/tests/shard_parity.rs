@@ -31,6 +31,7 @@ use a2q::graph::norm::EdgeForm;
 use a2q::graph::shard::ShardedGraph;
 use a2q::graph::Csr;
 use a2q::quant::mixed::NodeQuantParams;
+use a2q::tensor::simd::{self, Isa};
 use a2q::tensor::Matrix;
 use a2q::util::json::Json;
 use a2q::util::prop::{property, Gen};
@@ -184,6 +185,7 @@ fn sharded_forward_bitwise_vs_prepared_path() {
         let four = ParallelConfig {
             threads: 4,
             min_rows_per_task: 8,
+            ..ParallelConfig::serial()
         };
 
         for arch in ["gcn", "gin"] {
@@ -260,17 +262,22 @@ fn shard_slabs_bucketed_kernel_matches_scratch_reference() {
                     f,
                     signed,
                 );
-                let want = slab.matmul_i32_scratch(&w, &serial);
-                for threads in [1usize, 4] {
-                    let cfg = ParallelConfig {
-                        threads,
-                        min_rows_per_task: 2,
-                    };
-                    assert_eq!(
-                        slab.matmul_i32(&w, &cfg).data,
-                        want.data,
-                        "S={s} t={threads}: shard slab bucketed != scratch"
-                    );
+                // scalar-pinned oracle, compared across threads × ISA
+                let want = slab.matmul_i32_scratch(&w, &serial.with_simd(Isa::Scalar));
+                for isa in simd::parity_isas() {
+                    for threads in [1usize, 4] {
+                        let cfg = ParallelConfig {
+                            threads,
+                            min_rows_per_task: 2,
+                            simd: isa,
+                        };
+                        assert_eq!(
+                            slab.matmul_i32(&w, &cfg).data,
+                            want.data,
+                            "S={s} t={threads} isa={}: shard slab bucketed != scratch",
+                            isa.name()
+                        );
+                    }
                 }
                 // the slab's recorded rescale steps are the gathered
                 // clamped per-node steps, in owned order
@@ -301,6 +308,7 @@ fn sharded_executor_delta_sequences_match_fresh_unsharded() {
         let four = ParallelConfig {
             threads: 4,
             min_rows_per_task: 8,
+            ..ParallelConfig::serial()
         };
 
         for arch in ["gcn", "gin"] {

@@ -1,0 +1,159 @@
+"""Regression tests for scripts/bench_delta.py (the warn-only CI step).
+
+Run via ``python3 -m unittest discover -s scripts`` (the CI "bench-harness
+regression tests" step).  Drives the script as a subprocess — the contract
+under test is the CLI contract CI relies on: always exit 0, flag
+regressions with a warning marker, never flag improvements, and degrade
+gracefully when a baseline is missing or malformed.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_delta.py")
+
+
+def bench_json(median_by_name, metrics=()):
+    return {
+        "version": 1,
+        "benchmarks": [
+            {
+                "name": name,
+                "median_ns": median,
+                "mean_ns": median,
+                "std_ns": 0.0,
+                "iters_per_sample": 10,
+                "samples": 3,
+            }
+            for name, median in median_by_name.items()
+        ],
+        "metrics": [
+            {"name": name, "value": value, "unit": unit}
+            for name, value, unit in metrics
+        ],
+    }
+
+
+class BenchDeltaTest(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.addCleanup(self.tmp.cleanup)
+        self.dir = self.tmp.name
+        self.baselines = os.path.join(self.dir, "baselines")
+        os.mkdir(self.baselines)
+
+    def write(self, relpath, payload):
+        path = os.path.join(self.dir, relpath)
+        with open(path, "w") as fh:
+            if isinstance(payload, str):
+                fh.write(payload)
+            else:
+                json.dump(payload, fh)
+        return path
+
+    def run_delta(self, *files):
+        proc = subprocess.run(
+            [sys.executable, SCRIPT, "--baselines", self.baselines, *files],
+            cwd=self.dir,
+            capture_output=True,
+            text=True,
+        )
+        return proc
+
+    def test_missing_baseline_lists_current_only_and_exits_zero(self):
+        self.write("BENCH_x.json", bench_json({"k/a": 1000.0}))
+        proc = self.run_delta("BENCH_x.json")
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("(no committed baseline)", proc.stdout)
+        self.assertIn("`k/a`", proc.stdout)
+        self.assertNotIn("⚠️", proc.stdout)
+
+    def test_regression_beyond_threshold_is_flagged(self):
+        self.write(
+            os.path.join("baselines", "BENCH_x.json"),
+            bench_json({"k/a": 1000.0}, [("m/speed", 2.0, "x")]),
+        )
+        # 50% slower benchmark, 50% lower metric: both beyond the 10% default
+        self.write("BENCH_x.json", bench_json({"k/a": 1500.0}, [("m/speed", 1.0, "x")]))
+        proc = self.run_delta("BENCH_x.json")
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertEqual(proc.stdout.count("⚠️"), 2, proc.stdout)
+        self.assertIn("0.67x", proc.stdout)  # 1000/1500 speedup column
+        self.assertIn("-50.0%", proc.stdout)  # metric delta column
+
+    def test_improvement_and_within_threshold_not_flagged(self):
+        self.write(
+            os.path.join("baselines", "BENCH_x.json"),
+            bench_json({"k/fast": 1000.0, "k/same": 1000.0}, [("m/speed", 2.0, "x")]),
+        )
+        # faster benchmark, 5% slower one (inside threshold), improved metric
+        self.write(
+            "BENCH_x.json",
+            bench_json({"k/fast": 500.0, "k/same": 1050.0}, [("m/speed", 2.5, "x")]),
+        )
+        proc = self.run_delta("BENCH_x.json")
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertNotIn("⚠️", proc.stdout)
+        self.assertIn("2.00x", proc.stdout)
+
+    def test_custom_threshold_is_honored(self):
+        self.write(os.path.join("baselines", "BENCH_x.json"), bench_json({"k/a": 1000.0}))
+        self.write("BENCH_x.json", bench_json({"k/a": 1050.0}))  # 5% slower
+        proc = subprocess.run(
+            [
+                sys.executable,
+                SCRIPT,
+                "--baselines",
+                self.baselines,
+                "--threshold",
+                "0.01",
+                "BENCH_x.json",
+            ],
+            cwd=self.dir,
+            capture_output=True,
+            text=True,
+        )
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("⚠️", proc.stdout)
+
+    def test_malformed_current_file_is_skipped_not_fatal(self):
+        self.write("BENCH_x.json", "{not json")
+        proc = self.run_delta("BENCH_x.json")
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("skipping", proc.stdout)
+
+    def test_no_files_discovered_exits_zero(self):
+        proc = self.run_delta()  # empty tmpdir: auto-discovery finds nothing
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("nothing to diff", proc.stdout)
+
+    def test_auto_discovery_picks_up_bench_json_in_cwd(self):
+        self.write("BENCH_y.json", bench_json({"k/b": 2000.0}))
+        proc = self.run_delta()  # no positional args
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("BENCH_y.json", proc.stdout)
+        self.assertIn("`k/b`", proc.stdout)
+
+    def test_seeded_repo_baseline_parses_against_itself(self):
+        # the committed seed baseline must stay schema-valid: diffing it
+        # against itself yields 1.00x rows and no warnings
+        repo_baselines = os.path.join(os.path.dirname(SCRIPT), "..", "bench", "baselines")
+        seed = os.path.join(repo_baselines, "BENCH_quant_kernels.json")
+        self.assertTrue(os.path.exists(seed), "seed baseline missing")
+        proc = subprocess.run(
+            [sys.executable, SCRIPT, "--baselines", repo_baselines, seed],
+            cwd=os.path.dirname(repo_baselines),
+            capture_output=True,
+            text=True,
+        )
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertNotIn("⚠️", proc.stdout)
+        self.assertIn("quant/simd_speedup/avx2", proc.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main()
