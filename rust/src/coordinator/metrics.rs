@@ -53,8 +53,15 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Lock the counters — the one audited lock acquisition.
+    fn locked(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // a2q-lint: allow(panic-path) counter updates cannot panic while
+        // holding the lock, so poisoning would itself be a prior bug
+        self.inner.lock().unwrap()
+    }
+
     pub fn record_admitted(&self) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.locked();
         if m.started.is_none() {
             m.started = Some(Instant::now());
         }
@@ -62,38 +69,38 @@ impl Metrics {
     }
 
     pub fn record_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.locked().rejected += 1;
     }
 
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        self.locked().errors += 1;
     }
 
     /// Count one successfully applied resident-graph update.  Sharded
     /// executors report how many shard local views the delta rebuilt and
     /// the post-delta halo size (unsharded sessions pass 0, 0).
     pub fn record_update(&self, shards_touched: u64, halo_nodes: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.locked();
         m.updates += 1;
         m.shard_rebuilds += shards_touched;
         m.halo_nodes = halo_nodes;
     }
 
     pub fn record_batch(&self, batch_size: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.locked();
         m.batches += 1;
         m.batched_requests += batch_size as u64;
     }
 
     pub fn record_response(&self, latency_us: u64, queue_us: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.locked();
         m.responses += 1;
         m.latency.record_us(latency_us as f64);
         m.queue_wait.record_us(queue_us as f64);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
+        let m = self.locked();
         let elapsed = m
             .started
             .map(|s| s.elapsed().as_secs_f64())

@@ -65,6 +65,8 @@ impl Coordinator {
             thread::Builder::new()
                 .name(format!("a2q-runner-{name_owned}"))
                 .spawn(move || runner_loop(name_owned, rx, executor, cfg, metrics, stop))
+                // a2q-lint: allow(panic-path) thread spawn fails only on OS
+                // resource exhaustion during model registration
                 .expect("spawn runner"),
         );
     }

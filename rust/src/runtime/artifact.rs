@@ -147,6 +147,8 @@ impl ModelArtifact {
         std::fs::File::open(&path)?.read_to_end(&mut raw)?;
         let data: Vec<f32> = raw
             .chunks_exact(4)
+            // a2q-lint: allow(panic-path) chunks_exact(4) yields only
+            // 4-byte slices, so the conversion is infallible
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
         let mut out = Vec::new();

@@ -136,8 +136,12 @@ pub fn axpy_f32(isa: Isa, acc: &mut [f32], a: f32, b: &[f32]) {
     debug_assert_eq!(acc.len(), b.len());
     match isa {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm only runs for Isa::Avx2, which resolve()/active()
+        // hand out only after is_x86_feature_detected!("avx2") succeeded.
         Isa::Avx2 => unsafe { axpy_f32_avx2(acc, a, b) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline; Isa::Neon is only
+        // constructible on targets where Isa::available() returned true.
         Isa::Neon => unsafe { axpy_f32_neon(acc, a, b) },
         _ => axpy_f32_scalar(acc, a, b),
     }
@@ -149,8 +153,11 @@ pub fn axpy_i32(isa: Isa, acc: &mut [i32], c: i32, b: &[i32]) {
     debug_assert_eq!(acc.len(), b.len());
     match isa {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only dispatched after the runtime CPUID
+        // probe in Isa::available() proved AVX2 support.
         Isa::Avx2 => unsafe { axpy_i32_avx2(acc, c, b) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 (Isa::available() is true).
         Isa::Neon => unsafe { axpy_i32_neon(acc, c, b) },
         _ => axpy_i32_scalar(acc, c, b),
     }
@@ -162,8 +169,11 @@ pub fn add_assign_i32(isa: Isa, acc: &mut [i32], b: &[i32]) {
     debug_assert_eq!(acc.len(), b.len());
     match isa {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only dispatched after the runtime CPUID
+        // probe in Isa::available() proved AVX2 support.
         Isa::Avx2 => unsafe { add_assign_i32_avx2(acc, b) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 (Isa::available() is true).
         Isa::Neon => unsafe { add_assign_i32_neon(acc, b) },
         _ => add_assign_i32_scalar(acc, b),
     }
@@ -175,8 +185,11 @@ pub fn sub_assign_i32(isa: Isa, acc: &mut [i32], b: &[i32]) {
     debug_assert_eq!(acc.len(), b.len());
     match isa {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only dispatched after the runtime CPUID
+        // probe in Isa::available() proved AVX2 support.
         Isa::Avx2 => unsafe { sub_assign_i32_avx2(acc, b) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 (Isa::available() is true).
         Isa::Neon => unsafe { sub_assign_i32_neon(acc, b) },
         _ => sub_assign_i32_scalar(acc, b),
     }
@@ -242,8 +255,14 @@ pub fn unpack_codes(
     );
     match isa {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only dispatched after the runtime CPUID
+        // probe proved AVX2; the debug_assert above restates the slab
+        // contract (pad word past the last code's first-bit word) that
+        // every caller upholds, keeping all window loads inside `words`.
         Isa::Avx2 => unsafe { unpack_codes_avx2(bits, words, base_bit, bias, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; same slab contract as the
+        // AVX2 arm keeps the 4-byte window loads inside `words`.
         Isa::Neon => unsafe { unpack_codes_neon(bits, words, base_bit, bias, out) },
         _ => unpack_codes_scalar(bits, words, base_bit, bias, out),
     }
@@ -281,15 +300,20 @@ mod avx2 {
         let n = acc.len();
         let ap = acc.as_mut_ptr();
         let bp = b.as_ptr();
-        let va = _mm256_set1_ps(a);
         let mut j = 0;
-        while j + 8 <= n {
-            let vb = _mm256_loadu_ps(bp.add(j));
-            let vc = _mm256_loadu_ps(ap.add(j));
-            // mul then add as two separately-rounded ops (never fmadd):
-            // the scalar oracle rounds twice per element
-            _mm256_storeu_ps(ap.add(j), _mm256_add_ps(vc, _mm256_mul_ps(va, vb)));
-            j += 8;
+        // SAFETY: the target_feature contract guarantees AVX2; `j + 8 <= n`
+        // keeps every 8-lane unaligned load/store inside `acc` and `b`
+        // (equal lengths, debug_asserted by the dispatch wrapper).
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            while j + 8 <= n {
+                let vb = _mm256_loadu_ps(bp.add(j));
+                let vc = _mm256_loadu_ps(ap.add(j));
+                // mul then add as two separately-rounded ops (never fmadd):
+                // the scalar oracle rounds twice per element
+                _mm256_storeu_ps(ap.add(j), _mm256_add_ps(vc, _mm256_mul_ps(va, vb)));
+                j += 8;
+            }
         }
         super::axpy_f32_scalar(&mut acc[j..], a, &b[j..]);
     }
@@ -300,14 +324,19 @@ mod avx2 {
         let n = acc.len();
         let ap = acc.as_mut_ptr();
         let bp = b.as_ptr();
-        let vc = _mm256_set1_epi32(c);
         let mut j = 0;
-        while j + 8 <= n {
-            let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
-            let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
-            let r = _mm256_add_epi32(va, _mm256_mullo_epi32(vc, vb));
-            _mm256_storeu_si256(ap.add(j) as *mut __m256i, r);
-            j += 8;
+        // SAFETY: the target_feature contract guarantees AVX2; `j + 8 <= n`
+        // keeps every 8-lane unaligned load/store inside `acc` and `b`
+        // (equal lengths, debug_asserted by the dispatch wrapper).
+        unsafe {
+            let vc = _mm256_set1_epi32(c);
+            while j + 8 <= n {
+                let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
+                let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
+                let r = _mm256_add_epi32(va, _mm256_mullo_epi32(vc, vb));
+                _mm256_storeu_si256(ap.add(j) as *mut __m256i, r);
+                j += 8;
+            }
         }
         super::axpy_i32_scalar(&mut acc[j..], c, &b[j..]);
     }
@@ -319,11 +348,16 @@ mod avx2 {
         let ap = acc.as_mut_ptr();
         let bp = b.as_ptr();
         let mut j = 0;
-        while j + 8 <= n {
-            let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
-            let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
-            _mm256_storeu_si256(ap.add(j) as *mut __m256i, _mm256_add_epi32(va, vb));
-            j += 8;
+        // SAFETY: the target_feature contract guarantees AVX2; `j + 8 <= n`
+        // keeps every 8-lane unaligned load/store inside `acc` and `b`
+        // (equal lengths, debug_asserted by the dispatch wrapper).
+        unsafe {
+            while j + 8 <= n {
+                let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
+                let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
+                _mm256_storeu_si256(ap.add(j) as *mut __m256i, _mm256_add_epi32(va, vb));
+                j += 8;
+            }
         }
         super::add_assign_i32_scalar(&mut acc[j..], &b[j..]);
     }
@@ -335,11 +369,16 @@ mod avx2 {
         let ap = acc.as_mut_ptr();
         let bp = b.as_ptr();
         let mut j = 0;
-        while j + 8 <= n {
-            let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
-            let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
-            _mm256_storeu_si256(ap.add(j) as *mut __m256i, _mm256_sub_epi32(va, vb));
-            j += 8;
+        // SAFETY: the target_feature contract guarantees AVX2; `j + 8 <= n`
+        // keeps every 8-lane unaligned load/store inside `acc` and `b`
+        // (equal lengths, debug_asserted by the dispatch wrapper).
+        unsafe {
+            while j + 8 <= n {
+                let vb = _mm256_loadu_si256(bp.add(j) as *const __m256i);
+                let va = _mm256_loadu_si256(ap.add(j) as *const __m256i);
+                _mm256_storeu_si256(ap.add(j) as *mut __m256i, _mm256_sub_epi32(va, vb));
+                j += 8;
+            }
         }
         super::sub_assign_i32_scalar(&mut acc[j..], &b[j..]);
     }
@@ -362,8 +401,6 @@ mod avx2 {
     ) {
         let n = out.len();
         let bytes = words.as_ptr() as *const u8;
-        let vmask = _mm256_set1_epi32((1i32 << bits) - 1);
-        let vbias = _mm256_set1_epi32(bias);
         let mut offs = [0usize; 8];
         let mut sh = [0i32; 8];
         for (l, (o, s)) in offs.iter_mut().zip(sh.iter_mut()).enumerate() {
@@ -371,17 +408,26 @@ mod avx2 {
             *o = p >> 3;
             *s = (p & 7) as i32;
         }
-        let vshift = _mm256_set_epi32(sh[7], sh[6], sh[5], sh[4], sh[3], sh[2], sh[1], sh[0]);
         let op = out.as_mut_ptr();
         let mut i = 0usize;
         let mut cursor = 0usize;
-        while i + 8 <= n {
-            let ld = |l: usize| (bytes.add(offs[l] + cursor) as *const i32).read_unaligned();
-            let win = _mm256_set_epi32(ld(7), ld(6), ld(5), ld(4), ld(3), ld(2), ld(1), ld(0));
-            let v = _mm256_and_si256(_mm256_srlv_epi32(win, vshift), vmask);
-            _mm256_storeu_si256(op.add(i) as *mut __m256i, _mm256_sub_epi32(v, vbias));
-            i += 8;
-            cursor += bits;
+        // SAFETY: the target_feature contract guarantees AVX2.  Each lane's
+        // 4-byte window starts at byte `offs[l] + cursor`, which the slab
+        // contract (trailing pad word, debug_asserted by the dispatch
+        // wrapper) keeps inside `words` at every step; the 8-lane stores
+        // stay inside `out` because `i + 8 <= n`.
+        unsafe {
+            let vmask = _mm256_set1_epi32((1i32 << bits) - 1);
+            let vbias = _mm256_set1_epi32(bias);
+            let vshift = _mm256_set_epi32(sh[7], sh[6], sh[5], sh[4], sh[3], sh[2], sh[1], sh[0]);
+            while i + 8 <= n {
+                let ld = |l: usize| (bytes.add(offs[l] + cursor) as *const i32).read_unaligned();
+                let win = _mm256_set_epi32(ld(7), ld(6), ld(5), ld(4), ld(3), ld(2), ld(1), ld(0));
+                let v = _mm256_and_si256(_mm256_srlv_epi32(win, vshift), vmask);
+                _mm256_storeu_si256(op.add(i) as *mut __m256i, _mm256_sub_epi32(v, vbias));
+                i += 8;
+                cursor += bits;
+            }
         }
         super::unpack_codes_scalar(bits, words, base_bit + i * bits, bias, &mut out[i..]);
     }
@@ -406,14 +452,19 @@ mod neon {
         let n = acc.len();
         let ap = acc.as_mut_ptr();
         let bp = b.as_ptr();
-        let va = vdupq_n_f32(a);
         let mut j = 0;
-        while j + 4 <= n {
-            let vb = vld1q_f32(bp.add(j));
-            let vc = vld1q_f32(ap.add(j));
-            // separate mul + add (not vfmaq): two roundings, like scalar
-            vst1q_f32(ap.add(j), vaddq_f32(vc, vmulq_f32(va, vb)));
-            j += 4;
+        // SAFETY: the target_feature contract guarantees NEON; `j + 4 <= n`
+        // keeps every 4-lane load/store inside `acc` and `b` (equal
+        // lengths, debug_asserted by the dispatch wrapper).
+        unsafe {
+            let va = vdupq_n_f32(a);
+            while j + 4 <= n {
+                let vb = vld1q_f32(bp.add(j));
+                let vc = vld1q_f32(ap.add(j));
+                // separate mul + add (not vfmaq): two roundings, like scalar
+                vst1q_f32(ap.add(j), vaddq_f32(vc, vmulq_f32(va, vb)));
+                j += 4;
+            }
         }
         super::axpy_f32_scalar(&mut acc[j..], a, &b[j..]);
     }
@@ -424,13 +475,18 @@ mod neon {
         let n = acc.len();
         let ap = acc.as_mut_ptr();
         let bp = b.as_ptr();
-        let vc = vdupq_n_s32(c);
         let mut j = 0;
-        while j + 4 <= n {
-            let vb = vld1q_s32(bp.add(j));
-            let va = vld1q_s32(ap.add(j));
-            vst1q_s32(ap.add(j), vaddq_s32(va, vmulq_s32(vc, vb)));
-            j += 4;
+        // SAFETY: the target_feature contract guarantees NEON; `j + 4 <= n`
+        // keeps every 4-lane load/store inside `acc` and `b` (equal
+        // lengths, debug_asserted by the dispatch wrapper).
+        unsafe {
+            let vc = vdupq_n_s32(c);
+            while j + 4 <= n {
+                let vb = vld1q_s32(bp.add(j));
+                let va = vld1q_s32(ap.add(j));
+                vst1q_s32(ap.add(j), vaddq_s32(va, vmulq_s32(vc, vb)));
+                j += 4;
+            }
         }
         super::axpy_i32_scalar(&mut acc[j..], c, &b[j..]);
     }
@@ -442,9 +498,14 @@ mod neon {
         let ap = acc.as_mut_ptr();
         let bp = b.as_ptr();
         let mut j = 0;
-        while j + 4 <= n {
-            vst1q_s32(ap.add(j), vaddq_s32(vld1q_s32(ap.add(j)), vld1q_s32(bp.add(j))));
-            j += 4;
+        // SAFETY: the target_feature contract guarantees NEON; `j + 4 <= n`
+        // keeps every 4-lane load/store inside `acc` and `b` (equal
+        // lengths, debug_asserted by the dispatch wrapper).
+        unsafe {
+            while j + 4 <= n {
+                vst1q_s32(ap.add(j), vaddq_s32(vld1q_s32(ap.add(j)), vld1q_s32(bp.add(j))));
+                j += 4;
+            }
         }
         super::add_assign_i32_scalar(&mut acc[j..], &b[j..]);
     }
@@ -456,9 +517,14 @@ mod neon {
         let ap = acc.as_mut_ptr();
         let bp = b.as_ptr();
         let mut j = 0;
-        while j + 4 <= n {
-            vst1q_s32(ap.add(j), vsubq_s32(vld1q_s32(ap.add(j)), vld1q_s32(bp.add(j))));
-            j += 4;
+        // SAFETY: the target_feature contract guarantees NEON; `j + 4 <= n`
+        // keeps every 4-lane load/store inside `acc` and `b` (equal
+        // lengths, debug_asserted by the dispatch wrapper).
+        unsafe {
+            while j + 4 <= n {
+                vst1q_s32(ap.add(j), vsubq_s32(vld1q_s32(ap.add(j)), vld1q_s32(bp.add(j))));
+                j += 4;
+            }
         }
         super::sub_assign_i32_scalar(&mut acc[j..], &b[j..]);
     }
@@ -480,8 +546,6 @@ mod neon {
     ) {
         let n = out.len();
         let bytes = words.as_ptr() as *const u8;
-        let vmask = vdupq_n_u32((1u32 << bits) - 1);
-        let vbias = vdupq_n_s32(bias);
         let mut offs = [0usize; 8];
         let mut sh = [0i32; 8];
         for (l, (o, s)) in offs.iter_mut().zip(sh.iter_mut()).enumerate() {
@@ -490,24 +554,33 @@ mod neon {
             // vshlq by a negative amount shifts right (logical on u32)
             *s = -((p & 7) as i32);
         }
-        let shift_lo = vld1q_s32(sh.as_ptr());
-        let shift_hi = vld1q_s32(sh.as_ptr().add(4));
         let op = out.as_mut_ptr();
         let mut i = 0usize;
         let mut cursor = 0usize;
-        while i + 8 <= n {
-            let mut win = [0u32; 8];
-            for (l, w) in win.iter_mut().enumerate() {
-                *w = (bytes.add(offs[l] + cursor) as *const u32).read_unaligned();
+        // SAFETY: the target_feature contract guarantees NEON.  Each lane's
+        // 4-byte window starts at byte `offs[l] + cursor`, which the slab
+        // contract (trailing pad word, debug_asserted by the dispatch
+        // wrapper) keeps inside `words` at every step; the two 4-lane
+        // stores stay inside `out` because `i + 8 <= n`.
+        unsafe {
+            let vmask = vdupq_n_u32((1u32 << bits) - 1);
+            let vbias = vdupq_n_s32(bias);
+            let shift_lo = vld1q_s32(sh.as_ptr());
+            let shift_hi = vld1q_s32(sh.as_ptr().add(4));
+            while i + 8 <= n {
+                let mut win = [0u32; 8];
+                for (l, w) in win.iter_mut().enumerate() {
+                    *w = (bytes.add(offs[l] + cursor) as *const u32).read_unaligned();
+                }
+                let lo = vshlq_u32(vld1q_u32(win.as_ptr()), shift_lo);
+                let hi = vshlq_u32(vld1q_u32(win.as_ptr().add(4)), shift_hi);
+                let lo = vsubq_s32(vreinterpretq_s32_u32(vandq_u32(lo, vmask)), vbias);
+                let hi = vsubq_s32(vreinterpretq_s32_u32(vandq_u32(hi, vmask)), vbias);
+                vst1q_s32(op.add(i), lo);
+                vst1q_s32(op.add(i + 4), hi);
+                i += 8;
+                cursor += bits;
             }
-            let lo = vshlq_u32(vld1q_u32(win.as_ptr()), shift_lo);
-            let hi = vshlq_u32(vld1q_u32(win.as_ptr().add(4)), shift_hi);
-            let lo = vsubq_s32(vreinterpretq_s32_u32(vandq_u32(lo, vmask)), vbias);
-            let hi = vsubq_s32(vreinterpretq_s32_u32(vandq_u32(hi, vmask)), vbias);
-            vst1q_s32(op.add(i), lo);
-            vst1q_s32(op.add(i + 4), hi);
-            i += 8;
-            cursor += bits;
         }
         super::unpack_codes_scalar(bits, words, base_bit + i * bits, bias, &mut out[i..]);
     }

@@ -1,0 +1,9 @@
+//! Lint-clean fixture: documented unsafe, no banned constructs.
+
+/// Reads the first byte of a non-empty slice.
+pub fn first(p: &[u8]) -> u8 {
+    assert!(!p.is_empty());
+    // SAFETY: `p` is non-empty per the assert above, so index 0 is in
+    // bounds and `as_ptr()` is valid for a one-byte read.
+    unsafe { *p.as_ptr() }
+}

@@ -1,0 +1,20 @@
+//! R4 fixture: runner-path `.unwrap()`/`.expect()` outside tests trip;
+//! the annotated lock unwrap and the `#[cfg(test)]` module do not.
+
+use std::sync::Mutex;
+
+pub fn response_path(v: Option<u32>, m: &Mutex<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect("reachable by malformed input");
+    // a2q-lint: allow(panic-path) fixture: lock poisoning propagates a prior panic on purpose
+    let c = *m.lock().unwrap();
+    a + b + c
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}

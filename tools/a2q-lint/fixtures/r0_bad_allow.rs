@@ -1,0 +1,6 @@
+//! R0 fixture: allow markers must carry a written reason.
+
+pub fn empty_reason(v: Option<u32>) -> u32 {
+    // a2q-lint: allow(panic-path)
+    v.unwrap()
+}

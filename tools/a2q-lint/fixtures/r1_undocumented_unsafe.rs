@@ -1,0 +1,15 @@
+//! R1 fixture: the undocumented `unsafe fn` and the first block must
+//! trip; the SAFETY-commented block and the allowed block must not.
+
+pub unsafe fn undocumented(p: *const u8) -> u8 {
+    *p
+}
+
+pub fn blocks(p: *const u8) -> u8 {
+    let a = unsafe { *p };
+    // SAFETY: caller guarantees `p` is valid for reads (documented block).
+    let b = unsafe { *p };
+    // a2q-lint: allow(undocumented-unsafe) fixture exercising the allow path
+    let c = unsafe { *p };
+    a.wrapping_add(b).wrapping_add(c)
+}

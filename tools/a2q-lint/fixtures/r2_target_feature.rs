@@ -1,0 +1,10 @@
+//! R2 fixture: a `#[target_feature]` definition outside the
+//! `tensor::simd` dispatch module trips, even when documented and unsafe.
+
+/// SAFETY: caller must ensure AVX2 is available.
+#[target_feature(enable = "avx2")]
+pub unsafe fn rogue_kernel(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v += 1.0;
+    }
+}

@@ -1,0 +1,7 @@
+//! R5 fixture: epoch/admission atomics must not use `Ordering::Relaxed`.
+
+use std::sync::atomic::AtomicU64;
+
+pub fn bump_epoch(e: &AtomicU64) -> u64 {
+    e.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}

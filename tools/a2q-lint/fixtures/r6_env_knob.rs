@@ -1,0 +1,8 @@
+//! R6 fixture: `A2Q_*` env reads must appear in the knob registry —
+//! `README_knobs.md` next to this file documents only `A2Q_DOCUMENTED`.
+
+pub fn knobs() -> (Option<String>, Option<String>) {
+    let documented = std::env::var("A2Q_DOCUMENTED").ok();
+    let rogue = std::env::var("A2Q_NOT_A_KNOB").ok();
+    (documented, rogue)
+}

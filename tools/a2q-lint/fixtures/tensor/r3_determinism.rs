@@ -1,0 +1,19 @@
+//! R3 fixture: three determinism violations in a kernel-path file — FMA
+//! contraction, hash-order iteration feeding a sum, and a partial_cmp
+//! float sort.
+
+pub fn fma(acc: f32, a: f32, b: f32) -> f32 {
+    a.mul_add(b, acc)
+}
+
+pub fn hash_order_sum(m: &std::collections::HashMap<u32, f32>) -> f32 {
+    let mut s = 0.0;
+    for v in m.values() {
+        s += v;
+    }
+    s
+}
+
+pub fn sort_scores(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,9 @@
+//! R2 fixture: inside a `tensor/simd.rs` path the location is fine, but a
+//! safe (non-`unsafe`) `#[target_feature]` fn still trips the rule.
+
+#[target_feature(enable = "avx2")]
+pub fn not_marked_unsafe(x: &mut [i32]) {
+    for v in x.iter_mut() {
+        *v += 1;
+    }
+}

@@ -1,0 +1,141 @@
+//! Fixture-based self-tests: each fixture file trips exactly its own
+//! rule, the clean fixture passes, and — the acceptance criterion — the
+//! real `rust/` tree is lint-clean.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use crate::rules::{check_file, readme_knobs, Finding};
+
+fn fixture_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(rel)
+}
+
+fn knobs_from(readme: &Path) -> BTreeSet<String> {
+    let text = std::fs::read_to_string(readme)
+        .unwrap_or_else(|e| panic!("read {}: {e}", readme.display()));
+    readme_knobs(&text)
+}
+
+/// Lint one fixture against the fixture knob registry.
+fn run_fixture(rel: &str) -> Vec<Finding> {
+    let path = fixture_path(rel);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let knobs = knobs_from(&fixture_path("README_knobs.md"));
+    let display = path.to_string_lossy().replace('\\', "/");
+    check_file(&display, &src, &knobs)
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn r1_fixture_trips_twice_and_honors_safety_and_allow() {
+    let f = run_fixture("r1_undocumented_unsafe.rs");
+    assert_eq!(rules_of(&f), ["R1", "R1"], "findings: {f:?}");
+    assert!(f.iter().all(|x| x.slug == "undocumented-unsafe"));
+}
+
+#[test]
+fn r2_fixture_trips_outside_dispatch_module() {
+    let f = run_fixture("r2_target_feature.rs");
+    assert_eq!(rules_of(&f), ["R2"], "findings: {f:?}");
+    assert!(f[0].message.contains("outside"), "message: {}", f[0].message);
+}
+
+#[test]
+fn r2_fixture_trips_safe_target_feature_even_in_dispatch_path() {
+    let f = run_fixture("tensor/simd.rs");
+    assert_eq!(rules_of(&f), ["R2"], "findings: {f:?}");
+    assert!(f[0].message.contains("unsafe"), "message: {}", f[0].message);
+}
+
+#[test]
+fn r3_fixture_trips_fma_hashmap_and_partial_cmp() {
+    let f = run_fixture("tensor/r3_determinism.rs");
+    assert_eq!(rules_of(&f), ["R3", "R3", "R3"], "findings: {f:?}");
+    let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("mul_add")));
+    assert!(msgs.iter().any(|m| m.contains("HashMap")));
+    assert!(msgs.iter().any(|m| m.contains("partial_cmp")));
+}
+
+#[test]
+fn r4_fixture_trips_production_unwraps_only() {
+    let f = run_fixture("coordinator/r4_unwrap.rs");
+    assert_eq!(rules_of(&f), ["R4", "R4"], "findings: {f:?}");
+    assert!(f[0].message.contains("unwrap"));
+    assert!(f[1].message.contains("expect"));
+}
+
+#[test]
+fn r5_fixture_trips_relaxed_ordering() {
+    let f = run_fixture("r5_relaxed.rs");
+    assert_eq!(rules_of(&f), ["R5"], "findings: {f:?}");
+}
+
+#[test]
+fn r6_fixture_trips_unregistered_knob_only() {
+    let f = run_fixture("r6_env_knob.rs");
+    assert_eq!(rules_of(&f), ["R6"], "findings: {f:?}");
+    assert!(
+        f[0].message.contains("A2Q_NOT_A_KNOB"),
+        "message: {}",
+        f[0].message
+    );
+}
+
+#[test]
+fn r0_fixture_trips_allow_marker_without_reason() {
+    let f = run_fixture("r0_bad_allow.rs");
+    assert_eq!(rules_of(&f), ["R0"], "findings: {f:?}");
+    assert!(f[0].message.contains("reason"), "message: {}", f[0].message);
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let f = run_fixture("clean.rs");
+    assert!(f.is_empty(), "clean fixture tripped: {f:?}");
+}
+
+/// Acceptance criterion: the real tree is lint-clean against the real
+/// README knob table (all allows carrying written reasons).
+#[test]
+fn real_tree_is_lint_clean() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let knobs = knobs_from(&repo.join("README.md"));
+    let mut files = Vec::new();
+    for root in ["rust/src", "rust/tests"] {
+        collect(&repo.join(root), &mut files);
+    }
+    assert!(!files.is_empty(), "no sources found under {}", repo.display());
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f).unwrap_or_else(|e| panic!("read {f:?}: {e}"));
+        let display = f.to_string_lossy().replace('\\', "/");
+        findings.extend(check_file(&display, &src, &knobs));
+    }
+    let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+    assert!(
+        findings.is_empty(),
+        "real tree has findings:\n{}",
+        rendered.join("\n")
+    );
+}
+
+fn collect(root: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)
+        .unwrap_or_else(|e| panic!("read_dir {}: {e}", root.display()))
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}

@@ -1,0 +1,490 @@
+//! Hand-rolled, line-aware Rust scrubber — no syn, no proc-macro, just
+//! enough lexing to blank out comments and string/char literals while
+//! preserving the line structure byte-for-byte, so the rule passes can
+//! treat the remaining text as structural code and report real line
+//! numbers.
+//!
+//! Captured side channels:
+//! * comment text per line (`// SAFETY:` comments, `a2q-lint: allow(...)`
+//!   markers),
+//! * string-literal contents per line (the `A2Q_*` env-var registry
+//!   cross-check),
+//! * a per-line mask of `#[cfg(test)]` / `#[test]` regions (rules that
+//!   only guard production paths skip those lines).
+
+/// Scrubbed view of one source file.
+pub struct Scrub {
+    /// Source with comments and literal bodies replaced by spaces.  Same
+    /// line structure as the input, so positions map 1:1.
+    pub code: String,
+    /// Comment text per 1-indexed line; block comments contribute one
+    /// entry per line they span.
+    pub comments: Vec<(usize, String)>,
+    /// String-literal contents, keyed by the line of the opening quote.
+    pub strings: Vec<(usize, String)>,
+    /// 1-indexed: `true` for lines inside a `#[cfg(test)]`/`#[test]` item.
+    test_lines: Vec<bool>,
+}
+
+impl Scrub {
+    /// Whether a 1-indexed line sits inside a test-only region.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_lines.get(line).copied().unwrap_or(false)
+    }
+
+    /// Whether any comment on `line` contains `needle`.
+    pub fn comment_on(&self, line: usize, needle: &str) -> bool {
+        self.comments
+            .iter()
+            .any(|(l, t)| *l == line && t.to_ascii_uppercase().contains(needle))
+    }
+
+    /// Whether `line` carries any comment at all.
+    pub fn has_comment(&self, line: usize) -> bool {
+        self.comments.iter().any(|(l, _)| *l == line)
+    }
+}
+
+fn blank(code: &mut String, k: usize) {
+    for _ in 0..k {
+        code.push(' ');
+    }
+}
+
+/// Scrub `src` into code/comments/strings views (see [`Scrub`]).
+pub fn scrub(src: &str) -> Scrub {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(src.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        match c {
+            '\n' => {
+                code.push('\n');
+                line += 1;
+                i += 1;
+            }
+            '/' if i + 1 < n && chars[i + 1] == '/' => {
+                let start = i;
+                while i < n && chars[i] != '\n' {
+                    i += 1;
+                }
+                comments.push((line, chars[start..i].iter().collect()));
+                blank(&mut code, i - start);
+            }
+            '/' if i + 1 < n && chars[i + 1] == '*' => {
+                i = take_block_comment(&chars, i, &mut line, &mut code, &mut comments);
+            }
+            '"' => {
+                i = take_string(&chars, i, &mut line, &mut code, &mut strings);
+            }
+            'r' if i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '#') => {
+                i = take_raw_string(&chars, i, &mut line, &mut code, &mut strings);
+            }
+            'b' if i + 1 < n && chars[i + 1] == '"' => {
+                code.push(' ');
+                i = take_string(&chars, i + 1, &mut line, &mut code, &mut strings);
+            }
+            'b' if i + 1 < n && chars[i + 1] == '\'' => {
+                code.push(' ');
+                i = take_char_or_lifetime(&chars, i + 1, &mut code);
+            }
+            'b' if i + 2 < n
+                && chars[i + 1] == 'r'
+                && (chars[i + 2] == '"' || chars[i + 2] == '#') =>
+            {
+                code.push(' ');
+                i = take_raw_string(&chars, i + 1, &mut line, &mut code, &mut strings);
+            }
+            '\'' => {
+                i = take_char_or_lifetime(&chars, i, &mut code);
+            }
+            c if c == '_' || c.is_alphanumeric() => {
+                // consume a whole identifier/number so prefix letters like
+                // `r`/`b` inside words can't be mistaken for literal starts
+                while i < n && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                    code.push(chars[i]);
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    let test_lines = test_line_mask(&code);
+    Scrub {
+        code,
+        comments,
+        strings,
+        test_lines,
+    }
+}
+
+/// `i` at the `/` of `/*`.  Handles nesting; captures text per line.
+fn take_block_comment(
+    chars: &[char],
+    mut i: usize,
+    line: &mut usize,
+    code: &mut String,
+    comments: &mut Vec<(usize, String)>,
+) -> usize {
+    let n = chars.len();
+    let mut depth = 1usize;
+    let mut buf = String::new();
+    blank(code, 2);
+    i += 2;
+    while i < n && depth > 0 {
+        if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+            depth += 1;
+            buf.push_str("/*");
+            blank(code, 2);
+            i += 2;
+        } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+            depth -= 1;
+            if depth > 0 {
+                buf.push_str("*/");
+            }
+            blank(code, 2);
+            i += 2;
+        } else if chars[i] == '\n' {
+            comments.push((*line, std::mem::take(&mut buf)));
+            code.push('\n');
+            *line += 1;
+            i += 1;
+        } else {
+            buf.push(chars[i]);
+            code.push(' ');
+            i += 1;
+        }
+    }
+    comments.push((*line, buf));
+    i
+}
+
+/// `i` at the opening `"`.
+fn take_string(
+    chars: &[char],
+    mut i: usize,
+    line: &mut usize,
+    code: &mut String,
+    strings: &mut Vec<(usize, String)>,
+) -> usize {
+    let n = chars.len();
+    let open_line = *line;
+    code.push('"');
+    i += 1;
+    let mut buf = String::new();
+    while i < n {
+        match chars[i] {
+            '\\' if i + 1 < n => {
+                if chars[i + 1] == '\n' {
+                    // line-continuation escape
+                    code.push(' ');
+                    code.push('\n');
+                    *line += 1;
+                } else {
+                    buf.push(chars[i + 1]);
+                    blank(code, 2);
+                }
+                i += 2;
+            }
+            '"' => {
+                code.push('"');
+                i += 1;
+                break;
+            }
+            '\n' => {
+                buf.push('\n');
+                code.push('\n');
+                *line += 1;
+                i += 1;
+            }
+            c => {
+                buf.push(c);
+                code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    strings.push((open_line, buf));
+    i
+}
+
+/// `i` at the `r` of `r"…"` / `r#"…"#`.  `r#ident` (raw identifier) is
+/// passed through as code.
+fn take_raw_string(
+    chars: &[char],
+    i: usize,
+    line: &mut usize,
+    code: &mut String,
+    strings: &mut Vec<(usize, String)>,
+) -> usize {
+    let n = chars.len();
+    let open_line = *line;
+    let mut j = i + 1;
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || chars[j] != '"' {
+        // raw identifier (`r#name`) or a bare `r` — not a string literal
+        for &c in &chars[i..j] {
+            code.push(c);
+        }
+        return j;
+    }
+    blank(code, j + 1 - i);
+    j += 1;
+    let mut buf = String::new();
+    while j < n {
+        if chars[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < n && chars[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                blank(code, 1 + hashes);
+                j += 1 + hashes;
+                break;
+            }
+        }
+        if chars[j] == '\n' {
+            buf.push('\n');
+            code.push('\n');
+            *line += 1;
+        } else {
+            buf.push(chars[j]);
+            code.push(' ');
+        }
+        j += 1;
+    }
+    strings.push((open_line, buf));
+    j
+}
+
+/// `i` at a `'`: a char literal (blanked) or a lifetime tick (kept).
+fn take_char_or_lifetime(chars: &[char], i: usize, code: &mut String) -> usize {
+    let n = chars.len();
+    if i + 1 < n && chars[i + 1] == '\\' {
+        // escaped char literal: scan (bounded) for the closing quote
+        let mut j = i + 2;
+        let mut steps = 0usize;
+        while j < n && chars[j] != '\'' && steps < 12 {
+            j += 1;
+            steps += 1;
+        }
+        if j < n && chars[j] == '\'' {
+            blank(code, j + 1 - i);
+            return j + 1;
+        }
+        code.push('\'');
+        return i + 1;
+    }
+    if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' && chars[i + 1] != '\n' {
+        // simple one-char literal like 'a' (multibyte chars are one slot)
+        blank(code, 3);
+        return i + 3;
+    }
+    // a lifetime tick (`'a`, `'_`, `'static`)
+    code.push('\'');
+    i + 1
+}
+
+/// Mark every line covered by a `#[cfg(test)]` or `#[test]` item.  The
+/// attribute governs the next item: if a `;` ends it before any `{`
+/// opens, only those lines are marked; otherwise the marked region runs
+/// through the matching close brace.  Operates on scrubbed code, so
+/// braces inside strings/comments can't unbalance the match.
+fn test_line_mask(code: &str) -> Vec<bool> {
+    let line_count = code.lines().count();
+    let mut mask = vec![false; line_count + 2];
+    let bytes = code.as_bytes();
+    let line_of = |pos: usize| {
+        let end = pos.min(bytes.len());
+        1 + bytes[..end].iter().filter(|&&b| b == b'\n').count()
+    };
+    let mut spots: Vec<usize> = Vec::new();
+    spots.extend(code.match_indices("#[cfg(test)]").map(|(p, _)| p));
+    spots.extend(code.match_indices("#[test]").map(|(p, _)| p));
+    for &p in &spots {
+        let mut j = p;
+        let mut open = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b';' => break,
+                _ => j += 1,
+            }
+        }
+        let end = match open {
+            None => j,
+            Some(o) => {
+                let mut depth = 0usize;
+                let mut k = o;
+                let mut end = bytes.len().saturating_sub(1);
+                while k < bytes.len() {
+                    match bytes[k] {
+                        b'{' => depth += 1,
+                        b'}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                end = k;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                end
+            }
+        };
+        for l in line_of(p)..=line_of(end) {
+            if l < mask.len() {
+                mask[l] = true;
+            }
+        }
+    }
+    mask
+}
+
+/// A structural token of the scrubbed code: identifier-ish words plus
+/// single punctuation chars (whitespace dropped, line numbers retained).
+pub struct Tok {
+    pub line: usize,
+    pub kind: TokKind,
+}
+
+pub enum TokKind {
+    Word(String),
+    Sym(char),
+}
+
+impl Tok {
+    pub fn word(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Word(w) => Some(w.as_str()),
+            TokKind::Sym(_) => None,
+        }
+    }
+
+    pub fn sym(&self) -> Option<char> {
+        match &self.kind {
+            TokKind::Word(_) => None,
+            TokKind::Sym(c) => Some(*c),
+        }
+    }
+}
+
+/// Tokenize scrubbed code (see [`Tok`]).
+pub fn tokenize(code: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut word = String::new();
+    let mut word_line = 0usize;
+    for c in code.chars() {
+        if c == '_' || c.is_alphanumeric() {
+            if word.is_empty() {
+                word_line = line;
+            }
+            word.push(c);
+            continue;
+        }
+        if !word.is_empty() {
+            toks.push(Tok {
+                line: word_line,
+                kind: TokKind::Word(std::mem::take(&mut word)),
+            });
+        }
+        if c == '\n' {
+            line += 1;
+        } else if !c.is_whitespace() {
+            toks.push(Tok {
+                line,
+                kind: TokKind::Sym(c),
+            });
+        }
+    }
+    if !word.is_empty() {
+        toks.push(Tok {
+            line: word_line,
+            kind: TokKind::Word(word),
+        });
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_but_captured() {
+        let src = "let a = \"A2Q_X\"; // trailing note\nlet b = 'x';\n";
+        let s = scrub(src);
+        assert!(!s.code.contains("A2Q_X"));
+        assert!(!s.code.contains("trailing"));
+        assert_eq!(s.strings, vec![(1, "A2Q_X".to_string())]);
+        assert!(s.comment_on(1, "TRAILING NOTE"));
+        assert_eq!(s.code.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let s = scrub("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(s.code.contains("'a"), "lifetime ticks must survive");
+        assert!(s.strings.is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let s = scrub("let a = r#\"quote \" inside\"#; let b = \"esc\\\"aped\";\n");
+        assert_eq!(s.strings.len(), 2);
+        assert!(s.strings[0].1.contains("quote"));
+        assert!(!s.code.contains("inside"));
+    }
+
+    #[test]
+    fn nested_block_comments_end_where_they_should() {
+        let s = scrub("/* outer /* inner */ still comment */ fn f() {}\n");
+        assert!(s.code.contains("fn f"));
+        assert!(!s.code.contains("inner"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_masked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn prod2() {}\n";
+        let s = scrub(src);
+        assert!(!s.is_test_line(1));
+        assert!(s.is_test_line(2));
+        assert!(s.is_test_line(4));
+        assert!(s.is_test_line(5));
+        assert!(!s.is_test_line(6));
+    }
+
+    #[test]
+    fn cfg_test_on_statement_marks_only_the_statement() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn prod() { let x = 1; }\n";
+        let s = scrub(src);
+        assert!(s.is_test_line(2));
+        assert!(!s.is_test_line(3));
+    }
+
+    #[test]
+    fn tokenizer_splits_words_and_symbols() {
+        let toks = tokenize("a.unwrap()");
+        let words: Vec<_> = toks.iter().filter_map(|t| t.word()).collect();
+        assert_eq!(words, vec!["a", "unwrap"]);
+        assert_eq!(toks[1].sym(), Some('.'));
+    }
+}

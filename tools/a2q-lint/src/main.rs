@@ -1,0 +1,169 @@
+//! `a2q-lint` — the repo's zero-dependency invariant checker.
+//!
+//! Walks Rust sources (default: `rust/src` and `rust/tests`, run from the
+//! repo root) and enforces the unsafe-code and bitwise-determinism
+//! contracts described in `src/rules.rs`.  Findings go to stdout as
+//! `path:line: [R#/slug] message`; `--json <path>` additionally writes a
+//! machine-readable array (uploaded as a CI artifact on failure).
+//!
+//! Exit codes: 0 clean · 1 findings · 2 usage or I/O error.
+//!
+//! ```text
+//! a2q-lint [--readme <README.md>] [--json <out.json>] [ROOT|FILE ...]
+//! ```
+
+mod lexer;
+mod rules;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use rules::{check_file, readme_knobs, Finding};
+
+struct Opts {
+    readme: PathBuf,
+    json: Option<PathBuf>,
+    roots: Vec<PathBuf>,
+}
+
+fn parse_args(args: &[String]) -> Result<Opts, String> {
+    let mut readme = PathBuf::from("README.md");
+    let mut json = None;
+    let mut roots = Vec::new();
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--readme" => {
+                i += 1;
+                readme = PathBuf::from(args.get(i).ok_or("--readme needs a path")?);
+            }
+            "--json" => {
+                i += 1;
+                json = Some(PathBuf::from(args.get(i).ok_or("--json needs a path")?));
+            }
+            "--help" | "-h" => {
+                return Err("usage: a2q-lint [--readme <path>] [--json <path>] [ROOT ...]"
+                    .to_string())
+            }
+            flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}")),
+            root => roots.push(PathBuf::from(root)),
+        }
+        i += 1;
+    }
+    if roots.is_empty() {
+        roots = vec![PathBuf::from("rust/src"), PathBuf::from("rust/tests")];
+    }
+    Ok(Opts {
+        readme,
+        json,
+        roots,
+    })
+}
+
+/// Collect `.rs` files under `root` (or `root` itself), sorted so runs are
+/// deterministic across filesystems.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `roots` against the `readme` knob registry.
+/// Returns `(findings, files_scanned)`.
+fn lint(roots: &[PathBuf], readme: &Path) -> Result<(Vec<Finding>, usize), String> {
+    let readme_text = std::fs::read_to_string(readme)
+        .map_err(|e| format!("cannot read knob registry {}: {e}", readme.display()))?;
+    let knobs: BTreeSet<String> = readme_knobs(&readme_text);
+    let mut files = Vec::new();
+    for root in roots {
+        collect_rs(root, &mut files).map_err(|e| format!("walking {}: {e}", root.display()))?;
+    }
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| format!("cannot read {}: {e}", f.display()))?;
+        let display = f.to_string_lossy().replace('\\', "/");
+        findings.extend(check_file(&display, &src, &knobs));
+    }
+    Ok((findings, files.len()))
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn write_json(findings: &[Finding], path: &Path) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, f) in findings.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"rule\": \"{}\", \"slug\": \"{}\", \"path\": \"{}\", \
+             \"line\": {}, \"message\": \"{}\"}}{}\n",
+            f.rule,
+            f.slug,
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.message),
+            if i + 1 < findings.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
+}
+
+fn run(args: &[String]) -> Result<usize, String> {
+    let opts = parse_args(args)?;
+    let (findings, scanned) = lint(&opts.roots, &opts.readme)?;
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    if let Some(json) = &opts.json {
+        write_json(&findings, json).map_err(|e| format!("writing {}: {e}", json.display()))?;
+    }
+    eprintln!(
+        "a2q-lint: {} finding(s) across {scanned} file(s) scanned",
+        findings.len()
+    );
+    Ok(findings.len())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(0) => 0,
+        Ok(_) => 1,
+        Err(e) => {
+            eprintln!("a2q-lint: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+#[cfg(test)]
+mod fixture_tests;

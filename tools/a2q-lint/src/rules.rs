@@ -1,0 +1,481 @@
+//! The six repo-specific rules (plus R0, marker hygiene).  Each rule is a
+//! pass over the scrubbed token stream from [`crate::lexer`]:
+//!
+//! * **R1 `undocumented-unsafe`** — every `unsafe` block/fn/impl carries a
+//!   `// SAFETY:` comment (same line, or directly above through any run of
+//!   comments and attributes).
+//! * **R2 `target-feature`** — `#[target_feature]` fns may only be
+//!   *defined* in `tensor/simd.rs` (the dispatch module keeps them in
+//!   private `avx2`/`neon` submodules, so the compiler already confines
+//!   invocation) and must be `unsafe`.
+//! * **R3 `nondeterminism`** — kernel modules (`tensor/`, `quant/`,
+//!   `gnn/`) must stay bitwise-deterministic: no `mul_add`/FMA
+//!   intrinsics, no `HashMap`/`HashSet` (iteration order feeding
+//!   accumulation), no `partial_cmp` float ordering (use `total_cmp`).
+//! * **R4 `panic-path`** — runner-path modules (`coordinator/`,
+//!   `runtime/`) must not `.unwrap()`/`.expect()` outside `#[cfg(test)]`
+//!   unless annotated with an audited allow marker.
+//! * **R5 `relaxed-ordering`** — no `Ordering::Relaxed` on the
+//!   epoch/admission atomics (they publish state across runner threads;
+//!   Acquire/Release is the floor).
+//! * **R6 `env-registry`** — every `A2Q_*` env var read via `env::var`
+//!   must appear in the README knob table.
+//!
+//! Escape hatch: `// a2q-lint: allow(<rule>[, <rule>…]) <reason>` on the
+//! offending line (or alone on the line above) suppresses a finding; a
+//! marker without a written reason is itself a finding (R0).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{scrub, tokenize, Scrub, Tok};
+
+/// `(rule id, allow()/report slug)` for every enforced rule.
+pub const RULES: &[(&str, &str)] = &[
+    ("R1", "undocumented-unsafe"),
+    ("R2", "target-feature"),
+    ("R3", "nondeterminism"),
+    ("R4", "panic-path"),
+    ("R5", "relaxed-ordering"),
+    ("R6", "env-registry"),
+];
+
+#[derive(Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub slug: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: [{}/{}] {}",
+            self.path, self.line, self.rule, self.slug, self.message
+        )
+    }
+}
+
+/// Path components with any `.rs` suffix stripped, so directory names and
+/// file stems compare uniformly.
+fn comps(path: &str) -> Vec<String> {
+    path.split(['/', '\\'])
+        .map(|c| c.trim_end_matches(".rs").to_string())
+        .collect()
+}
+
+fn has_comp(path: &str, names: &[&str]) -> bool {
+    comps(path).iter().any(|c| names.contains(&c.as_str()))
+}
+
+/// Kernel modules under the bitwise-determinism contract (R3).
+fn is_kernel(path: &str) -> bool {
+    has_comp(path, &["tensor", "quant", "gnn"])
+}
+
+/// Runner-path modules under the panic-safety contract (R4).
+fn is_runner(path: &str) -> bool {
+    has_comp(path, &["coordinator", "runtime"])
+}
+
+/// The one module allowed to define `#[target_feature]` fns.
+fn is_dispatch(path: &str) -> bool {
+    let c = comps(path);
+    c.len() >= 2 && c[c.len() - 2] == "tensor" && c[c.len() - 1] == "simd"
+}
+
+/// Per-line allow sets parsed from `a2q-lint: allow(...)` markers.
+/// Marker-hygiene problems (no reason, unknown rule) become R0 findings.
+struct Allows {
+    by_line: BTreeMap<usize, BTreeSet<String>>,
+}
+
+impl Allows {
+    fn permits(&self, line: usize, slug: &str) -> bool {
+        self.by_line.get(&line).is_some_and(|s| s.contains(slug))
+    }
+}
+
+fn parse_allows(s: &Scrub, path: &str, findings: &mut Vec<Finding>) -> Allows {
+    let lines: Vec<&str> = s.code.lines().collect();
+    let known: BTreeSet<&str> = RULES.iter().map(|r| r.1).collect();
+    let mut by_line: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    for (line, text) in &s.comments {
+        let Some(pos) = text.find("a2q-lint:") else {
+            continue;
+        };
+        let rest = text[pos + "a2q-lint:".len()..].trim_start();
+        let mut hygiene = |message: String| {
+            findings.push(Finding {
+                rule: "R0",
+                slug: "allow-hygiene",
+                path: path.to_string(),
+                line: *line,
+                message,
+            });
+        };
+        let Some(args) = rest.strip_prefix("allow(") else {
+            hygiene("marker must read `a2q-lint: allow(<rule>) <reason>`".to_string());
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            hygiene("unterminated allow( list".to_string());
+            continue;
+        };
+        let reason = args[close + 1..].trim();
+        if reason.is_empty() {
+            hygiene("allow marker must carry a written reason after the rule list".to_string());
+            continue;
+        }
+        let mut slugs: BTreeSet<String> = BTreeSet::new();
+        let mut ok = true;
+        for r in args[..close].split(',') {
+            let r = r.trim();
+            if known.contains(r) {
+                slugs.insert(r.to_string());
+            } else {
+                ok = false;
+                hygiene(format!(
+                    "unknown rule `{r}` in allow() (expected one of: {})",
+                    known.iter().copied().collect::<Vec<_>>().join(", ")
+                ));
+            }
+        }
+        if !ok || slugs.is_empty() {
+            continue;
+        }
+        // a trailing marker covers its own line; a marker alone on a line
+        // covers the next line that carries code
+        let mut target = *line;
+        let marker_alone = lines.get(*line - 1).map_or("", |l| *l).trim().is_empty();
+        if marker_alone {
+            let mut t = *line + 1;
+            while t <= lines.len() && lines[t - 1].trim().is_empty() {
+                t += 1;
+            }
+            target = t;
+        }
+        by_line.entry(target).or_default().extend(slugs);
+    }
+    Allows { by_line }
+}
+
+/// A `// SAFETY:` comment on `line` itself, or directly above it through
+/// any contiguous run of comment/attribute lines (doc comments count).
+fn has_safety_near(s: &Scrub, lines: &[&str], line: usize) -> bool {
+    let mut l = line;
+    loop {
+        if s.comment_on(l, "SAFETY:") {
+            return true;
+        }
+        if l == 1 {
+            return false;
+        }
+        l -= 1;
+        let trimmed = lines.get(l - 1).map_or("", |x| *x).trim().to_string();
+        let is_attr = trimmed.starts_with("#[") || trimmed.starts_with("#!");
+        if trimmed.is_empty() && !s.has_comment(l) {
+            return false; // a truly blank line breaks the run
+        }
+        if !trimmed.is_empty() && !is_attr {
+            // a code line ends the run; accept only its trailing comment
+            return s.comment_on(l, "SAFETY:");
+        }
+    }
+}
+
+fn r1_undocumented_unsafe(
+    path: &str,
+    s: &Scrub,
+    toks: &[Tok],
+    allows: &Allows,
+    findings: &mut Vec<Finding>,
+) {
+    let lines: Vec<&str> = s.code.lines().collect();
+    for (idx, t) in toks.iter().enumerate() {
+        if t.word() != Some("unsafe") {
+            continue;
+        }
+        let kind = match toks.get(idx + 1) {
+            Some(n) if n.word() == Some("fn") => "fn",
+            Some(n) if n.word() == Some("impl") => "impl",
+            Some(n) if n.word() == Some("trait") => "trait",
+            Some(n) if n.word() == Some("extern") => "extern block",
+            _ => "block",
+        };
+        if allows.permits(t.line, "undocumented-unsafe") {
+            continue;
+        }
+        if !has_safety_near(s, &lines, t.line) {
+            findings.push(Finding {
+                rule: "R1",
+                slug: "undocumented-unsafe",
+                path: path.to_string(),
+                line: t.line,
+                message: format!("unsafe {kind} without a `// SAFETY:` comment"),
+            });
+        }
+    }
+}
+
+fn r2_target_feature(path: &str, toks: &[Tok], allows: &Allows, findings: &mut Vec<Finding>) {
+    for idx in 0..toks.len() {
+        if toks[idx].word() != Some("target_feature") {
+            continue;
+        }
+        // only the attribute form `#[target_feature(...)]` counts
+        let attr = idx >= 2 && toks[idx - 1].sym() == Some('[') && toks[idx - 2].sym() == Some('#');
+        if !attr {
+            continue;
+        }
+        let line = toks[idx].line;
+        if !is_dispatch(path) && !allows.permits(line, "target-feature") {
+            findings.push(Finding {
+                rule: "R2",
+                slug: "target-feature",
+                path: path.to_string(),
+                line,
+                message: "#[target_feature] fn defined outside the tensor::simd dispatch \
+                          module (vector kernels live behind its Isa match)"
+                    .to_string(),
+            });
+        }
+        // the decorated fn must be `unsafe` (callers must prove the ISA)
+        let mut saw_unsafe = false;
+        let mut fn_line = None;
+        for t in toks.iter().skip(idx + 1).take(64) {
+            match t.word() {
+                Some("unsafe") => saw_unsafe = true,
+                Some("fn") => {
+                    fn_line = Some(t.line);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        if let Some(fn_line) = fn_line {
+            if !saw_unsafe && !allows.permits(fn_line, "target-feature") {
+                findings.push(Finding {
+                    rule: "R2",
+                    slug: "target-feature",
+                    path: path.to_string(),
+                    line: fn_line,
+                    message: "#[target_feature] fn must be `unsafe` — callers prove ISA \
+                              availability at the dispatch site"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Identifiers banned in kernel modules, with the determinism argument.
+const BANNED_KERNEL_WORDS: &[(&str, &str)] = &[
+    (
+        "mul_add",
+        "fused multiply-add rounds once; kernels must round like the scalar oracle",
+    ),
+    (
+        "HashMap",
+        "hash iteration order feeding accumulation breaks bitwise determinism",
+    ),
+    (
+        "HashSet",
+        "hash iteration order feeding accumulation breaks bitwise determinism",
+    ),
+    (
+        "partial_cmp",
+        "float ordering must use total_cmp (NaN-total, reproducible)",
+    ),
+];
+
+fn r3_nondeterminism(
+    path: &str,
+    s: &Scrub,
+    toks: &[Tok],
+    allows: &Allows,
+    findings: &mut Vec<Finding>,
+) {
+    for t in toks {
+        let Some(w) = t.word() else {
+            continue;
+        };
+        let why = BANNED_KERNEL_WORDS
+            .iter()
+            .find(|(b, _)| *b == w)
+            .map(|(_, why)| *why)
+            .or_else(|| {
+                (w.contains("fmadd") || w.starts_with("vfma"))
+                    .then_some("FMA intrinsics contract the rounding the scalar oracle performs")
+            });
+        let Some(why) = why else {
+            continue;
+        };
+        if s.is_test_line(t.line) || allows.permits(t.line, "nondeterminism") {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "R3",
+            slug: "nondeterminism",
+            path: path.to_string(),
+            line: t.line,
+            message: format!("`{w}` in a kernel module: {why}"),
+        });
+    }
+}
+
+fn r4_panic_path(
+    path: &str,
+    s: &Scrub,
+    toks: &[Tok],
+    allows: &Allows,
+    findings: &mut Vec<Finding>,
+) {
+    for idx in 1..toks.len() {
+        let Some(w) = toks[idx].word() else {
+            continue;
+        };
+        if w != "unwrap" && w != "expect" {
+            continue;
+        }
+        if toks[idx - 1].sym() != Some('.') {
+            continue;
+        }
+        if toks.get(idx + 1).and_then(|t| t.sym()) != Some('(') {
+            continue;
+        }
+        let line = toks[idx].line;
+        if s.is_test_line(line) || allows.permits(line, "panic-path") {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "R4",
+            slug: "panic-path",
+            path: path.to_string(),
+            line,
+            message: format!(
+                "`.{w}()` on a runner path can panic a serving thread; return a \
+                 coordinator error, or annotate `// a2q-lint: allow(panic-path) <reason>`"
+            ),
+        });
+    }
+}
+
+fn r5_relaxed_ordering(path: &str, toks: &[Tok], allows: &Allows, findings: &mut Vec<Finding>) {
+    for t in toks {
+        if t.word() != Some("Relaxed") {
+            continue;
+        }
+        if allows.permits(t.line, "relaxed-ordering") {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "R5",
+            slug: "relaxed-ordering",
+            path: path.to_string(),
+            line: t.line,
+            message: "Ordering::Relaxed forbidden: epoch/admission atomics publish state \
+                      across runner threads (Acquire/Release is the floor)"
+                .to_string(),
+        });
+    }
+}
+
+fn knob_name(v: &str) -> bool {
+    v.starts_with("A2Q_")
+        && v.len() > 4
+        && v.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+}
+
+fn r6_env_registry(
+    path: &str,
+    s: &Scrub,
+    toks: &[Tok],
+    knobs: &BTreeSet<String>,
+    allows: &Allows,
+    findings: &mut Vec<Finding>,
+) {
+    for idx in 0..toks.len() {
+        if toks[idx].word() != Some("env") {
+            continue;
+        }
+        let colons = toks.get(idx + 1).and_then(|t| t.sym()) == Some(':')
+            && toks.get(idx + 2).and_then(|t| t.sym()) == Some(':');
+        if !colons {
+            continue;
+        }
+        let Some(w) = toks.get(idx + 3).and_then(|t| t.word()) else {
+            continue;
+        };
+        if w != "var" && w != "var_os" {
+            continue;
+        }
+        let line = toks[idx + 3].line;
+        // the knob literal: first A2Q_* string on this line or the next two
+        // (rustfmt may wrap the call)
+        let Some(name) = s
+            .strings
+            .iter()
+            .filter(|(l, _)| *l >= line && *l <= line + 2)
+            .map(|(_, v)| v)
+            .find(|v| knob_name(v))
+        else {
+            continue;
+        };
+        if knobs.contains(name) || allows.permits(line, "env-registry") {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "R6",
+            slug: "env-registry",
+            path: path.to_string(),
+            line,
+            message: format!(
+                "`{name}` is read here but missing from the README environment-knob table"
+            ),
+        });
+    }
+}
+
+/// Parse the registered knob names out of the README's markdown table rows
+/// (lines starting with `|` that mention an `A2Q_*` name).
+pub fn readme_knobs(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in text.lines() {
+        let t = line.trim_start();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let mut rest = t;
+        while let Some(p) = rest.find("A2Q_") {
+            let tail = &rest[p..];
+            let end = tail
+                .find(|c: char| !(c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_'))
+                .unwrap_or(tail.len());
+            out.insert(tail[..end].to_string());
+            rest = &tail[end..];
+        }
+    }
+    out
+}
+
+/// Run every rule over one file.  `knobs` is the README registry (R6).
+pub fn check_file(path: &str, src: &str, knobs: &BTreeSet<String>) -> Vec<Finding> {
+    let s = scrub(src);
+    let toks = tokenize(&s.code);
+    let mut findings = Vec::new();
+    let allows = parse_allows(&s, path, &mut findings);
+    r1_undocumented_unsafe(path, &s, &toks, &allows, &mut findings);
+    r2_target_feature(path, &toks, &allows, &mut findings);
+    if is_kernel(path) {
+        r3_nondeterminism(path, &s, &toks, &allows, &mut findings);
+    }
+    if is_runner(path) {
+        r4_panic_path(path, &s, &toks, &allows, &mut findings);
+    }
+    r5_relaxed_ordering(path, &toks, &allows, &mut findings);
+    r6_env_registry(path, &s, &toks, knobs, &allows, &mut findings);
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
