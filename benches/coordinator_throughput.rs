@@ -100,6 +100,7 @@ fn main() {
                 graph_slots: 64,
                 max_wait: Duration::from_micros(200),
                 queue_cap: 4096,
+                ..BatcherConfig::default()
             },
         );
         let coord = Arc::new(coord);

@@ -1,0 +1,163 @@
+//! Bench: the TCP serving front end under increasing overload.
+//!
+//! Measures sustained wire-protocol throughput and tail latency, then
+//! pushes the offered load to ~2x and ~10x the server's capacity and
+//! verifies the overload contract quantitatively: every request is
+//! answered on-protocol (`on_protocol_reply_frac == 1.0`, `io_errors ==
+//! 0`), excess load surfaces as explicit `rejected` frames, and a graceful
+//! drain loses zero admitted replies.  Results land in
+//! `BENCH_server_throughput.json`; `--quick` (CI) shrinks connection
+//! counts and request budgets to a smoke test.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use a2q::coordinator::net::{run_load, LoadConfig, NetConfig, NetServer, WireResponse};
+use a2q::coordinator::{AdaptiveWait, BatcherConfig, Coordinator, MockExecutor};
+use a2q::util::bench::{BenchConfig, BenchRunner};
+
+fn start_server() -> (NetServer, AdaptiveWait) {
+    let wait = AdaptiveWait::new(
+        Duration::from_micros(500),
+        Duration::from_micros(100),
+        Duration::from_millis(2),
+    );
+    let mut coord = Coordinator::new();
+    coord.add_model(
+        "mock",
+        Arc::new(MockExecutor {
+            out_dim: 8,
+            // per-batch model cost: makes capacity finite so the overload
+            // scenarios actually overload
+            latency: Duration::from_micros(500),
+        }),
+        BatcherConfig {
+            node_budget: 4096,
+            graph_slots: 64,
+            max_wait: Duration::from_micros(500),
+            // small admission queue: at 10x offered load the router must
+            // shed, and every shed request must become a rejection frame
+            queue_cap: 16,
+            adaptive_wait: Some(wait.clone()),
+        },
+    );
+    let cfg = NetConfig {
+        target_p99_us: 5_000,
+        tuner_interval: Duration::from_millis(50),
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(coord, cfg).expect("start net server");
+    (server, wait)
+}
+
+fn main() {
+    let quick = BenchConfig::quick_requested();
+    let mut runner = BenchRunner::new(BenchConfig::from_args());
+
+    let (server, wait) = start_server();
+    let addr = format!("{}", server.local_addr());
+
+    // single-connection wire roundtrip: protocol + batching + mock exec
+    let mut client =
+        a2q::coordinator::net::NetClient::connect(&addr).expect("connect bench client");
+    runner.bench("server/wire_roundtrip", || {
+        match client.classify("mock", vec![1, 2, 3]).expect("classify") {
+            WireResponse::Ok { .. } => {}
+            other => panic!("roundtrip got {other:?}"),
+        }
+    });
+
+    // offered-load ladder: ~capacity, ~2x, ~10x (closed-loop connections)
+    let (reqs, ladder) = if quick {
+        (20, [("sustained", 2usize), ("overload_2x", 4), ("overload_10x", 10)])
+    } else {
+        (200, [("sustained", 4usize), ("overload_2x", 8), ("overload_10x", 40)])
+    };
+    for (scenario, conns) in ladder {
+        let report = run_load(
+            &addr,
+            &LoadConfig {
+                conns,
+                requests_per_conn: reqs,
+                model: "mock".to_string(),
+                nodes_per_req: 2,
+                node_space: 64,
+                pace: Duration::ZERO,
+            },
+        )
+        .expect("load run");
+        let sent = report.sent.max(1) as f64;
+        let answered = (report.ok + report.rejected + report.errors) as f64;
+        runner.report_metric(
+            &format!("server/{scenario}/ok_rps"),
+            report.achieved_ok_rps,
+            "successful replies per second",
+        );
+        runner.report_metric(
+            &format!("server/{scenario}/p99_ms"),
+            report.p99_ms,
+            "ms (p99 over ok replies)",
+        );
+        runner.report_metric(
+            &format!("server/{scenario}/rejected_frac"),
+            report.rejected as f64 / sent,
+            "fraction rejected on-protocol",
+        );
+        // the contract metric: 1.0 means every request got an explicit
+        // reply frame; anything less means a hang or dropped connection
+        runner.report_metric(
+            &format!("server/{scenario}/on_protocol_reply_frac"),
+            answered / sent,
+            "fraction answered on-protocol (must be 1.0)",
+        );
+        runner.report_metric(
+            &format!("server/{scenario}/io_errors"),
+            report.io_errors as f64,
+            "transport failures (must be 0)",
+        );
+    }
+
+    runner.report_metric(
+        "server/adaptive/final_wait_us",
+        wait.current().as_micros() as f64,
+        "flush deadline after the tuner reacted to load",
+    );
+
+    // graceful drain under load: no admitted request may lose its reply
+    let drain_load = std::thread::spawn({
+        let addr = addr.clone();
+        let conns = if quick { 2 } else { 4 };
+        move || {
+            run_load(
+                &addr,
+                &LoadConfig {
+                    conns,
+                    requests_per_conn: 1000,
+                    model: "mock".to_string(),
+                    nodes_per_req: 2,
+                    node_space: 64,
+                    pace: Duration::ZERO,
+                },
+            )
+        }
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    let report = server.drain();
+    runner.report_metric(
+        "server/drain/lost_replies",
+        report.unreplied_in_flight as f64,
+        "admitted requests never answered (must be 0)",
+    );
+    runner.report_metric(
+        "server/drain/took_ms",
+        report.took.as_secs_f64() * 1e3,
+        "ms to quiesce",
+    );
+    // the load thread sees EOFs once the server is gone; that's expected —
+    // the contract only covers requests the server admitted
+    let _ = drain_load.join();
+
+    runner
+        .write_json(std::path::Path::new("BENCH_server_throughput.json"))
+        .expect("write BENCH_server_throughput.json");
+}

@@ -42,6 +42,7 @@ fn main() -> a2q::Result<()> {
             graph_slots: artifact.graph_capacity.max(1),
             max_wait: Duration::from_millis(4),
             queue_cap: 512,
+            ..BatcherConfig::default()
         },
     );
     let coord = Arc::new(coord);

@@ -1,0 +1,69 @@
+//! `a2q-loadgen` — closed-loop load generator for `a2q-serve`.
+//!
+//! Drives N parallel connections, each sending classify requests
+//! back-to-back, and prints a JSON tally in which every request is
+//! accounted for: `sent == ok + rejected + errors + io_errors`.  A
+//! well-behaved server keeps `io_errors` at zero even at 10x overload —
+//! refusals must arrive as on-protocol `rejected` frames, not dropped
+//! connections.
+//!
+//!   a2q-loadgen run --addr 127.0.0.1:7462 --conns 40 --requests 250
+
+use std::time::Duration;
+
+use a2q::coordinator::net::{run_load, LoadConfig};
+use a2q::error::Result;
+use a2q::util::cli::{App, CommandSpec};
+
+fn app() -> App {
+    App::new("a2q-loadgen", "closed-loop load generator for the A2Q wire protocol").command(
+        CommandSpec::new("run", "run one load scenario")
+            .opt_req("addr", "server address (host:port)")
+            .opt("conns", "8", "parallel connections")
+            .opt("requests", "100", "requests per connection")
+            .opt("model", "mock", "model name to query")
+            .opt("nodes-per-req", "2", "node ids per classify request")
+            .opt("node-space", "64", "node ids are drawn modulo this")
+            .opt("pace-us", "0", "sleep between requests (0 = closed loop)"),
+    )
+}
+
+fn main() {
+    // single-command binary: allow `a2q-loadgen --addr ...` without `run`
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(|a| a.starts_with("--")).unwrap_or(true)
+        && args.first().map(|a| a != "--help" && a != "-h").unwrap_or(false)
+    {
+        args.insert(0, "run".to_string());
+    }
+    let matches = match app().parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(matches) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(m: a2q::util::cli::Matches) -> Result<()> {
+    let cfg = LoadConfig {
+        conns: m.get_usize("conns")?,
+        requests_per_conn: m.get_usize("requests")?,
+        model: m.req("model")?.to_string(),
+        nodes_per_req: m.get_usize("nodes-per-req")?,
+        node_space: m.get_usize("node-space")?.max(1) as u32,
+        pace: Duration::from_micros(m.get_usize("pace-us")? as u64),
+    };
+    let report = run_load(m.req("addr")?, &cfg)?;
+    println!("{}", report.to_json().to_string_pretty());
+    if report.io_errors > 0 {
+        // transport failures are the one outcome class a graceful server
+        // must never produce; make them visible to scripts
+        std::process::exit(1);
+    }
+    Ok(())
+}

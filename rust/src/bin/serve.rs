@@ -1,0 +1,150 @@
+//! `a2q-serve` — stand up the TCP serving front end.
+//!
+//! Serves a mock-backed model by default (protocol/ops testing without
+//! artifacts); pass `--artifact <name>` to serve a real AOT artifact via
+//! the PJRT runtime.  Network knobs come from `A2Q_*` environment
+//! variables (see the README's "Network serving" section); the CLI options
+//! below override them when set.
+//!
+//!   a2q-serve run --listen 127.0.0.1:7462 --duration-s 30
+//!   a2q-serve run --artifact gcn-synth-cora-a2q --target-p99-us 5000
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use a2q::coordinator::net::NetConfig;
+use a2q::coordinator::{
+    AdaptiveWait, BatcherConfig, Coordinator, MockExecutor, NetServer, PjrtExecutor,
+};
+use a2q::error::Result;
+use a2q::runtime::{ArtifactIndex, EngineHandle};
+use a2q::util::cli::{App, CommandSpec};
+use a2q::util::json::Json;
+
+fn app() -> App {
+    App::new("a2q-serve", "TCP serving front end for the A2Q coordinator").command(
+        CommandSpec::new("run", "bind and serve")
+            .opt("listen", "", "listen address (overrides A2Q_LISTEN)")
+            .opt("model", "mock", "served model name")
+            .opt("artifact", "", "serve this AOT artifact instead of the mock")
+            .opt("mock-latency-us", "200", "mock executor latency (us)")
+            .opt("out-dim", "8", "mock executor output dimension")
+            .opt("max-wait-us", "500", "batcher flush deadline (us)")
+            .opt("queue-cap", "256", "admission queue depth per model")
+            .opt("rate-rps", "-1", "per-client rate limit (overrides A2Q_RATE_RPS)")
+            .opt(
+                "target-p99-us",
+                "-1",
+                "adaptive batching latency target (overrides A2Q_TARGET_P99_US)",
+            )
+            .opt("duration-s", "0", "serve this long then drain (0 = forever)"),
+    )
+}
+
+fn main() {
+    // single-command binary: let `a2q-serve --listen ...` work without the
+    // explicit `run` in front
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(|a| a.starts_with("--")).unwrap_or(true)
+        && args.first().map(|a| a != "--help" && a != "-h").unwrap_or(false)
+    {
+        args.insert(0, "run".to_string());
+    }
+    let matches = match app().parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(matches) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(m: a2q::util::cli::Matches) -> Result<()> {
+    let mut cfg = NetConfig::from_env()?;
+    let listen = m.req("listen")?;
+    if !listen.is_empty() {
+        cfg.listen = listen.to_string();
+    }
+    let rate = m.get_f64("rate-rps")?;
+    if rate >= 0.0 {
+        cfg.rate_rps = rate;
+    }
+    let target = m.get_f64("target-p99-us")?;
+    if target >= 0.0 {
+        cfg.target_p99_us = target as u64;
+    }
+
+    let max_wait = Duration::from_micros(m.get_usize("max-wait-us")? as u64);
+    let mut batcher = BatcherConfig {
+        max_wait,
+        queue_cap: m.get_usize("queue-cap")?,
+        ..BatcherConfig::default()
+    };
+    if cfg.target_p99_us > 0 {
+        // the net tuner drives the flush deadline between max_wait/8 and
+        // 4x max_wait, chasing the configured p99 target
+        batcher.adaptive_wait = Some(AdaptiveWait::new(
+            max_wait,
+            max_wait / 8,
+            max_wait * 4,
+        ));
+    }
+
+    let mut coord = Coordinator::new();
+    let artifact_name = m.req("artifact")?;
+    let model_name = if artifact_name.is_empty() {
+        let name = m.req("model")?.to_string();
+        coord.add_model(
+            &name,
+            Arc::new(MockExecutor {
+                out_dim: m.get_usize("out-dim")?,
+                latency: Duration::from_micros(m.get_usize("mock-latency-us")? as u64),
+            }),
+            batcher,
+        );
+        name
+    } else {
+        let artifacts = a2q::artifacts_dir();
+        let index = ArtifactIndex::load(&artifacts)?;
+        let artifact = index.artifact(artifact_name)?;
+        let dataset = a2q::graph::io::load_named(&artifacts, &artifact.dataset)?;
+        let engine = EngineHandle::spawn()?;
+        let exec = Arc::new(PjrtExecutor::new(engine, &artifact, Some(&dataset))?);
+        coord.add_model(&artifact.name, exec, batcher);
+        artifact.name.clone()
+    };
+
+    let server = NetServer::start(coord, cfg)?;
+    println!("a2q-serve: model '{model_name}' listening on {}", server.local_addr());
+
+    let duration_s = m.get_usize("duration-s")?;
+    if duration_s == 0 {
+        // no signal handling without external crates: serve until killed
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration_s as u64));
+    let metrics = server.metrics_json();
+    let report = server.drain();
+    let summary = Json::obj(vec![
+        ("metrics", metrics),
+        (
+            "drain",
+            Json::obj(vec![
+                (
+                    "unreplied_in_flight",
+                    Json::Num(report.unreplied_in_flight as f64),
+                ),
+                ("open_conns", Json::Num(report.open_conns as f64)),
+                ("took_ms", Json::Num(report.took.as_secs_f64() * 1e3)),
+            ]),
+        ),
+    ]);
+    println!("{}", summary.to_string_pretty());
+    Ok(())
+}

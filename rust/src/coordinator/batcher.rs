@@ -14,9 +14,66 @@
 //! already admitted were bounced with spurious "overloaded" replies and
 //! recorded both admitted *and* rejected.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::request::{Payload, Request};
+
+/// Shared, live-tunable flush deadline.
+///
+/// The net front end's latency tuner holds one end; the runner's batcher
+/// reads the other.  When observed p99 latency exceeds the target the wait
+/// shrinks (smaller batches, lower tail); when p99 is comfortably under
+/// target it grows back (bigger batches, higher throughput).  Both sides
+/// are lock-free: the deadline is a single `AtomicU64` of microseconds.
+#[derive(Debug, Clone)]
+pub struct AdaptiveWait {
+    us: Arc<AtomicU64>,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl AdaptiveWait {
+    /// `initial` is clamped into `[min, max]`.
+    pub fn new(initial: Duration, min: Duration, max: Duration) -> AdaptiveWait {
+        let min_us = (min.as_micros() as u64).max(1);
+        let max_us = (max.as_micros() as u64).max(min_us);
+        let init = (initial.as_micros() as u64).clamp(min_us, max_us);
+        AdaptiveWait {
+            us: Arc::new(AtomicU64::new(init)),
+            min_us,
+            max_us,
+        }
+    }
+
+    /// The flush deadline currently in force.
+    pub fn current(&self) -> Duration {
+        Duration::from_micros(self.us.load(Ordering::SeqCst))
+    }
+
+    /// Feed one p99-latency observation (µs) against the target (µs).
+    /// Over target → halve the wait (multiplicative decrease reacts fast
+    /// to tail blowups); under half the target → grow 25% (additive-ish
+    /// increase recovers throughput cautiously).  In the comfort band
+    /// between, hold.  `p99_us == 0` (no traffic yet) is a no-op.
+    pub fn observe_p99_us(&self, p99_us: f64, target_us: f64) {
+        if p99_us <= 0.0 || target_us <= 0.0 {
+            return;
+        }
+        let cur = self.us.load(Ordering::SeqCst);
+        let next = if p99_us > target_us {
+            (cur / 2).max(self.min_us)
+        } else if p99_us < target_us / 2.0 {
+            (cur + cur / 4 + 1).min(self.max_us)
+        } else {
+            cur
+        };
+        if next != cur {
+            self.us.store(next, Ordering::SeqCst);
+        }
+    }
+}
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -32,6 +89,9 @@ pub struct BatcherConfig {
     /// never rejects, so its transient backlog is bounded by this depth
     /// plus what a flush leaves pending
     pub queue_cap: usize,
+    /// when set, overrides `max_wait` with a live-tunable deadline (the
+    /// net front end's p99 tuner holds the other handle)
+    pub adaptive_wait: Option<AdaptiveWait>,
 }
 
 impl Default for BatcherConfig {
@@ -41,6 +101,18 @@ impl Default for BatcherConfig {
             graph_slots: 16,
             max_wait: Duration::from_millis(5),
             queue_cap: 1024,
+            adaptive_wait: None,
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// The flush deadline in force right now: the adaptive handle's
+    /// current value when one is wired, else the static `max_wait`.
+    pub fn effective_max_wait(&self) -> Duration {
+        match &self.adaptive_wait {
+            Some(w) => w.current(),
+            None => self.max_wait,
         }
     }
 }
@@ -87,7 +159,7 @@ impl DynamicBatcher {
     fn deadline_expired(&self, now: Instant) -> bool {
         self.pending
             .first()
-            .map(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+            .map(|r| now.duration_since(r.enqueued) >= self.cfg.effective_max_wait())
             .unwrap_or(false)
     }
 
@@ -187,6 +259,7 @@ mod tests {
             graph_slots: slots,
             max_wait: Duration::from_millis(1),
             queue_cap: 8,
+            adaptive_wait: None,
         }
     }
 
@@ -303,6 +376,60 @@ mod tests {
         assert_eq!(third.len(), 1);
         assert!(!third[0].is_update());
         assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn adaptive_wait_shrinks_under_tail_pressure_and_recovers() {
+        let w = AdaptiveWait::new(
+            Duration::from_micros(1000),
+            Duration::from_micros(100),
+            Duration::from_micros(4000),
+        );
+        assert_eq!(w.current(), Duration::from_micros(1000));
+        // p99 over target → multiplicative decrease
+        w.observe_p99_us(9000.0, 5000.0);
+        assert_eq!(w.current(), Duration::from_micros(500));
+        // repeated pressure clamps at min, never zero
+        for _ in 0..10 {
+            w.observe_p99_us(9000.0, 5000.0);
+        }
+        assert_eq!(w.current(), Duration::from_micros(100));
+        // comfortably under target/2 → cautious growth, clamped at max
+        for _ in 0..40 {
+            w.observe_p99_us(1000.0, 5000.0);
+        }
+        assert_eq!(w.current(), Duration::from_micros(4000));
+        // comfort band [target/2, target]: hold steady
+        w.observe_p99_us(4000.0, 5000.0);
+        assert_eq!(w.current(), Duration::from_micros(4000));
+        // no traffic yet: no-op
+        w.observe_p99_us(0.0, 5000.0);
+        assert_eq!(w.current(), Duration::from_micros(4000));
+    }
+
+    #[test]
+    fn adaptive_wait_drives_the_flush_deadline() {
+        let w = AdaptiveWait::new(
+            Duration::from_millis(50),
+            Duration::from_micros(100),
+            Duration::from_millis(50),
+        );
+        let mut c = cfg(1000, 16);
+        c.adaptive_wait = Some(w.clone());
+        assert_eq!(c.effective_max_wait(), Duration::from_millis(50));
+        let mut b = DynamicBatcher::new(c);
+        b.offer(graph_req(5));
+        // 5 ms old: under the 50 ms adaptive deadline → no flush
+        let later = Instant::now() + Duration::from_millis(5);
+        assert!(b.flush(later, false).is_none());
+        // the tuner (other handle of the same Arc) slams the wait down
+        for _ in 0..12 {
+            w.observe_p99_us(1_000_000.0, 1000.0);
+        }
+        assert_eq!(w.current(), Duration::from_micros(100));
+        // same age, new deadline → flushes
+        let batch = b.flush(later, false).unwrap();
+        assert_eq!(batch.len(), 1);
     }
 
     #[test]

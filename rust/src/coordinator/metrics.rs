@@ -3,12 +3,86 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
+
+/// Sliding-window throughput gauge: `RATE_BUCKETS` ring buckets of
+/// `RATE_BUCKET_MS` each (a 10 s window).  The old gauge divided lifetime
+/// responses by wall time since the *first* admission, so a polled
+/// `/metrics` endpoint watched the number decay toward zero while the
+/// server idled — and it could never recover to the true current rate.
+/// This one reports responses inside the window only: steady traffic reads
+/// its steady rate regardless of uptime, and an idle server reads 0.
+const RATE_BUCKET_MS: u64 = 500;
+const RATE_BUCKETS: usize = 20;
+
+#[derive(Debug)]
+struct RateWindow {
+    origin: Instant,
+    counts: [u64; RATE_BUCKETS],
+    /// absolute bucket index of the newest bucket accounted for
+    cursor: u64,
+}
+
+impl Default for RateWindow {
+    fn default() -> Self {
+        RateWindow::new(Instant::now())
+    }
+}
+
+impl RateWindow {
+    fn new(origin: Instant) -> RateWindow {
+        RateWindow {
+            origin,
+            counts: [0; RATE_BUCKETS],
+            cursor: 0,
+        }
+    }
+
+    fn bucket_of(&self, now: Instant) -> u64 {
+        (now.saturating_duration_since(self.origin).as_millis() as u64) / RATE_BUCKET_MS
+    }
+
+    /// Move the cursor to `now`'s bucket, zeroing every bucket the window
+    /// slid past (bounded by the ring size, so a long idle gap is O(ring)).
+    fn advance(&mut self, now: Instant) {
+        let b = self.bucket_of(now);
+        if b <= self.cursor {
+            return;
+        }
+        let steps = (b - self.cursor).min(RATE_BUCKETS as u64);
+        for i in 1..=steps {
+            self.counts[((self.cursor + i) % RATE_BUCKETS as u64) as usize] = 0;
+        }
+        self.cursor = b;
+    }
+
+    fn record(&mut self, now: Instant) {
+        self.advance(now);
+        self.counts[(self.cursor % RATE_BUCKETS as u64) as usize] += 1;
+    }
+
+    /// Events inside the live window divided by the span the window
+    /// actually covers (shorter than the full ring right after start-up).
+    fn rate(&mut self, now: Instant) -> f64 {
+        self.advance(now);
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let oldest_live = self.cursor.saturating_sub(RATE_BUCKETS as u64 - 1);
+        let now_ms = now.saturating_duration_since(self.origin).as_millis() as u64;
+        let span_ms = now_ms.saturating_sub(oldest_live * RATE_BUCKET_MS).max(1);
+        total as f64 / (span_ms as f64 / 1e3)
+    }
+}
 
 #[derive(Debug, Default)]
 struct Inner {
     latency: LatencyHistogram,
     queue_wait: LatencyHistogram,
+    exec: LatencyHistogram,
+    rate: RateWindow,
     requests: u64,
     responses: u64,
     rejected: u64,
@@ -21,7 +95,6 @@ struct Inner {
     shard_rebuilds: u64,
     /// last observed Σ halo mirror nodes of the sharded resident (gauge)
     halo_nodes: u64,
-    started: Option<Instant>,
 }
 
 /// Thread-safe metrics sink shared across the pipeline.
@@ -49,6 +122,13 @@ pub struct MetricsSnapshot {
     pub p50_latency_us: f64,
     pub p99_latency_us: f64,
     pub mean_queue_us: f64,
+    pub p50_queue_us: f64,
+    pub p99_queue_us: f64,
+    pub mean_exec_us: f64,
+    pub p50_exec_us: f64,
+    pub p99_exec_us: f64,
+    /// responses per second over the sliding window (~10 s), not lifetime:
+    /// reads 0 when idle and the current rate under steady traffic
     pub throughput_rps: f64,
 }
 
@@ -61,11 +141,7 @@ impl Metrics {
     }
 
     pub fn record_admitted(&self) {
-        let mut m = self.locked();
-        if m.started.is_none() {
-            m.started = Some(Instant::now());
-        }
-        m.requests += 1;
+        self.locked().requests += 1;
     }
 
     pub fn record_rejected(&self) {
@@ -92,20 +168,19 @@ impl Metrics {
         m.batched_requests += batch_size as u64;
     }
 
-    pub fn record_response(&self, latency_us: u64, queue_us: u64) {
+    /// `queue_us` is admission → batch-execution start; `exec_us` the
+    /// request's own sub-batch execution time.
+    pub fn record_response(&self, latency_us: u64, queue_us: u64, exec_us: u64) {
         let mut m = self.locked();
         m.responses += 1;
         m.latency.record_us(latency_us as f64);
         m.queue_wait.record_us(queue_us as f64);
+        m.exec.record_us(exec_us as f64);
+        m.rate.record(Instant::now());
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.locked();
-        let elapsed = m
-            .started
-            .map(|s| s.elapsed().as_secs_f64())
-            .unwrap_or(0.0)
-            .max(1e-9);
+        let mut m = self.locked();
         MetricsSnapshot {
             requests: m.requests,
             responses: m.responses,
@@ -124,7 +199,12 @@ impl Metrics {
             p50_latency_us: m.latency.percentile_us(50.0),
             p99_latency_us: m.latency.percentile_us(99.0),
             mean_queue_us: m.queue_wait.mean_us(),
-            throughput_rps: m.responses as f64 / elapsed,
+            p50_queue_us: m.queue_wait.percentile_us(50.0),
+            p99_queue_us: m.queue_wait.percentile_us(99.0),
+            mean_exec_us: m.exec.mean_us(),
+            p50_exec_us: m.exec.percentile_us(50.0),
+            p99_exec_us: m.exec.percentile_us(99.0),
+            throughput_rps: m.rate.rate(Instant::now()),
         }
     }
 }
@@ -135,7 +215,8 @@ impl MetricsSnapshot {
             "requests={} responses={} rejected={} errors={} batches={} updates={} \
              shard_rebuilds={} halo_nodes={} \
              mean_batch={:.2} latency(mean/p50/p99)={:.0}/{:.0}/{:.0}µs \
-             queue_mean={:.0}µs throughput={:.1} rps",
+             queue(mean/p50/p99)={:.0}/{:.0}/{:.0}µs \
+             exec(mean/p50/p99)={:.0}/{:.0}/{:.0}µs throughput={:.1} rps (10s window)",
             self.requests,
             self.responses,
             self.rejected,
@@ -149,14 +230,46 @@ impl MetricsSnapshot {
             self.p50_latency_us,
             self.p99_latency_us,
             self.mean_queue_us,
+            self.p50_queue_us,
+            self.p99_queue_us,
+            self.mean_exec_us,
+            self.p50_exec_us,
+            self.p99_exec_us,
             self.throughput_rps,
         )
+    }
+
+    /// Machine-readable snapshot (served by the wire protocol's metrics
+    /// request).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("responses", Json::Num(self.responses as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("shard_rebuilds", Json::Num(self.shard_rebuilds as f64)),
+            ("halo_nodes", Json::Num(self.halo_nodes as f64)),
+            ("mean_batch_size", Json::Num(self.mean_batch_size)),
+            ("mean_latency_us", Json::Num(self.mean_latency_us)),
+            ("p50_latency_us", Json::Num(self.p50_latency_us)),
+            ("p99_latency_us", Json::Num(self.p99_latency_us)),
+            ("mean_queue_us", Json::Num(self.mean_queue_us)),
+            ("p50_queue_us", Json::Num(self.p50_queue_us)),
+            ("p99_queue_us", Json::Num(self.p99_queue_us)),
+            ("mean_exec_us", Json::Num(self.mean_exec_us)),
+            ("p50_exec_us", Json::Num(self.p50_exec_us)),
+            ("p99_exec_us", Json::Num(self.p99_exec_us)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+        ])
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn counters_accumulate() {
@@ -165,8 +278,8 @@ mod tests {
         m.record_admitted();
         m.record_rejected();
         m.record_batch(2);
-        m.record_response(100, 10);
-        m.record_response(300, 30);
+        m.record_response(100, 10, 90);
+        m.record_response(300, 30, 270);
         m.record_update(3, 17);
         m.record_update(2, 21);
         let s = m.snapshot();
@@ -178,7 +291,73 @@ mod tests {
         assert_eq!(s.halo_nodes, 21, "halo gauge tracks the last report");
         assert_eq!(s.mean_batch_size, 2.0);
         assert!((s.mean_latency_us - 200.0).abs() < 1.0);
+        assert!((s.mean_exec_us - 180.0).abs() < 1.0);
+        assert!(s.p99_exec_us >= s.p50_exec_us);
+        assert!(s.p99_queue_us >= s.p50_queue_us);
         assert!(s.render().contains("requests=2"));
         assert!(s.render().contains("shard_rebuilds=5"));
+        // fresh traffic: the windowed rate is live, not zero
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    /// Regression for the decaying-RPS bug: the gauge must read the
+    /// *current* rate — zero across an idle gap, and after new traffic a
+    /// value reflecting only the window, not the lifetime average (the old
+    /// responses-since-first-admission gauge could neither reach zero nor
+    /// recover).  Synthetic clocks, no sleeping.
+    #[test]
+    fn rate_window_is_stable_across_idle_gaps() {
+        let t0 = Instant::now();
+        let mut w = RateWindow::new(t0);
+        // 100 responses spread over the first second → ~100 rps
+        for i in 0..100u64 {
+            w.record(t0 + Duration::from_millis(i * 10));
+        }
+        let live = w.rate(t0 + Duration::from_secs(1));
+        assert!(
+            (live - 100.0).abs() < 15.0,
+            "live rate should be ~100 rps, got {live}"
+        );
+        // a minute of idle: the window has slid past all traffic → exactly 0
+        assert_eq!(w.rate(t0 + Duration::from_secs(61)), 0.0);
+        // new burst after the gap counts only itself, not the lifetime
+        for i in 0..50u64 {
+            w.record(t0 + Duration::from_millis(61_000 + i * 10));
+        }
+        let after = w.rate(t0 + Duration::from_millis(61_500));
+        assert!(after > 0.0, "fresh traffic must register");
+        // 50 events over at most the full 10 s window: bounded well below
+        // the stale lifetime numerator (150 events)
+        assert!(after <= 50.0 / 0.5 + 1.0, "rate overshoots: {after}");
+    }
+
+    #[test]
+    fn rate_window_survives_cursor_wraparound() {
+        let t0 = Instant::now();
+        let mut w = RateWindow::new(t0);
+        // touch buckets far apart repeatedly — ring indices must stay sane
+        for k in 0..10u64 {
+            for i in 0..5u64 {
+                w.record(t0 + Duration::from_secs(k * 30) + Duration::from_millis(i));
+            }
+        }
+        let r = w.rate(t0 + Duration::from_secs(271));
+        assert!(r >= 0.0 && r.is_finite());
+        // only the final burst is inside the window
+        assert!(r <= 5.0 / 0.5 + 1.0, "stale buckets leaked into rate: {r}");
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let m = Metrics::default();
+        m.record_admitted();
+        m.record_batch(1);
+        m.record_response(500, 50, 450);
+        let j = m.snapshot().to_json();
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.req_f64("responses").unwrap(), 1.0);
+        assert!(back.req_f64("p99_latency_us").unwrap() > 0.0);
+        assert!(back.req_f64("p50_exec_us").unwrap() > 0.0);
     }
 }

@@ -16,16 +16,23 @@
 //!   integer path, or mock (tests).
 //! * [`metrics`] — latency histograms + throughput counters.
 //! * [`server`] — the `Coordinator` facade tying it together.
+//! * [`net`] — the TCP front end: versioned length-prefixed wire protocol
+//!   over `Coordinator::submit`, per-client token-bucket rate limiting,
+//!   explicit on-protocol rejections, p99-driven adaptive batching, and
+//!   graceful drain.
 
 pub mod batcher;
 pub mod executor;
 pub mod metrics;
+pub mod net;
 pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::{AdaptiveWait, BatcherConfig, DynamicBatcher};
 pub use executor::{BatchExecutor, DeltaReport, MockExecutor, NativeExecutor, PjrtExecutor};
 pub use metrics::Metrics;
+pub use net::{DrainReport, NetClient, NetConfig, NetServer};
 pub use request::{Payload, Prediction, Request, Response};
+pub use router::{RejectReason, Rejected};
 pub use server::{Coordinator, CoordinatorConfig};

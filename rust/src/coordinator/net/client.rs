@@ -1,0 +1,281 @@
+//! Blocking wire-protocol client + closed-loop load generator.
+//!
+//! The client is deliberately simple — one request in flight per
+//! connection, matching the server's sequential per-connection loop.  The
+//! load generator drives `conns` such clients in parallel and tallies
+//! every outcome class separately (`ok` / `rejected` / `errors` /
+//! `io_errors`), so a bench can assert the overload contract: every
+//! request gets an on-protocol reply, never a hang or a dropped
+//! connection.
+
+use std::io::Write as _;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+use super::protocol::{read_frame, write_frame, WireRequest, WireResponse};
+
+/// Blocking client for one connection.
+pub struct NetClient {
+    stream: TcpStream,
+    max_frame: usize,
+}
+
+impl NetClient {
+    /// Connect with a generous reply deadline (the server always answers
+    /// or closes; the deadline only guards against a dead peer).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        Ok(NetClient {
+            stream,
+            max_frame: 64 << 20,
+        })
+    }
+
+    /// Send one request and wait for its reply frame.
+    pub fn request(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        let (kind, payload) = req.encode();
+        write_frame(&mut self.stream, kind, &payload)?;
+        match read_frame(&mut self.stream, self.max_frame)? {
+            Some(frame) => WireResponse::decode(&frame),
+            None => Err(Error::coordinator("server closed the connection")),
+        }
+    }
+
+    pub fn classify(&mut self, model: &str, nodes: Vec<u32>) -> Result<WireResponse> {
+        self.request(&WireRequest::Classify {
+            model: model.to_string(),
+            nodes,
+        })
+    }
+
+    pub fn ping(&mut self) -> Result<WireResponse> {
+        self.request(&WireRequest::Ping)
+    }
+
+    /// Fetch the server's metrics snapshot (JSON body).
+    pub fn metrics(&mut self) -> Result<Json> {
+        match self.request(&WireRequest::Metrics)? {
+            WireResponse::Metrics { body } => Ok(body),
+            other => Err(Error::coordinator(format!(
+                "expected metrics reply, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Send raw bytes (test helper for malformed-input cases).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Read one raw reply frame (test helper).
+    pub fn read_reply(&mut self) -> Result<Option<WireResponse>> {
+        match read_frame(&mut self.stream, self.max_frame)? {
+            Some(frame) => Ok(Some(WireResponse::decode(&frame)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// Load-generator shape: `conns` closed-loop clients, each sending
+/// `requests_per_conn` classify requests.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub conns: usize,
+    pub requests_per_conn: usize,
+    pub model: String,
+    /// node ids per classify request
+    pub nodes_per_req: usize,
+    /// ids are drawn modulo this (match the resident graph size)
+    pub node_space: u32,
+    /// sleep between requests; `ZERO` = closed loop (max pressure)
+    pub pace: Duration,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            conns: 4,
+            requests_per_conn: 100,
+            model: "mock".to_string(),
+            nodes_per_req: 2,
+            node_space: 64,
+            pace: Duration::ZERO,
+        }
+    }
+}
+
+/// Outcome tally of one load run.  `sent` always equals
+/// `ok + rejected + errors + io_errors`: every request is accounted for.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub sent: u64,
+    /// `Ok` replies
+    pub ok: u64,
+    /// on-protocol `Rejected` replies (overload / rate limit / drain)
+    pub rejected: u64,
+    /// on-protocol `Error` replies
+    pub errors: u64,
+    /// transport failures: connect refused, reset, timeout — the failure
+    /// class a graceful server must keep at zero
+    pub io_errors: u64,
+    pub elapsed: Duration,
+    /// latency percentiles over `Ok` replies only (ms)
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// successful replies per second of wall time
+    pub achieved_ok_rps: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("io_errors", Json::Num(self.io_errors as f64)),
+            ("elapsed_ms", Json::Num(self.elapsed.as_secs_f64() * 1e3)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("achieved_ok_rps", Json::Num(self.achieved_ok_rps)),
+        ])
+    }
+}
+
+struct ThreadTally {
+    sent: u64,
+    ok: u64,
+    rejected: u64,
+    errors: u64,
+    io_errors: u64,
+    latencies_ms: Vec<f64>,
+}
+
+fn run_client(addr: &str, cfg: &LoadConfig, thread_idx: usize) -> ThreadTally {
+    let mut t = ThreadTally {
+        sent: 0,
+        ok: 0,
+        rejected: 0,
+        errors: 0,
+        io_errors: 0,
+        latencies_ms: Vec::with_capacity(cfg.requests_per_conn),
+    };
+    let mut client = match NetClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => {
+            // a refused connection fails every request this client owed
+            t.sent = cfg.requests_per_conn as u64;
+            t.io_errors = t.sent;
+            return t;
+        }
+    };
+    for i in 0..cfg.requests_per_conn {
+        let base = (thread_idx * cfg.requests_per_conn + i) as u32;
+        let nodes: Vec<u32> = (0..cfg.nodes_per_req)
+            .map(|k| (base + k as u32) % cfg.node_space.max(1))
+            .collect();
+        t.sent += 1;
+        let start = Instant::now();
+        match client.classify(&cfg.model, nodes) {
+            Ok(WireResponse::Ok { .. }) => {
+                t.ok += 1;
+                t.latencies_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(WireResponse::Rejected { .. }) => t.rejected += 1,
+            Ok(WireResponse::Error { .. }) => t.errors += 1,
+            Ok(_) => t.errors += 1,
+            Err(_) => {
+                // transport is gone; the remaining requests can't be sent
+                t.io_errors += 1;
+                let unsent = (cfg.requests_per_conn - i - 1) as u64;
+                t.sent += unsent;
+                t.io_errors += unsent;
+                break;
+            }
+        }
+        if cfg.pace > Duration::ZERO {
+            thread::sleep(cfg.pace);
+        }
+    }
+    t
+}
+
+/// Drive `cfg.conns` parallel closed-loop clients against `addr`.
+pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
+    let started = Instant::now();
+    let mut joins = Vec::with_capacity(cfg.conns);
+    for idx in 0..cfg.conns {
+        let addr = addr.to_string();
+        let cfg = cfg.clone();
+        joins.push(
+            thread::Builder::new()
+                .name(format!("a2q-loadgen-{idx}"))
+                .spawn(move || run_client(&addr, &cfg, idx))
+                .map_err(|e| Error::coordinator(format!("spawn load client: {e}")))?,
+        );
+    }
+    let mut total = ThreadTally {
+        sent: 0,
+        ok: 0,
+        rejected: 0,
+        errors: 0,
+        io_errors: 0,
+        latencies_ms: Vec::new(),
+    };
+    for j in joins {
+        let t = j
+            .join()
+            .map_err(|_| Error::coordinator("load client panicked"))?;
+        total.sent += t.sent;
+        total.ok += t.ok;
+        total.rejected += t.rejected;
+        total.errors += t.errors;
+        total.io_errors += t.io_errors;
+        total.latencies_ms.extend(t.latencies_ms);
+    }
+    let elapsed = started.elapsed();
+    Ok(LoadReport {
+        sent: total.sent,
+        ok: total.ok,
+        rejected: total.rejected,
+        errors: total.errors,
+        io_errors: total.io_errors,
+        elapsed,
+        p50_ms: percentile(&total.latencies_ms, 50.0),
+        p99_ms: percentile(&total.latencies_ms, 99.0),
+        achieved_ok_rps: total.ok as f64 / elapsed.as_secs_f64().max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let r = LoadReport {
+            sent: 10,
+            ok: 7,
+            rejected: 2,
+            errors: 1,
+            io_errors: 0,
+            elapsed: Duration::from_millis(500),
+            p50_ms: 1.5,
+            p99_ms: 9.0,
+            achieved_ok_rps: 14.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.req_f64("sent").unwrap(), 10.0);
+        assert_eq!(j.req_f64("io_errors").unwrap(), 0.0);
+        assert!(j.req_f64("p99_ms").unwrap() >= j.req_f64("p50_ms").unwrap());
+    }
+}

@@ -1,0 +1,310 @@
+//! Per-connection loop: sequential request/reply over one TCP stream.
+//!
+//! Every admission outcome becomes an explicit frame: admitted requests
+//! are answered `Ok`/`Error`, refused ones `Rejected` with a reason and a
+//! `retry_after_ms` hint.  Connections poll with a short read timeout so
+//! drain can end idle connections promptly; a malformed frame gets a
+//! best-effort error reply and closes the connection (framing is lost).
+
+use std::net::{IpAddr, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::super::request::Payload;
+use super::super::router::RejectReason;
+use super::super::server::Coordinator;
+use super::protocol::{
+    read_frame_timeout, write_frame, Frame, ReadOutcome, RejectCode, WireRequest, WireResponse,
+    PROTOCOL_VERSION,
+};
+use super::rate::{RateDecision, RateLimiter};
+use super::NetConfig;
+
+/// Read-poll interval: bounds how long an idle connection takes to notice
+/// drain, and paces the mid-frame stall detector.
+pub(crate) const READ_POLL: Duration = Duration::from_millis(250);
+
+/// Retry hint for queue-full rejections — roughly one batching deadline.
+const OVERLOAD_RETRY_MS: u64 = 10;
+/// Retry hint when rejecting because the server is draining.
+const DRAIN_RETRY_MS: u64 = 1000;
+
+/// Counters the net layer adds to the `/metrics` reply (admission-layer
+/// events the coordinator's own metrics can't see).
+#[derive(Debug, Default)]
+pub(crate) struct NetCounters {
+    pub frames_in: AtomicU64,
+    pub replies_ok: AtomicU64,
+    pub replies_error: AtomicU64,
+    pub rejected_rate: AtomicU64,
+    pub rejected_overload: AtomicU64,
+    pub rejected_unknown: AtomicU64,
+    pub rejected_draining: AtomicU64,
+    pub malformed: AtomicU64,
+}
+
+impl NetCounters {
+    fn bump(&self, code: RejectCode) {
+        let c = match code {
+            RejectCode::RateLimited => &self.rejected_rate,
+            RejectCode::Overloaded => &self.rejected_overload,
+            RejectCode::UnknownModel => &self.rejected_unknown,
+            RejectCode::Draining => &self.rejected_draining,
+        };
+        c.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn to_json(&self, open_conns: u64, in_flight: u64, draining: bool) -> Json {
+        Json::obj(vec![
+            ("open_conns", Json::Num(open_conns as f64)),
+            ("in_flight", Json::Num(in_flight as f64)),
+            ("draining", Json::Bool(draining)),
+            (
+                "frames_in",
+                Json::Num(self.frames_in.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "replies_ok",
+                Json::Num(self.replies_ok.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "replies_error",
+                Json::Num(self.replies_error.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "rejected_rate_limited",
+                Json::Num(self.rejected_rate.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "rejected_overloaded",
+                Json::Num(self.rejected_overload.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "rejected_unknown_model",
+                Json::Num(self.rejected_unknown.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "rejected_draining",
+                Json::Num(self.rejected_draining.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "malformed_frames",
+                Json::Num(self.malformed.load(Ordering::SeqCst) as f64),
+            ),
+        ])
+    }
+}
+
+/// State shared by the accept loop, every connection, the tuner, and
+/// drain.
+pub(crate) struct Shared {
+    pub coordinator: Arc<Coordinator>,
+    pub cfg: NetConfig,
+    pub limiter: RateLimiter,
+    /// set once drain starts: inference/update requests are rejected
+    pub draining: AtomicBool,
+    /// admitted requests whose reply has not been written yet
+    pub in_flight: AtomicU64,
+    pub open_conns: AtomicU64,
+    pub counters: NetCounters,
+}
+
+impl Shared {
+    pub fn metrics_body(&self) -> Json {
+        let mut body = self.coordinator.metrics().to_json();
+        if let Json::Obj(m) = &mut body {
+            m.insert(
+                "net".to_string(),
+                self.counters.to_json(
+                    self.open_conns.load(Ordering::SeqCst),
+                    self.in_flight.load(Ordering::SeqCst),
+                    self.draining.load(Ordering::SeqCst),
+                ),
+            );
+        }
+        body
+    }
+}
+
+fn send(stream: &mut TcpStream, resp: &WireResponse) -> crate::error::Result<()> {
+    let (kind, payload) = resp.encode();
+    write_frame(stream, kind, &payload)
+}
+
+fn rejection(code: RejectCode, message: String, retry_after_ms: u64) -> WireResponse {
+    WireResponse::Rejected {
+        reason: code,
+        message,
+        retry_after_ms,
+    }
+}
+
+/// Serve one connection until EOF, error, or drain.  Consumes the stream.
+pub(crate) fn serve_conn(mut stream: TcpStream, peer: SocketAddr, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    loop {
+        match read_frame_timeout(&mut stream, shared.cfg.max_frame_bytes) {
+            Ok(ReadOutcome::Frame(frame)) => {
+                shared.counters.frames_in.fetch_add(1, Ordering::SeqCst);
+                if !handle_frame(&mut stream, peer.ip(), &frame, &shared) {
+                    break;
+                }
+            }
+            Ok(ReadOutcome::Eof) => break,
+            Ok(ReadOutcome::IdleTimeout) => {
+                // idle poll: during drain there is nothing left to wait for
+                if shared.draining.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(e) => {
+                // framing is lost — tell the peer why, then close
+                shared.counters.malformed.fetch_add(1, Ordering::SeqCst);
+                let _ = send(
+                    &mut stream,
+                    &WireResponse::Error {
+                        message: format!("{e}"),
+                    },
+                );
+                break;
+            }
+        }
+    }
+}
+
+/// Handle one frame; returns `false` when the connection must close.
+fn handle_frame(stream: &mut TcpStream, client: IpAddr, frame: &Frame, shared: &Shared) -> bool {
+    if frame.version != PROTOCOL_VERSION {
+        let _ = send(
+            stream,
+            &WireResponse::Error {
+                message: format!(
+                    "protocol version mismatch: client sent {}, this server speaks {}",
+                    frame.version, PROTOCOL_VERSION
+                ),
+            },
+        );
+        return false;
+    }
+    let req = match WireRequest::decode(frame) {
+        Ok(req) => req,
+        Err(e) => {
+            // payload-level problem: framing is intact, reply and keep going
+            let ok = send(
+                stream,
+                &WireResponse::Error {
+                    message: format!("{e}"),
+                },
+            )
+            .is_ok();
+            shared.counters.replies_error.fetch_add(1, Ordering::SeqCst);
+            return ok;
+        }
+    };
+    let (model, payload) = match req {
+        WireRequest::Ping => return send(stream, &WireResponse::Pong).is_ok(),
+        WireRequest::Metrics => {
+            // metrics are exempt from rate limiting and drain: operators
+            // poll hardest exactly when the server is refusing work
+            let body = shared.metrics_body();
+            return send(stream, &WireResponse::Metrics { body }).is_ok();
+        }
+        WireRequest::Classify { model, nodes } => (model, Payload::ClassifyNodes(nodes)),
+        WireRequest::Predict { model, graph } => (model, Payload::PredictGraph(graph)),
+        WireRequest::Update { model, delta } => (model, Payload::UpdateGraph(delta)),
+    };
+
+    if shared.draining.load(Ordering::SeqCst) {
+        shared.counters.bump(RejectCode::Draining);
+        shared.coordinator.metrics_ref().record_rejected();
+        return send(
+            stream,
+            &rejection(
+                RejectCode::Draining,
+                "server is draining for shutdown".to_string(),
+                DRAIN_RETRY_MS,
+            ),
+        )
+        .is_ok();
+    }
+    if let RateDecision::Deny { retry_after } = shared.limiter.check(client, Instant::now()) {
+        shared.counters.bump(RejectCode::RateLimited);
+        shared.coordinator.metrics_ref().record_rejected();
+        let retry_ms = (retry_after.as_millis() as u64).max(1);
+        return send(
+            stream,
+            &rejection(
+                RejectCode::RateLimited,
+                "per-client rate limit exceeded".to_string(),
+                retry_ms,
+            ),
+        )
+        .is_ok();
+    }
+
+    let rx = match shared.coordinator.try_submit(&model, payload) {
+        Ok(rx) => rx,
+        Err(rej) => {
+            // the Rejected carries the request (and its reply channel)
+            // back, which is what lets us answer on-protocol here instead
+            // of silently dropping the client
+            let (code, message, retry) = match rej.reason {
+                RejectReason::UnknownModel => (
+                    RejectCode::UnknownModel,
+                    format!("unknown model '{}'", rej.request.model),
+                    0,
+                ),
+                RejectReason::QueueFull => (
+                    RejectCode::Overloaded,
+                    "admission queue full, retry later".to_string(),
+                    OVERLOAD_RETRY_MS,
+                ),
+                RejectReason::Stopped => (
+                    RejectCode::Draining,
+                    "model runner stopped".to_string(),
+                    DRAIN_RETRY_MS,
+                ),
+            };
+            shared.counters.bump(code);
+            return send(stream, &rejection(code, message, retry)).is_ok();
+        }
+    };
+
+    shared.in_flight.fetch_add(1, Ordering::SeqCst);
+    let wire = match rx.recv_timeout(shared.cfg.request_timeout) {
+        Ok(Ok(resp)) => {
+            shared.counters.replies_ok.fetch_add(1, Ordering::SeqCst);
+            WireResponse::Ok {
+                model: resp.model,
+                latency_us: resp.latency_us,
+                batch_size: resp.batch_size,
+                predictions: resp.predictions,
+            }
+        }
+        Ok(Err(e)) => {
+            shared.counters.replies_error.fetch_add(1, Ordering::SeqCst);
+            WireResponse::Error {
+                message: format!("{e}"),
+            }
+        }
+        Err(_) => {
+            shared.counters.replies_error.fetch_add(1, Ordering::SeqCst);
+            WireResponse::Error {
+                message: format!(
+                    "no reply within {:?} (request timed out in the server)",
+                    shared.cfg.request_timeout
+                ),
+            }
+        }
+    };
+    let sent = send(stream, &wire).is_ok();
+    // decrement only after the write attempt: drain's in_flight==0 must
+    // mean every admitted request had its reply written (or its client
+    // gone, which the failed write records just the same)
+    shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+    sent
+}

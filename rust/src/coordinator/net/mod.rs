@@ -1,0 +1,166 @@
+//! TCP front end for the coordinator (std-only, no async runtime).
+//!
+//! Wire format: versioned length-prefixed frames carrying JSON payloads —
+//! see [`protocol`].  Every admission decision becomes an explicit
+//! on-protocol reply: admitted requests get an `Ok`/`Error` frame, refused
+//! requests get a `Rejected` frame naming the reason (`rate_limited`,
+//! `overloaded`, `unknown_model`, `draining`) and a `retry_after_ms` hint —
+//! a client never learns about overload via a dropped connection.
+//!
+//! * [`protocol`] — frame codec + typed request/response payloads.
+//! * [`rate`] — per-client token-bucket rate limiter.
+//! * [`conn`] — per-connection loop (sequential request/reply).
+//! * [`server`] — accept loop, p99-driven batch tuner, graceful drain.
+//! * [`client`] — blocking client + closed-loop load generator.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+pub mod client;
+pub(crate) mod conn;
+pub mod protocol;
+pub mod rate;
+pub mod server;
+
+pub use client::{run_load, LoadConfig, LoadReport, NetClient};
+pub use protocol::{Frame, RejectCode, WireRequest, WireResponse, PROTOCOL_VERSION};
+pub use rate::{RateConfig, RateDecision, RateLimiter};
+pub use server::{DrainReport, NetServer};
+
+/// Front-end configuration.  [`NetConfig::from_env`] reads the documented
+/// `A2Q_*` knobs; every field also has a plain-code default for tests.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// listen address, e.g. `127.0.0.1:7292` (`:0` picks a free port)
+    pub listen: String,
+    /// max simultaneously open connections; excess accepts are answered
+    /// with an `overloaded` rejection frame and closed
+    pub max_conns: usize,
+    /// max frame length accepted from a peer (guards allocation)
+    pub max_frame_bytes: usize,
+    /// per-client sustained request rate (requests/sec); `0` disables
+    /// rate limiting
+    pub rate_rps: f64,
+    /// per-client burst allowance (token-bucket capacity); `0` derives
+    /// `max(2 × rate_rps, 1)`
+    pub rate_burst: f64,
+    /// how long drain waits for in-flight replies before giving up
+    pub drain_timeout: Duration,
+    /// per-request reply deadline (covers queue + execution)
+    pub request_timeout: Duration,
+    /// adaptive-batching latency target (µs): the tuner shrinks the flush
+    /// deadline when observed p99 exceeds this; `0` disables the tuner
+    pub target_p99_us: u64,
+    /// how often the tuner samples p99 and adjusts
+    pub tuner_interval: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_conns: 256,
+            max_frame_bytes: 4 << 20,
+            rate_rps: 0.0,
+            rate_burst: 0.0,
+            drain_timeout: Duration::from_secs(5),
+            request_timeout: Duration::from_secs(30),
+            target_p99_us: 0,
+            tuner_interval: Duration::from_millis(200),
+        }
+    }
+}
+
+fn env_parsed<T: std::str::FromStr>(name: &str, raw: &str) -> Result<T> {
+    raw.parse::<T>()
+        .map_err(|_| Error::config(format!("{name}: cannot parse '{raw}'")))
+}
+
+impl NetConfig {
+    /// Build a config from the environment, starting from the defaults.
+    /// Every knob is registered in the README table (a2q-lint R6).
+    pub fn from_env() -> Result<NetConfig> {
+        let mut cfg = NetConfig::default();
+        if let Ok(v) = std::env::var("A2Q_LISTEN") {
+            cfg.listen = v;
+        }
+        if let Ok(v) = std::env::var("A2Q_MAX_CONNS") {
+            cfg.max_conns = env_parsed::<usize>("A2Q_MAX_CONNS", &v)?.max(1);
+        }
+        if let Ok(v) = std::env::var("A2Q_MAX_FRAME_BYTES") {
+            cfg.max_frame_bytes = env_parsed::<usize>("A2Q_MAX_FRAME_BYTES", &v)?.max(64);
+        }
+        if let Ok(v) = std::env::var("A2Q_RATE_RPS") {
+            cfg.rate_rps = env_parsed::<f64>("A2Q_RATE_RPS", &v)?;
+            if !cfg.rate_rps.is_finite() || cfg.rate_rps < 0.0 {
+                return Err(Error::config(format!(
+                    "A2Q_RATE_RPS: must be a finite non-negative rate, got '{v}'"
+                )));
+            }
+        }
+        if let Ok(v) = std::env::var("A2Q_RATE_BURST") {
+            cfg.rate_burst = env_parsed::<f64>("A2Q_RATE_BURST", &v)?;
+            if !cfg.rate_burst.is_finite() || cfg.rate_burst < 0.0 {
+                return Err(Error::config(format!(
+                    "A2Q_RATE_BURST: must be a finite non-negative count, got '{v}'"
+                )));
+            }
+        }
+        if let Ok(v) = std::env::var("A2Q_DRAIN_TIMEOUT_MS") {
+            cfg.drain_timeout =
+                Duration::from_millis(env_parsed::<u64>("A2Q_DRAIN_TIMEOUT_MS", &v)?);
+        }
+        if let Ok(v) = std::env::var("A2Q_REQUEST_TIMEOUT_MS") {
+            cfg.request_timeout =
+                Duration::from_millis(env_parsed::<u64>("A2Q_REQUEST_TIMEOUT_MS", &v)?.max(1));
+        }
+        if let Ok(v) = std::env::var("A2Q_TARGET_P99_US") {
+            cfg.target_p99_us = env_parsed::<u64>("A2Q_TARGET_P99_US", &v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// The effective token-bucket capacity (see `rate_burst`).
+    pub fn effective_burst(&self) -> f64 {
+        if self.rate_burst > 0.0 {
+            self.rate_burst
+        } else {
+            (self.rate_rps * 2.0).max(1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = NetConfig::default();
+        assert!(c.listen.ends_with(":0"));
+        assert!(c.max_conns >= 1);
+        assert!(c.max_frame_bytes >= 64);
+        assert_eq!(c.rate_rps, 0.0, "rate limiting off by default");
+        assert_eq!(c.target_p99_us, 0, "tuner off by default");
+    }
+
+    #[test]
+    fn burst_derivation() {
+        let mut c = NetConfig::default();
+        c.rate_rps = 10.0;
+        assert_eq!(c.effective_burst(), 20.0);
+        c.rate_burst = 5.0;
+        assert_eq!(c.effective_burst(), 5.0);
+        c.rate_rps = 0.0;
+        c.rate_burst = 0.0;
+        assert_eq!(c.effective_burst(), 1.0);
+    }
+
+    #[test]
+    fn bad_env_values_error_descriptively() {
+        let err = env_parsed::<usize>("A2Q_MAX_CONNS", "not-a-number").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("A2Q_MAX_CONNS") && msg.contains("not-a-number"));
+    }
+}

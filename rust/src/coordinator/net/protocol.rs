@@ -1,0 +1,786 @@
+//! Wire protocol: versioned length-prefixed frames with JSON payloads.
+//!
+//! Frame layout (all integers big-endian):
+//!
+//! ```text
+//! ┌──────────┬─────────┬──────┬──────────────────┐
+//! │ len: u32 │ ver: u8 │ kind │ payload (len−2 B)│
+//! └──────────┴─────────┴──────┴──────────────────┘
+//! ```
+//!
+//! `len` counts everything after itself (version + kind + payload), so the
+//! minimum legal value is 2 (empty payload) and the maximum is bounded by
+//! the server's configured frame cap.  Payloads are JSON via [`util::json`]
+//! — binary framing keeps message boundaries exact and cheap to parse;
+//! JSON bodies keep the format debuggable and versionable.
+//!
+//! Versioning: a frame whose `ver` byte differs from [`PROTOCOL_VERSION`]
+//! is answered with a descriptive error frame and the connection is
+//! closed.  Additive payload fields do not bump the version (decoders
+//! ignore unknown fields); renames/semantic changes do.
+//!
+//! [`util::json`]: crate::util::json
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::error::{Error, Result};
+use crate::graph::csr::Csr;
+use crate::graph::delta::GraphDelta;
+use crate::graph::io::SmallGraph;
+use crate::util::json::{parse, Json};
+
+use super::super::request::Prediction;
+
+/// Current protocol version (the `ver` byte of every frame).
+pub const PROTOCOL_VERSION: u8 = 1;
+
+// request kinds (client → server)
+pub const REQ_CLASSIFY: u8 = 0x01;
+pub const REQ_PREDICT: u8 = 0x02;
+pub const REQ_UPDATE: u8 = 0x03;
+pub const REQ_METRICS: u8 = 0x04;
+pub const REQ_PING: u8 = 0x05;
+
+// response kinds (server → client); high bit set
+pub const RESP_OK: u8 = 0x81;
+pub const RESP_ERROR: u8 = 0x82;
+pub const RESP_REJECTED: u8 = 0x83;
+pub const RESP_METRICS: u8 = 0x84;
+pub const RESP_PONG: u8 = 0x85;
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub version: u8,
+    pub kind: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Why the server refused a request, as named on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCode {
+    /// per-client token bucket empty
+    RateLimited,
+    /// the model's admission queue is full
+    Overloaded,
+    /// no such model registered
+    UnknownModel,
+    /// the server is draining for shutdown
+    Draining,
+}
+
+impl RejectCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectCode::RateLimited => "rate_limited",
+            RejectCode::Overloaded => "overloaded",
+            RejectCode::UnknownModel => "unknown_model",
+            RejectCode::Draining => "draining",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<RejectCode> {
+        match s {
+            "rate_limited" => Ok(RejectCode::RateLimited),
+            "overloaded" => Ok(RejectCode::Overloaded),
+            "unknown_model" => Ok(RejectCode::UnknownModel),
+            "draining" => Ok(RejectCode::Draining),
+            other => Err(Error::json(format!("unknown reject code '{other}'"))),
+        }
+    }
+}
+
+/// Typed client → server message.
+#[derive(Debug, Clone)]
+pub enum WireRequest {
+    Classify { model: String, nodes: Vec<u32> },
+    Predict { model: String, graph: SmallGraph },
+    Update { model: String, delta: GraphDelta },
+    Metrics,
+    Ping,
+}
+
+/// Typed server → client message.
+#[derive(Debug, Clone)]
+pub enum WireResponse {
+    Ok {
+        model: String,
+        latency_us: u64,
+        batch_size: usize,
+        predictions: Vec<Prediction>,
+    },
+    Error {
+        message: String,
+    },
+    Rejected {
+        reason: RejectCode,
+        message: String,
+        retry_after_ms: u64,
+    },
+    Metrics {
+        body: Json,
+    },
+    Pong,
+}
+
+// ------------------------------------------------------------------ frames
+
+/// Write one frame.  `payload.len() + 2` must fit in u32 (callers encode
+/// JSON bodies far below that).
+pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<()> {
+    let len = payload
+        .len()
+        .checked_add(2)
+        .filter(|l| *l <= u32::MAX as usize)
+        .ok_or_else(|| Error::coordinator("frame payload too large to encode"))?;
+    w.write_all(&(len as u32).to_be_bytes())?;
+    w.write_all(&[PROTOCOL_VERSION, kind])?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Outcome of a timeout-aware frame read.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Frame(Frame),
+    /// clean EOF on a frame boundary
+    Eof,
+    /// read timeout with no header bytes consumed (connection idle)
+    IdleTimeout,
+}
+
+enum FillStatus {
+    Full,
+    /// clean EOF before the first byte
+    EofAtStart,
+    /// timed out before the first byte (only when `allow_idle`)
+    IdleAtStart,
+}
+
+/// How many consecutive mid-frame read timeouts we tolerate before
+/// declaring the peer stalled.  With the connection loop's ~250 ms poll
+/// this is on the order of a minute.
+const MAX_MID_FRAME_TIMEOUTS: u32 = 240;
+
+fn fill(r: &mut impl Read, buf: &mut [u8], allow_idle: bool) -> Result<FillStatus> {
+    let mut got = 0usize;
+    let mut timeouts = 0u32;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(FillStatus::EofAtStart);
+                }
+                return Err(Error::coordinator("unexpected EOF mid-frame"));
+            }
+            Ok(n) => {
+                got += n;
+                timeouts = 0;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if got == 0 && allow_idle {
+                    return Ok(FillStatus::IdleAtStart);
+                }
+                timeouts += 1;
+                if timeouts > MAX_MID_FRAME_TIMEOUTS {
+                    return Err(Error::coordinator("peer stalled mid-frame"));
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(FillStatus::Full)
+}
+
+/// Read one frame from a stream that may have a read timeout configured.
+/// Distinguishes a clean EOF / idle timeout at a frame boundary from a
+/// truncated frame (the latter is an error: framing is lost).
+pub fn read_frame_timeout(r: &mut impl Read, max_frame: usize) -> Result<ReadOutcome> {
+    let mut header = [0u8; 4];
+    match fill(r, &mut header, true)? {
+        FillStatus::EofAtStart => return Ok(ReadOutcome::Eof),
+        FillStatus::IdleAtStart => return Ok(ReadOutcome::IdleTimeout),
+        FillStatus::Full => {}
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len < 2 {
+        return Err(Error::coordinator(format!(
+            "malformed frame: declared length {len} < 2"
+        )));
+    }
+    if len > max_frame {
+        return Err(Error::coordinator(format!(
+            "frame too large: declared length {len} exceeds cap {max_frame}"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    match fill(r, &mut body, false)? {
+        FillStatus::Full => {}
+        // fill() only reports the start-states when allow_idle/got==0;
+        // a clean EOF here means the peer quit mid-frame
+        _ => return Err(Error::coordinator("unexpected EOF mid-frame")),
+    }
+    let payload = body.split_off(2);
+    Ok(ReadOutcome::Frame(Frame {
+        version: body[0],
+        kind: body[1],
+        payload,
+    }))
+}
+
+/// Blocking read of one frame; `Ok(None)` is a clean EOF.
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> Result<Option<Frame>> {
+    match read_frame_timeout(r, max_frame)? {
+        ReadOutcome::Frame(f) => Ok(Some(f)),
+        ReadOutcome::Eof => Ok(None),
+        ReadOutcome::IdleTimeout => Err(Error::coordinator("read timed out waiting for frame")),
+    }
+}
+
+// ------------------------------------------------------------- JSON bodies
+
+fn f32s_to_json(values: &[f32]) -> Json {
+    Json::Arr(values.iter().map(|v| Json::Num(*v as f64)).collect())
+}
+
+/// Non-finite floats serialize as JSON `null`; decode them back to NaN so
+/// a roundtrip is total.
+fn f32s_from_json(j: &Json, field: &str) -> Result<Vec<f32>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::json(format!("field '{field}' is not an array")))?;
+    arr.iter()
+        .map(|v| match v {
+            Json::Num(n) => Ok(*n as f32),
+            Json::Null => Ok(f32::NAN),
+            _ => Err(Error::json(format!("field '{field}' has a non-number"))),
+        })
+        .collect()
+}
+
+fn edges_to_json(edges: &[(u32, u32)]) -> Json {
+    Json::Arr(
+        edges
+            .iter()
+            .map(|(s, d)| Json::Arr(vec![Json::Num(*s as f64), Json::Num(*d as f64)]))
+            .collect(),
+    )
+}
+
+fn edges_from_json(j: &Json, field: &str) -> Result<Vec<(u32, u32)>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::json(format!("field '{field}' is not an array")))?;
+    arr.iter()
+        .map(|pair| {
+            let s = pair
+                .idx(0)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::json(format!("field '{field}': bad edge pair")))?;
+            let d = pair
+                .idx(1)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::json(format!("field '{field}': bad edge pair")))?;
+            if s < 0.0 || d < 0.0 || s > u32::MAX as f64 || d > u32::MAX as f64 {
+                return Err(Error::json(format!(
+                    "field '{field}': edge endpoint out of u32 range"
+                )));
+            }
+            Ok((s as u32, d as u32))
+        })
+        .collect()
+}
+
+fn graph_to_json(g: &SmallGraph) -> Json {
+    Json::obj(vec![
+        ("num_nodes", Json::Num(g.num_nodes() as f64)),
+        ("edges", edges_to_json(&g.csr.edge_list())),
+        ("features", f32s_to_json(&g.features)),
+    ])
+}
+
+fn graph_from_json(j: &Json) -> Result<SmallGraph> {
+    let n = j.req_usize("num_nodes")?;
+    let edges = edges_from_json(j.req("edges")?, "edges")?;
+    let features = f32s_from_json(j.req("features")?, "features")?;
+    Ok(SmallGraph {
+        csr: Csr::from_edges(n, &edges)?,
+        features,
+        target_class: 0,
+        target_value: 0.0,
+    })
+}
+
+fn delta_to_json(d: &GraphDelta) -> Json {
+    Json::obj(vec![
+        ("add_nodes", Json::Num(d.add_nodes as f64)),
+        ("new_features", f32s_to_json(&d.new_features)),
+        ("add_edges", edges_to_json(&d.add_edges)),
+        ("remove_edges", edges_to_json(&d.remove_edges)),
+    ])
+}
+
+fn delta_from_json(j: &Json) -> Result<GraphDelta> {
+    Ok(GraphDelta {
+        add_nodes: j.req_usize("add_nodes")?,
+        new_features: f32s_from_json(j.req("new_features")?, "new_features")?,
+        add_edges: edges_from_json(j.req("add_edges")?, "add_edges")?,
+        remove_edges: edges_from_json(j.req("remove_edges")?, "remove_edges")?,
+    })
+}
+
+fn check_version(frame: &Frame) -> Result<()> {
+    if frame.version != PROTOCOL_VERSION {
+        return Err(Error::coordinator(format!(
+            "protocol version mismatch: peer sent {}, this server speaks {}",
+            frame.version, PROTOCOL_VERSION
+        )));
+    }
+    Ok(())
+}
+
+fn payload_json(frame: &Frame) -> Result<Json> {
+    let text = std::str::from_utf8(&frame.payload)
+        .map_err(|_| Error::json("frame payload is not valid UTF-8"))?;
+    parse(text)
+}
+
+impl WireRequest {
+    /// Encode into `(kind, payload)` for [`write_frame`].
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            WireRequest::Classify { model, nodes } => {
+                let body = Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    (
+                        "nodes",
+                        Json::Arr(nodes.iter().map(|n| Json::Num(*n as f64)).collect()),
+                    ),
+                ]);
+                (REQ_CLASSIFY, body.to_string().into_bytes())
+            }
+            WireRequest::Predict { model, graph } => {
+                let body = Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("graph", graph_to_json(graph)),
+                ]);
+                (REQ_PREDICT, body.to_string().into_bytes())
+            }
+            WireRequest::Update { model, delta } => {
+                let body = Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("delta", delta_to_json(delta)),
+                ]);
+                (REQ_UPDATE, body.to_string().into_bytes())
+            }
+            WireRequest::Metrics => (REQ_METRICS, Vec::new()),
+            WireRequest::Ping => (REQ_PING, Vec::new()),
+        }
+    }
+
+    pub fn decode(frame: &Frame) -> Result<WireRequest> {
+        check_version(frame)?;
+        match frame.kind {
+            REQ_CLASSIFY => {
+                let j = payload_json(frame)?;
+                let nodes = j
+                    .req("nodes")?
+                    .as_arr()
+                    .ok_or_else(|| Error::json("field 'nodes' is not an array"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .filter(|n| *n >= 0.0 && *n <= u32::MAX as f64)
+                            .map(|n| n as u32)
+                            .ok_or_else(|| Error::json("field 'nodes' has a bad id"))
+                    })
+                    .collect::<Result<Vec<u32>>>()?;
+                Ok(WireRequest::Classify {
+                    model: j.req_str("model")?.to_string(),
+                    nodes,
+                })
+            }
+            REQ_PREDICT => {
+                let j = payload_json(frame)?;
+                Ok(WireRequest::Predict {
+                    model: j.req_str("model")?.to_string(),
+                    graph: graph_from_json(j.req("graph")?)?,
+                })
+            }
+            REQ_UPDATE => {
+                let j = payload_json(frame)?;
+                Ok(WireRequest::Update {
+                    model: j.req_str("model")?.to_string(),
+                    delta: delta_from_json(j.req("delta")?)?,
+                })
+            }
+            REQ_METRICS => Ok(WireRequest::Metrics),
+            REQ_PING => Ok(WireRequest::Ping),
+            other => Err(Error::coordinator(format!(
+                "unknown request kind 0x{other:02x}"
+            ))),
+        }
+    }
+}
+
+impl WireResponse {
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            WireResponse::Ok {
+                model,
+                latency_us,
+                batch_size,
+                predictions,
+            } => {
+                let preds = Json::Arr(
+                    predictions
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("output", f32s_to_json(&p.output)),
+                                ("class", Json::Num(p.class as f64)),
+                            ])
+                        })
+                        .collect(),
+                );
+                let body = Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("latency_us", Json::Num(*latency_us as f64)),
+                    ("batch_size", Json::Num(*batch_size as f64)),
+                    ("predictions", preds),
+                ]);
+                (RESP_OK, body.to_string().into_bytes())
+            }
+            WireResponse::Error { message } => {
+                let body = Json::obj(vec![("message", Json::Str(message.clone()))]);
+                (RESP_ERROR, body.to_string().into_bytes())
+            }
+            WireResponse::Rejected {
+                reason,
+                message,
+                retry_after_ms,
+            } => {
+                let body = Json::obj(vec![
+                    ("reason", Json::Str(reason.as_str().to_string())),
+                    ("message", Json::Str(message.clone())),
+                    ("retry_after_ms", Json::Num(*retry_after_ms as f64)),
+                ]);
+                (RESP_REJECTED, body.to_string().into_bytes())
+            }
+            WireResponse::Metrics { body } => (RESP_METRICS, body.to_string().into_bytes()),
+            WireResponse::Pong => (RESP_PONG, Vec::new()),
+        }
+    }
+
+    pub fn decode(frame: &Frame) -> Result<WireResponse> {
+        check_version(frame)?;
+        match frame.kind {
+            RESP_OK => {
+                let j = payload_json(frame)?;
+                let preds = j
+                    .req("predictions")?
+                    .as_arr()
+                    .ok_or_else(|| Error::json("field 'predictions' is not an array"))?
+                    .iter()
+                    .map(|p| {
+                        Ok(Prediction {
+                            output: f32s_from_json(p.req("output")?, "output")?,
+                            class: p.req_usize("class")?,
+                        })
+                    })
+                    .collect::<Result<Vec<Prediction>>>()?;
+                Ok(WireResponse::Ok {
+                    model: j.req_str("model")?.to_string(),
+                    latency_us: j.req_f64("latency_us")? as u64,
+                    batch_size: j.req_usize("batch_size")?,
+                    predictions: preds,
+                })
+            }
+            RESP_ERROR => {
+                let j = payload_json(frame)?;
+                Ok(WireResponse::Error {
+                    message: j.req_str("message")?.to_string(),
+                })
+            }
+            RESP_REJECTED => {
+                let j = payload_json(frame)?;
+                Ok(WireResponse::Rejected {
+                    reason: RejectCode::from_str(j.req_str("reason")?)?,
+                    message: j.req_str("message")?.to_string(),
+                    retry_after_ms: j.req_f64("retry_after_ms")? as u64,
+                })
+            }
+            RESP_METRICS => Ok(WireResponse::Metrics {
+                body: payload_json(frame)?,
+            }),
+            RESP_PONG => Ok(WireResponse::Pong),
+            other => Err(Error::coordinator(format!(
+                "unknown response kind 0x{other:02x}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{property, Gen};
+    use std::io::Cursor;
+
+    const MAX: usize = 4 << 20;
+
+    fn roundtrip_frame(kind: u8, payload: &[u8]) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind, payload).unwrap();
+        read_frame(&mut Cursor::new(buf), MAX).unwrap().unwrap()
+    }
+
+    fn roundtrip_request(req: &WireRequest) -> WireRequest {
+        let (kind, payload) = req.encode();
+        let frame = roundtrip_frame(kind, &payload);
+        WireRequest::decode(&frame).unwrap()
+    }
+
+    fn roundtrip_response(resp: &WireResponse) -> WireResponse {
+        let (kind, payload) = resp.encode();
+        let frame = roundtrip_frame(kind, &payload);
+        WireResponse::decode(&frame).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let f = roundtrip_frame(REQ_PING, b"");
+        assert_eq!(f.version, PROTOCOL_VERSION);
+        assert_eq!(f.kind, REQ_PING);
+        assert!(f.payload.is_empty());
+        // two frames then clean EOF
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_PING, b"").unwrap();
+        write_frame(&mut buf, REQ_METRICS, b"x").unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur, MAX).unwrap().unwrap().kind, REQ_PING);
+        assert_eq!(
+            read_frame(&mut cur, MAX).unwrap().unwrap().payload,
+            b"x".to_vec()
+        );
+        assert!(read_frame(&mut cur, MAX).unwrap().is_none());
+    }
+
+    /// Roundtrip property over randomly generated requests/responses, on
+    /// the repo-wide prop runner (A2Q_PROP_SEED replays one case).
+    #[test]
+    fn request_roundtrip_property() {
+        property("wire request roundtrip", 60, |g: &mut Gen| {
+            let model: String = format!("m{}", g.usize_range(0, 1000));
+            let req = match g.usize_range(0, 5) {
+                0 => WireRequest::Classify {
+                    model: model.clone(),
+                    nodes: (0..g.usize_range(0, 20)).map(|_| g.usize_range(0, 500) as u32).collect(),
+                },
+                1 => {
+                    let n = g.usize_range(1, 12);
+                    let mut edges = Vec::new();
+                    for _ in 0..g.usize_range(0, 3 * n) {
+                        edges.push((
+                            g.usize_range(0, n) as u32,
+                            g.usize_range(0, n) as u32,
+                        ));
+                    }
+                    WireRequest::Predict {
+                        model: model.clone(),
+                        graph: SmallGraph {
+                            csr: Csr::from_edges(n, &edges).unwrap(),
+                            features: g.vec_uniform(n * 4, -2.0, 2.0),
+                            target_class: 0,
+                            target_value: 0.0,
+                        },
+                    }
+                }
+                2 => {
+                    let add_nodes = g.usize_range(0, 4);
+                    WireRequest::Update {
+                        model: model.clone(),
+                        delta: GraphDelta {
+                            add_nodes,
+                            new_features: g.vec_uniform(add_nodes * 4, -1.0, 1.0),
+                            add_edges: vec![(0, 1), (2, 3)],
+                            remove_edges: vec![(1, 0)],
+                        },
+                    }
+                }
+                3 => WireRequest::Metrics,
+                _ => WireRequest::Ping,
+            };
+            // encode is deterministic (sorted JSON objects), so byte
+            // equality of re-encodings is structural equality
+            let decoded = roundtrip_request(&req);
+            assert_eq!(
+                req.encode(),
+                decoded.encode(),
+                "decode(encode(req)) re-encodes differently"
+            );
+        });
+    }
+
+    #[test]
+    fn response_roundtrip_preserves_fields() {
+        let resp = WireResponse::Ok {
+            model: "gcn".into(),
+            latency_us: 1234,
+            batch_size: 7,
+            predictions: vec![
+                Prediction {
+                    output: vec![0.5, -1.25],
+                    class: 0,
+                },
+                Prediction {
+                    output: vec![f32::NAN, 3.0],
+                    class: 1,
+                },
+            ],
+        };
+        match roundtrip_response(&resp) {
+            WireResponse::Ok {
+                model,
+                latency_us,
+                batch_size,
+                predictions,
+            } => {
+                assert_eq!(model, "gcn");
+                assert_eq!(latency_us, 1234);
+                assert_eq!(batch_size, 7);
+                assert_eq!(predictions.len(), 2);
+                assert_eq!(predictions[0].output, vec![0.5, -1.25]);
+                // non-finite floats travel as null and come back NaN
+                assert!(predictions[1].output[0].is_nan());
+                assert_eq!(predictions[1].output[1], 3.0);
+                assert_eq!(predictions[1].class, 1);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        match roundtrip_response(&WireResponse::Rejected {
+            reason: RejectCode::RateLimited,
+            message: "slow down".into(),
+            retry_after_ms: 250,
+        }) {
+            WireResponse::Rejected {
+                reason,
+                message,
+                retry_after_ms,
+            } => {
+                assert_eq!(reason, RejectCode::RateLimited);
+                assert_eq!(message, "slow down");
+                assert_eq!(retry_after_ms, 250);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    /// Malformed input must produce descriptive errors, never panics.
+    #[test]
+    fn malformed_frames_error_cleanly() {
+        property("malformed frames never panic", 80, |g: &mut Gen| {
+            // a valid frame, truncated at a random cut point
+            let mut buf = Vec::new();
+            let payload = format!(r#"{{"model":"m","nodes":[{}]}}"#, g.usize_range(0, 9));
+            write_frame(&mut buf, REQ_CLASSIFY, payload.as_bytes()).unwrap();
+            let cut = g.usize_range(1, buf.len());
+            let out = read_frame(&mut Cursor::new(&buf[..cut]), MAX);
+            match out {
+                Err(e) => {
+                    let msg = format!("{e}");
+                    assert!(
+                        msg.contains("EOF") || msg.contains("length"),
+                        "undescriptive: {msg}"
+                    );
+                }
+                Ok(Some(_)) => panic!("truncated frame decoded as complete"),
+                Ok(None) => panic!("truncated frame read as clean EOF at cut {cut}"),
+            }
+        });
+
+        // declared length below the 2-byte minimum
+        let mut short = 1u32.to_be_bytes().to_vec();
+        short.push(PROTOCOL_VERSION);
+        let err = read_frame(&mut Cursor::new(short), MAX).unwrap_err();
+        assert!(format!("{err}").contains("length 1 < 2"));
+
+        // declared length beyond the cap: rejected before allocation
+        let mut big = (u32::MAX).to_be_bytes().to_vec();
+        big.extend_from_slice(&[PROTOCOL_VERSION, REQ_PING]);
+        let err = read_frame(&mut Cursor::new(big), 1024).unwrap_err();
+        assert!(format!("{err}").contains("exceeds cap"));
+
+        // bad version byte
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_PING, b"").unwrap();
+        buf[4] = 99; // version byte
+        let frame = read_frame(&mut Cursor::new(buf), MAX).unwrap().unwrap();
+        let err = WireRequest::decode(&frame).unwrap_err();
+        assert!(format!("{err}").contains("version mismatch"));
+
+        // unknown kind
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0x7f, b"").unwrap();
+        let frame = read_frame(&mut Cursor::new(buf), MAX).unwrap().unwrap();
+        assert!(format!("{}", WireRequest::decode(&frame).unwrap_err())
+            .contains("unknown request kind"));
+
+        // invalid JSON payload
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_CLASSIFY, b"{not json").unwrap();
+        let frame = read_frame(&mut Cursor::new(buf), MAX).unwrap().unwrap();
+        assert!(WireRequest::decode(&frame).is_err());
+
+        // non-UTF-8 payload
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_CLASSIFY, &[0xff, 0xfe, 0x00]).unwrap();
+        let frame = read_frame(&mut Cursor::new(buf), MAX).unwrap().unwrap();
+        assert!(format!("{}", WireRequest::decode(&frame).unwrap_err()).contains("UTF-8"));
+    }
+
+    #[test]
+    fn graph_and_delta_payloads_roundtrip_exactly() {
+        let g = SmallGraph {
+            csr: Csr::from_edges(4, &[(0, 1), (1, 2), (3, 0)]).unwrap(),
+            features: vec![0.25, -1.5, 3.0, 0.0, 7.5, -0.125, 2.0, 1.0],
+            target_class: 0,
+            target_value: 0.0,
+        };
+        let req = WireRequest::Predict {
+            model: "m".into(),
+            graph: g.clone(),
+        };
+        match roundtrip_request(&req) {
+            WireRequest::Predict { graph, .. } => {
+                assert_eq!(graph.num_nodes(), 4);
+                assert_eq!(graph.csr.edge_list(), g.csr.edge_list());
+                // f32 → f64 → JSON → f64 → f32 is exact for finite values
+                assert_eq!(graph.features, g.features);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let req = WireRequest::Update {
+            model: "m".into(),
+            delta: GraphDelta {
+                add_nodes: 2,
+                new_features: vec![1.0, 2.0, 3.0, 4.0],
+                add_edges: vec![(4, 5), (5, 4)],
+                remove_edges: vec![(0, 1)],
+            },
+        };
+        match roundtrip_request(&req) {
+            WireRequest::Update { delta, .. } => {
+                assert_eq!(delta.add_nodes, 2);
+                assert_eq!(delta.new_features, vec![1.0, 2.0, 3.0, 4.0]);
+                assert_eq!(delta.add_edges, vec![(4, 5), (5, 4)]);
+                assert_eq!(delta.remove_edges, vec![(0, 1)]);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+}

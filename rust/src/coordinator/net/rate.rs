@@ -1,0 +1,213 @@
+//! Per-client token-bucket rate limiter.
+//!
+//! Each client IP owns a bucket of capacity `burst` that refills at
+//! `rate_per_sec`.  A request costs one token; an empty bucket yields
+//! [`RateDecision::Deny`] with a `retry_after` hint (time until one token
+//! refills) that the connection layer puts on the wire, so throttled
+//! clients learn *when* to come back instead of hammering.
+//!
+//! All methods take an explicit `now` so behavior is testable with
+//! synthetic clocks (no sleeping in tests).
+
+use std::collections::HashMap;
+use std::net::IpAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Limiter policy.
+#[derive(Debug, Clone)]
+pub struct RateConfig {
+    /// sustained tokens/sec per client; `<= 0` disables the limiter
+    pub rate_per_sec: f64,
+    /// bucket capacity (max burst)
+    pub burst: f64,
+    /// max tracked clients; beyond this, idle (refilled-to-full) buckets
+    /// are evicted, and if none are evictable new clients are denied
+    pub max_clients: usize,
+}
+
+impl Default for RateConfig {
+    fn default() -> Self {
+        RateConfig {
+            rate_per_sec: 0.0,
+            burst: 1.0,
+            max_clients: 4096,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Admission verdict for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateDecision {
+    Allow,
+    Deny { retry_after: Duration },
+}
+
+/// Thread-safe per-IP token buckets.
+#[derive(Debug)]
+pub struct RateLimiter {
+    cfg: RateConfig,
+    buckets: Mutex<HashMap<IpAddr, TokenBucket>>,
+}
+
+impl RateLimiter {
+    pub fn new(cfg: RateConfig) -> RateLimiter {
+        RateLimiter {
+            cfg,
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.rate_per_sec > 0.0
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, HashMap<IpAddr, TokenBucket>> {
+        // a2q-lint: allow(panic-path) bucket arithmetic cannot panic while
+        // holding the lock, so poisoning would itself be a prior bug
+        self.buckets.lock().unwrap()
+    }
+
+    /// Time until one token refills at the configured rate.
+    fn one_token(&self) -> Duration {
+        Duration::from_secs_f64(1.0 / self.cfg.rate_per_sec)
+    }
+
+    /// Charge one token for `client`.  Disabled limiters always allow.
+    pub fn check(&self, client: IpAddr, now: Instant) -> RateDecision {
+        if !self.enabled() {
+            return RateDecision::Allow;
+        }
+        let mut buckets = self.locked();
+        if !buckets.contains_key(&client) && buckets.len() >= self.cfg.max_clients {
+            // evict buckets that would be full anyway (idle long enough
+            // that tracking them adds nothing)
+            let (rate, burst) = (self.cfg.rate_per_sec, self.cfg.burst);
+            buckets.retain(|_, b| {
+                let dt = now.saturating_duration_since(b.last).as_secs_f64();
+                b.tokens + dt * rate < burst
+            });
+            if buckets.len() >= self.cfg.max_clients {
+                // table saturated with actively-limited clients: deny the
+                // newcomer rather than grow without bound
+                return RateDecision::Deny {
+                    retry_after: self.one_token(),
+                };
+            }
+        }
+        let bucket = buckets.entry(client).or_insert(TokenBucket {
+            tokens: self.cfg.burst,
+            last: now,
+        });
+        let dt = now.saturating_duration_since(bucket.last).as_secs_f64();
+        bucket.tokens = (bucket.tokens + dt * self.cfg.rate_per_sec).min(self.cfg.burst);
+        bucket.last = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            RateDecision::Allow
+        } else {
+            let deficit = 1.0 - bucket.tokens;
+            RateDecision::Deny {
+                retry_after: Duration::from_secs_f64(deficit / self.cfg.rate_per_sec),
+            }
+        }
+    }
+
+    /// Number of tracked clients (diagnostics).
+    pub fn tracked_clients(&self) -> usize {
+        self.locked().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::Ipv4Addr;
+
+    fn ip(last: u8) -> IpAddr {
+        IpAddr::V4(Ipv4Addr::new(10, 0, 0, last))
+    }
+
+    fn limiter(rate: f64, burst: f64, max_clients: usize) -> RateLimiter {
+        RateLimiter::new(RateConfig {
+            rate_per_sec: rate,
+            burst,
+            max_clients,
+        })
+    }
+
+    #[test]
+    fn burst_then_deny_with_retry_hint() {
+        let l = limiter(10.0, 3.0, 16);
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            assert_eq!(l.check(ip(1), t0), RateDecision::Allow);
+        }
+        match l.check(ip(1), t0) {
+            RateDecision::Deny { retry_after } => {
+                // one token refills in 1/10 s
+                assert!(retry_after > Duration::ZERO);
+                assert!(retry_after <= Duration::from_millis(101));
+            }
+            RateDecision::Allow => panic!("4th burst request must be denied"),
+        }
+    }
+
+    #[test]
+    fn refill_over_synthetic_time() {
+        let l = limiter(10.0, 1.0, 16);
+        let t0 = Instant::now();
+        assert_eq!(l.check(ip(1), t0), RateDecision::Allow);
+        assert!(matches!(l.check(ip(1), t0), RateDecision::Deny { .. }));
+        // 100 ms refills exactly one token at 10/s
+        let t1 = t0 + Duration::from_millis(100);
+        assert_eq!(l.check(ip(1), t1), RateDecision::Allow);
+        // refill clamps at burst: a long idle gap grants 1 token, not 50
+        let t2 = t1 + Duration::from_secs(5);
+        assert_eq!(l.check(ip(1), t2), RateDecision::Allow);
+        assert!(matches!(l.check(ip(1), t2), RateDecision::Deny { .. }));
+    }
+
+    #[test]
+    fn clients_are_limited_independently() {
+        let l = limiter(1.0, 1.0, 16);
+        let t0 = Instant::now();
+        assert_eq!(l.check(ip(1), t0), RateDecision::Allow);
+        assert!(matches!(l.check(ip(1), t0), RateDecision::Deny { .. }));
+        // a different client still has its full bucket
+        assert_eq!(l.check(ip(2), t0), RateDecision::Allow);
+    }
+
+    #[test]
+    fn disabled_limiter_always_allows() {
+        let l = limiter(0.0, 1.0, 1);
+        let t0 = Instant::now();
+        for i in 0..100u8 {
+            assert_eq!(l.check(ip(i), t0), RateDecision::Allow);
+        }
+        assert_eq!(l.tracked_clients(), 0, "disabled limiter tracks nobody");
+    }
+
+    #[test]
+    fn eviction_bounds_the_table() {
+        let l = limiter(10.0, 2.0, 4);
+        let t0 = Instant::now();
+        for i in 0..4u8 {
+            assert_eq!(l.check(ip(i), t0), RateDecision::Allow);
+        }
+        assert_eq!(l.tracked_clients(), 4);
+        // immediately, nobody is idle-full → the newcomer is denied
+        assert!(matches!(l.check(ip(9), t0), RateDecision::Deny { .. }));
+        // after the old buckets refill to full they become evictable and
+        // the newcomer gets in
+        let t1 = t0 + Duration::from_secs(1);
+        assert_eq!(l.check(ip(9), t1), RateDecision::Allow);
+        assert!(l.tracked_clients() <= 4);
+    }
+}

@@ -1,0 +1,522 @@
+//! The TCP server: accept loop, p99-driven batch tuner, graceful drain.
+//!
+//! Lifecycle:
+//!
+//! 1. [`NetServer::start`] binds, spawns the accept loop (one thread per
+//!    connection — the coordinator's admission queue, not the thread
+//!    count, is the real concurrency limiter) and, when the config sets a
+//!    latency target, the adaptive-batching tuner.
+//! 2. [`NetServer::drain`] shuts down gracefully: stop accepting, mark
+//!    draining (new work is rejected on-protocol with `draining`), wait
+//!    for every in-flight admitted request's reply to be written, then
+//!    stop the coordinator's runners and report what was left.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+use super::super::server::Coordinator;
+use super::conn::{serve_conn, Shared};
+use super::protocol::{write_frame, RejectCode, WireResponse};
+use super::rate::{RateConfig, RateLimiter};
+use super::NetConfig;
+
+/// What drain left behind (all zeros on a clean shutdown).
+#[derive(Debug, Clone)]
+pub struct DrainReport {
+    /// admitted requests whose reply was never written before the drain
+    /// timeout expired (0 = every admitted request was answered)
+    pub unreplied_in_flight: u64,
+    /// connections still open when drain stopped waiting
+    pub open_conns: u64,
+    pub took: Duration,
+}
+
+/// A running TCP front end.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local_addr: std::net::SocketAddr,
+    stop_accept: Arc<AtomicBool>,
+    accept_handle: Option<thread::JoinHandle<()>>,
+    stop_tuner: Arc<AtomicBool>,
+    tuner_handle: Option<thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.listen` and start serving `coordinator`'s models.
+    pub fn start(coordinator: Coordinator, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| Error::coordinator(format!("bind {}: {e}", cfg.listen)))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::coordinator(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::coordinator(format!("set_nonblocking: {e}")))?;
+
+        let coordinator = Arc::new(coordinator);
+        let limiter = RateLimiter::new(RateConfig {
+            rate_per_sec: cfg.rate_rps,
+            burst: cfg.effective_burst(),
+            max_clients: 4096,
+        });
+        let shared = Arc::new(Shared {
+            coordinator: Arc::clone(&coordinator),
+            cfg: cfg.clone(),
+            limiter,
+            draining: AtomicBool::new(false),
+            in_flight: std::sync::atomic::AtomicU64::new(0),
+            open_conns: std::sync::atomic::AtomicU64::new(0),
+            counters: Default::default(),
+        });
+
+        let stop_accept = Arc::new(AtomicBool::new(false));
+        let accept_handle = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop_accept);
+            thread::Builder::new()
+                .name("a2q-accept".to_string())
+                .spawn(move || accept_loop(listener, shared, stop))
+                .map_err(|e| Error::coordinator(format!("spawn accept loop: {e}")))?
+        };
+
+        let stop_tuner = Arc::new(AtomicBool::new(false));
+        let tuner_handle = if cfg.target_p99_us > 0 && !coordinator.adaptive_waits().is_empty()
+        {
+            let waits: Vec<_> = coordinator.adaptive_waits().to_vec();
+            let coordinator = Arc::clone(&coordinator);
+            let stop = Arc::clone(&stop_tuner);
+            let target = cfg.target_p99_us as f64;
+            let interval = cfg.tuner_interval;
+            Some(
+                thread::Builder::new()
+                    .name("a2q-batch-tuner".to_string())
+                    .spawn(move || {
+                        while !stop.load(Ordering::SeqCst) {
+                            thread::sleep(interval);
+                            let p99 = coordinator.metrics().p99_latency_us;
+                            for w in &waits {
+                                w.observe_p99_us(p99, target);
+                            }
+                        }
+                    })
+                    .map_err(|e| Error::coordinator(format!("spawn tuner: {e}")))?,
+            )
+        } else {
+            None
+        };
+
+        Ok(NetServer {
+            shared,
+            local_addr,
+            stop_accept,
+            accept_handle: Some(accept_handle),
+            stop_tuner,
+            tuner_handle,
+        })
+    }
+
+    /// The bound address (useful with a `:0` listen config).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// The same metrics body a `Metrics` wire request returns (coordinator
+    /// snapshot plus the net layer's admission counters).
+    pub fn metrics_json(&self) -> crate::util::json::Json {
+        self.shared.metrics_body()
+    }
+
+    /// Graceful shutdown: stop accepting, reject new work on-protocol,
+    /// flush every admitted request's reply, stop the runners.
+    pub fn drain(mut self) -> DrainReport {
+        let started = Instant::now();
+        self.stop_accept.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // wait for every admitted request's reply to be written
+        let deadline = started + self.shared.cfg.drain_timeout;
+        while self.shared.in_flight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        let unreplied = self.shared.in_flight.load(Ordering::SeqCst);
+        // now stop the pipeline: runners drain their queues and exit
+        self.shared.coordinator.begin_shutdown();
+        self.stop_tuner.store(true, Ordering::SeqCst);
+        if let Some(h) = self.tuner_handle.take() {
+            let _ = h.join();
+        }
+        // idle connections notice `draining` within one read poll
+        let conn_deadline = Instant::now() + Duration::from_secs(1);
+        while self.shared.open_conns.load(Ordering::SeqCst) > 0
+            && Instant::now() < conn_deadline
+        {
+            thread::sleep(Duration::from_millis(5));
+        }
+        DrainReport {
+            unreplied_in_flight: unreplied,
+            open_conns: self.shared.open_conns.load(Ordering::SeqCst),
+            took: started.elapsed(),
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // not a graceful drain — just make the background threads exit
+        self.stop_accept.store(true, Ordering::SeqCst);
+        self.stop_tuner.store(true, Ordering::SeqCst);
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, peer)) => {
+                let open = shared.open_conns.load(Ordering::SeqCst);
+                if open >= shared.cfg.max_conns as u64 {
+                    // over the connection cap: still answer on-protocol
+                    // (one rejection frame) instead of a silent close
+                    let (kind, payload) = WireResponse::Rejected {
+                        reason: RejectCode::Overloaded,
+                        message: "connection limit reached".to_string(),
+                        retry_after_ms: 100,
+                    }
+                    .encode();
+                    let _ = write_frame(&mut stream, kind, &payload);
+                    continue;
+                }
+                shared.open_conns.fetch_add(1, Ordering::SeqCst);
+                let shared2 = Arc::clone(&shared);
+                let spawned = thread::Builder::new()
+                    .name("a2q-conn".to_string())
+                    .spawn(move || {
+                        serve_conn(stream, peer, Arc::clone(&shared2));
+                        shared2.open_conns.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    // thread exhaustion: undo the count; the stream drops
+                    // (close) — the client sees a reset, the best we can
+                    // do without a thread to write from
+                    shared.open_conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // transient accept error (EMFILE etc.): back off briefly
+                thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{AdaptiveWait, BatcherConfig};
+    use crate::coordinator::executor::MockExecutor;
+    use crate::coordinator::net::client::{run_load, LoadConfig, NetClient};
+    use crate::coordinator::net::protocol::{WireResponse, PROTOCOL_VERSION};
+
+    fn batcher(queue_cap: usize) -> BatcherConfig {
+        BatcherConfig {
+            node_budget: 64,
+            graph_slots: 8,
+            max_wait: Duration::from_micros(500),
+            queue_cap,
+            adaptive_wait: None,
+        }
+    }
+
+    fn server_with(latency: Duration, queue_cap: usize, cfg: NetConfig) -> NetServer {
+        let mut c = Coordinator::new();
+        c.add_model(
+            "mock",
+            Arc::new(MockExecutor {
+                out_dim: 4,
+                latency,
+            }),
+            batcher(queue_cap),
+        );
+        NetServer::start(c, cfg).unwrap()
+    }
+
+    fn addr_of(s: &NetServer) -> String {
+        format!("{}", s.local_addr())
+    }
+
+    #[test]
+    fn classify_roundtrip_and_ping_over_loopback() {
+        let srv = server_with(Duration::ZERO, 64, NetConfig::default());
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        assert!(matches!(client.ping().unwrap(), WireResponse::Pong));
+        match client.classify("mock", vec![0, 1, 2]).unwrap() {
+            WireResponse::Ok {
+                model, predictions, ..
+            } => {
+                assert_eq!(model, "mock");
+                assert_eq!(predictions.len(), 3);
+                assert_eq!(predictions[1].class, 1);
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        let report = srv.drain();
+        assert_eq!(report.unreplied_in_flight, 0);
+    }
+
+    #[test]
+    fn unknown_model_rejected_on_protocol() {
+        let srv = server_with(Duration::ZERO, 64, NetConfig::default());
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        match client.classify("nope", vec![0]).unwrap() {
+            WireResponse::Rejected {
+                reason, message, ..
+            } => {
+                assert_eq!(reason, super::RejectCode::UnknownModel);
+                assert!(message.contains("nope"));
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        // the connection survives a rejection
+        assert!(matches!(client.ping().unwrap(), WireResponse::Pong));
+        srv.drain();
+    }
+
+    /// The overload contract: at ~10× capacity every request still gets an
+    /// on-protocol reply — some `Ok`, some `Rejected{overloaded}` — and
+    /// the transport never fails.
+    #[test]
+    fn overload_rejects_on_protocol_and_never_hangs() {
+        let srv = server_with(Duration::from_millis(3), 2, NetConfig::default());
+        let report = run_load(
+            &addr_of(&srv),
+            &LoadConfig {
+                conns: 6,
+                requests_per_conn: 15,
+                model: "mock".to_string(),
+                nodes_per_req: 1,
+                node_space: 64,
+                pace: Duration::ZERO,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.sent, 90);
+        assert_eq!(
+            report.ok + report.rejected + report.errors,
+            report.sent,
+            "every request must be answered on-protocol: {report:?}"
+        );
+        assert_eq!(report.io_errors, 0, "no dropped connections: {report:?}");
+        assert!(report.ok > 0, "some requests must succeed: {report:?}");
+        srv.drain();
+    }
+
+    #[test]
+    fn rate_limited_client_gets_retry_hint() {
+        let cfg = NetConfig {
+            rate_rps: 1.0,
+            rate_burst: 1.0,
+            ..NetConfig::default()
+        };
+        let srv = server_with(Duration::ZERO, 64, cfg);
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        assert!(matches!(
+            client.classify("mock", vec![0]).unwrap(),
+            WireResponse::Ok { .. }
+        ));
+        match client.classify("mock", vec![1]).unwrap() {
+            WireResponse::Rejected {
+                reason,
+                retry_after_ms,
+                ..
+            } => {
+                assert_eq!(reason, super::RejectCode::RateLimited);
+                assert!(retry_after_ms >= 1, "retry hint must be actionable");
+            }
+            other => panic!("expected rate-limit rejection, got {other:?}"),
+        }
+        // metrics requests are exempt: operators can always look
+        assert!(client.metrics().is_ok());
+        srv.drain();
+    }
+
+    #[test]
+    fn metrics_endpoint_reports_counters() {
+        let srv = server_with(Duration::from_millis(1), 64, NetConfig::default());
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        for i in 0..5u32 {
+            client.classify("mock", vec![i]).unwrap();
+        }
+        let body = client.metrics().unwrap();
+        assert_eq!(body.req_f64("responses").unwrap(), 5.0);
+        assert!(body.req_f64("p99_latency_us").unwrap() > 0.0);
+        let net = body.req("net").unwrap();
+        assert!(net.req_f64("frames_in").unwrap() >= 5.0);
+        assert_eq!(net.req_f64("replies_ok").unwrap(), 5.0);
+        assert_eq!(net.req_f64("open_conns").unwrap(), 1.0);
+        srv.drain();
+    }
+
+    #[test]
+    fn malformed_frame_gets_error_reply_then_close() {
+        let srv = server_with(Duration::ZERO, 64, NetConfig::default());
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        // declared length 1 violates the 2-byte minimum
+        let mut bad = 1u32.to_be_bytes().to_vec();
+        bad.push(PROTOCOL_VERSION);
+        client.send_raw(&bad).unwrap();
+        match client.read_reply().unwrap() {
+            Some(WireResponse::Error { message }) => {
+                assert!(message.contains("length"), "undescriptive: {message}");
+            }
+            other => panic!("expected an error reply, got {other:?}"),
+        }
+        // framing is lost → the server closes
+        assert!(matches!(client.read_reply(), Ok(None) | Err(_)));
+        srv.drain();
+    }
+
+    #[test]
+    fn version_mismatch_answered_then_closed() {
+        let srv = server_with(Duration::ZERO, 64, NetConfig::default());
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        // hand-build a frame with a bogus version byte
+        let mut raw = 2u32.to_be_bytes().to_vec();
+        raw.extend_from_slice(&[PROTOCOL_VERSION + 1, 0x05]);
+        client.send_raw(&raw).unwrap();
+        match client.read_reply().unwrap() {
+            Some(WireResponse::Error { message }) => {
+                assert!(
+                    message.contains("version mismatch")
+                        && message.contains(&format!("{PROTOCOL_VERSION}")),
+                    "must name the supported version: {message}"
+                );
+            }
+            other => panic!("expected version error, got {other:?}"),
+        }
+        assert!(matches!(client.read_reply(), Ok(None) | Err(_)));
+        srv.drain();
+    }
+
+    /// The drain contract: requests in flight when drain starts still get
+    /// their replies; new work is refused on-protocol.
+    #[test]
+    fn drain_replies_to_in_flight_and_refuses_new_work() {
+        let srv = server_with(Duration::from_millis(40), 64, NetConfig::default());
+        let addr = addr_of(&srv);
+        let worker = {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut client = NetClient::connect(addr).unwrap();
+                client.classify("mock", vec![0]).unwrap()
+            })
+        };
+        // let the request get admitted, then drain while it executes
+        thread::sleep(Duration::from_millis(10));
+        let report = srv.drain();
+        assert_eq!(
+            report.unreplied_in_flight, 0,
+            "drain lost admitted replies: {report:?}"
+        );
+        match worker.join().unwrap() {
+            WireResponse::Ok { .. } | WireResponse::Rejected { .. } => {}
+            other => panic!("in-flight request got {other:?}"),
+        }
+        // the listener is gone: new connections are refused outright
+        assert!(NetClient::connect(addr).is_err());
+    }
+
+    /// End-to-end adaptive batching: under latency pressure the tuner
+    /// shrinks the shared flush deadline.
+    #[test]
+    fn tuner_shrinks_adaptive_wait_under_pressure() {
+        let wait = AdaptiveWait::new(
+            Duration::from_millis(5),
+            Duration::from_micros(100),
+            Duration::from_millis(5),
+        );
+        let mut bc = batcher(64);
+        bc.adaptive_wait = Some(wait.clone());
+        let mut c = Coordinator::new();
+        c.add_model(
+            "mock",
+            Arc::new(MockExecutor {
+                out_dim: 4,
+                latency: Duration::from_millis(2),
+            }),
+            bc,
+        );
+        let cfg = NetConfig {
+            target_p99_us: 1, // everything is over target
+            tuner_interval: Duration::from_millis(20),
+            ..NetConfig::default()
+        };
+        let srv = NetServer::start(c, cfg).unwrap();
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        let before = wait.current();
+        for i in 0..10u32 {
+            client.classify("mock", vec![i]).unwrap();
+            thread::sleep(Duration::from_millis(10));
+        }
+        let after = wait.current();
+        assert!(
+            after < before,
+            "tuner never reacted: before={before:?} after={after:?}"
+        );
+        srv.drain();
+    }
+
+    #[test]
+    fn draining_rejection_is_explicit() {
+        let srv = server_with(Duration::ZERO, 64, NetConfig::default());
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        // flip the drain flag directly (the connection stays open for one
+        // more poll interval, long enough to observe the rejection)
+        srv.shared.draining.store(true, Ordering::SeqCst);
+        match client.classify("mock", vec![0]).unwrap() {
+            WireResponse::Rejected {
+                reason,
+                retry_after_ms,
+                ..
+            } => {
+                assert_eq!(reason, super::RejectCode::Draining);
+                assert!(retry_after_ms >= 1);
+            }
+            other => panic!("expected draining rejection, got {other:?}"),
+        }
+        srv.drain();
+    }
+
+    #[test]
+    fn connection_cap_rejects_on_protocol() {
+        let cfg = NetConfig {
+            max_conns: 1,
+            ..NetConfig::default()
+        };
+        let srv = server_with(Duration::ZERO, 64, cfg);
+        let mut first = NetClient::connect(addr_of(&srv)).unwrap();
+        assert!(matches!(first.ping().unwrap(), WireResponse::Pong));
+        // second connection: accepted at TCP level, answered with one
+        // overloaded rejection frame, then closed
+        let mut second = NetClient::connect(addr_of(&srv)).unwrap();
+        match second.read_reply().unwrap() {
+            Some(WireResponse::Rejected { reason, .. }) => {
+                assert_eq!(reason, super::RejectCode::Overloaded);
+            }
+            other => panic!("expected overloaded rejection, got {other:?}"),
+        }
+        assert!(matches!(second.read_reply(), Ok(None) | Err(_)));
+        // the first connection is unaffected
+        assert!(matches!(first.ping().unwrap(), WireResponse::Pong));
+        srv.drain();
+    }
+}

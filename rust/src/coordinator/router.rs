@@ -3,9 +3,55 @@
 use std::collections::HashMap;
 use std::sync::mpsc;
 
-use crate::error::{Error, Result};
+use crate::error::Error;
 
 use super::request::Request;
+
+/// Why the router refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// no runner registered under that model name
+    UnknownModel,
+    /// the model's bounded queue is full (overload backpressure)
+    QueueFull,
+    /// the runner's receiving end is gone (shutdown/drain in progress)
+    Stopped,
+}
+
+impl RejectReason {
+    /// Stable lowercase tag (used by the wire protocol's rejection replies).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::UnknownModel => "unknown_model",
+            RejectReason::QueueFull => "overloaded",
+            RejectReason::Stopped => "stopped",
+        }
+    }
+}
+
+/// A refused admission.  Carries the whole [`Request`] back — including its
+/// reply channel — so the caller can answer the client explicitly (an
+/// on-channel error, or an on-protocol rejection frame at the net layer)
+/// instead of silently dropping the reply sender.
+#[derive(Debug)]
+pub struct Rejected {
+    pub request: Request,
+    pub reason: RejectReason,
+}
+
+impl Rejected {
+    /// The legacy error shape (`submit` returns this when the caller does
+    /// not want the request back).
+    pub fn into_error(self) -> Error {
+        match self.reason {
+            RejectReason::UnknownModel => {
+                Error::coordinator(format!("unknown model '{}'", self.request.model))
+            }
+            RejectReason::QueueFull => Error::coordinator("queue full"),
+            RejectReason::Stopped => Error::coordinator("runner stopped"),
+        }
+    }
+}
 
 /// Routes requests to per-model bounded queues.
 pub struct Router {
@@ -32,19 +78,27 @@ impl Router {
         v
     }
 
-    /// Route a request.  `Err` carries the request back on unknown model or
-    /// full queue (the caller decides how to reply).
-    pub fn route(&self, req: Request) -> Result<()> {
-        let q = self.queues.get(&req.model).ok_or_else(|| {
-            Error::coordinator(format!("unknown model '{}'", req.model))
-        })?;
-        q.try_send(req)
-            .map_err(|e| match e {
-                mpsc::TrySendError::Full(_) => Error::coordinator("queue full"),
-                mpsc::TrySendError::Disconnected(_) => {
-                    Error::coordinator("runner stopped")
-                }
-            })
+    /// Route a request.  The `Err` variant carries the request back —
+    /// reply channel included — on unknown model, full queue, or stopped
+    /// runner, so the caller decides how to reply (it is never silently
+    /// dropped here).
+    pub fn route(&self, req: Request) -> std::result::Result<(), Rejected> {
+        let Some(q) = self.queues.get(&req.model) else {
+            return Err(Rejected {
+                request: req,
+                reason: RejectReason::UnknownModel,
+            });
+        };
+        q.try_send(req).map_err(|e| match e {
+            mpsc::TrySendError::Full(request) => Rejected {
+                request,
+                reason: RejectReason::QueueFull,
+            },
+            mpsc::TrySendError::Disconnected(request) => Rejected {
+                request,
+                reason: RejectReason::Stopped,
+            },
+        })
     }
 }
 
@@ -58,16 +112,26 @@ impl Default for Router {
 mod tests {
     use super::*;
     use crate::coordinator::request::Payload;
+    use crate::error::Result;
     use std::time::Instant;
 
     fn req(model: &str) -> Request {
-        let (tx, _rx) = mpsc::channel();
-        Request {
-            model: model.into(),
-            payload: Payload::ClassifyNodes(vec![0]),
-            enqueued: Instant::now(),
-            reply: tx,
-        }
+        req_with_rx(model).0
+    }
+
+    fn req_with_rx(
+        model: &str,
+    ) -> (Request, mpsc::Receiver<Result<super::super::request::Response>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                model: model.into(),
+                payload: Payload::ClassifyNodes(vec![0]),
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
     }
 
     #[test]
@@ -79,9 +143,12 @@ mod tests {
     }
 
     #[test]
-    fn unknown_model_rejected() {
+    fn unknown_model_rejected_with_request_back() {
         let r = Router::new();
-        assert!(r.route(req("nope")).is_err());
+        let rej = r.route(req("nope")).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::UnknownModel);
+        assert_eq!(rej.request.model, "nope");
+        assert!(format!("{}", rej.into_error()).contains("unknown model 'nope'"));
     }
 
     #[test]
@@ -89,8 +156,39 @@ mod tests {
         let mut r = Router::new();
         let _rx = r.register("gcn", 1);
         r.route(req("gcn")).unwrap();
-        let err = r.route(req("gcn")).unwrap_err();
-        assert!(format!("{err}").contains("queue full"));
+        let rej = r.route(req("gcn")).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::QueueFull);
+        assert!(format!("{}", rej.into_error()).contains("queue full"));
+    }
+
+    /// Regression: the rejection must carry the reply channel back so the
+    /// caller can answer the client on-channel (the old signature dropped
+    /// the request, so an overloaded client's receiver just disconnected).
+    #[test]
+    fn rejection_carries_reply_channel_for_on_channel_reply() {
+        let mut r = Router::new();
+        let _queue_rx = r.register("gcn", 1);
+        r.route(req("gcn")).unwrap();
+        let (second, client_rx) = req_with_rx("gcn");
+        let rej = r.route(second).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::QueueFull);
+        // the caller replies explicitly instead of dropping the sender
+        rej.request
+            .reply
+            .send(Err(Error::coordinator("overloaded, retry later")))
+            .unwrap();
+        let got = client_rx.try_recv().unwrap().unwrap_err();
+        assert!(format!("{got}").contains("overloaded, retry later"));
+    }
+
+    #[test]
+    fn stopped_runner_reported_as_stopped() {
+        let mut r = Router::new();
+        let rx = r.register("gcn", 1);
+        drop(rx);
+        let rej = r.route(req("gcn")).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::Stopped);
+        assert_eq!(rej.reason.as_str(), "stopped");
     }
 
     #[test]

@@ -14,17 +14,17 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 
-use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::batcher::{AdaptiveWait, BatcherConfig, DynamicBatcher};
 use super::executor::BatchExecutor;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{Payload, Prediction, Request, Response};
-use super::router::Router;
+use super::router::{Rejected, Router};
 
 /// Coordinator-level configuration.
 #[derive(Debug, Clone, Default)]
@@ -34,20 +34,39 @@ pub struct CoordinatorConfig {
 
 /// The serving front end.
 pub struct Coordinator {
-    router: Router,
+    // RwLock so a shared handle (the net front end holds Arc<Coordinator>)
+    // can initiate drain: begin_shutdown swaps in an empty router, which
+    // closes every runner queue.  The read path (submit) never blocks on
+    // another reader.
+    router: RwLock<Router>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    /// live tuning handles of models configured with an adaptive wait
+    adaptive: Vec<AdaptiveWait>,
     handles: Vec<thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
     pub fn new() -> Coordinator {
         Coordinator {
-            router: Router::new(),
+            router: RwLock::new(Router::new()),
             metrics: Arc::new(Metrics::default()),
             stop: Arc::new(AtomicBool::new(false)),
+            adaptive: Vec::new(),
             handles: Vec::new(),
         }
+    }
+
+    fn router_read(&self) -> std::sync::RwLockReadGuard<'_, Router> {
+        // a2q-lint: allow(panic-path) routing never panics while holding
+        // the lock, so poisoning would itself be a prior bug
+        self.router.read().unwrap()
+    }
+
+    fn router_write(&self) -> std::sync::RwLockWriteGuard<'_, Router> {
+        // a2q-lint: allow(panic-path) registration/drain never panic while
+        // holding the lock, so poisoning would itself be a prior bug
+        self.router.write().unwrap()
     }
 
     /// Register a model: spawns its runner thread.
@@ -57,7 +76,10 @@ impl Coordinator {
         executor: Arc<dyn BatchExecutor>,
         cfg: BatcherConfig,
     ) {
-        let rx = self.router.register(name, cfg.queue_cap);
+        let rx = self.router_write().register(name, cfg.queue_cap);
+        if let Some(w) = &cfg.adaptive_wait {
+            self.adaptive.push(w.clone());
+        }
         let metrics = Arc::clone(&self.metrics);
         let stop = Arc::clone(&self.stop);
         let name_owned = name.to_string();
@@ -72,7 +94,41 @@ impl Coordinator {
     }
 
     pub fn models(&self) -> Vec<String> {
-        self.router.models()
+        self.router_read().models()
+    }
+
+    /// Tuning handles of every model registered with an adaptive flush
+    /// deadline (the net front end's p99 tuner feeds them).
+    pub fn adaptive_waits(&self) -> &[AdaptiveWait] {
+        &self.adaptive
+    }
+
+    /// Submit a request; on rejection the [`Rejected`] carries the request
+    /// — reply channel included — back to the caller, so a front end can
+    /// answer the client explicitly (on-protocol rejection frame) instead
+    /// of dropping the connection.
+    pub fn try_submit(
+        &self,
+        model: &str,
+        payload: Payload,
+    ) -> std::result::Result<mpsc::Receiver<Result<Response>>, Rejected> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            model: model.to_string(),
+            payload,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        match self.router_read().route(req) {
+            Ok(()) => {
+                self.metrics.record_admitted();
+                Ok(rx)
+            }
+            Err(rej) => {
+                self.metrics.record_rejected();
+                Err(rej)
+            }
+        }
     }
 
     /// Submit a request; returns the reply receiver.
@@ -81,23 +137,7 @@ impl Coordinator {
         model: &str,
         payload: Payload,
     ) -> Result<mpsc::Receiver<Result<Response>>> {
-        let (tx, rx) = mpsc::channel();
-        let req = Request {
-            model: model.to_string(),
-            payload,
-            enqueued: Instant::now(),
-            reply: tx,
-        };
-        match self.router.route(req) {
-            Ok(()) => {
-                self.metrics.record_admitted();
-                Ok(rx)
-            }
-            Err(e) => {
-                self.metrics.record_rejected();
-                Err(e)
-            }
-        }
+        self.try_submit(model, payload).map_err(|r| r.into_error())
     }
 
     /// Submit and wait for the reply.
@@ -111,11 +151,28 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Stop all runners and join them.
-    pub fn shutdown(mut self) {
+    /// The shared metrics sink (the net front end counts its own
+    /// admission-layer rejections here too, so `/metrics` sees them).
+    pub(crate) fn metrics_ref(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Initiate drain from a shared handle: stop admitting and close every
+    /// runner queue.  Runners finish what was already admitted — recv
+    /// yields the buffered backlog before reporting disconnect — flush
+    /// their batchers, reply to every request, and exit.  New submits are
+    /// rejected as unknown-model/stopped.
+    pub fn begin_shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        // dropping the router closes the queues, waking runners
-        self.router = Router::new();
+        // swapping in an empty router drops the queue senders, which wakes
+        // runners with Disconnected once the backlog is drained
+        *self.router_write() = Router::new();
+    }
+
+    /// Stop all runners and join them (drains: every admitted request is
+    /// answered before the runner exits).
+    pub fn shutdown(mut self) {
+        self.begin_shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -145,10 +202,13 @@ fn runner_loop(
     let mut batcher = DynamicBatcher::new(cfg.clone());
     let poll = cfg.max_wait.min(Duration::from_millis(1)).max(Duration::from_micros(100));
     let mut disconnected = false;
+    // Drain contract: the runner exits only once its queue has reported
+    // Disconnected (mpsc yields the buffered backlog first) AND the batcher
+    // is empty — so every admitted request is answered, never silently
+    // dropped.  `stop` alone never breaks the loop: an early exit on stop
+    // used to strand requests still sitting in the router queue, whose
+    // clients then saw "runner dropped reply" instead of a real answer.
     loop {
-        if stop.load(Ordering::SeqCst) && batcher.pending_len() == 0 {
-            break;
-        }
         // pull what's available, bounded wait to honour deadlines.  The
         // router already admitted everything arriving here (its bounded
         // queue is the single backpressure point), so the batcher never
@@ -240,6 +300,11 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Metrics) {
     metrics.record_batch(batch.len());
     let batch_size = batch.len();
+    // Queue wait is measured from admission to *batch* execution start.
+    // `exec_us` is per-sub-batch, so deriving queue time as latency − exec
+    // (the old scheme) charged requests in a later sub-batch for the
+    // earlier sub-batch's execution as if it were queueing.
+    let batch_start = Instant::now();
     // Resident-graph updates: the batcher flushes them as singleton
     // batches (ordering barriers), so this partition normally yields the
     // whole batch or nothing; handling it generically keeps a misbehaving
@@ -260,7 +325,7 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
                     report.shards_touched as u64,
                     report.halo_nodes as u64,
                 );
-                respond(req, Vec::new(), batch_size, exec_us, metrics);
+                respond(req, Vec::new(), batch_size, batch_start, exec_us, metrics);
             }
             Err(e) => fail_all(vec![req], e, metrics),
         }
@@ -281,13 +346,29 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
         let result = run_caught(|| executor.run_node_batch(&all_ids));
         let exec_us = t0.elapsed().as_micros() as u64;
         match result {
+            // Executor output counts are untrusted: a short (or long)
+            // return used to panic the slicing below *outside* run_caught,
+            // killing the runner thread — that model then answered "runner
+            // stopped" forever.  Fail the sub-batch with a descriptive
+            // error instead; the runner keeps serving.
+            Ok(outputs) if outputs.len() != all_ids.len() => {
+                let got = outputs.len();
+                fail_all(
+                    classify,
+                    Error::coordinator(format!(
+                        "executor returned {got} outputs for {} queried nodes",
+                        all_ids.len()
+                    )),
+                    metrics,
+                );
+            }
             Ok(outputs) => {
                 for (req, (lo, len)) in classify.into_iter().zip(spans) {
                     let preds = outputs[lo..lo + len]
                         .iter()
                         .map(|o| Prediction::from_logits(o.clone()))
                         .collect();
-                    respond(req, preds, batch_size, exec_us, metrics);
+                    respond(req, preds, batch_size, batch_start, exec_us, metrics);
                 }
             }
             Err(e) => fail_all(classify, e, metrics),
@@ -302,14 +383,30 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
                 _ => None,
             })
             .collect();
+        let want = graphs.len();
         let t0 = Instant::now();
         let result = run_caught(|| executor.run_graph_batch(&graphs));
         let exec_us = t0.elapsed().as_micros() as u64;
         match result {
+            // Same untrusted-count rule as the classify path, with the
+            // opposite failure mode: `zip` silently truncated to the
+            // shorter side, so short output dropped the tail requests'
+            // reply senders and their blocked clients saw only a generic
+            // "runner dropped reply".  Fail the whole sub-batch loudly.
+            Ok(outputs) if outputs.len() != want => {
+                let got = outputs.len();
+                fail_all(
+                    predict,
+                    Error::coordinator(format!(
+                        "executor returned {got} outputs for {want} graphs"
+                    )),
+                    metrics,
+                );
+            }
             Ok(outputs) => {
                 for (req, out) in predict.into_iter().zip(outputs) {
                     let preds = vec![Prediction::from_logits(out)];
-                    respond(req, preds, batch_size, exec_us, metrics);
+                    respond(req, preds, batch_size, batch_start, exec_us, metrics);
                 }
             }
             Err(e) => fail_all(predict, e, metrics),
@@ -321,12 +418,13 @@ fn respond(
     req: Request,
     predictions: Vec<Prediction>,
     batch_size: usize,
-    _exec_us: u64,
+    batch_start: Instant,
+    exec_us: u64,
     metrics: &Metrics,
 ) {
     let latency_us = req.enqueued.elapsed().as_micros() as u64;
-    let queue_us = latency_us.saturating_sub(_exec_us);
-    metrics.record_response(latency_us, queue_us);
+    let queue_us = batch_start.saturating_duration_since(req.enqueued).as_micros() as u64;
+    metrics.record_response(latency_us, queue_us, exec_us);
     let model = req.model.clone();
     let _ = req.reply.send(Ok(Response {
         predictions,
@@ -359,6 +457,7 @@ mod tests {
             graph_slots: 4,
             max_wait: Duration::from_millis(2),
             queue_cap: 64,
+            adaptive_wait: None,
         }
     }
 
@@ -554,6 +653,191 @@ mod tests {
         // no stray duplicate replies on either channel
         assert!(crx.try_recv().is_err());
         assert!(prx.try_recv().is_err());
+    }
+
+    /// Misbehaving executor: always returns one output fewer than asked —
+    /// the untrusted-output-count failure the validation guards against.
+    struct ShortOutputExecutor;
+
+    impl BatchExecutor for ShortOutputExecutor {
+        fn run_node_batch(&self, node_ids: &[u32]) -> crate::error::Result<Vec<Vec<f32>>> {
+            Ok(node_ids.iter().skip(1).map(|_| vec![1.0, 0.0]).collect())
+        }
+        fn run_graph_batch(
+            &self,
+            graphs: &[&SmallGraph],
+        ) -> crate::error::Result<Vec<Vec<f32>>> {
+            Ok(graphs.iter().skip(1).map(|_| vec![1.0, 0.0]).collect())
+        }
+        fn capacity(&self) -> (usize, usize) {
+            (1024, 16)
+        }
+        fn out_dim(&self) -> usize {
+            2
+        }
+    }
+
+    /// Regression (classify path): a short executor return used to panic
+    /// `outputs[lo..lo + len]` outside `run_caught`, permanently killing
+    /// the runner — every later submit to that model answered "runner
+    /// stopped".  Now the sub-batch fails with a descriptive error and the
+    /// runner keeps serving.
+    #[test]
+    fn short_classify_output_fails_batch_but_runner_survives() {
+        let mut c = Coordinator::new();
+        c.add_model("short", Arc::new(ShortOutputExecutor), batcher_cfg());
+        let err = c
+            .submit_blocking("short", Payload::ClassifyNodes(vec![0, 1]))
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(
+            msg.contains("outputs") && msg.contains("queried nodes"),
+            "want a descriptive count-mismatch error, got: {msg}"
+        );
+        // the runner survived: the next request is answered (with the same
+        // descriptive error — the executor is still short), not hung on a
+        // dead queue
+        let err2 = c
+            .submit_blocking("short", Payload::ClassifyNodes(vec![2]))
+            .unwrap_err();
+        assert!(format!("{err2}").contains("queried nodes"));
+        let snap = c.metrics();
+        assert_eq!(snap.responses, 0);
+        assert!(snap.errors >= 2, "both requests must count as errors");
+        c.shutdown();
+    }
+
+    /// Regression (predict path): `zip` truncation silently dropped the
+    /// tail requests' reply senders, so their clients only ever saw a
+    /// generic "runner dropped reply".  Both requests of the sub-batch
+    /// must now receive the descriptive count-mismatch error.
+    #[test]
+    fn short_predict_output_fails_every_request_in_the_sub_batch() {
+        let metrics = Metrics::default();
+        let mk = || {
+            let (tx, rx) = mpsc::channel();
+            (
+                Request {
+                    model: "m".into(),
+                    payload: Payload::PredictGraph(SmallGraph {
+                        csr: Csr::from_edges(2, &[(0, 1)]).unwrap(),
+                        features: vec![0.0; 4],
+                        target_class: 0,
+                        target_value: 0.0,
+                    }),
+                    enqueued: Instant::now(),
+                    reply: tx,
+                },
+                rx,
+            )
+        };
+        let (r1, rx1) = mk();
+        let (r2, rx2) = mk();
+        execute_batch_isolated(vec![r1, r2], &ShortOutputExecutor, &metrics);
+        for rx in [rx1, rx2] {
+            let err = rx
+                .try_recv()
+                .expect("reply sender dropped — client would hang on a generic disconnect")
+                .unwrap_err();
+            assert!(format!("{err}").contains("graphs"), "got: {err}");
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.errors, 2);
+        assert_eq!(snap.responses, 0);
+    }
+
+    /// Classify executes slowly before the fast predict sub-batch of the
+    /// same admission batch.  Queue wait is admission → *batch* start, so
+    /// the predict request must not be charged the classify sub-batch's
+    /// execution as queueing (the old latency − own-exec derivation did).
+    #[test]
+    fn queue_time_excludes_sibling_sub_batch_execution() {
+        struct SlowClassifyExecutor;
+        impl BatchExecutor for SlowClassifyExecutor {
+            fn run_node_batch(&self, node_ids: &[u32]) -> crate::error::Result<Vec<Vec<f32>>> {
+                thread::sleep(Duration::from_millis(20));
+                Ok(node_ids.iter().map(|_| vec![1.0, 0.0]).collect())
+            }
+            fn run_graph_batch(
+                &self,
+                graphs: &[&SmallGraph],
+            ) -> crate::error::Result<Vec<Vec<f32>>> {
+                Ok(graphs.iter().map(|_| vec![1.0, 0.0]).collect())
+            }
+            fn capacity(&self) -> (usize, usize) {
+                (1024, 16)
+            }
+            fn out_dim(&self) -> usize {
+                2
+            }
+        }
+        let metrics = Metrics::default();
+        let (ctx, _crx) = mpsc::channel();
+        let classify = Request {
+            model: "m".into(),
+            payload: Payload::ClassifyNodes(vec![0]),
+            enqueued: Instant::now(),
+            reply: ctx,
+        };
+        let (ptx, prx) = mpsc::channel();
+        let predict = Request {
+            model: "m".into(),
+            payload: Payload::PredictGraph(SmallGraph {
+                csr: Csr::from_edges(2, &[(0, 1)]).unwrap(),
+                features: vec![0.0; 4],
+                target_class: 0,
+                target_value: 0.0,
+            }),
+            enqueued: Instant::now(),
+            reply: ptx,
+        };
+        execute_batch_isolated(vec![classify, predict], &SlowClassifyExecutor, &metrics);
+        assert!(prx.try_recv().unwrap().is_ok());
+        let snap = metrics.snapshot();
+        // both requests entered execution immediately after formation: the
+        // worst queue wait must be far below the classify sub-batch's
+        // 20 ms execution (pre-fix the predict request recorded ~20 ms)
+        assert!(
+            snap.p99_queue_us < 10_000.0,
+            "sibling sub-batch execution leaked into queue wait: p99_queue={}µs",
+            snap.p99_queue_us
+        );
+    }
+
+    /// Drain contract: once a request is admitted, shutdown must answer it
+    /// — never drop it from the queue on the way out.
+    #[test]
+    fn drain_replies_to_every_admitted_request() {
+        let mut c = Coordinator::new();
+        c.add_model(
+            "mock",
+            Arc::new(MockExecutor {
+                out_dim: 2,
+                latency: Duration::from_micros(300),
+            }),
+            batcher_cfg(),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..40u32 {
+            if let Ok(rx) = c.submit("mock", Payload::ClassifyNodes(vec![i % 64])) {
+                rxs.push(rx);
+            }
+        }
+        let admitted = rxs.len();
+        assert!(admitted > 0);
+        // shared-handle drain path (what the net front end uses), then the
+        // owning join
+        c.begin_shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx
+                .recv_timeout(Duration::from_secs(2))
+                .unwrap_or_else(|_| panic!("admitted request {i}/{admitted} lost its reply"));
+            assert!(out.is_ok(), "admitted request {i} errored during drain");
+        }
+        assert_eq!(c.metrics().responses as usize, admitted);
+        // a submit after drain started is rejected, not hung
+        assert!(c.submit("mock", Payload::ClassifyNodes(vec![0])).is_err());
+        c.shutdown();
     }
 
     #[test]

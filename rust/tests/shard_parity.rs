@@ -544,6 +544,7 @@ fn soak_sharded_executor_under_mixed_load() {
             graph_slots: 8,
             max_wait: Duration::from_micros(200),
             queue_cap: 4,
+            ..BatcherConfig::default()
         },
     );
     let c = Arc::new(c);
