@@ -1,0 +1,165 @@
+//! Bench: the cost of durability on the dynamic-graph serving path.
+//!
+//! Three questions, answered in `BENCH_durability.json`:
+//!
+//! 1. What does WAL logging add to `apply_delta`?  The same toggling
+//!    delta is applied with no persistence, with a WAL left to the OS
+//!    (`fsync = never`), and with per-append fsync (`fsync = always`) —
+//!    the gap between the first two is the logging overhead, the gap to
+//!    the third is the price of surviving power loss.
+//! 2. How fast is recovery, and how does it scale with the WAL tail?
+//!    Restart time is measured against 16- and 64-record logs.
+//! 3. What does a snapshot rotation cost on a resident session?
+//!
+//! `--quick` (CI) shrinks sample budgets to a smoke test.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use a2q::coordinator::{synthetic_node_session, NativeExecutor};
+use a2q::graph::delta::GraphDelta;
+use a2q::runtime::{FsyncPolicy, PersistConfig};
+use a2q::util::bench::{BenchConfig, BenchRunner};
+use a2q::util::threadpool::ParallelConfig;
+
+const NODES: usize = 128;
+const SEED: u64 = 11;
+
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("a2q_bench_dur_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn executor() -> NativeExecutor {
+    let (model, ds) = synthetic_node_session(NODES, SEED).expect("synthetic session");
+    NativeExecutor::new(model, Some(&ds))
+        .expect("executor")
+        .with_parallelism(ParallelConfig::serial())
+}
+
+/// Alternating add/remove of one edge: every apply is a real CSR + plan
+/// repair, and the resident graph never drifts from its starting size.
+fn toggle(i: u64) -> GraphDelta {
+    let edge = vec![(2u32, 100u32), (100, 2)];
+    if i % 2 == 0 {
+        GraphDelta {
+            add_edges: edge,
+            ..Default::default()
+        }
+    } else {
+        GraphDelta {
+            remove_edges: edge,
+            ..Default::default()
+        }
+    }
+}
+
+/// Time `apply_delta` with the given persistence setup (`None` = volatile).
+fn bench_apply(
+    runner: &mut BenchRunner,
+    name: &str,
+    persist: Option<(PathBuf, FsyncPolicy)>,
+) -> f64 {
+    let exec = executor();
+    let (exec, dir) = match persist {
+        None => (exec, None),
+        Some((dir, fsync)) => {
+            let mut cfg = PersistConfig::new(&dir);
+            cfg.snapshot_every = 0; // isolate append cost from rotation
+            cfg.fsync = fsync;
+            let (exec, _) = exec.with_persistence(cfg).expect("attach persistence");
+            (exec, Some(dir))
+        }
+    };
+    let mut i = 0u64;
+    let median = runner
+        .bench(name, || {
+            exec.apply_delta(&toggle(i)).expect("apply delta");
+            i += 1;
+        })
+        .median_ns();
+    if let Some(dir) = dir {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    median
+}
+
+/// Build a state dir whose WAL holds exactly `records` toggling deltas.
+fn seed_wal(dir: &Path, records: u64) {
+    let mut cfg = PersistConfig::new(dir);
+    cfg.snapshot_every = 0;
+    cfg.fsync = FsyncPolicy::Never;
+    let (exec, _) = executor().with_persistence(cfg).expect("attach persistence");
+    for i in 0..records {
+        exec.apply_delta(&toggle(i)).expect("seed delta");
+    }
+}
+
+fn main() {
+    let quick = BenchConfig::quick_requested();
+    let mut runner = BenchRunner::new(BenchConfig::from_args());
+
+    // 1. WAL append overhead on the apply path
+    let base = bench_apply(&mut runner, "durability/apply_delta/no_wal", None);
+    let wal = bench_apply(
+        &mut runner,
+        "durability/apply_delta/wal_fsync_never",
+        Some((state_dir("never"), FsyncPolicy::Never)),
+    );
+    bench_apply(
+        &mut runner,
+        "durability/apply_delta/wal_fsync_always",
+        Some((state_dir("always"), FsyncPolicy::Always)),
+    );
+    runner.report_metric(
+        "durability/wal_overhead_frac",
+        (wal - base) / base.max(1.0),
+        "apply_delta slowdown from WAL logging (fsync=never vs none)",
+    );
+
+    // 2. recovery time vs WAL length: replay is the dominant term, so the
+    //    restart cost should scale roughly linearly in the tail
+    let reps = if quick { 3 } else { 10 };
+    for records in [16u64, 64] {
+        let dir = state_dir(&format!("recov_{records}"));
+        seed_wal(&dir, records);
+        let mut times_ms = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let exec = executor();
+            let cfg = PersistConfig::new(&dir);
+            let start = Instant::now();
+            let (_exec, report) = exec.with_persistence(cfg).expect("recover");
+            times_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            assert_eq!(report.replayed_deltas, records as usize, "full replay");
+        }
+        times_ms.sort_by(|a, b| a.total_cmp(b));
+        runner.report_metric(
+            &format!("durability/recovery_ms/wal_{records}"),
+            times_ms[times_ms.len() / 2],
+            "ms to restore + replay (median)",
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // 3. snapshot rotation cost: cadence 1 makes every apply pay a full
+    //    capture + install, so the delta vs the no-wal baseline is the
+    //    per-snapshot price
+    {
+        let dir = state_dir("rotate");
+        let mut cfg = PersistConfig::new(&dir);
+        cfg.snapshot_every = 1;
+        cfg.fsync = FsyncPolicy::Never;
+        let (exec, _) = executor().with_persistence(cfg).expect("attach persistence");
+        let mut i = 0u64;
+        runner.bench("durability/apply_delta/snapshot_every_1", || {
+            exec.apply_delta(&toggle(i)).expect("apply delta");
+            i += 1;
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    runner
+        .write_json(Path::new("BENCH_durability.json"))
+        .expect("write BENCH_durability.json");
+}

@@ -14,10 +14,11 @@ use std::time::Duration;
 
 use a2q::coordinator::net::NetConfig;
 use a2q::coordinator::{
-    AdaptiveWait, BatcherConfig, Coordinator, MockExecutor, NetServer, PjrtExecutor,
+    synthetic_node_session, AdaptiveWait, BatcherConfig, Coordinator, MockExecutor,
+    NativeExecutor, NetServer, PjrtExecutor,
 };
 use a2q::error::Result;
-use a2q::runtime::{ArtifactIndex, EngineHandle};
+use a2q::runtime::{ArtifactIndex, EngineHandle, PersistConfig};
 use a2q::util::cli::{App, CommandSpec};
 use a2q::util::json::Json;
 
@@ -29,6 +30,19 @@ fn app() -> App {
             .opt("artifact", "", "serve this AOT artifact instead of the mock")
             .opt("mock-latency-us", "200", "mock executor latency (us)")
             .opt("out-dim", "8", "mock executor output dimension")
+            .opt(
+                "synthetic",
+                "0",
+                "serve a deterministic native session over a synthetic graph \
+                 of this many nodes (durable-state / crash-recovery testing)",
+            )
+            .opt("synthetic-seed", "42", "seed of the synthetic session")
+            .opt(
+                "state-dir",
+                "",
+                "durable state directory for the synthetic session \
+                 (overrides A2Q_STATE_DIR; restore runs before listening)",
+            )
             .opt("max-wait-us", "500", "batcher flush deadline (us)")
             .opt("queue-cap", "256", "admission queue depth per model")
             .opt("rate-rps", "-1", "per-client rate limit (overrides A2Q_RATE_RPS)")
@@ -96,7 +110,39 @@ fn run(m: a2q::util::cli::Matches) -> Result<()> {
 
     let mut coord = Coordinator::new();
     let artifact_name = m.req("artifact")?;
-    let model_name = if artifact_name.is_empty() {
+    let synthetic = m.get_usize("synthetic")?;
+    let model_name = if synthetic > 0 {
+        // deterministic native session: same (n, seed) ⇒ bitwise-identical
+        // logits across processes, which is what the crash-recovery CI leg
+        // asserts across a kill -9 and restart
+        let seed = m.get_usize("synthetic-seed")? as u64;
+        let (model, ds) = synthetic_node_session(synthetic, seed)?;
+        let name = model.name.clone();
+        let mut exec = NativeExecutor::new(model, Some(&ds))?;
+        let state_dir = m.req("state-dir")?;
+        if let Some(pcfg) = PersistConfig::from_env_with_dir(Some(state_dir))? {
+            // restore-then-listen: recovery replay finishes (or fails
+            // loudly) before the first connection is accepted
+            let dir = pcfg.dir.display().to_string();
+            let (restored, report) = exec.with_persistence(pcfg)?;
+            exec = restored;
+            println!(
+                "a2q-serve: durable state at {dir}: snapshot restored={} \
+                 (epoch {}), replayed {} wal record(s), dropped {} torn byte(s){}",
+                report.restored_snapshot,
+                report.snapshot_epoch,
+                report.replayed_deltas,
+                report.dropped_bytes,
+                report
+                    .dropped_note
+                    .as_deref()
+                    .map(|n| format!(" [{n}]"))
+                    .unwrap_or_default(),
+            );
+        }
+        coord.add_model(&name, Arc::new(exec), batcher);
+        name
+    } else if artifact_name.is_empty() {
         let name = m.req("model")?.to_string();
         coord.add_model(
             &name,

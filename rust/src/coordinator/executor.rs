@@ -52,6 +52,9 @@ use crate::graph::norm::{AggregationPlan, EdgeForm};
 use crate::graph::shard::{HaloStats, ShardedGraph};
 use crate::quant::mixed::NodeQuantParams;
 use crate::runtime::engine::EngineHandle;
+use crate::runtime::persist::{
+    PersistConfig, Persistence, Snapshot, SnapshotLayer, SnapshotParams,
+};
 use crate::runtime::{ExecInput, ModelArtifact};
 use crate::tensor::Matrix;
 use crate::util::threadpool::ParallelConfig;
@@ -73,6 +76,41 @@ pub struct DeltaReport {
     /// sharded residents: Σ mirrored halo nodes after the update; 0
     /// unsharded
     pub halo_nodes: usize,
+}
+
+/// Outcome of attaching durable state ([`NativeExecutor::with_persistence`]):
+/// what crash recovery found on disk and where it left the session.
+#[derive(Debug, Clone)]
+pub struct RestoreReport {
+    /// a snapshot was found and installed
+    pub restored_snapshot: bool,
+    /// epoch the snapshot was taken at (0 when none)
+    pub snapshot_epoch: u64,
+    /// WAL-tail deltas replayed on top of the snapshot
+    pub replayed_deltas: usize,
+    /// torn/corrupt bytes dropped off the WAL tail
+    pub dropped_bytes: u64,
+    /// human-readable reason the tail was dropped, if it was
+    pub dropped_note: Option<String>,
+    /// logits-cache epoch after recovery (snapshot epoch + one bump per
+    /// replayed delta — matches the continuous session)
+    pub epoch: u64,
+    /// resident node count after recovery
+    pub num_nodes: usize,
+}
+
+/// Outcome of one [`NativeExecutor::hot_swap`].
+#[derive(Debug, Clone)]
+pub struct SwapReport {
+    /// logits-cache epoch after the swap (bumps exactly once per swap)
+    pub epoch: u64,
+    /// name of the model now serving
+    pub model_name: String,
+    /// resident-size accounting of the freshly prepared session in bytes
+    pub prepared_bytes: usize,
+    /// durable sessions: the post-swap snapshot landed (`false` means the
+    /// swap is live in memory but NOT durable — see the persistence note)
+    pub snapshot_installed: bool,
 }
 
 /// A backend able to run the two batch kinds.
@@ -153,6 +191,15 @@ impl<T> LogitsCache<T> {
         if self.epoch() == epoch {
             *guard = Some((epoch, value));
         }
+    }
+
+    /// Crash recovery: pin the counter to the snapshot's epoch and drop any
+    /// cached value.  Each replayed delta then bumps exactly as the
+    /// continuous session did, so the recovered epoch matches it.
+    fn restore_epoch(&self, epoch: u64) {
+        let mut guard = self.locked();
+        *guard = None;
+        self.epoch.store(epoch, Ordering::Release);
     }
 }
 
@@ -435,6 +482,106 @@ fn patch_shard_logits(
     true
 }
 
+/// Capture the resident mutable state as a [`Snapshot`]: the post-delta
+/// graph (CSR + features), the possibly NNS-extended per-node quant
+/// params, and the epoch counter.  Weights are deliberately absent —
+/// they come from the artifact on disk.
+fn snapshot_resident(st: &Resident, epoch: u64) -> Result<Snapshot> {
+    let side = st
+        .node
+        .as_ref()
+        .ok_or_else(|| Error::coordinator("snapshots need a node-level session"))?;
+    let model = &st.prepared.model;
+    let capture = |p: &NodeQuantParams| SnapshotParams {
+        steps: p.steps.clone(),
+        bits: p.bits.clone(),
+        signed: p.signed,
+    };
+    let layers = model
+        .layers
+        .iter()
+        .map(|l| SnapshotLayer {
+            feat: l.feat.as_ref().map(capture),
+            feat2: l.feat2.as_ref().map(capture),
+        })
+        .collect();
+    Ok(Snapshot {
+        epoch,
+        model_name: model.name.clone(),
+        arch: model.arch.clone(),
+        in_dim: model.in_dim as u32,
+        out_dim: model.out_dim as u32,
+        num_nodes: side.num_nodes as u64,
+        indptr: side.csr.indptr.clone(),
+        indices: side.csr.indices.clone(),
+        features: side.features.clone(),
+        layers,
+    })
+}
+
+/// Deterministic single-layer A²Q GCN session over a preferential-
+/// attachment graph — the shared fixture behind `a2q-serve --synthetic`
+/// and the crash-recovery CI leg.  Fully reproducible from
+/// `(num_nodes, seed)`, so two processes built from the same pair serve
+/// bitwise-identical logits.
+pub fn synthetic_node_session(num_nodes: usize, seed: u64) -> Result<(GnnModel, Dataset)> {
+    use crate::util::rng::Rng;
+    let n = num_nodes.max(4);
+    let in_dim = 4;
+    let out_dim = 3;
+    let mut rng = Rng::new(seed);
+    let csr = crate::graph::generate::preferential_attachment(&mut rng, n, 2);
+    let features: Vec<f32> = (0..n * in_dim)
+        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+        .collect();
+    let w = Matrix::from_vec(
+        in_dim,
+        out_dim,
+        (0..in_dim * out_dim)
+            .map(|_| rng.uniform(-0.5, 0.5) as f32)
+            .collect(),
+    )?;
+    let b: Vec<f32> = (0..out_dim).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+    let model = GnnModel {
+        name: "synthetic-gcn".into(),
+        arch: "gcn".into(),
+        dataset: "synthetic".into(),
+        method: crate::gnn::QuantMethod::A2q,
+        layers: vec![crate::gnn::LayerParams {
+            w: Some(w),
+            b,
+            w_steps: vec![0.05; out_dim],
+            feat: Some(NodeQuantParams::new(vec![0.1; n], vec![4; n], true)?),
+            ..Default::default()
+        }],
+        head: None,
+        dq_steps: Vec::new(),
+        skip_input_quant: false,
+        node_level: true,
+        num_nodes: n,
+        in_dim,
+        out_dim,
+        heads: 1,
+        graph_capacity: n * 4,
+        accuracy: 0.0,
+        avg_bits: 4.0,
+        expected_head: Vec::new(),
+        manifest: crate::util::json::Json::Null,
+    };
+    let data = NodeData {
+        name: "synthetic".into(),
+        csr,
+        num_features: in_dim,
+        num_classes: out_dim,
+        features,
+        labels: vec![0; n],
+        train_mask: vec![false; n],
+        val_mask: vec![false; n],
+        test_mask: vec![false; n],
+    };
+    Ok((model, Dataset::Node(data)))
+}
+
 /// Pure-rust backend over `gnn::infer` (fp emulation by default, true
 /// integer path opt-in), holding a prepared session: quantized weights,
 /// integer codes, and NNS tables are computed once in [`Self::new`], the
@@ -455,6 +602,10 @@ pub struct NativeExecutor {
     dynamic: std::sync::atomic::AtomicBool,
     /// versioned full-graph logits (node-level serving hot path)
     logits: LogitsCache<Matrix<f32>>,
+    /// attached durability sink ([`Self::with_persistence`]): applied
+    /// deltas are WAL-logged before commit and resident state is
+    /// snapshotted on the configured cadence.  `None` = volatile session.
+    persist: Mutex<Option<Persistence>>,
 }
 
 impl NativeExecutor {
@@ -509,6 +660,7 @@ impl NativeExecutor {
             use_int_path: false,
             dynamic: std::sync::atomic::AtomicBool::new(false),
             logits: LogitsCache::new(),
+            persist: Mutex::new(None),
         })
     }
 
@@ -626,6 +778,367 @@ impl NativeExecutor {
     /// Current logits-cache epoch (diagnostics).
     pub fn epoch(&self) -> u64 {
         self.logits.epoch()
+    }
+
+    /// Lock the persistence slot — the one audited acquisition.
+    fn persist_lock(&self) -> MutexGuard<'_, Option<Persistence>> {
+        // a2q-lint: allow(panic-path) poisoning requires a prior panic while
+        // holding this short-lived lock; there is no state to salvage
+        self.persist.lock().unwrap()
+    }
+
+    /// Log-before-commit: append the delta to the WAL (if one is
+    /// attached) and return the record's on-disk length for a possible
+    /// [`Self::wal_rollback`].  Called under the resident write lock so
+    /// WAL order always equals commit order.  An append failure rejects
+    /// the delta — no commit without a durable record.
+    fn wal_append(&self, delta: &GraphDelta) -> Result<Option<u64>> {
+        let mut guard = self.persist_lock();
+        match guard.as_mut() {
+            Some(p) => Ok(Some(p.append_delta(delta)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Unwrite the record a rejected delta logged, so the WAL never
+    /// replays a delta the resident refused to commit.
+    fn wal_rollback(&self, logged: Option<u64>) {
+        let Some(record_bytes) = logged else { return };
+        let mut guard = self.persist_lock();
+        if let Some(p) = guard.as_mut() {
+            if let Err(e) = p.rollback_last(record_bytes) {
+                p.set_note(format!(
+                    "WAL rollback of a rejected delta failed — recovery replay \
+                     will stop at it with an error: {e}"
+                ));
+            }
+        }
+    }
+
+    /// Cut a snapshot when the WAL hit the configured cadence.  Failures
+    /// are non-fatal: the WAL is retained, recovery just replays a longer
+    /// tail, and the reason is surfaced via [`Self::persistence_note`].
+    fn maybe_snapshot(&self, st: &Resident, epoch: u64) {
+        if st.node.is_none() {
+            return;
+        }
+        let mut guard = self.persist_lock();
+        let Some(p) = guard.as_mut() else { return };
+        if !p.snapshot_due() {
+            return;
+        }
+        match snapshot_resident(st, epoch) {
+            Ok(snap) => {
+                if let Err(e) = p.install_snapshot(&snap) {
+                    p.set_note(format!(
+                        "snapshot install failed (WAL retained; recovery \
+                         replays it): {e}"
+                    ));
+                }
+            }
+            Err(e) => p.set_note(format!("snapshot capture failed (WAL retained): {e}")),
+        }
+    }
+
+    /// Attach durable state under `cfg.dir` (builder style), running crash
+    /// recovery first: install the newest valid snapshot, replay the WAL
+    /// tail through the exact incremental-repair path live deltas take,
+    /// and only then start logging.  The recovered session serves logits
+    /// **bit-for-bit** equal to a continuously-running one
+    /// (`rust/tests/persist_recovery.rs`); a WAL that does not match the
+    /// loaded artifact is a hard error, not a silent divergence.
+    pub fn with_persistence(
+        self,
+        cfg: PersistConfig,
+    ) -> Result<(NativeExecutor, RestoreReport)> {
+        let (persistence, recovery) = Persistence::open(cfg)?;
+        let mut report = RestoreReport {
+            restored_snapshot: false,
+            snapshot_epoch: 0,
+            replayed_deltas: 0,
+            dropped_bytes: recovery.dropped_bytes,
+            dropped_note: recovery.dropped_note.clone(),
+            epoch: 0,
+            num_nodes: 0,
+        };
+        if let Some(snap) = &recovery.snapshot {
+            self.restore_snapshot(snap)?;
+            report.restored_snapshot = true;
+            report.snapshot_epoch = snap.epoch;
+        }
+        let total = recovery.deltas.len();
+        for (i, delta) in recovery.deltas.iter().enumerate() {
+            self.apply_delta_impl(delta, false).map_err(|e| {
+                Error::coordinator(format!(
+                    "WAL replay failed at record {}/{total}: {e} — the log does \
+                     not match the loaded artifact; remove the state dir to \
+                     start fresh",
+                    i + 1
+                ))
+            })?;
+        }
+        if report.restored_snapshot || total > 0 {
+            // the recovered session is as dynamic as the one that wrote
+            // the log: keep the activation cache warm for future deltas
+            self.dynamic.store(true, Ordering::Release);
+        }
+        report.replayed_deltas = total;
+        report.epoch = self.logits.epoch();
+        report.num_nodes = self.resident_nodes();
+        *self.persist_lock() = Some(persistence);
+        Ok((self, report))
+    }
+
+    /// Install a crash-recovery [`Snapshot`] into the resident state.
+    /// [`Self::with_persistence`] replays the WAL tail on top.
+    fn restore_snapshot(&self, snap: &Snapshot) -> Result<()> {
+        let mut guard = self.resident_mut();
+        let st = &mut *guard;
+        if st.node.is_none() {
+            return Err(Error::coordinator(
+                "snapshot restore needs a node-level session",
+            ));
+        }
+        {
+            let m = &st.prepared.model;
+            if m.name != snap.model_name {
+                return Err(Error::artifact(format!(
+                    "snapshot belongs to model '{}' but the session loaded \
+                     '{}' — after a hot swap, restart against the swapped \
+                     artifact",
+                    snap.model_name, m.name
+                )));
+            }
+            if m.arch != snap.arch
+                || m.in_dim != snap.in_dim as usize
+                || m.out_dim != snap.out_dim as usize
+                || m.layers.len() != snap.layers.len()
+            {
+                return Err(Error::artifact(format!(
+                    "snapshot shape mismatch: disk has {} {}→{} ({} layers), \
+                     the loaded artifact is {} {}→{} ({} layers)",
+                    snap.arch,
+                    snap.in_dim,
+                    snap.out_dim,
+                    snap.layers.len(),
+                    m.arch,
+                    m.in_dim,
+                    m.out_dim,
+                    m.layers.len()
+                )));
+            }
+        }
+        let csr = Csr {
+            indptr: snap.indptr.clone(),
+            indices: snap.indices.clone(),
+        };
+        csr.validate()?;
+        let n = csr.num_nodes();
+        if n as u64 != snap.num_nodes {
+            return Err(Error::artifact(format!(
+                "snapshot claims {} nodes but its CSR has {n}",
+                snap.num_nodes
+            )));
+        }
+        if snap.features.len() != n * snap.in_dim as usize {
+            return Err(Error::artifact(format!(
+                "snapshot features are {} floats, want {} ({n} nodes × {} dims)",
+                snap.features.len(),
+                n * snap.in_dim as usize,
+                snap.in_dim
+            )));
+        }
+        let edges = EdgeForm::from_csr(&csr);
+        let plan = (st.prepared.model.arch != "gat")
+            .then(|| AggregationPlan::build(&edges.dst, edges.num_nodes));
+        // sharded sessions re-partition the restored graph from scratch;
+        // shard parity pins bitwise-identical logits for any partition,
+        // so the layout difference vs the evolved one is invisible
+        let new_sharded = match st.sharded.as_ref() {
+            Some(sh) => {
+                let graph = ShardedGraph::build(&csr, &edges, sh.graph.num_shards())?;
+                let s = graph.num_shards();
+                Some(ShardedState {
+                    graph,
+                    logits: vec![None; s],
+                })
+            }
+            None => None,
+        };
+        // freeze the NNS assignment tables over the artifact's learned
+        // params BEFORE installing the snapshot's extended copies —
+        // replayed deltas must assign exactly like the continuous session,
+        // which froze its tables at its first delta
+        if st.assign_tables.is_none() {
+            st.assign_tables = Some(build_assign_tables(&st.prepared)?);
+        }
+        for (l, (lay, sl)) in st
+            .prepared
+            .model
+            .layers
+            .iter_mut()
+            .zip(&snap.layers)
+            .enumerate()
+        {
+            if sl.feat.is_some() != lay.feat.is_some()
+                || sl.feat2.is_some() != lay.feat2.is_some()
+            {
+                return Err(Error::artifact(format!(
+                    "snapshot layer {l} quantization params do not match the \
+                     loaded model's shape"
+                )));
+            }
+            if let Some(p) = &sl.feat {
+                lay.feat =
+                    Some(NodeQuantParams::new(p.steps.clone(), p.bits.clone(), p.signed)?);
+            }
+            if let Some(p) = &sl.feat2 {
+                lay.feat2 =
+                    Some(NodeQuantParams::new(p.steps.clone(), p.bits.clone(), p.signed)?);
+            }
+        }
+        let side = st.node.as_mut().ok_or_else(|| {
+            Error::coordinator("snapshot restore needs a node-level session")
+        })?;
+        side.csr = csr;
+        side.features = snap.features.clone();
+        side.edges = edges;
+        side.num_nodes = n;
+        st.plan = plan;
+        st.sharded = new_sharded;
+        st.prepared.model.num_nodes = n;
+        st.caps.0 = n;
+        st.acts = None;
+        drop(guard);
+        self.logits.restore_epoch(snap.epoch);
+        Ok(())
+    }
+
+    /// Atomic hot weight swap: install a re-prepared model under traffic.
+    ///
+    /// Update-barrier semantics: the expensive `prepare` (integer codes,
+    /// NNS tables) runs **outside** any lock on a model grafted with the
+    /// resident per-node state; the write lock is held only for the
+    /// pointer-sized install + one epoch bump.  In-flight batches finish
+    /// on the old epoch's cached logits, the next batch recomputes under
+    /// the new weights — no torn or stale reads, sharded or not (stale
+    /// per-shard blocks are epoch-tagged and recompute on first use).
+    ///
+    /// Durable sessions force a post-swap snapshot so pre-swap WAL deltas
+    /// can never replay under the new weights; if that snapshot fails the
+    /// swap is live but **not** durable (`SwapReport::snapshot_installed`
+    /// is `false` and [`Self::persistence_note`] says why).
+    pub fn hot_swap(&self, mut model: GnnModel) -> Result<SwapReport> {
+        // phase 1 (read lock): compatibility gate + clone the resident
+        // per-node quant params — the incoming weights must serve the
+        // *evolved* graph, NNS-appended entries included
+        let (num_nodes, graph_capacity, grafts) = {
+            let st = self.resident();
+            let cur = &st.prepared.model;
+            if model.arch != cur.arch
+                || model.node_level != cur.node_level
+                || model.in_dim != cur.in_dim
+                || model.out_dim != cur.out_dim
+                || model.layers.len() != cur.layers.len()
+                || model.head.is_some() != cur.head.is_some()
+                || model.heads != cur.heads
+            {
+                return Err(Error::coordinator(format!(
+                    "hot swap needs a shape-compatible model: session is {} \
+                     {}→{} ({} layers), incoming '{}' is {} {}→{} ({} layers)",
+                    cur.arch,
+                    cur.in_dim,
+                    cur.out_dim,
+                    cur.layers.len(),
+                    model.name,
+                    model.arch,
+                    model.in_dim,
+                    model.out_dim,
+                    model.layers.len()
+                )));
+            }
+            let grafts: Vec<(Option<NodeQuantParams>, Option<NodeQuantParams>)> = cur
+                .layers
+                .iter()
+                .map(|l| (l.feat.clone(), l.feat2.clone()))
+                .collect();
+            (cur.num_nodes, cur.graph_capacity, grafts)
+        };
+        // phase 2 (no lock): graft into the RAW model, then prepare —
+        // prepare re-derives codes and NNS tables from the grafted
+        // params, so the swapped session is self-consistent
+        model.num_nodes = num_nodes;
+        model.graph_capacity = graph_capacity;
+        for (lay, (f, f2)) in model.layers.iter_mut().zip(grafts) {
+            if f.is_some() {
+                lay.feat = f;
+            }
+            if f2.is_some() {
+                lay.feat2 = f2;
+            }
+        }
+        let fresh = PreparedModel::prepare(model)?;
+        let prepared_bytes = fresh.prepared_bytes();
+        let model_name = fresh.model.name.clone();
+        // phase 3 (write lock): install + exactly-once epoch bump
+        let mut guard = self.resident_mut();
+        let st = &mut *guard;
+        if st.prepared.model.num_nodes != num_nodes {
+            // a delta appended nodes between phases 1 and 3 — the grafted
+            // params are stale for the grown graph
+            return Err(Error::coordinator(
+                "hot swap raced a graph update; re-issue the swap",
+            ));
+        }
+        st.prepared = fresh;
+        st.acts = None;
+        // assign_tables stay frozen over the ORIGINAL learned params:
+        // delta NNS assignment is a property of the session, not of
+        // whichever weights currently serve it
+        self.logits.bump();
+        let epoch = self.logits.epoch();
+        let mut snapshot_installed = false;
+        if st.node.is_some() {
+            let mut pguard = self.persist_lock();
+            if let Some(p) = pguard.as_mut() {
+                match snapshot_resident(st, epoch) {
+                    Ok(snap) => match p.install_snapshot(&snap) {
+                        Ok(()) => snapshot_installed = true,
+                        Err(e) => p.set_note(format!(
+                            "post-swap snapshot failed — the swap is live but \
+                             NOT durable; fix the state dir before restarting: \
+                             {e}"
+                        )),
+                    },
+                    Err(e) => p.set_note(format!(
+                        "post-swap snapshot capture failed — the swap is live \
+                         but NOT durable: {e}"
+                    )),
+                }
+            }
+        }
+        drop(guard);
+        Ok(SwapReport {
+            epoch,
+            model_name,
+            prepared_bytes,
+            snapshot_installed,
+        })
+    }
+
+    /// Durability diagnostics: `(generation, wal_records, wal_bytes)` of
+    /// the attached sink; `None` for volatile sessions.
+    pub fn wal_stats(&self) -> Option<(u64, usize, u64)> {
+        self.persist_lock()
+            .as_ref()
+            .map(|p| (p.generation(), p.wal_records(), p.wal_bytes()))
+    }
+
+    /// Last persistence warning (failed snapshot or rollback), if any.
+    pub fn persistence_note(&self) -> Option<String> {
+        self.persist_lock()
+            .as_ref()
+            .and_then(|p| p.note().map(str::to_string))
     }
 
     /// Serve node rows of a sharded session from the per-shard logits
@@ -789,6 +1302,13 @@ impl NativeExecutor {
     /// mismatch, non-finite features/activations) leaves the resident
     /// state untouched.
     pub fn apply_delta(&self, delta: &GraphDelta) -> Result<DeltaReport> {
+        self.apply_delta_impl(delta, true)
+    }
+
+    /// [`Self::apply_delta`] body.  `log == false` is the crash-recovery
+    /// replay path ([`Self::with_persistence`]): the delta is already in
+    /// the WAL, so it is neither re-logged nor snapshot-triggering.
+    fn apply_delta_impl(&self, delta: &GraphDelta, log: bool) -> Result<DeltaReport> {
         let mut guard = self.resident_mut();
         let st = &mut *guard;
         if st.prepared.model.arch == "gat" {
@@ -810,6 +1330,11 @@ impl NativeExecutor {
         let n_layers = st.prepared.model.layers.len();
         let int_path = st.prepared.int_path_semantics(self.use_int_path);
         delta.validate(side.num_nodes, in_dim)?;
+        // log-before-commit: the record hits the WAL (under the resident
+        // write lock, so WAL order == commit order) before any state
+        // mutates; the rejected-delta paths below unwrite it again so the
+        // log never replays a delta the resident refused
+        let logged = if log { self.wal_append(delta)? } else { None };
         // this session is dynamic from here on: epoch recomputes keep the
         // per-layer activation cache warm for future deltas
         self.dynamic.store(true, Ordering::Release);
@@ -843,18 +1368,28 @@ impl NativeExecutor {
                 }
                 None => 0,
             };
-            return Ok(DeltaReport {
+            let report = DeltaReport {
                 epoch: new_epoch,
                 num_nodes: side.num_nodes,
                 recomputed_rows: 0,
                 new_nodes: 0,
                 shards_touched: 0,
                 halo_nodes,
-            });
+            };
+            if log {
+                self.maybe_snapshot(st, new_epoch);
+            }
+            return Ok(report);
         }
 
         // 1. incremental structural repair (all staged)
-        let applied = delta.apply_to_csr(&side.csr)?;
+        let applied = match delta.apply_to_csr(&side.csr) {
+            Ok(a) => a,
+            Err(e) => {
+                self.wal_rollback(logged);
+                return Err(e);
+            }
+        };
         let new_edges = side.edges.apply_delta(&side.csr, &applied);
         let new_plan = AggregationPlan::for_csr_edge_form(&applied.csr);
         let n_new = applied.csr.num_nodes();
@@ -921,14 +1456,18 @@ impl NativeExecutor {
                 refresh_shard_logits(sh, &logits_mat, new_epoch);
             }
             self.logits.set(new_epoch, Arc::new(logits_mat));
-            return Ok(DeltaReport {
+            let report = DeltaReport {
                 epoch: new_epoch,
                 num_nodes: n_new,
                 recomputed_rows: frontier_rows,
                 new_nodes: 0,
                 shards_touched,
                 halo_nodes,
-            });
+            };
+            if log {
+                self.maybe_snapshot(st, new_epoch);
+            }
+            return Ok(report);
         }
 
         // 2. make sure the per-layer activation cache matches this epoch
@@ -960,7 +1499,13 @@ impl NativeExecutor {
 
         // 3. freeze the NNS assignment tables over the learned params
         if st.assign_tables.is_none() {
-            st.assign_tables = Some(build_assign_tables(&st.prepared)?);
+            match build_assign_tables(&st.prepared) {
+                Ok(t) => st.assign_tables = Some(t),
+                Err(e) => {
+                    self.wal_rollback(logged);
+                    return Err(e);
+                }
+            }
         }
 
         // 4. staged activations (pre-delta rows carried over, appended
@@ -969,7 +1514,13 @@ impl NativeExecutor {
         // cache for exactly this epoch
         let (_, old_acts) = st.acts.as_ref().expect("warmed above");
         let mut acts: Vec<Matrix<f32>> = Vec::with_capacity(n_layers + 1);
-        acts.push(Matrix::from_vec(n_new, in_dim, new_features.clone())?);
+        match Matrix::from_vec(n_new, in_dim, new_features.clone()) {
+            Ok(m) => acts.push(m),
+            Err(e) => {
+                self.wal_rollback(logged);
+                return Err(e);
+            }
+        }
         for m in &old_acts[1..] {
             let mut grown = Matrix::zeros(n_new, m.cols);
             grown.data[..m.data.len()].copy_from_slice(&m.data);
@@ -996,7 +1547,7 @@ impl NativeExecutor {
             .collect();
 
         // 6. row repair over the frontier (bitwise == full recompute)
-        let recomputed = patch_activations(
+        let recomputed = match patch_activations(
             &st.prepared,
             &mut staged,
             tables,
@@ -1006,7 +1557,13 @@ impl NativeExecutor {
             &dirty,
             int_path,
             self.parallel.simd,
-        )?;
+        ) {
+            Ok(r) => r,
+            Err(e) => {
+                self.wal_rollback(logged);
+                return Err(e);
+            }
+        };
 
         // 7. commit + single epoch bump.  Sharded residents first repair
         //    their partition (appended nodes go to the least-loaded
@@ -1055,14 +1612,18 @@ impl NativeExecutor {
             }
         }
         self.logits.set(new_epoch, Arc::new(logits_mat));
-        Ok(DeltaReport {
+        let report = DeltaReport {
             epoch: new_epoch,
             num_nodes: n_new,
             recomputed_rows: recomputed,
             new_nodes: delta.add_nodes,
             shards_touched,
             halo_nodes,
-        })
+        };
+        if log {
+            self.maybe_snapshot(st, new_epoch);
+        }
+        Ok(report)
     }
 }
 
@@ -1566,5 +2127,307 @@ mod tests {
         for (v, row) in got.iter().enumerate() {
             assert_eq!(row.as_slice(), want.row(v), "row {v}");
         }
+    }
+
+    fn tmp_state_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("a2q_exec_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn assert_params_equal(
+        want: &[(Option<NodeQuantParams>, Option<NodeQuantParams>)],
+        got: &[(Option<NodeQuantParams>, Option<NodeQuantParams>)],
+    ) {
+        assert_eq!(want.len(), got.len());
+        for (l, ((wf, wf2), (gf, gf2))) in want.iter().zip(got).enumerate() {
+            for (tag, w, g) in [("feat", wf, gf), ("feat2", wf2, gf2)] {
+                match (w, g) {
+                    (None, None) => {}
+                    (Some(w), Some(g)) => {
+                        assert_eq!(w.steps, g.steps, "layer {l} {tag} steps");
+                        assert_eq!(w.bits, g.bits, "layer {l} {tag} bits");
+                        assert_eq!(w.signed, g.signed, "layer {l} {tag} signed");
+                    }
+                    _ => panic!("layer {l} {tag} presence diverged"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn persistence_restart_reproduces_logits_bitwise() {
+        let dir = tmp_state_dir("restart");
+        let (model, ds) = path_session();
+        let mut cfg = PersistConfig::new(&dir);
+        cfg.snapshot_every = 2; // force a mid-stream snapshot rotation
+        let (exec, restore) = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial())
+            .with_persistence(cfg.clone())
+            .unwrap();
+        assert!(!restore.restored_snapshot);
+        assert_eq!(restore.replayed_deltas, 0);
+        let deltas = [
+            GraphDelta {
+                add_edges: vec![(5, 0), (0, 5)],
+                ..Default::default()
+            },
+            GraphDelta {
+                add_nodes: 1,
+                new_features: vec![0.2, -0.1],
+                add_edges: vec![(6, 0), (0, 6)],
+                ..Default::default()
+            },
+            GraphDelta::default(),
+            GraphDelta {
+                remove_edges: vec![(5, 0)],
+                ..Default::default()
+            },
+        ];
+        for d in &deltas {
+            exec.apply_delta(d).unwrap();
+        }
+        let all: Vec<u32> = (0..7).collect();
+        let want = exec.run_node_batch(&all).unwrap();
+        let want_params = exec.resident_quant_params();
+        let epoch = exec.epoch();
+        drop(exec);
+
+        let (back, restore) = NativeExecutor::new(model, Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial())
+            .with_persistence(cfg)
+            .unwrap();
+        assert!(restore.restored_snapshot, "snapshot_every=2 must have rotated");
+        assert!(
+            restore.replayed_deltas < deltas.len(),
+            "recovery replays the tail, not the whole log"
+        );
+        assert_eq!(restore.epoch, epoch, "epoch counter survives the restart");
+        assert_eq!(restore.num_nodes, 7);
+        assert_eq!(back.run_node_batch(&all).unwrap(), want, "restart parity");
+        assert_params_equal(&want_params, &back.resident_quant_params());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistence_never_logs_a_rejected_delta() {
+        let dir = tmp_state_dir("reject");
+        let (model, ds) = path_session();
+        let (exec, _) = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial())
+            .with_persistence(PersistConfig::new(&dir))
+            .unwrap();
+        exec.apply_delta(&GraphDelta {
+            add_edges: vec![(5, 0), (0, 5)],
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(exec
+            .apply_delta(&GraphDelta {
+                add_edges: vec![(0, 42)],
+                ..Default::default()
+            })
+            .is_err());
+        let (_, records, _) = exec.wal_stats().unwrap();
+        assert_eq!(records, 1, "the rejected delta must not be in the log");
+        drop(exec);
+        let (back, restore) = NativeExecutor::new(model, Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial())
+            .with_persistence(PersistConfig::new(&dir))
+            .unwrap();
+        assert_eq!(restore.replayed_deltas, 1);
+        assert_eq!(back.resident_nodes(), 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hot_swap_installs_new_weights_with_one_epoch_bump() {
+        let (model, ds) = path_session();
+        let exec = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+        // evolve the resident graph first: the swap must preserve the
+        // NNS-extended per-node state
+        exec.apply_delta(&GraphDelta {
+            add_nodes: 1,
+            new_features: vec![0.2, -0.1],
+            add_edges: vec![(6, 0), (0, 6)],
+            ..Default::default()
+        })
+        .unwrap();
+        let all: Vec<u32> = (0..7).collect();
+        let before = exec.run_node_batch(&all).unwrap();
+        let params_before = exec.resident_quant_params();
+
+        let mut v2 = model.clone();
+        v2.name = "path-v2".into();
+        v2.layers[0].w =
+            Some(Matrix::from_vec(2, 2, vec![0.8, -0.25, 0.6, 1.1]).unwrap());
+        let report = exec.hot_swap(v2.clone()).unwrap();
+        assert_eq!(report.epoch, 2, "delta bump + exactly one swap bump");
+        assert_eq!(report.model_name, "path-v2");
+        assert!(!report.snapshot_installed, "volatile session");
+
+        let after = exec.run_node_batch(&all).unwrap();
+        assert_ne!(before, after, "new weights must actually serve");
+        assert_eq!(exec.resident_nodes(), 7, "evolved graph survives the swap");
+        assert_params_equal(&params_before, &exec.resident_quant_params());
+
+        // reference: a from-scratch session over the evolved graph with the
+        // grafted params serves the same bits
+        let Dataset::Node(nd) = &ds else { unreachable!() };
+        let mut edges = nd.csr.edge_list();
+        edges.push((6, 0));
+        edges.push((0, 6));
+        let csr = Csr::from_edges(7, &edges).unwrap();
+        let mut features = nd.features.clone();
+        features.extend_from_slice(&[0.2, -0.1]);
+        let mut fresh_model = v2;
+        fresh_model.num_nodes = 7;
+        let (feat, feat2) = params_before[0].clone();
+        fresh_model.layers[0].feat = feat;
+        fresh_model.layers[0].feat2 = feat2;
+        let fresh_ds = Dataset::Node(NodeData {
+            name: "unit".into(),
+            csr,
+            num_features: 2,
+            num_classes: 2,
+            features,
+            labels: vec![0; 7],
+            train_mask: vec![false; 7],
+            val_mask: vec![false; 7],
+            test_mask: vec![false; 7],
+        });
+        let fresh = NativeExecutor::new(fresh_model, Some(&fresh_ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+        assert_eq!(
+            fresh.run_node_batch(&all).unwrap(),
+            after,
+            "swapped session must match a from-scratch rebuild bitwise"
+        );
+    }
+
+    #[test]
+    fn hot_swap_rejects_incompatible_shapes() {
+        let (model, ds) = path_session();
+        let exec = NativeExecutor::new(model.clone(), Some(&ds)).unwrap();
+        let mut bad = model;
+        bad.out_dim = 3;
+        let err = exec.hot_swap(bad).unwrap_err();
+        assert!(format!("{err}").contains("shape-compatible"), "got: {err}");
+        assert_eq!(exec.epoch(), 0, "a rejected swap must not bump the epoch");
+    }
+
+    #[test]
+    fn hot_swap_forces_a_durable_snapshot() {
+        let dir = tmp_state_dir("swapsnap");
+        let (model, ds) = path_session();
+        let (exec, _) = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial())
+            .with_persistence(PersistConfig::new(&dir))
+            .unwrap();
+        exec.apply_delta(&GraphDelta {
+            add_edges: vec![(5, 0), (0, 5)],
+            ..Default::default()
+        })
+        .unwrap();
+        let mut v2 = model.clone();
+        v2.name = "path-v2".into();
+        let report = exec.hot_swap(v2.clone()).unwrap();
+        assert!(report.snapshot_installed, "durable swaps must snapshot");
+        let (_, records, _) = exec.wal_stats().unwrap();
+        assert_eq!(records, 0, "the snapshot rotation empties the WAL");
+        let all: Vec<u32> = (0..6).collect();
+        let want = exec.run_node_batch(&all).unwrap();
+        drop(exec);
+        // restart against the OLD artifact: the snapshot names the swapped
+        // model, so recovery refuses instead of silently diverging
+        let err = NativeExecutor::new(model, Some(&ds))
+            .unwrap()
+            .with_persistence(PersistConfig::new(&dir))
+            .map(|_| ())
+            .unwrap_err();
+        assert!(format!("{err}").contains("path-v2"), "got: {err}");
+        // restart against the swapped artifact restores bit-for-bit
+        let (back, restore) = NativeExecutor::new(v2, Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial())
+            .with_persistence(PersistConfig::new(&dir))
+            .unwrap();
+        assert!(restore.restored_snapshot);
+        assert_eq!(back.run_node_batch(&all).unwrap(), want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hot_swap_under_concurrent_classify_traffic_never_tears() {
+        let (model, ds) = path_session();
+        let exec = NativeExecutor::new(model.clone(), Some(&ds))
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+        let all: Vec<u32> = (0..6).collect();
+        let before = exec.run_node_batch(&all).unwrap();
+        let mut v2 = model.clone();
+        v2.name = "path-v2".into();
+        v2.layers[0].w =
+            Some(Matrix::from_vec(2, 2, vec![0.8, -0.25, 0.6, 1.1]).unwrap());
+        let after_want = {
+            let reference = NativeExecutor::new(
+                {
+                    let mut m = v2.clone();
+                    m.layers[0].feat = model.layers[0].feat.clone();
+                    m
+                },
+                Some(&ds),
+            )
+            .unwrap()
+            .with_parallelism(ParallelConfig::serial());
+            reference.run_node_batch(&all).unwrap()
+        };
+        std::thread::scope(|scope| {
+            let stop = std::sync::atomic::AtomicBool::new(false);
+            let exec_ref = &exec;
+            let all_ref = &all;
+            let before_ref = &before;
+            let after_ref = &after_want;
+            let stop_ref = &stop;
+            let readers: Vec<_> = (0..3)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut served = 0usize;
+                        while !stop_ref.load(Ordering::Acquire) {
+                            let out = exec_ref.run_node_batch(all_ref).unwrap();
+                            // every batch is served whole from one epoch's
+                            // logits: it is the old bits or the new bits,
+                            // never a mixture
+                            assert!(
+                                &out == before_ref || &out == after_ref,
+                                "torn or stale batch under hot swap"
+                            );
+                            served += 1;
+                        }
+                        served
+                    })
+                })
+                .collect();
+            let report = exec.hot_swap(v2.clone()).unwrap();
+            assert_eq!(report.epoch, 1, "exactly one bump under traffic");
+            // let the readers observe the swapped weights for a while
+            for _ in 0..50 {
+                let out = exec.run_node_batch(&all).unwrap();
+                assert_eq!(&out, &after_want);
+            }
+            stop.store(true, Ordering::Release);
+            let total: usize = readers.into_iter().map(|h| h.join().unwrap()).sum();
+            assert!(total > 0, "readers must have served during the swap");
+        });
+        assert_eq!(exec.epoch(), 1);
     }
 }

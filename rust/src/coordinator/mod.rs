@@ -30,7 +30,10 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{AdaptiveWait, BatcherConfig, DynamicBatcher};
-pub use executor::{BatchExecutor, DeltaReport, MockExecutor, NativeExecutor, PjrtExecutor};
+pub use executor::{
+    synthetic_node_session, BatchExecutor, DeltaReport, MockExecutor, NativeExecutor,
+    PjrtExecutor, RestoreReport, SwapReport,
+};
 pub use metrics::Metrics;
 pub use net::{DrainReport, NetClient, NetConfig, NetServer};
 pub use request::{Payload, Prediction, Request, Response};

@@ -242,57 +242,20 @@ pub fn read_frame(r: &mut impl Read, max_frame: usize) -> Result<Option<Frame>> 
 }
 
 // ------------------------------------------------------------- JSON bodies
+//
+// The f32/edge-list conventions (non-finite floats as `null`, edges as
+// `[src, dst]` pairs) live next to `GraphDelta` so the persistence WAL
+// and the wire protocol share one codec.
 
-fn f32s_to_json(values: &[f32]) -> Json {
-    Json::Arr(values.iter().map(|v| Json::Num(*v as f64)).collect())
-}
+use crate::graph::delta::{json_edges as edges_to_json, json_edges_from};
+use crate::graph::delta::{json_f32s as f32s_to_json, json_f32s_from};
 
-/// Non-finite floats serialize as JSON `null`; decode them back to NaN so
-/// a roundtrip is total.
 fn f32s_from_json(j: &Json, field: &str) -> Result<Vec<f32>> {
-    let arr = j
-        .as_arr()
-        .ok_or_else(|| Error::json(format!("field '{field}' is not an array")))?;
-    arr.iter()
-        .map(|v| match v {
-            Json::Num(n) => Ok(*n as f32),
-            Json::Null => Ok(f32::NAN),
-            _ => Err(Error::json(format!("field '{field}' has a non-number"))),
-        })
-        .collect()
-}
-
-fn edges_to_json(edges: &[(u32, u32)]) -> Json {
-    Json::Arr(
-        edges
-            .iter()
-            .map(|(s, d)| Json::Arr(vec![Json::Num(*s as f64), Json::Num(*d as f64)]))
-            .collect(),
-    )
+    json_f32s_from(j, field)
 }
 
 fn edges_from_json(j: &Json, field: &str) -> Result<Vec<(u32, u32)>> {
-    let arr = j
-        .as_arr()
-        .ok_or_else(|| Error::json(format!("field '{field}' is not an array")))?;
-    arr.iter()
-        .map(|pair| {
-            let s = pair
-                .idx(0)
-                .and_then(Json::as_f64)
-                .ok_or_else(|| Error::json(format!("field '{field}': bad edge pair")))?;
-            let d = pair
-                .idx(1)
-                .and_then(Json::as_f64)
-                .ok_or_else(|| Error::json(format!("field '{field}': bad edge pair")))?;
-            if s < 0.0 || d < 0.0 || s > u32::MAX as f64 || d > u32::MAX as f64 {
-                return Err(Error::json(format!(
-                    "field '{field}': edge endpoint out of u32 range"
-                )));
-            }
-            Ok((s as u32, d as u32))
-        })
-        .collect()
+    json_edges_from(j, field)
 }
 
 fn graph_to_json(g: &SmallGraph) -> Json {
@@ -316,21 +279,11 @@ fn graph_from_json(j: &Json) -> Result<SmallGraph> {
 }
 
 fn delta_to_json(d: &GraphDelta) -> Json {
-    Json::obj(vec![
-        ("add_nodes", Json::Num(d.add_nodes as f64)),
-        ("new_features", f32s_to_json(&d.new_features)),
-        ("add_edges", edges_to_json(&d.add_edges)),
-        ("remove_edges", edges_to_json(&d.remove_edges)),
-    ])
+    d.to_json()
 }
 
 fn delta_from_json(j: &Json) -> Result<GraphDelta> {
-    Ok(GraphDelta {
-        add_nodes: j.req_usize("add_nodes")?,
-        new_features: f32s_from_json(j.req("new_features")?, "new_features")?,
-        add_edges: edges_from_json(j.req("add_edges")?, "add_edges")?,
-        remove_edges: edges_from_json(j.req("remove_edges")?, "remove_edges")?,
-    })
+    GraphDelta::from_json(j)
 }
 
 fn check_version(frame: &Frame) -> Result<()> {

@@ -49,6 +49,13 @@ pub enum RateDecision {
     Deny { retry_after: Duration },
 }
 
+/// Ceiling on any `retry_after` hint.  A degenerate-but-positive rate
+/// (e.g. `A2Q_RATE_RPS=1e-300`) makes `tokens / rate` overflow what
+/// `Duration` can represent, and `Duration::from_secs_f64` *panics* on
+/// overflow — on the accept path.  Beyond an hour the hint carries no
+/// extra information for a client anyway.
+const MAX_RETRY_AFTER: Duration = Duration::from_secs(3600);
+
 /// Thread-safe per-IP token buckets.
 #[derive(Debug)]
 pub struct RateLimiter {
@@ -74,9 +81,22 @@ impl RateLimiter {
         self.buckets.lock().unwrap()
     }
 
+    /// Time until `tokens` tokens refill at the configured rate, clamped
+    /// to [`MAX_RETRY_AFTER`].  Never panics: non-finite or out-of-range
+    /// seconds (tiny rates, huge deficits) saturate at the ceiling.
+    fn refill_time(&self, tokens: f64) -> Duration {
+        let secs = tokens / self.cfg.rate_per_sec;
+        if !secs.is_finite() || secs < 0.0 {
+            return MAX_RETRY_AFTER;
+        }
+        Duration::try_from_secs_f64(secs)
+            .map(|d| d.min(MAX_RETRY_AFTER))
+            .unwrap_or(MAX_RETRY_AFTER)
+    }
+
     /// Time until one token refills at the configured rate.
     fn one_token(&self) -> Duration {
-        Duration::from_secs_f64(1.0 / self.cfg.rate_per_sec)
+        self.refill_time(1.0)
     }
 
     /// Charge one token for `client`.  Disabled limiters always allow.
@@ -114,7 +134,7 @@ impl RateLimiter {
         } else {
             let deficit = 1.0 - bucket.tokens;
             RateDecision::Deny {
-                retry_after: Duration::from_secs_f64(deficit / self.cfg.rate_per_sec),
+                retry_after: self.refill_time(deficit),
             }
         }
     }
@@ -192,6 +212,48 @@ mod tests {
             assert_eq!(l.check(ip(i), t0), RateDecision::Allow);
         }
         assert_eq!(l.tracked_clients(), 0, "disabled limiter tracks nobody");
+    }
+
+    #[test]
+    fn degenerate_rates_never_panic_and_clamp_retry_after() {
+        // regression: 1.0 / 1e-300 overflows Duration and from_secs_f64
+        // panicked on the accept path; the hint must clamp instead
+        let t0 = Instant::now();
+        for rate in [1e-300, f64::MIN_POSITIVE, 1e-9] {
+            let l = limiter(rate, 1.0, 16);
+            assert_eq!(l.check(ip(1), t0), RateDecision::Allow);
+            match l.check(ip(1), t0) {
+                RateDecision::Deny { retry_after } => {
+                    assert!(retry_after <= MAX_RETRY_AFTER, "rate {rate}");
+                    assert!(retry_after > Duration::ZERO, "rate {rate}");
+                }
+                RateDecision::Allow => panic!("rate {rate}: second request must be denied"),
+            }
+            // saturated-table deny path hits one_token() — same clamp
+            let l = limiter(rate, 1.0, 1);
+            assert_eq!(l.check(ip(1), t0), RateDecision::Allow);
+            match l.check(ip(2), t0) {
+                RateDecision::Deny { retry_after } => {
+                    assert!(retry_after <= MAX_RETRY_AFTER, "rate {rate}")
+                }
+                RateDecision::Allow => panic!("rate {rate}: saturated table must deny"),
+            }
+        }
+    }
+
+    #[test]
+    fn sane_rates_keep_exact_retry_hints() {
+        // the clamp must not disturb the normal hint: 1 token at 10/s
+        let l = limiter(10.0, 1.0, 16);
+        let t0 = Instant::now();
+        assert_eq!(l.check(ip(1), t0), RateDecision::Allow);
+        match l.check(ip(1), t0) {
+            RateDecision::Deny { retry_after } => {
+                assert!(retry_after > Duration::from_millis(90));
+                assert!(retry_after <= Duration::from_millis(101));
+            }
+            RateDecision::Allow => panic!("must deny"),
+        }
     }
 
     #[test]

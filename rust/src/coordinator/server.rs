@@ -1012,4 +1012,82 @@ mod tests {
         assert_eq!(snap.errors, 0);
         Arc::try_unwrap(c).ok().map(|c| c.shutdown());
     }
+
+    /// Hot weight swap under live coordinator traffic: every classify
+    /// reply is served whole from either the old or the new weights —
+    /// never a mixture — and the epoch bumps exactly once.
+    #[test]
+    fn hot_swap_under_coordinator_traffic_is_atomic() {
+        use crate::coordinator::executor::{synthetic_node_session, NativeExecutor};
+        use crate::util::threadpool::ParallelConfig;
+
+        let (model, ds) = synthetic_node_session(24, 7).unwrap();
+        let exec = Arc::new(
+            NativeExecutor::new(model.clone(), Some(&ds))
+                .unwrap()
+                .with_parallelism(ParallelConfig::serial()),
+        );
+        let all: Vec<u32> = (0..24).collect();
+        let before = exec.run_node_batch(&all).unwrap();
+
+        let mut v2 = model.clone();
+        v2.name = "synthetic-gcn-v2".into();
+        for w in v2.layers[0].w.as_mut().unwrap().data.iter_mut() {
+            *w = -*w;
+        }
+        // reference: the same swap on an idle twin session pins the
+        // expected post-swap bits
+        let after = {
+            let solo = NativeExecutor::new(model, Some(&ds))
+                .unwrap()
+                .with_parallelism(ParallelConfig::serial());
+            solo.hot_swap(v2.clone()).unwrap();
+            solo.run_node_batch(&all).unwrap()
+        };
+        assert_ne!(before, after);
+
+        let mut c = Coordinator::new();
+        c.add_model(
+            "live",
+            Arc::clone(&exec) as Arc<dyn BatchExecutor>,
+            batcher_cfg(),
+        );
+        let c = Arc::new(c);
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&c);
+            let all = all.clone();
+            let before = before.clone();
+            let after = after.clone();
+            joins.push(thread::spawn(move || {
+                let mut served_new = 0u64;
+                for _ in 0..30 {
+                    let resp = c
+                        .submit_blocking("live", Payload::ClassifyNodes(all.clone()))
+                        .expect("classify under swap");
+                    let rows: Vec<Vec<f32>> =
+                        resp.predictions.iter().map(|p| p.output.clone()).collect();
+                    if rows == after {
+                        served_new += 1;
+                    } else {
+                        assert_eq!(rows, before, "torn batch under hot swap");
+                    }
+                }
+                served_new
+            }));
+        }
+        // swap mid-traffic
+        thread::sleep(Duration::from_millis(2));
+        let report = exec.hot_swap(v2).unwrap();
+        assert_eq!(report.epoch, 1, "exactly one bump under traffic");
+        let _served_new: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert_eq!(exec.epoch(), 1, "no second bump ever happened");
+        // the swap is visible to everything admitted from now on
+        let resp = c
+            .submit_blocking("live", Payload::ClassifyNodes(all.clone()))
+            .unwrap();
+        let rows: Vec<Vec<f32>> = resp.predictions.iter().map(|p| p.output.clone()).collect();
+        assert_eq!(rows, after);
+        Arc::try_unwrap(c).ok().map(|c| c.shutdown());
+    }
 }

@@ -18,6 +18,7 @@
 //! logits cache instead of recomputing the whole graph).
 
 use crate::error::{Error, Result};
+use crate::util::json::Json;
 
 use super::csr::Csr;
 
@@ -143,6 +144,84 @@ impl GraphDelta {
             deg_changed,
         })
     }
+
+    /// Canonical JSON encoding of a delta.  This is the *one* codec for
+    /// deltas at rest and on the wire: the network protocol's `update`
+    /// payload and the persistence WAL both delegate here, so a record
+    /// written by either is readable by both.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("add_nodes", Json::Num(self.add_nodes as f64)),
+            ("new_features", json_f32s(&self.new_features)),
+            ("add_edges", json_edges(&self.add_edges)),
+            ("remove_edges", json_edges(&self.remove_edges)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding (see [`Self::to_json`]).
+    pub fn from_json(j: &Json) -> Result<GraphDelta> {
+        Ok(GraphDelta {
+            add_nodes: j.req_usize("add_nodes")?,
+            new_features: json_f32s_from(j.req("new_features")?, "new_features")?,
+            add_edges: json_edges_from(j.req("add_edges")?, "add_edges")?,
+            remove_edges: json_edges_from(j.req("remove_edges")?, "remove_edges")?,
+        })
+    }
+}
+
+// JSON building blocks shared with the wire protocol (`coordinator::net`
+// encodes graphs and feature rows with the same conventions).
+
+pub(crate) fn json_f32s(values: &[f32]) -> Json {
+    Json::Arr(values.iter().map(|v| Json::Num(*v as f64)).collect())
+}
+
+/// Non-finite floats serialize as JSON `null`; decode them back to NaN so
+/// a roundtrip is total.
+pub(crate) fn json_f32s_from(j: &Json, field: &str) -> Result<Vec<f32>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::json(format!("field '{field}' is not an array")))?;
+    arr.iter()
+        .map(|v| match v {
+            Json::Num(n) => Ok(*n as f32),
+            Json::Null => Ok(f32::NAN),
+            _ => Err(Error::json(format!("field '{field}' has a non-number"))),
+        })
+        .collect()
+}
+
+pub(crate) fn json_edges(edges: &[(u32, u32)]) -> Json {
+    Json::Arr(
+        edges
+            .iter()
+            .map(|(s, d)| Json::Arr(vec![Json::Num(*s as f64), Json::Num(*d as f64)]))
+            .collect(),
+    )
+}
+
+pub(crate) fn json_edges_from(j: &Json, field: &str) -> Result<Vec<(u32, u32)>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::json(format!("field '{field}' is not an array")))?;
+    arr.iter()
+        .map(|pair| {
+            let s = pair
+                .idx(0)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::json(format!("field '{field}': bad edge pair")))?;
+            let d = pair
+                .idx(1)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::json(format!("field '{field}': bad edge pair")))?;
+            if s < 0.0 || d < 0.0 || s > u32::MAX as f64 || d > u32::MAX as f64 {
+                return Err(Error::json(format!(
+                    "field '{field}': edge endpoint out of u32 range"
+                )));
+            }
+            Ok((s as u32, d as u32))
+        })
+        .collect()
 }
 
 /// Sorted merge of one destination row: `(old ∪ adds) \ rems`, ascending,
@@ -377,6 +456,30 @@ mod tests {
         assert_eq!(dirty[0], vec![0, 1]);
         assert_eq!(dirty[1], vec![0, 1, 2]);
         assert_eq!(dirty[2], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn json_codec_roundtrips_exactly() {
+        let d = GraphDelta {
+            add_nodes: 2,
+            new_features: vec![0.25, -1.5, 3.0e-8, 42.0],
+            add_edges: vec![(0, 5), (4, 4)],
+            remove_edges: vec![(1, 0)],
+        };
+        let text = d.to_json().to_string();
+        let back = GraphDelta::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.add_nodes, d.add_nodes);
+        // f32 → f64 → f32 through JSON is exact for every f32
+        assert_eq!(
+            back.new_features.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            d.new_features.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.add_edges, d.add_edges);
+        assert_eq!(back.remove_edges, d.remove_edges);
+
+        // malformed shapes are descriptive errors, not panics
+        let bad = crate::util::json::parse(r#"{"add_nodes": 1}"#).unwrap();
+        assert!(GraphDelta::from_json(&bad).is_err());
     }
 
     #[test]

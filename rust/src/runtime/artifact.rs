@@ -68,6 +68,26 @@ pub fn parse_param_map(hlo_text: &str) -> Vec<usize> {
     pairs.into_iter().map(|(_p, l)| l).collect()
 }
 
+/// Parse the manifest's `expected_head` strictly.  The old path mapped a
+/// malformed field (non-array, or non-numeric elements) to an **empty**
+/// vec via `unwrap_or_default`, which silently muted the downstream
+/// head-parity check — a corrupted manifest looked like "no expectation
+/// recorded" instead of failing the load.
+fn parse_expected_head(man: &Json) -> Result<Vec<f32>> {
+    let arr = man
+        .req("expected_head")?
+        .as_arr()
+        .ok_or_else(|| Error::artifact("expected_head is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let n = v.as_f64().ok_or_else(|| {
+            Error::artifact(format!("expected_head[{i}] is not a number"))
+        })?;
+        out.push(n as f32);
+    }
+    Ok(out)
+}
+
 impl ModelArtifact {
     pub fn load(dir: &Path, name: &str) -> Result<ModelArtifact> {
         let man = json::parse_file(&dir.join(format!("{name}.manifest.json")))?;
@@ -86,16 +106,7 @@ impl ModelArtifact {
             graph_capacity: man.req_usize("graph_capacity")?,
             avg_bits: man.req_f64("avg_bits")?,
             accuracy: man.req_f64("accuracy")?,
-            expected_head: man
-                .req("expected_head")?
-                .as_arr()
-                .map(|a| {
-                    a.iter()
-                        .filter_map(|v| v.as_f64())
-                        .map(|v| v as f32)
-                        .collect()
-                })
-                .unwrap_or_default(),
+            expected_head: parse_expected_head(&man)?,
             manifest: man,
         })
     }
@@ -145,6 +156,13 @@ impl ModelArtifact {
         let path = self.dir.join(self.manifest.req_str("weights_bin")?);
         let mut raw = Vec::new();
         std::fs::File::open(&path)?.read_to_end(&mut raw)?;
+        if raw.len() % 4 != 0 {
+            return Err(Error::artifact(format!(
+                "{}: not a multiple of 4 bytes ({} bytes; truncated?)",
+                path.display(),
+                raw.len()
+            )));
+        }
         let data: Vec<f32> = raw
             .chunks_exact(4)
             // a2q-lint: allow(panic-path) chunks_exact(4) yields only
@@ -158,17 +176,51 @@ impl ModelArtifact {
             .as_arr()
             .ok_or_else(|| Error::artifact("tensors not an array"))?
         {
-            let shape: Vec<i64> = t
+            let tname = t.get("name").and_then(|v| v.as_str()).unwrap_or("<unnamed>");
+            let shape_arr = t
                 .req("shape")?
                 .as_arr()
-                .ok_or_else(|| Error::artifact("bad shape"))?
-                .iter()
-                .map(|v| v.as_f64().unwrap_or(0.0) as i64)
-                .collect();
-            let offset = t.req_usize("offset")?;
-            let len: usize = shape.iter().product::<i64>().max(1) as usize;
+                .ok_or_else(|| Error::artifact(format!("tensor {tname}: bad shape")))?;
+            let mut shape: Vec<i64> = Vec::with_capacity(shape_arr.len());
+            let mut len: usize = 1;
+            for (i, v) in shape_arr.iter().enumerate() {
+                let d = v.as_f64().ok_or_else(|| {
+                    Error::artifact(format!("tensor {tname}: shape[{i}] is not a number"))
+                })?;
+                // the old `product::<i64>().max(1)` let negative dims
+                // sneak through as a bogus (possibly huge) element count
+                if d < 0.0 || d.fract() != 0.0 || d > u32::MAX as f64 {
+                    return Err(Error::artifact(format!(
+                        "tensor {tname}: bad shape dim {d} at axis {i}"
+                    )));
+                }
+                len = len.checked_mul(d as usize).ok_or_else(|| {
+                    Error::artifact(format!("tensor {tname}: shape overflows"))
+                })?;
+                shape.push(d as i64);
+            }
+            let len = len.max(1);
+            let off = t.req_f64("offset")?;
+            if off < 0.0 || off.fract() != 0.0 {
+                return Err(Error::artifact(format!(
+                    "tensor {tname}: bad offset {off}"
+                )));
+            }
+            let offset = off as usize;
+            // the old unchecked `data[offset..offset + len]` panicked the
+            // loader on a truncated weights.bin or an out-of-range offset
+            let end = offset.checked_add(len).filter(|&e| e <= data.len());
+            let Some(end) = end else {
+                return Err(Error::artifact(format!(
+                    "tensor {tname}: range [{offset}, {}) exceeds {} ({} f32 values) — \
+                     truncated weights file or bad manifest offset",
+                    offset as u64 + len as u64,
+                    path.display(),
+                    data.len()
+                )));
+            };
             out.push(super::engine::ExecInput::f32_shaped(
-                data[offset..offset + len].to_vec(),
+                data[offset..end].to_vec(),
                 shape,
             ));
         }
@@ -223,6 +275,114 @@ impl ArtifactIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Build an artifact over a synthetic weights.bin (`n_f32` values) and
+    /// a single declared tensor `{shape, offset}` in a fresh temp dir.
+    fn tensor_fixture(tag: &str, n_f32: usize, shape: &str, offset: i64) -> ModelArtifact {
+        let dir = std::env::temp_dir().join(format!("a2q_artifact_test_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut raw = Vec::new();
+        for i in 0..n_f32 {
+            raw.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        std::fs::write(dir.join("weights.bin"), &raw).unwrap();
+        let man = json::parse(&format!(
+            r#"{{"weights_bin": "weights.bin",
+                 "tensors": [{{"name": "w", "shape": {shape}, "offset": {offset}}}]}}"#
+        ))
+        .unwrap();
+        ModelArtifact {
+            name: tag.into(),
+            dir,
+            hlo_path: PathBuf::new(),
+            dataset: "unit".into(),
+            arch: "gcn".into(),
+            method: "a2q".into(),
+            node_level: true,
+            num_nodes: 0,
+            num_edges: 0,
+            in_dim: 2,
+            out_dim: 2,
+            graph_capacity: 0,
+            avg_bits: 4.0,
+            accuracy: 0.0,
+            expected_head: vec![],
+            manifest: man,
+        }
+    }
+
+    #[test]
+    fn weight_inputs_in_range_loads() {
+        let art = tensor_fixture("ok", 6, "[2, 2]", 2);
+        let inputs = art.weight_inputs().unwrap();
+        assert_eq!(inputs.len(), 1);
+    }
+
+    #[test]
+    fn weight_inputs_rejects_truncated_weights_file() {
+        // manifest says 2x2 at offset 2, file holds only 4 values
+        let art = tensor_fixture("trunc", 4, "[2, 2]", 2);
+        let err = art.weight_inputs().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("truncated"), "got: {msg}");
+        assert!(msg.contains("tensor w"), "got: {msg}");
+    }
+
+    #[test]
+    fn weight_inputs_rejects_out_of_range_offset() {
+        let art = tensor_fixture("offrange", 6, "[2, 2]", 1_000_000);
+        let err = art.weight_inputs().unwrap_err();
+        assert!(format!("{err}").contains("exceeds"), "got: {err}");
+        // negative offsets are malformed, not a silent cast to 0
+        let art = tensor_fixture("offneg", 6, "[2, 2]", -4);
+        let err = art.weight_inputs().unwrap_err();
+        assert!(format!("{err}").contains("bad offset"), "got: {err}");
+    }
+
+    #[test]
+    fn weight_inputs_rejects_negative_dim() {
+        // old code: product([-2, -2]).max(1) = 4, slice passed silently
+        let art = tensor_fixture("negdim", 6, "[-2, -2]", 0);
+        let err = art.weight_inputs().unwrap_err();
+        assert!(format!("{err}").contains("bad shape dim"), "got: {err}");
+    }
+
+    fn manifest_with_expected_head(tag: &str, expected_head: &str) -> (PathBuf, String) {
+        let dir = std::env::temp_dir().join(format!("a2q_artifact_load_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let name = format!("m_{tag}");
+        let man = format!(
+            r#"{{"hlo": "m.hlo", "dataset": "unit", "arch": "gcn", "method": "a2q",
+                 "node_level": true, "num_nodes": 3, "num_edges": 2, "in_dim": 2,
+                 "out_dim": 2, "graph_capacity": 0, "avg_bits": 4.0, "accuracy": 0.5,
+                 "expected_head": {expected_head}}}"#
+        );
+        std::fs::write(dir.join(format!("{name}.manifest.json")), man).unwrap();
+        (dir, name)
+    }
+
+    #[test]
+    fn load_accepts_numeric_expected_head() {
+        let (dir, name) = manifest_with_expected_head("ok", "[0.5, -1.5]");
+        let art = ModelArtifact::load(&dir, &name).unwrap();
+        assert_eq!(art.expected_head, vec![0.5, -1.5]);
+    }
+
+    #[test]
+    fn load_rejects_non_array_expected_head() {
+        // regression: unwrap_or_default turned this into an empty vec,
+        // silently muting the downstream head-parity check
+        let (dir, name) = manifest_with_expected_head("nonarr", r#""nope""#);
+        let err = ModelArtifact::load(&dir, &name).unwrap_err();
+        assert!(format!("{err}").contains("not an array"), "got: {err}");
+    }
+
+    #[test]
+    fn load_rejects_non_numeric_expected_head_element() {
+        let (dir, name) = manifest_with_expected_head("nonnum", r#"[1.0, "x", 2.0]"#);
+        let err = ModelArtifact::load(&dir, &name).unwrap_err();
+        assert!(format!("{err}").contains("expected_head[1]"), "got: {err}");
+    }
 
     #[test]
     fn missing_index_gives_actionable_error() {

@@ -8,6 +8,8 @@
 
 pub mod artifact;
 pub mod engine;
+pub mod persist;
 
 pub use artifact::{ArtifactIndex, ModelArtifact};
 pub use engine::{Engine, EngineHandle, ExecInput};
+pub use persist::{FsyncPolicy, PersistConfig, Persistence, Recovery, Snapshot};

@@ -1,0 +1,1011 @@
+//! Durable resident state: delta WAL + snapshots of the serving session.
+//!
+//! A²Q's per-node quantization state *accretes at serve time*: every
+//! applied [`GraphDelta`] can append nodes whose `(step, bits)` params are
+//! NNS-assigned online and persisted into the resident
+//! [`NodeQuantParams`].  Without durability a restart silently discards
+//! those assignments, the resident graph, and the epoch history — so this
+//! module makes the delta/shard parity guarantee survive a process
+//! boundary: **snapshot + WAL-tail replay reproduces served logits
+//! bit-for-bit** against the continuously-running executor.
+//!
+//! ## On-disk layout
+//!
+//! The state dir holds one *generation* of files at a time (plus, briefly,
+//! the next one during rotation):
+//!
+//! ```text
+//! <state-dir>/snapshot-<G>.a2qs   resident state at some epoch (binary, CRC'd)
+//! <state-dir>/wal-<G>.log         deltas applied after snapshot G
+//! ```
+//!
+//! A WAL record reuses the wire protocol's framing discipline
+//! (`coordinator::net::protocol`: big-endian length prefix, version and
+//! kind bytes) plus a checksum, with the delta payload encoded by the
+//! *same* JSON codec the protocol's `update` request uses
+//! ([`GraphDelta::to_json`]):
+//!
+//! ```text
+//! ┌──────────┬─────────┬──────────┬──────────┬───────────────────┐
+//! │ len: u32 │ ver: u8 │ kind: u8 │ crc: u32 │ payload (JSON)    │
+//! └──────────┴─────────┴──────────┴──────────┴───────────────────┘
+//! ```
+//!
+//! `len` counts everything after itself (ver + kind + crc + payload, so
+//! ≥ 6); `crc` is IEEE CRC-32 over the payload.  All record integers are
+//! big-endian like the wire protocol; the *snapshot* body is
+//! little-endian like the artifact formats (`quant::mixed::BitsFile`) —
+//! each format follows the discipline of the family it belongs to.
+//!
+//! ## Rotation and recovery
+//!
+//! Snapshots rotate generations instead of truncating in place: write
+//! `snapshot-(G+1).tmp` → fsync → rename → fsync dir → create empty
+//! `wal-(G+1)` → switch the writer → delete generation G.  Every crash
+//! point leaves a consistent pair: a crash before the rename recovers
+//! `(snapshot-G, wal-G)`; one after it recovers `snapshot-(G+1)` with an
+//! empty (possibly still missing) `wal-(G+1)` — never a snapshot paired
+//! with a WAL of deltas it already contains.
+//!
+//! Recovery loads the highest-generation snapshot and replays only that
+//! generation's WAL.  A torn WAL tail (the expected crash artifact) is
+//! recovered to the **longest valid prefix** — scanning stops at the
+//! first record that is short, version-skewed, checksum-broken, or
+//! unparseable, reports what was dropped, and never panics.  A snapshot
+//! that fails its checksum is different: the write discipline makes torn
+//! snapshots impossible, so corruption there is a hard, descriptive error
+//! rather than a silent rebuild from guessed state.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::graph::delta::GraphDelta;
+use crate::util::json::parse;
+
+/// WAL record format version (the `ver` byte of every record).
+pub const WAL_VERSION: u8 = 1;
+/// WAL record kind: one applied [`GraphDelta`].
+pub const REC_DELTA: u8 = 0x01;
+/// Header bytes counted by a record's length prefix (ver + kind + crc).
+const WAL_HEADER: usize = 6;
+/// Allocation guard: largest record `scan`/`append` will accept.
+const MAX_WAL_RECORD: usize = 64 << 20;
+
+/// Snapshot file magic + format version.
+const SNAP_MAGIC: &[u8; 4] = b"A2QS";
+const SNAP_VERSION: u32 = 1;
+
+// ------------------------------------------------------------------ crc32
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// IEEE CRC-32 (the zlib/PNG polynomial, reflected).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in data {
+        c = (c >> 8) ^ CRC_TABLE[((c ^ b as u32) & 0xFF) as usize];
+    }
+    !c
+}
+
+// ------------------------------------------------------------------ config
+
+/// When WAL appends reach the disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync after every append: an acknowledged delta survives power loss
+    Always,
+    /// leave flushing to the OS: an OS crash may drop the newest suffix of
+    /// acknowledged deltas (recovery still keeps the longest valid prefix)
+    Never,
+}
+
+impl FsyncPolicy {
+    pub fn parse(raw: &str) -> Result<FsyncPolicy> {
+        match raw.trim().to_ascii_lowercase().as_str() {
+            "" | "always" => Ok(FsyncPolicy::Always),
+            "never" => Ok(FsyncPolicy::Never),
+            other => Err(Error::config(format!(
+                "A2Q_FSYNC must be 'always' or 'never', got '{other}'"
+            ))),
+        }
+    }
+}
+
+/// Durability policy for one serving session.
+#[derive(Debug, Clone)]
+pub struct PersistConfig {
+    /// state directory (created on open)
+    pub dir: PathBuf,
+    /// rotate a snapshot after this many WAL records; `0` = never (the
+    /// WAL grows unboundedly and recovery replays from the beginning)
+    pub snapshot_every: usize,
+    /// fsync policy for WAL appends (snapshot installs always sync)
+    pub fsync: FsyncPolicy,
+}
+
+impl PersistConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> PersistConfig {
+        PersistConfig {
+            dir: dir.into(),
+            snapshot_every: 64,
+            fsync: FsyncPolicy::Always,
+        }
+    }
+
+    /// Read `A2Q_STATE_DIR` / `A2Q_SNAPSHOT_EVERY` / `A2Q_FSYNC`.  An
+    /// unset or empty `A2Q_STATE_DIR` means persistence is off
+    /// (`Ok(None)`); bad values in the other knobs are startup errors,
+    /// never silent defaults.
+    pub fn from_env() -> Result<Option<PersistConfig>> {
+        PersistConfig::from_env_with_dir(None)
+    }
+
+    /// [`Self::from_env`] with the state directory forced (a CLI
+    /// `--state-dir` wins over `A2Q_STATE_DIR`; the cadence and fsync
+    /// knobs still come from the environment).
+    pub fn from_env_with_dir(dir_override: Option<&str>) -> Result<Option<PersistConfig>> {
+        let dir = match dir_override {
+            Some(d) if !d.trim().is_empty() => d.to_string(),
+            _ => match std::env::var("A2Q_STATE_DIR") {
+                Ok(d) if !d.trim().is_empty() => d,
+                _ => return Ok(None),
+            },
+        };
+        let mut cfg = PersistConfig::new(dir);
+        if let Ok(raw) = std::env::var("A2Q_SNAPSHOT_EVERY") {
+            cfg.snapshot_every = raw.trim().parse().map_err(|_| {
+                Error::config(format!(
+                    "A2Q_SNAPSHOT_EVERY: expected a non-negative integer, got '{raw}'"
+                ))
+            })?;
+        }
+        if let Ok(raw) = std::env::var("A2Q_FSYNC") {
+            cfg.fsync = FsyncPolicy::parse(&raw)?;
+        }
+        Ok(Some(cfg))
+    }
+}
+
+// ---------------------------------------------------------------- snapshot
+
+/// One layer's per-node quantization params as captured on disk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotParams {
+    pub steps: Vec<f32>,
+    pub bits: Vec<u8>,
+    pub signed: bool,
+}
+
+/// Per-layer mutable quantization state (`feat` = layer input, `feat2` =
+/// the GIN hidden map).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotLayer {
+    pub feat: Option<SnapshotParams>,
+    pub feat2: Option<SnapshotParams>,
+}
+
+/// Everything a restarted executor needs to reconstruct the resident
+/// serving state: the post-delta graph, the (possibly NNS-extended)
+/// per-node params, and the epoch counter.  Weights are *not* captured —
+/// they come from the model artifact on disk, and a hot swap installs a
+/// fresh snapshot so a snapshot never predates its weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// logits-cache epoch at capture time
+    pub epoch: u64,
+    /// model the state belongs to (identity-checked on restore)
+    pub model_name: String,
+    pub arch: String,
+    pub in_dim: u32,
+    pub out_dim: u32,
+    pub num_nodes: u64,
+    /// resident dst-major CSR
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    /// row-major `[num_nodes, in_dim]` resident features
+    pub features: Vec<f32>,
+    pub layers: Vec<SnapshotLayer>,
+}
+
+impl Snapshot {
+    /// Serialize: `"A2QS" | version: u32 | crc32(body): u32 | body`, all
+    /// integers little-endian (artifact-format family).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        put_u64(&mut body, self.epoch);
+        put_str(&mut body, &self.model_name);
+        put_str(&mut body, &self.arch);
+        put_u32(&mut body, self.in_dim);
+        put_u32(&mut body, self.out_dim);
+        put_u64(&mut body, self.num_nodes);
+        put_u32s(&mut body, &self.indptr);
+        put_u32s(&mut body, &self.indices);
+        put_f32s(&mut body, &self.features);
+        put_u32(&mut body, self.layers.len() as u32);
+        for lay in &self.layers {
+            put_params(&mut body, lay.feat.as_ref());
+            put_params(&mut body, lay.feat2.as_ref());
+        }
+        let mut out = Vec::with_capacity(body.len() + 12);
+        out.extend_from_slice(SNAP_MAGIC);
+        out.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
+        if bytes.len() < 12 || &bytes[..4] != SNAP_MAGIC {
+            return Err(Error::artifact("snapshot: bad magic (not an A2QS file)"));
+        }
+        let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        if version != SNAP_VERSION {
+            return Err(Error::artifact(format!(
+                "snapshot: format version {version}, this build reads {SNAP_VERSION}"
+            )));
+        }
+        let crc = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        let body = &bytes[12..];
+        let actual = crc32(body);
+        if crc != actual {
+            return Err(Error::artifact(format!(
+                "snapshot: checksum mismatch (stored {crc:#010x}, computed {actual:#010x})"
+            )));
+        }
+        let mut c = Cursor::new(body);
+        let snap = Snapshot {
+            epoch: c.u64()?,
+            model_name: c.string()?,
+            arch: c.string()?,
+            in_dim: c.u32()?,
+            out_dim: c.u32()?,
+            num_nodes: c.u64()?,
+            indptr: c.u32s()?,
+            indices: c.u32s()?,
+            features: c.f32s()?,
+            layers: {
+                let n = c.u32()? as usize;
+                // each layer costs ≥ 2 bytes; cheap bound before allocating
+                if n > body.len() {
+                    return Err(Error::artifact(format!("snapshot: layer count {n} exceeds body")));
+                }
+                let mut layers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    layers.push(SnapshotLayer {
+                        feat: c.params()?,
+                        feat2: c.params()?,
+                    });
+                }
+                layers
+            },
+        };
+        if c.off != body.len() {
+            return Err(Error::artifact(format!(
+                "snapshot: {} trailing bytes after the last field",
+                body.len() - c.off
+            )));
+        }
+        Ok(snap)
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    put_u32(out, vs.len() as u32);
+    for &v in vs {
+        put_u32(out, v);
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(out, vs.len() as u32);
+    for &v in vs {
+        put_u32(out, v.to_bits());
+    }
+}
+
+fn put_params(out: &mut Vec<u8>, p: Option<&SnapshotParams>) {
+    match p {
+        None => out.push(0),
+        Some(p) => {
+            out.push(1);
+            out.push(u8::from(p.signed));
+            put_f32s(out, &p.steps);
+            put_u32(out, p.bits.len() as u32);
+            out.extend_from_slice(&p.bits);
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a snapshot body.
+struct Cursor<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(data: &'a [u8]) -> Cursor<'a> {
+        Cursor { data, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let rest = self.data.len() - self.off;
+        if n > rest {
+            return Err(Error::artifact(format!(
+                "snapshot: truncated body (need {n} bytes at offset {}, {rest} left)",
+                self.off
+            )));
+        }
+        let s = &self.data[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Element count for a length-prefixed array, bounds-checked against
+    /// the remaining bytes *before* any allocation.
+    fn len_of(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let rest = self.data.len() - self.off;
+        if n.checked_mul(elem_bytes).map(|b| b > rest).unwrap_or(true) {
+            return Err(Error::artifact(format!(
+                "snapshot: array of {n} elements overruns the body at offset {}",
+                self.off
+            )));
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.len_of(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::artifact("snapshot: non-UTF-8 string field"))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.len_of(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_of(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_bits(self.u32()?));
+        }
+        Ok(out)
+    }
+
+    fn params(&mut self) -> Result<Option<SnapshotParams>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => {
+                let signed = self.u8()? != 0;
+                let steps = self.f32s()?;
+                let n = self.len_of(1)?;
+                let bits = self.take(n)?.to_vec();
+                Ok(Some(SnapshotParams { steps, bits, signed }))
+            }
+            other => Err(Error::artifact(format!(
+                "snapshot: bad params presence byte {other}"
+            ))),
+        }
+    }
+}
+
+// --------------------------------------------------------------- recovery
+
+/// What `Persistence::open` found on disk.
+#[derive(Debug)]
+pub struct Recovery {
+    /// highest-generation snapshot, if any
+    pub snapshot: Option<Snapshot>,
+    /// valid WAL tail of that generation, in append order
+    pub deltas: Vec<GraphDelta>,
+    /// active generation number
+    pub generation: u64,
+    /// bytes discarded from a torn/corrupt WAL tail (already truncated)
+    pub dropped_bytes: u64,
+    /// why scanning stopped early, when it did
+    pub dropped_note: Option<String>,
+}
+
+struct WalScan {
+    deltas: Vec<GraphDelta>,
+    valid_bytes: u64,
+    dropped_bytes: u64,
+    note: Option<String>,
+}
+
+/// Longest-valid-prefix scan of a WAL image.  Never panics: every
+/// malformed shape (short prefix, absurd length, version/kind skew,
+/// checksum or JSON failure) stops the scan with a note.
+fn scan_wal(data: &[u8]) -> WalScan {
+    let mut deltas = Vec::new();
+    let mut off = 0usize;
+    let mut note = None;
+    while off < data.len() {
+        let rest = data.len() - off;
+        if rest < 4 {
+            note = Some(format!("torn length prefix at byte {off} ({rest} trailing bytes)"));
+            break;
+        }
+        let len =
+            u32::from_be_bytes([data[off], data[off + 1], data[off + 2], data[off + 3]]) as usize;
+        if !(WAL_HEADER..=MAX_WAL_RECORD).contains(&len) {
+            note = Some(format!("corrupt record length {len} at byte {off}"));
+            break;
+        }
+        if rest - 4 < len {
+            note = Some(format!(
+                "torn record at byte {off} (length says {len} bytes, {} present)",
+                rest - 4
+            ));
+            break;
+        }
+        let ver = data[off + 4];
+        let kind = data[off + 5];
+        if ver != WAL_VERSION {
+            note = Some(format!(
+                "record version {ver} at byte {off}, this build reads {WAL_VERSION}"
+            ));
+            break;
+        }
+        if kind != REC_DELTA {
+            note = Some(format!("unknown record kind {kind:#04x} at byte {off}"));
+            break;
+        }
+        let crc = u32::from_be_bytes([
+            data[off + 6],
+            data[off + 7],
+            data[off + 8],
+            data[off + 9],
+        ]);
+        let payload = &data[off + 10..off + 4 + len];
+        if crc32(payload) != crc {
+            note = Some(format!(
+                "checksum mismatch in record {} at byte {off}",
+                deltas.len()
+            ));
+            break;
+        }
+        let parsed = std::str::from_utf8(payload)
+            .ok()
+            .and_then(|s| parse(s).ok())
+            .and_then(|j| GraphDelta::from_json(&j).ok());
+        match parsed {
+            Some(d) => {
+                deltas.push(d);
+                off += 4 + len;
+            }
+            None => {
+                note = Some(format!(
+                    "unparseable payload in record {} at byte {off} (checksum valid)",
+                    deltas.len()
+                ));
+                break;
+            }
+        }
+    }
+    WalScan {
+        deltas,
+        valid_bytes: off as u64,
+        dropped_bytes: (data.len() - off) as u64,
+        note,
+    }
+}
+
+// ------------------------------------------------------------- persistence
+
+fn snapshot_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("snapshot-{generation}.a2qs"))
+}
+
+fn wal_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("wal-{generation}.log"))
+}
+
+fn parse_generation(name: &str, prefix: &str, suffix: &str) -> Option<u64> {
+    name.strip_prefix(prefix)?.strip_suffix(suffix)?.parse().ok()
+}
+
+/// POSIX durability for renames/creates: fsync the containing directory.
+fn sync_dir(dir: &Path) -> Result<()> {
+    File::open(dir)?.sync_all()?;
+    Ok(())
+}
+
+/// Open WAL writer + snapshot rotation for one state directory.
+///
+/// One `Persistence` owns its directory's active generation; the executor
+/// serializes access (appends happen under the resident-state write
+/// lock), so there is no in-process concurrency to guard here.
+#[derive(Debug)]
+pub struct Persistence {
+    dir: PathBuf,
+    snapshot_every: usize,
+    fsync: FsyncPolicy,
+    generation: u64,
+    wal: File,
+    wal_records: usize,
+    wal_bytes: u64,
+    note: Option<String>,
+}
+
+impl Persistence {
+    /// Open (or create) a state dir: load the newest snapshot, recover the
+    /// longest valid WAL prefix of its generation (truncating any torn
+    /// tail in place), delete superseded generations, and position the
+    /// writer at the end of the valid log.
+    pub fn open(cfg: PersistConfig) -> Result<(Persistence, Recovery)> {
+        fs::create_dir_all(&cfg.dir)?;
+        let mut snap_gens: Vec<u64> = Vec::new();
+        let mut wal_gens: Vec<u64> = Vec::new();
+        for entry in fs::read_dir(&cfg.dir)? {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(g) = parse_generation(name, "snapshot-", ".a2qs") {
+                snap_gens.push(g);
+            }
+            if let Some(g) = parse_generation(name, "wal-", ".log") {
+                wal_gens.push(g);
+            }
+        }
+        let snapshot = match snap_gens.iter().max().copied() {
+            Some(g) => {
+                let path = snapshot_path(&cfg.dir, g);
+                let bytes = fs::read(&path)?;
+                // the temp+rename+dir-fsync discipline makes torn snapshots
+                // impossible, so a decode failure here is real corruption:
+                // refuse to serve guessed state
+                let snap = Snapshot::decode(&bytes).map_err(|e| {
+                    Error::artifact(format!(
+                        "corrupt snapshot {}: {e} — restore the file from a replica, or \
+                         remove the state dir to rebuild from the model artifact",
+                        path.display()
+                    ))
+                })?;
+                Some((g, snap))
+            }
+            None => None,
+        };
+        // active generation: the snapshot's, else the newest WAL's (a log
+        // that never reached its first snapshot), else 0.  A missing WAL
+        // file for the active generation is an empty tail — the expected
+        // state after a crash between snapshot rename and WAL creation.
+        let generation = snapshot
+            .as_ref()
+            .map(|(g, _)| *g)
+            .or_else(|| wal_gens.iter().max().copied())
+            .unwrap_or(0);
+        let active_wal = wal_path(&cfg.dir, generation);
+        let data = match fs::read(&active_wal) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e.into()),
+        };
+        let scan = scan_wal(&data);
+        let mut wal = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&active_wal)?;
+        if scan.dropped_bytes > 0 {
+            // drop the torn tail so appends extend the valid prefix
+            wal.set_len(scan.valid_bytes)?;
+            wal.sync_all()?;
+        }
+        wal.seek(SeekFrom::Start(scan.valid_bytes))?;
+        for &g in snap_gens.iter().chain(&wal_gens) {
+            if g < generation {
+                let _ = fs::remove_file(snapshot_path(&cfg.dir, g));
+                let _ = fs::remove_file(wal_path(&cfg.dir, g));
+            }
+        }
+        let recovery = Recovery {
+            snapshot: snapshot.map(|(_, s)| s),
+            generation,
+            dropped_bytes: scan.dropped_bytes,
+            dropped_note: scan.note,
+            deltas: scan.deltas,
+        };
+        let persist = Persistence {
+            dir: cfg.dir,
+            snapshot_every: cfg.snapshot_every,
+            fsync: cfg.fsync,
+            generation,
+            wal,
+            wal_records: recovery.deltas.len(),
+            wal_bytes: scan.valid_bytes,
+            note: None,
+        };
+        Ok((persist, recovery))
+    }
+
+    /// Append one delta record; returns the record's full byte length
+    /// (length prefix included) so a failed commit can roll it back.
+    pub fn append_delta(&mut self, delta: &GraphDelta) -> Result<u64> {
+        let payload = delta.to_json().to_string().into_bytes();
+        let len = payload.len() + WAL_HEADER;
+        if len > MAX_WAL_RECORD {
+            return Err(Error::coordinator(format!(
+                "delta record of {len} bytes exceeds the {MAX_WAL_RECORD}-byte WAL record cap"
+            )));
+        }
+        let mut rec = Vec::with_capacity(4 + len);
+        rec.extend_from_slice(&(len as u32).to_be_bytes());
+        rec.push(WAL_VERSION);
+        rec.push(REC_DELTA);
+        rec.extend_from_slice(&crc32(&payload).to_be_bytes());
+        rec.extend_from_slice(&payload);
+        self.wal.write_all(&rec)?;
+        if self.fsync == FsyncPolicy::Always {
+            self.wal.sync_data()?;
+        }
+        self.wal_records += 1;
+        self.wal_bytes += rec.len() as u64;
+        Ok(rec.len() as u64)
+    }
+
+    /// Rewind the most recent append (the executor calls this when a
+    /// logged delta fails to commit, so the log never replays a delta the
+    /// resident session refused).
+    pub fn rollback_last(&mut self, record_bytes: u64) -> Result<()> {
+        let new_len = self.wal_bytes.saturating_sub(record_bytes);
+        self.wal.set_len(new_len)?;
+        self.wal.seek(SeekFrom::Start(new_len))?;
+        if self.fsync == FsyncPolicy::Always {
+            self.wal.sync_data()?;
+        }
+        self.wal_bytes = new_len;
+        self.wal_records = self.wal_records.saturating_sub(1);
+        Ok(())
+    }
+
+    /// Whether the WAL has grown past the snapshot cadence.
+    pub fn snapshot_due(&self) -> bool {
+        self.snapshot_every > 0 && self.wal_records >= self.snapshot_every
+    }
+
+    /// Install `snap` as the next generation and rotate to a fresh WAL.
+    /// Ordering: tmp write → fsync → rename → dir fsync → empty WAL →
+    /// dir fsync → switch writer → delete the superseded generation; see
+    /// the module docs for why every crash point recovers consistently.
+    pub fn install_snapshot(&mut self, snap: &Snapshot) -> Result<()> {
+        let next = self.generation + 1;
+        let final_path = snapshot_path(&self.dir, next);
+        let tmp_path = self.dir.join(format!("snapshot-{next}.a2qs.tmp"));
+        {
+            let mut f = File::create(&tmp_path)?;
+            f.write_all(&snap.encode())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp_path, &final_path)?;
+        sync_dir(&self.dir)?;
+        let next_wal_path = wal_path(&self.dir, next);
+        let next_wal = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&next_wal_path)?;
+        next_wal.sync_all()?;
+        sync_dir(&self.dir)?;
+        let prev = self.generation;
+        self.wal = next_wal;
+        self.generation = next;
+        self.wal_records = 0;
+        self.wal_bytes = 0;
+        // best-effort cleanup: recovery prefers the highest generation
+        // regardless, so a leftover pair is wasted disk, not wrong state
+        let _ = fs::remove_file(snapshot_path(&self.dir, prev));
+        let _ = fs::remove_file(wal_path(&self.dir, prev));
+        Ok(())
+    }
+
+    /// Records in the active WAL (since the last snapshot).
+    pub fn wal_records(&self) -> usize {
+        self.wal_records
+    }
+
+    /// Bytes in the active WAL.
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal_bytes
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Record a non-fatal problem (e.g. a failed best-effort snapshot —
+    /// the WAL keeps the state recoverable) for operators to read back.
+    pub fn set_note(&mut self, note: String) {
+        self.note = Some(note);
+    }
+
+    pub fn note(&self) -> Option<&str> {
+        self.note.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("a2q_persist_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn delta(i: u32) -> GraphDelta {
+        GraphDelta {
+            add_nodes: 1,
+            new_features: vec![0.5 + i as f32, -0.25 * i as f32],
+            add_edges: vec![(i, i + 1)],
+            remove_edges: if i % 2 == 0 { vec![(0, i)] } else { vec![] },
+        }
+    }
+
+    fn delta_key(d: &GraphDelta) -> String {
+        d.to_json().to_string()
+    }
+
+    fn snap_fixture() -> Snapshot {
+        Snapshot {
+            epoch: 7,
+            model_name: "unit".into(),
+            arch: "gcn".into(),
+            in_dim: 2,
+            out_dim: 3,
+            num_nodes: 4,
+            indptr: vec![0, 1, 2, 2, 3],
+            indices: vec![1, 0, 3],
+            features: vec![0.1, -0.2, f32::MIN_POSITIVE, 3.5e7, 0.0, -0.0, 1.0, 2.0],
+            layers: vec![SnapshotLayer {
+                feat: Some(SnapshotParams {
+                    steps: vec![0.1, 0.2, 0.3, 0.4],
+                    bits: vec![4, 2, 8, 1],
+                    signed: true,
+                }),
+                feat2: None,
+            }],
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bitwise() {
+        let snap = snap_fixture();
+        let decoded = Snapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(decoded.epoch, snap.epoch);
+        assert_eq!(decoded.model_name, snap.model_name);
+        assert_eq!(decoded.indptr, snap.indptr);
+        assert_eq!(decoded.indices, snap.indices);
+        // features compare as bit patterns (−0.0 and denormals included)
+        assert_eq!(
+            decoded.features.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            snap.features.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(decoded.layers, snap.layers);
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_malformed_bytes_without_panicking() {
+        let good = snap_fixture().encode();
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(Snapshot::decode(&bad).is_err());
+        // unknown version
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(Snapshot::decode(&bad).is_err());
+        // any flipped body byte must fail the checksum
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        assert!(Snapshot::decode(&bad).is_err());
+        // trailing garbage is rejected, not ignored
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(Snapshot::decode(&bad).is_err());
+        // every truncation errors cleanly (the checksum catches them all)
+        for cut in 0..good.len() {
+            assert!(Snapshot::decode(&good[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn wal_append_then_reopen_replays_in_order() {
+        let dir = tmp_dir("replay");
+        let (mut p, rec) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        assert!(rec.snapshot.is_none());
+        assert!(rec.deltas.is_empty());
+        let originals: Vec<GraphDelta> = (0..5).map(delta).collect();
+        for d in &originals {
+            p.append_delta(d).unwrap();
+        }
+        assert_eq!(p.wal_records(), 5);
+        drop(p);
+        let (p2, rec) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        assert_eq!(rec.dropped_bytes, 0);
+        assert!(rec.dropped_note.is_none());
+        assert_eq!(
+            rec.deltas.iter().map(delta_key).collect::<Vec<_>>(),
+            originals.iter().map(delta_key).collect::<Vec<_>>()
+        );
+        assert_eq!(p2.wal_records(), 5);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rollback_last_unwrites_exactly_one_record() {
+        let dir = tmp_dir("rollback");
+        let (mut p, _) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        p.append_delta(&delta(0)).unwrap();
+        let n = p.append_delta(&delta(1)).unwrap();
+        p.rollback_last(n).unwrap();
+        // a new append lands where the rolled-back record was
+        p.append_delta(&delta(2)).unwrap();
+        drop(p);
+        let (_, rec) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        assert_eq!(
+            rec.deltas.iter().map(delta_key).collect::<Vec<_>>(),
+            vec![delta_key(&delta(0)), delta_key(&delta(2))]
+        );
+        assert_eq!(rec.dropped_bytes, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_rotation_supersedes_the_old_generation() {
+        let dir = tmp_dir("rotate");
+        let cfg = PersistConfig {
+            snapshot_every: 2,
+            ..PersistConfig::new(&dir)
+        };
+        let (mut p, _) = Persistence::open(cfg.clone()).unwrap();
+        p.append_delta(&delta(0)).unwrap();
+        assert!(!p.snapshot_due());
+        p.append_delta(&delta(1)).unwrap();
+        assert!(p.snapshot_due());
+        p.install_snapshot(&snap_fixture()).unwrap();
+        assert_eq!(p.generation(), 1);
+        assert_eq!(p.wal_records(), 0);
+        // post-snapshot deltas land in the new generation's WAL
+        p.append_delta(&delta(2)).unwrap();
+        drop(p);
+        let (p2, rec) = Persistence::open(cfg).unwrap();
+        assert_eq!(p2.generation(), 1);
+        let snap = rec.snapshot.expect("snapshot restored");
+        assert_eq!(snap.epoch, 7);
+        assert_eq!(
+            rec.deltas.iter().map(delta_key).collect::<Vec<_>>(),
+            vec![delta_key(&delta(2))]
+        );
+        // generation 0's files are gone
+        assert!(!wal_path(&dir, 0).exists());
+        assert!(!snapshot_path(&dir, 0).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_recovers_longest_valid_prefix() {
+        let dir = tmp_dir("torn");
+        let (mut p, _) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        for i in 0..3 {
+            p.append_delta(&delta(i)).unwrap();
+        }
+        drop(p);
+        let full = fs::read(wal_path(&dir, 0)).unwrap();
+        // cut 5 bytes into the final record
+        let cut = full.len() - 5;
+        fs::write(wal_path(&dir, 0), &full[..cut]).unwrap();
+        let (p2, rec) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        assert_eq!(rec.deltas.len(), 2);
+        assert!(rec.dropped_bytes > 0);
+        assert!(rec.dropped_note.is_some(), "drop must be reported");
+        // the torn bytes were truncated away: the file ends at the valid
+        // prefix and new appends extend it cleanly
+        assert_eq!(fs::metadata(wal_path(&dir, 0)).unwrap().len(), p2.wal_bytes());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_a_hard_error() {
+        let dir = tmp_dir("corrupt_snap");
+        let (mut p, _) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        p.append_delta(&delta(0)).unwrap();
+        p.install_snapshot(&snap_fixture()).unwrap();
+        drop(p);
+        let path = snapshot_path(&dir, 1);
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        fs::write(&path, &bytes).unwrap();
+        let err = Persistence::open(PersistConfig::new(&dir)).unwrap_err();
+        assert!(
+            err.to_string().contains("corrupt snapshot"),
+            "descriptive error, got: {err}"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_wal_after_snapshot_is_an_empty_tail() {
+        // simulates a crash between snapshot rename and WAL creation
+        let dir = tmp_dir("no_wal");
+        let (mut p, _) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        p.append_delta(&delta(0)).unwrap();
+        p.install_snapshot(&snap_fixture()).unwrap();
+        drop(p);
+        fs::remove_file(wal_path(&dir, 1)).unwrap();
+        let (p2, rec) = Persistence::open(PersistConfig::new(&dir)).unwrap();
+        assert!(rec.snapshot.is_some());
+        assert!(rec.deltas.is_empty());
+        assert_eq!(p2.generation(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_rejects() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse(" NEVER ").unwrap(), FsyncPolicy::Never);
+        assert_eq!(FsyncPolicy::parse("").unwrap(), FsyncPolicy::Always);
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+    }
+}
