@@ -12,9 +12,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use a2q::coordinator::net::{run_load, LoadConfig, NetConfig, NetServer, WireResponse};
-use a2q::coordinator::{AdaptiveWait, BatcherConfig, Coordinator, MockExecutor};
+use a2q::coordinator::net::{run_load, LoadConfig, NetConfig, NetServer, RetryPolicy, WireResponse};
+use a2q::coordinator::{AdaptiveWait, BatcherConfig, Coordinator, MockExecutor, SuperviseConfig};
 use a2q::util::bench::{BenchConfig, BenchRunner};
+use a2q::util::fault;
 
 fn start_server() -> (NetServer, AdaptiveWait) {
     let wait = AdaptiveWait::new(
@@ -83,6 +84,7 @@ fn main() {
                 nodes_per_req: 2,
                 node_space: 64,
                 pace: Duration::ZERO,
+                retry: RetryPolicy::none(),
             },
         )
         .expect("load run");
@@ -137,6 +139,7 @@ fn main() {
                     nodes_per_req: 2,
                     node_space: 64,
                     pace: Duration::ZERO,
+                    retry: RetryPolicy::none(),
                 },
             )
         }
@@ -156,6 +159,79 @@ fn main() {
     // the load thread sees EOFs once the server is gone; that's expected —
     // the contract only covers requests the server admitted
     let _ = drain_load.join();
+
+    // faulted rung: a fresh supervised server with seeded executor faults.
+    // Retrying clients ride through breaker-open windows; `recovery_p99`
+    // is the retry-inclusive tail, `breaker_open_frac` the share of
+    // requests the breaker shed fast instead of burning a failing batch.
+    let faulted = {
+        let mut coord = Coordinator::new();
+        coord.set_supervision(SuperviseConfig {
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(50),
+            ..SuperviseConfig::default()
+        });
+        coord.add_model(
+            "mock",
+            Arc::new(MockExecutor {
+                out_dim: 8,
+                latency: Duration::from_micros(500),
+            }),
+            BatcherConfig {
+                node_budget: 4096,
+                graph_slots: 64,
+                max_wait: Duration::from_micros(500),
+                queue_cap: 16,
+                adaptive_wait: None,
+            },
+        );
+        NetServer::start(coord, NetConfig::default()).expect("start faulted server")
+    };
+    let faulted_addr = format!("{}", faulted.local_addr());
+    fault::arm(0x5eed_cafe, "executor.classify=err@0.3").expect("arm fault schedule");
+    let report = run_load(
+        &faulted_addr,
+        &LoadConfig {
+            conns: if quick { 2 } else { 4 },
+            requests_per_conn: if quick { 20 } else { 200 },
+            model: "mock".to_string(),
+            nodes_per_req: 2,
+            node_space: 64,
+            pace: Duration::ZERO,
+            retry: RetryPolicy {
+                max_retries: 5,
+                deadline: Some(Duration::from_secs(2)),
+                ..RetryPolicy::default()
+            },
+        },
+    )
+    .expect("faulted load run");
+    let breaker_rejected = faulted
+        .metrics_json()
+        .req_f64("breaker_rejected")
+        .expect("breaker_rejected metric");
+    fault::disarm();
+    runner.report_metric(
+        "server/faulted/recovery_p99",
+        report.p99_ms,
+        "ms (p99 over ok replies, retries included, under seeded faults)",
+    );
+    runner.report_metric(
+        "server/faulted/breaker_open_frac",
+        breaker_rejected / report.sent.max(1) as f64,
+        "breaker fast-rejections per offered request",
+    );
+    runner.report_metric(
+        "server/faulted/retries",
+        report.retries as f64,
+        "extra attempts clients needed under faults",
+    );
+    runner.report_metric(
+        "server/faulted/io_errors",
+        report.io_errors as f64,
+        "transport failures (must be 0: faults surface on-protocol)",
+    );
+    faulted.drain();
 
     runner
         .write_json(std::path::Path::new("BENCH_server_throughput.json"))

@@ -11,7 +11,7 @@
 
 use std::time::Duration;
 
-use a2q::coordinator::net::{run_load, LoadConfig};
+use a2q::coordinator::net::{run_load, LoadConfig, RetryPolicy};
 use a2q::error::Result;
 use a2q::util::cli::{App, CommandSpec};
 
@@ -24,7 +24,17 @@ fn app() -> App {
             .opt("model", "mock", "model name to query")
             .opt("nodes-per-req", "2", "node ids per classify request")
             .opt("node-space", "64", "node ids are drawn modulo this")
-            .opt("pace-us", "0", "sleep between requests (0 = closed loop)"),
+            .opt("pace-us", "0", "sleep between requests (0 = closed loop)")
+            .opt(
+                "retries",
+                "0",
+                "extra attempts per request on rejection/transport error (0 = never retry)",
+            )
+            .opt(
+                "deadline-ms",
+                "0",
+                "wall-clock budget per request across all attempts (0 = unbounded)",
+            ),
     )
 }
 
@@ -50,6 +60,12 @@ fn main() {
 }
 
 fn run(m: a2q::util::cli::Matches) -> Result<()> {
+    let deadline_ms = m.get_usize("deadline-ms")? as u64;
+    let retry = RetryPolicy {
+        max_retries: m.get_usize("retries")? as u32,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        ..RetryPolicy::default()
+    };
     let cfg = LoadConfig {
         conns: m.get_usize("conns")?,
         requests_per_conn: m.get_usize("requests")?,
@@ -57,6 +73,7 @@ fn run(m: a2q::util::cli::Matches) -> Result<()> {
         nodes_per_req: m.get_usize("nodes-per-req")?,
         node_space: m.get_usize("node-space")?.max(1) as u32,
         pace: Duration::from_micros(m.get_usize("pace-us")? as u64),
+        retry,
     };
     let report = run_load(m.req("addr")?, &cfg)?;
     println!("{}", report.to_json().to_string_pretty());

@@ -15,7 +15,7 @@ use std::time::Duration;
 use a2q::coordinator::net::NetConfig;
 use a2q::coordinator::{
     synthetic_node_session, AdaptiveWait, BatcherConfig, Coordinator, MockExecutor,
-    NativeExecutor, NetServer, PjrtExecutor,
+    NativeExecutor, NetServer, PjrtExecutor, SuperviseConfig,
 };
 use a2q::error::Result;
 use a2q::runtime::{ArtifactIndex, EngineHandle, PersistConfig};
@@ -109,6 +109,9 @@ fn run(m: a2q::util::cli::Matches) -> Result<()> {
     }
 
     let mut coord = Coordinator::new();
+    // supervision knobs (restart budget, breaker) apply to every model
+    // registered below
+    coord.set_supervision(SuperviseConfig::from_env()?);
     let artifact_name = m.req("artifact")?;
     let synthetic = m.get_usize("synthetic")?;
     let model_name = if synthetic > 0 {

@@ -1,5 +1,6 @@
 //! Serving metrics: latency histograms + throughput counters.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -95,6 +96,15 @@ struct Inner {
     shard_rebuilds: u64,
     /// last observed Σ halo mirror nodes of the sharded resident (gauge)
     halo_nodes: u64,
+    /// supervised runner respawns after a panic escaped the batch boundary
+    runner_restarts: u64,
+    /// circuit-breaker closed/half-open → open transitions
+    breaker_opens: u64,
+    /// submissions rejected fast because a model's breaker was open
+    breaker_rejected: u64,
+    /// per-model breaker state ("closed" / "open" / "half_open"); BTreeMap
+    /// so snapshots list models in a stable order
+    breaker_states: BTreeMap<String, &'static str>,
 }
 
 /// Thread-safe metrics sink shared across the pipeline.
@@ -117,6 +127,14 @@ pub struct MetricsSnapshot {
     pub shard_rebuilds: u64,
     /// last observed Σ halo mirror nodes of the sharded resident (gauge)
     pub halo_nodes: u64,
+    /// supervised runner respawns (panic escaped the batch boundary)
+    pub runner_restarts: u64,
+    /// circuit-breaker open transitions
+    pub breaker_opens: u64,
+    /// submissions rejected fast by an open circuit breaker
+    pub breaker_rejected: u64,
+    /// per-model breaker state, sorted by model name
+    pub breaker_states: Vec<(String, String)>,
     pub mean_batch_size: f64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
@@ -162,6 +180,26 @@ impl Metrics {
         m.halo_nodes = halo_nodes;
     }
 
+    /// Count one supervised runner respawn.
+    pub fn record_runner_restart(&self) {
+        self.locked().runner_restarts += 1;
+    }
+
+    /// Count one circuit-breaker open transition.
+    pub fn record_breaker_open(&self) {
+        self.locked().breaker_opens += 1;
+    }
+
+    /// Count one fast rejection by an open circuit breaker.
+    pub fn record_breaker_rejected(&self) {
+        self.locked().breaker_rejected += 1;
+    }
+
+    /// Record a model's current breaker state (gauge, per model).
+    pub fn set_breaker_state(&self, model: &str, state: &'static str) {
+        self.locked().breaker_states.insert(model.to_string(), state);
+    }
+
     pub fn record_batch(&self, batch_size: usize) {
         let mut m = self.locked();
         m.batches += 1;
@@ -190,6 +228,14 @@ impl Metrics {
             updates: m.updates,
             shard_rebuilds: m.shard_rebuilds,
             halo_nodes: m.halo_nodes,
+            runner_restarts: m.runner_restarts,
+            breaker_opens: m.breaker_opens,
+            breaker_rejected: m.breaker_rejected,
+            breaker_states: m
+                .breaker_states
+                .iter()
+                .map(|(k, v)| (k.clone(), (*v).to_string()))
+                .collect(),
             mean_batch_size: if m.batches == 0 {
                 0.0
             } else {
@@ -211,9 +257,20 @@ impl Metrics {
 
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
+        let breakers = if self.breaker_states.is_empty() {
+            String::new()
+        } else {
+            let states: Vec<String> = self
+                .breaker_states
+                .iter()
+                .map(|(m, s)| format!("{m}:{s}"))
+                .collect();
+            format!(" breakers=[{}]", states.join(","))
+        };
         format!(
             "requests={} responses={} rejected={} errors={} batches={} updates={} \
              shard_rebuilds={} halo_nodes={} \
+             restarts={} breaker_opens={} breaker_rejected={}{} \
              mean_batch={:.2} latency(mean/p50/p99)={:.0}/{:.0}/{:.0}µs \
              queue(mean/p50/p99)={:.0}/{:.0}/{:.0}µs \
              exec(mean/p50/p99)={:.0}/{:.0}/{:.0}µs throughput={:.1} rps (10s window)",
@@ -225,6 +282,10 @@ impl MetricsSnapshot {
             self.updates,
             self.shard_rebuilds,
             self.halo_nodes,
+            self.runner_restarts,
+            self.breaker_opens,
+            self.breaker_rejected,
+            breakers,
             self.mean_batch_size,
             self.mean_latency_us,
             self.p50_latency_us,
@@ -251,6 +312,18 @@ impl MetricsSnapshot {
             ("updates", Json::Num(self.updates as f64)),
             ("shard_rebuilds", Json::Num(self.shard_rebuilds as f64)),
             ("halo_nodes", Json::Num(self.halo_nodes as f64)),
+            ("runner_restarts", Json::Num(self.runner_restarts as f64)),
+            ("breaker_opens", Json::Num(self.breaker_opens as f64)),
+            ("breaker_rejected", Json::Num(self.breaker_rejected as f64)),
+            (
+                "breaker_states",
+                Json::obj(
+                    self.breaker_states
+                        .iter()
+                        .map(|(m, s)| (m.as_str(), Json::Str(s.clone())))
+                        .collect(),
+                ),
+            ),
             ("mean_batch_size", Json::Num(self.mean_batch_size)),
             ("mean_latency_us", Json::Num(self.mean_latency_us)),
             ("p50_latency_us", Json::Num(self.p50_latency_us)),
@@ -282,6 +355,12 @@ mod tests {
         m.record_response(300, 30, 270);
         m.record_update(3, 17);
         m.record_update(2, 21);
+        m.record_runner_restart();
+        m.record_breaker_open();
+        m.record_breaker_rejected();
+        m.record_breaker_rejected();
+        m.set_breaker_state("mock", "closed");
+        m.set_breaker_state("mock", "open");
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.responses, 2);
@@ -294,8 +373,17 @@ mod tests {
         assert!((s.mean_exec_us - 180.0).abs() < 1.0);
         assert!(s.p99_exec_us >= s.p50_exec_us);
         assert!(s.p99_queue_us >= s.p50_queue_us);
+        assert_eq!(s.runner_restarts, 1);
+        assert_eq!(s.breaker_opens, 1);
+        assert_eq!(s.breaker_rejected, 2);
+        assert_eq!(
+            s.breaker_states,
+            vec![("mock".to_string(), "open".to_string())],
+            "breaker state gauge tracks the last report per model"
+        );
         assert!(s.render().contains("requests=2"));
         assert!(s.render().contains("shard_rebuilds=5"));
+        assert!(s.render().contains("breakers=[mock:open]"));
         // fresh traffic: the windowed rate is live, not zero
         assert!(s.throughput_rps > 0.0);
     }

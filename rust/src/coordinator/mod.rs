@@ -16,6 +16,10 @@
 //!   integer path, or mock (tests).
 //! * [`metrics`] — latency histograms + throughput counters.
 //! * [`server`] — the `Coordinator` facade tying it together.
+//! * [`supervise`] — self-healing: supervised runner respawn with backoff
+//!   and a restart budget, plus per-model circuit breakers that reject
+//!   fast (on-protocol, with `retry_after_ms`) while an executor is
+//!   failing every batch.
 //! * [`net`] — the TCP front end: versioned length-prefixed wire protocol
 //!   over `Coordinator::submit`, per-client token-bucket rate limiting,
 //!   explicit on-protocol rejections, p99-driven adaptive batching, and
@@ -28,6 +32,7 @@ pub mod net;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod supervise;
 
 pub use batcher::{AdaptiveWait, BatcherConfig, DynamicBatcher};
 pub use executor::{
@@ -39,3 +44,4 @@ pub use net::{DrainReport, NetClient, NetConfig, NetServer};
 pub use request::{Payload, Prediction, Request, Response};
 pub use router::{RejectReason, Rejected};
 pub use server::{Coordinator, CoordinatorConfig};
+pub use supervise::{CircuitBreaker, SuperviseConfig};

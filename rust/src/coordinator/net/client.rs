@@ -1,41 +1,125 @@
 //! Blocking wire-protocol client + closed-loop load generator.
 //!
 //! The client is deliberately simple — one request in flight per
-//! connection, matching the server's sequential per-connection loop.  The
-//! load generator drives `conns` such clients in parallel and tallies
-//! every outcome class separately (`ok` / `rejected` / `errors` /
-//! `io_errors`), so a bench can assert the overload contract: every
-//! request gets an on-protocol reply, never a hang or a dropped
-//! connection.
+//! connection, matching the server's sequential per-connection loop.
+//! [`NetClient::request_with_retry`] layers deadline-aware retries on
+//! top: on-protocol rejections are retried after the server's
+//! `retry_after_ms` hint (plus jittered exponential backoff), transport
+//! errors trigger a reconnect, and the whole attempt chain respects one
+//! overall deadline.  The load generator drives `conns` such clients in
+//! parallel and tallies every outcome class separately (`ok` /
+//! `rejected` / `errors` / `io_errors`, plus `retries`), so a bench can
+//! assert the overload contract: every request gets an on-protocol
+//! reply, never a hang or a dropped connection.
 
 use std::io::Write as _;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 
 use super::protocol::{read_frame, write_frame, WireRequest, WireResponse};
+
+/// Default per-reply read deadline.  The server always answers or closes;
+/// the deadline only guards against a dead peer.
+const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// How a client retries a request: how many extra attempts, how to back
+/// off between them, and a wall-clock budget for the whole chain.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// extra attempts after the first (0 = never retry)
+    pub max_retries: u32,
+    /// first backoff; doubles each retry (jittered, capped)
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+    /// wall-clock budget for the whole attempt chain, measured from the
+    /// first send.  Also bounds the per-reply read timeout, so a request
+    /// with a 2 s deadline never sits 60 s in a blocking read.
+    pub deadline: Option<Duration>,
+    /// seed for backoff jitter (deterministic per client)
+    pub jitter_seed: u64,
+}
+
+impl RetryPolicy {
+    /// Never retry — single attempt, default read deadline.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(1),
+            deadline: None,
+            jitter_seed: 0,
+        }
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(1),
+            deadline: None,
+            jitter_seed: 0x5eed,
+        }
+    }
+}
 
 /// Blocking client for one connection.
 pub struct NetClient {
     stream: TcpStream,
     max_frame: usize,
+    /// resolved peer (kept so retries can reconnect after an io error)
+    peer: SocketAddr,
+    read_timeout: Duration,
+    /// total extra attempts made by `request_with_retry` on this client
+    retries_total: u64,
 }
 
 impl NetClient {
-    /// Connect with a generous reply deadline (the server always answers
-    /// or closes; the deadline only guards against a dead peer).
+    /// Connect with the default reply deadline.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        NetClient::connect_with_timeout(addr, DEFAULT_READ_TIMEOUT)
+    }
+
+    /// Connect with an explicit per-reply read deadline (the old client
+    /// hardcoded 60 s, which made short request deadlines meaningless).
+    pub fn connect_with_timeout(
+        addr: impl ToSocketAddrs,
+        read_timeout: Duration,
+    ) -> Result<NetClient> {
         let stream = TcpStream::connect(addr)?;
+        let peer = stream.peer_addr()?;
+        let read_timeout = read_timeout.max(Duration::from_millis(1));
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        stream.set_read_timeout(Some(read_timeout))?;
         Ok(NetClient {
             stream,
             max_frame: 64 << 20,
+            peer,
+            read_timeout,
+            retries_total: 0,
         })
+    }
+
+    /// Drop the current stream and dial the same peer again.
+    fn reconnect(&mut self) -> Result<()> {
+        let stream = TcpStream::connect(self.peer)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        self.stream = stream;
+        Ok(())
+    }
+
+    /// Extra attempts made by [`request_with_retry`] over this client's
+    /// lifetime (load-generator bookkeeping).
+    pub fn retries_total(&self) -> u64 {
+        self.retries_total
     }
 
     /// Send one request and wait for its reply frame.
@@ -45,6 +129,85 @@ impl NetClient {
         match read_frame(&mut self.stream, self.max_frame)? {
             Some(frame) => WireResponse::decode(&frame),
             None => Err(Error::coordinator("server closed the connection")),
+        }
+    }
+
+    /// Send with deadline-aware retries.
+    ///
+    /// * `Rejected` replies are retried after `max(retry_after_ms,
+    ///   exponential backoff)` plus up to 25% jitter — honouring the
+    ///   server's hint instead of hammering a draining or breaker-open
+    ///   server.
+    /// * Transport errors reconnect before retrying.
+    /// * The whole chain (sends, waits, backoffs) stops at
+    ///   `policy.deadline`; the per-reply read timeout is clamped to the
+    ///   remaining budget so the final attempt cannot overshoot it.
+    ///
+    /// Returns the last outcome when attempts run out — a terminal
+    /// `Rejected` is still an on-protocol reply, not an `Err`.
+    pub fn request_with_retry(
+        &mut self,
+        req: &WireRequest,
+        policy: &RetryPolicy,
+    ) -> Result<WireResponse> {
+        let started = Instant::now();
+        let mut jitter = Rng::new(policy.jitter_seed ^ 0x9e37_79b9_7f4a_7c15);
+        let mut attempt: u32 = 0;
+        loop {
+            // clamp the read timeout to the remaining deadline budget
+            if let Some(deadline) = policy.deadline {
+                let remaining = deadline.saturating_sub(started.elapsed());
+                if remaining.is_zero() {
+                    return Err(Error::coordinator(format!(
+                        "request deadline ({deadline:?}) exceeded after {attempt} attempt(s)"
+                    )));
+                }
+                let t = remaining.min(self.read_timeout).max(Duration::from_millis(1));
+                self.stream.set_read_timeout(Some(t))?;
+            }
+            let outcome = self.request(req);
+            let out_of_attempts = attempt >= policy.max_retries;
+            let wait = match &outcome {
+                Ok(WireResponse::Rejected { retry_after_ms, .. }) if !out_of_attempts => {
+                    let backoff = policy
+                        .base_backoff
+                        .saturating_mul(1u32 << attempt.min(20))
+                        .min(policy.max_backoff);
+                    Some(backoff.max(Duration::from_millis(*retry_after_ms)))
+                }
+                Ok(_) => return outcome,
+                Err(_) if !out_of_attempts => {
+                    // transport gone: reconnect, then back off and resend
+                    if self.reconnect().is_err() {
+                        return outcome;
+                    }
+                    Some(
+                        policy
+                            .base_backoff
+                            .saturating_mul(1u32 << attempt.min(20))
+                            .min(policy.max_backoff),
+                    )
+                }
+                Err(_) => return outcome,
+            };
+            let Some(wait) = wait else { return outcome };
+            // up to 25% jitter decorrelates clients retrying in lockstep
+            let wait = wait.mul_f64(1.0 + 0.25 * jitter.f64());
+            let wait = match policy.deadline {
+                Some(deadline) => {
+                    let remaining = deadline.saturating_sub(started.elapsed());
+                    if remaining <= wait {
+                        // not enough budget for another attempt: the last
+                        // on-protocol outcome is the answer
+                        return outcome;
+                    }
+                    wait
+                }
+                None => wait,
+            };
+            thread::sleep(wait);
+            attempt += 1;
+            self.retries_total += 1;
         }
     }
 
@@ -98,6 +261,9 @@ pub struct LoadConfig {
     pub node_space: u32,
     /// sleep between requests; `ZERO` = closed loop (max pressure)
     pub pace: Duration,
+    /// retry behaviour per request (`RetryPolicy::none()` = the old
+    /// single-attempt tally, where every rejection counts as rejected)
+    pub retry: RetryPolicy,
 }
 
 impl Default for LoadConfig {
@@ -109,6 +275,7 @@ impl Default for LoadConfig {
             nodes_per_req: 2,
             node_space: 64,
             pace: Duration::ZERO,
+            retry: RetryPolicy::none(),
         }
     }
 }
@@ -127,6 +294,9 @@ pub struct LoadReport {
     /// transport failures: connect refused, reset, timeout — the failure
     /// class a graceful server must keep at zero
     pub io_errors: u64,
+    /// extra attempts made by retrying clients (each request still counts
+    /// once in `sent`, under its final outcome)
+    pub retries: u64,
     pub elapsed: Duration,
     /// latency percentiles over `Ok` replies only (ms)
     pub p50_ms: f64,
@@ -143,6 +313,7 @@ impl LoadReport {
             ("rejected", Json::Num(self.rejected as f64)),
             ("errors", Json::Num(self.errors as f64)),
             ("io_errors", Json::Num(self.io_errors as f64)),
+            ("retries", Json::Num(self.retries as f64)),
             ("elapsed_ms", Json::Num(self.elapsed.as_secs_f64() * 1e3)),
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
@@ -157,6 +328,7 @@ struct ThreadTally {
     rejected: u64,
     errors: u64,
     io_errors: u64,
+    retries: u64,
     latencies_ms: Vec<f64>,
 }
 
@@ -167,6 +339,7 @@ fn run_client(addr: &str, cfg: &LoadConfig, thread_idx: usize) -> ThreadTally {
         rejected: 0,
         errors: 0,
         io_errors: 0,
+        retries: 0,
         latencies_ms: Vec::with_capacity(cfg.requests_per_conn),
     };
     let mut client = match NetClient::connect(addr) {
@@ -178,6 +351,9 @@ fn run_client(addr: &str, cfg: &LoadConfig, thread_idx: usize) -> ThreadTally {
             return t;
         }
     };
+    // each client jitters differently, else retries re-synchronise
+    let mut policy = cfg.retry.clone();
+    policy.jitter_seed ^= thread_idx as u64;
     for i in 0..cfg.requests_per_conn {
         let base = (thread_idx * cfg.requests_per_conn + i) as u32;
         let nodes: Vec<u32> = (0..cfg.nodes_per_req)
@@ -185,7 +361,11 @@ fn run_client(addr: &str, cfg: &LoadConfig, thread_idx: usize) -> ThreadTally {
             .collect();
         t.sent += 1;
         let start = Instant::now();
-        match client.classify(&cfg.model, nodes) {
+        let req = WireRequest::Classify {
+            model: cfg.model.clone(),
+            nodes,
+        };
+        match client.request_with_retry(&req, &policy) {
             Ok(WireResponse::Ok { .. }) => {
                 t.ok += 1;
                 t.latencies_ms.push(start.elapsed().as_secs_f64() * 1e3);
@@ -206,6 +386,7 @@ fn run_client(addr: &str, cfg: &LoadConfig, thread_idx: usize) -> ThreadTally {
             thread::sleep(cfg.pace);
         }
     }
+    t.retries = client.retries_total();
     t
 }
 
@@ -229,6 +410,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         rejected: 0,
         errors: 0,
         io_errors: 0,
+        retries: 0,
         latencies_ms: Vec::new(),
     };
     for j in joins {
@@ -240,6 +422,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         total.rejected += t.rejected;
         total.errors += t.errors;
         total.io_errors += t.io_errors;
+        total.retries += t.retries;
         total.latencies_ms.extend(t.latencies_ms);
     }
     let elapsed = started.elapsed();
@@ -249,6 +432,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         rejected: total.rejected,
         errors: total.errors,
         io_errors: total.io_errors,
+        retries: total.retries,
         elapsed,
         p50_ms: percentile(&total.latencies_ms, 50.0),
         p99_ms: percentile(&total.latencies_ms, 99.0),
@@ -268,6 +452,7 @@ mod tests {
             rejected: 2,
             errors: 1,
             io_errors: 0,
+            retries: 3,
             elapsed: Duration::from_millis(500),
             p50_ms: 1.5,
             p99_ms: 9.0,
@@ -276,6 +461,17 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.req_f64("sent").unwrap(), 10.0);
         assert_eq!(j.req_f64("io_errors").unwrap(), 0.0);
+        assert_eq!(j.req_f64("retries").unwrap(), 3.0);
         assert!(j.req_f64("p99_ms").unwrap() >= j.req_f64("p50_ms").unwrap());
+    }
+
+    #[test]
+    fn retry_policy_defaults_are_sane() {
+        let none = RetryPolicy::none();
+        assert_eq!(none.max_retries, 0);
+        let def = RetryPolicy::default();
+        assert!(def.max_retries > 0);
+        assert!(def.base_backoff <= def.max_backoff);
+        assert!(def.deadline.is_none());
     }
 }

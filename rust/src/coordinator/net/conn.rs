@@ -8,9 +8,10 @@
 
 use std::net::{IpAddr, SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::fault;
 use crate::util::json::Json;
 
 use super::super::request::Payload;
@@ -29,8 +30,14 @@ pub(crate) const READ_POLL: Duration = Duration::from_millis(250);
 
 /// Retry hint for queue-full rejections — roughly one batching deadline.
 const OVERLOAD_RETRY_MS: u64 = 10;
-/// Retry hint when rejecting because the server is draining.
+/// Fallback retry hint when rejecting during drain and no drain deadline
+/// is known (the flag can be flipped without a running drain in tests);
+/// a live drain derives the hint from its remaining window instead.
 const DRAIN_RETRY_MS: u64 = 1000;
+/// Margin added past the drain deadline: time for the process to exit
+/// and a replacement to start listening, so the hinted retry does not
+/// land on a socket mid-restart.
+const DRAIN_RESTART_MARGIN_MS: u64 = 100;
 
 /// Counters the net layer adds to the `/metrics` reply (admission-layer
 /// events the coordinator's own metrics can't see).
@@ -106,6 +113,10 @@ pub(crate) struct Shared {
     pub limiter: RateLimiter,
     /// set once drain starts: inference/update requests are rejected
     pub draining: AtomicBool,
+    /// when the running drain gives up waiting (`started + drain_timeout`,
+    /// set by `NetServer::drain`): draining rejections hint clients to
+    /// retry *after* this, not at a fixed delay into the drain window
+    pub drain_deadline: Mutex<Option<Instant>>,
     /// admitted requests whose reply has not been written yet
     pub in_flight: AtomicU64,
     pub open_conns: AtomicU64,
@@ -113,6 +124,24 @@ pub(crate) struct Shared {
 }
 
 impl Shared {
+    /// Retry hint for drain-time rejections, computed from the remaining
+    /// drain window plus a restart margin.  The old fixed `1000 ms` hint
+    /// made clients retry *into* a server configured to drain longer than
+    /// that — straight into another rejection (or a dead socket).
+    pub(crate) fn drain_retry_ms(&self) -> u64 {
+        let deadline = *self
+            .drain_deadline
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        match deadline {
+            Some(d) => {
+                let remaining = d.saturating_duration_since(Instant::now()).as_millis() as u64;
+                remaining + DRAIN_RESTART_MARGIN_MS
+            }
+            None => DRAIN_RETRY_MS,
+        }
+    }
+
     pub fn metrics_body(&self) -> Json {
         let mut body = self.coordinator.metrics().to_json();
         if let Json::Obj(m) = &mut body {
@@ -130,6 +159,9 @@ impl Shared {
 }
 
 fn send(stream: &mut TcpStream, resp: &WireResponse) -> crate::error::Result<()> {
+    // chaos hook: a fired fault behaves like a failed reply write (the
+    // connection closes; the client sees a transport error)
+    fault::point("net.write_frame")?;
     let (kind, payload) = resp.encode();
     write_frame(stream, kind, &payload)
 }
@@ -226,7 +258,7 @@ fn handle_frame(stream: &mut TcpStream, client: IpAddr, frame: &Frame, shared: &
             &rejection(
                 RejectCode::Draining,
                 "server is draining for shutdown".to_string(),
-                DRAIN_RETRY_MS,
+                shared.drain_retry_ms(),
             ),
         )
         .is_ok();
@@ -266,7 +298,17 @@ fn handle_frame(stream: &mut TcpStream, client: IpAddr, frame: &Frame, shared: &
                 RejectReason::Stopped => (
                     RejectCode::Draining,
                     "model runner stopped".to_string(),
-                    DRAIN_RETRY_MS,
+                    shared.drain_retry_ms(),
+                ),
+                // no protocol change: an open breaker is a flavour of
+                // overload, but the message + hint carry its cooldown
+                RejectReason::BreakerOpen { retry_after_ms } => (
+                    RejectCode::Overloaded,
+                    format!(
+                        "circuit breaker open for model '{}' (executor failing), retry later",
+                        rej.request.model
+                    ),
+                    retry_after_ms.max(1),
                 ),
             };
             shared.counters.bump(code);

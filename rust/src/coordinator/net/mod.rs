@@ -23,7 +23,7 @@ pub mod protocol;
 pub mod rate;
 pub mod server;
 
-pub use client::{run_load, LoadConfig, LoadReport, NetClient};
+pub use client::{run_load, LoadConfig, LoadReport, NetClient, RetryPolicy};
 pub use protocol::{Frame, RejectCode, WireRequest, WireResponse, PROTOCOL_VERSION};
 pub use rate::{RateConfig, RateDecision, RateLimiter};
 pub use server::{DrainReport, NetServer};

@@ -69,6 +69,7 @@ impl NetServer {
             cfg: cfg.clone(),
             limiter,
             draining: AtomicBool::new(false),
+            drain_deadline: std::sync::Mutex::new(None),
             in_flight: std::sync::atomic::AtomicU64::new(0),
             open_conns: std::sync::atomic::AtomicU64::new(0),
             counters: Default::default(),
@@ -139,9 +140,16 @@ impl NetServer {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
+        // record the drain deadline *before* flipping the flag so every
+        // draining rejection can hint a retry past the remaining window
+        let deadline = started + self.shared.cfg.drain_timeout;
+        *self
+            .shared
+            .drain_deadline
+            .lock()
+            .unwrap_or_else(|e| e.into_inner()) = Some(deadline);
         self.shared.draining.store(true, Ordering::SeqCst);
         // wait for every admitted request's reply to be written
-        let deadline = started + self.shared.cfg.drain_timeout;
         while self.shared.in_flight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
             thread::sleep(Duration::from_millis(5));
         }
@@ -224,7 +232,7 @@ mod tests {
     use super::*;
     use crate::coordinator::batcher::{AdaptiveWait, BatcherConfig};
     use crate::coordinator::executor::MockExecutor;
-    use crate::coordinator::net::client::{run_load, LoadConfig, NetClient};
+    use crate::coordinator::net::client::{run_load, LoadConfig, NetClient, RetryPolicy};
     use crate::coordinator::net::protocol::{WireResponse, PROTOCOL_VERSION};
 
     fn batcher(queue_cap: usize) -> BatcherConfig {
@@ -306,6 +314,7 @@ mod tests {
                 nodes_per_req: 1,
                 node_space: 64,
                 pace: Duration::ZERO,
+                retry: RetryPolicy::none(),
             },
         )
         .unwrap();
@@ -317,6 +326,69 @@ mod tests {
         );
         assert_eq!(report.io_errors, 0, "no dropped connections: {report:?}");
         assert!(report.ok > 0, "some requests must succeed: {report:?}");
+        srv.drain();
+    }
+
+    /// Deadline-aware retries: against a rate-limited server a retrying
+    /// load run converts rejections into eventual successes, honouring
+    /// the server's `retry_after_ms` hint between attempts.
+    #[test]
+    fn retrying_load_resolves_rate_limit_rejections() {
+        let cfg = NetConfig {
+            rate_rps: 50.0,
+            rate_burst: 1.0,
+            ..NetConfig::default()
+        };
+        let srv = server_with(Duration::ZERO, 64, cfg);
+        let report = run_load(
+            &addr_of(&srv),
+            &LoadConfig {
+                conns: 1,
+                requests_per_conn: 5,
+                retry: RetryPolicy {
+                    max_retries: 10,
+                    deadline: Some(Duration::from_secs(5)),
+                    ..RetryPolicy::default()
+                },
+                ..LoadConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.ok, 5, "retries must resolve rate limiting: {report:?}");
+        assert!(report.retries > 0, "expected at least one retry: {report:?}");
+        assert_eq!(report.io_errors, 0, "{report:?}");
+        srv.drain();
+    }
+
+    /// The drain retry hint derives from the remaining drain window, not
+    /// a fixed constant: with a 30 s drain timeout the hint must point
+    /// past the window, and it shrinks as the drain progresses.
+    #[test]
+    fn drain_retry_hint_tracks_remaining_window() {
+        let cfg = NetConfig {
+            drain_timeout: Duration::from_secs(30),
+            ..NetConfig::default()
+        };
+        let srv = server_with(Duration::ZERO, 64, cfg);
+        let mut client = NetClient::connect(addr_of(&srv)).unwrap();
+        // simulate a live drain: deadline recorded, then the flag
+        *srv.shared.drain_deadline.lock().unwrap() =
+            Some(Instant::now() + Duration::from_secs(30));
+        srv.shared.draining.store(true, Ordering::SeqCst);
+        match client.classify("mock", vec![0]).unwrap() {
+            WireResponse::Rejected {
+                reason,
+                retry_after_ms,
+                ..
+            } => {
+                assert_eq!(reason, super::RejectCode::Draining);
+                assert!(
+                    retry_after_ms > 25_000,
+                    "hint must cover the remaining 30 s window, got {retry_after_ms}"
+                );
+            }
+            other => panic!("expected draining rejection, got {other:?}"),
+        }
         srv.drain();
     }
 

@@ -16,6 +16,9 @@ pub enum RejectReason {
     QueueFull,
     /// the runner's receiving end is gone (shutdown/drain in progress)
     Stopped,
+    /// the model's circuit breaker is open (its executor has been
+    /// failing every batch); retry after the hinted cooldown
+    BreakerOpen { retry_after_ms: u64 },
 }
 
 impl RejectReason {
@@ -25,6 +28,7 @@ impl RejectReason {
             RejectReason::UnknownModel => "unknown_model",
             RejectReason::QueueFull => "overloaded",
             RejectReason::Stopped => "stopped",
+            RejectReason::BreakerOpen { .. } => "breaker_open",
         }
     }
 }
@@ -49,6 +53,10 @@ impl Rejected {
             }
             RejectReason::QueueFull => Error::coordinator("queue full"),
             RejectReason::Stopped => Error::coordinator("runner stopped"),
+            RejectReason::BreakerOpen { retry_after_ms } => Error::coordinator(format!(
+                "circuit breaker open for model '{}', retry in {retry_after_ms} ms",
+                self.request.model
+            )),
         }
     }
 }

@@ -11,6 +11,16 @@
 //! it (each client gets a coordinator error, the `errors` metric is
 //! bumped) and the runner keeps serving instead of stranding every queued
 //! client.
+//!
+//! Runner threads are *supervised* ([`supervised_runner`]): a panic that
+//! escapes even the batch boundary (response-path bug, injected
+//! `runner.poll` fault) is caught on the runner thread itself and the loop
+//! respawns with exponential backoff under a restart budget
+//! ([`SuperviseConfig`]).  The queue receiver survives the respawn —
+//! mpsc receivers do not poison — so requests admitted before the crash
+//! are served by the next incarnation.  Each model also carries a
+//! [`CircuitBreaker`]: `try_submit` rejects fast (with a `retry_after_ms`
+//! hint) while the model's executor is failing every batch.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -19,12 +29,14 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::util::fault;
 
 use super::batcher::{AdaptiveWait, BatcherConfig, DynamicBatcher};
 use super::executor::BatchExecutor;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{Payload, Prediction, Request, Response};
-use super::router::{Rejected, Router};
+use super::router::{RejectReason, Rejected, Router};
+use super::supervise::{CircuitBreaker, SuperviseConfig};
 
 /// Coordinator-level configuration.
 #[derive(Debug, Clone, Default)]
@@ -43,6 +55,11 @@ pub struct Coordinator {
     stop: Arc<AtomicBool>,
     /// live tuning handles of models configured with an adaptive wait
     adaptive: Vec<AdaptiveWait>,
+    /// restart/breaker policy captured by models registered after it is set
+    supervise: SuperviseConfig,
+    /// per-model circuit breakers, consulted before routing (few models:
+    /// a sorted-insert Vec keeps lookup simple and iteration deterministic)
+    breakers: Vec<(String, Arc<CircuitBreaker>)>,
     handles: Vec<thread::JoinHandle<()>>,
 }
 
@@ -53,8 +70,17 @@ impl Coordinator {
             metrics: Arc::new(Metrics::default()),
             stop: Arc::new(AtomicBool::new(false)),
             adaptive: Vec::new(),
+            supervise: SuperviseConfig::default(),
+            breakers: Vec::new(),
             handles: Vec::new(),
         }
+    }
+
+    /// Override the restart/breaker policy.  Applies to models registered
+    /// *after* the call (each runner captures the policy at
+    /// [`Self::add_model`] time), so set it before registering.
+    pub fn set_supervision(&mut self, cfg: SuperviseConfig) {
+        self.supervise = cfg;
     }
 
     fn router_read(&self) -> std::sync::RwLockReadGuard<'_, Router> {
@@ -80,17 +106,41 @@ impl Coordinator {
         if let Some(w) = &cfg.adaptive_wait {
             self.adaptive.push(w.clone());
         }
+        let breaker = Arc::new(CircuitBreaker::new(
+            &self.supervise,
+            name,
+            Arc::clone(&self.metrics),
+        ));
+        self.breakers.push((name.to_string(), Arc::clone(&breaker)));
         let metrics = Arc::clone(&self.metrics);
         let stop = Arc::clone(&self.stop);
+        let sup = self.supervise.clone();
         let name_owned = name.to_string();
         self.handles.push(
             thread::Builder::new()
                 .name(format!("a2q-runner-{name_owned}"))
-                .spawn(move || runner_loop(name_owned, rx, executor, cfg, metrics, stop))
+                .spawn(move || {
+                    supervised_runner(name_owned, rx, executor, cfg, metrics, stop, sup, breaker)
+                })
                 // a2q-lint: allow(panic-path) thread spawn fails only on OS
                 // resource exhaustion during model registration
                 .expect("spawn runner"),
         );
+    }
+
+    /// The model's circuit breaker (if registered).
+    fn breaker(&self, model: &str) -> Option<&Arc<CircuitBreaker>> {
+        self.breakers
+            .iter()
+            .find(|(n, _)| n == model)
+            .map(|(_, b)| b)
+    }
+
+    /// Current breaker state tag of a model ("closed"/"open"/"half_open");
+    /// `None` for unknown models.  Diagnostics — the live gauge is also in
+    /// [`MetricsSnapshot::breaker_states`].
+    pub fn breaker_state(&self, model: &str) -> Option<&'static str> {
+        self.breaker(model).map(|b| b.state_str())
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -119,6 +169,18 @@ impl Coordinator {
             enqueued: Instant::now(),
             reply: tx,
         };
+        // breaker gate before routing: while the model's executor is
+        // failing every batch, reject fast with a retry hint instead of
+        // queueing the request behind a failing runner
+        if let Some(b) = self.breaker(model) {
+            if let Some(retry_after_ms) = b.check_reject() {
+                self.metrics.record_rejected();
+                return Err(Rejected {
+                    request: req,
+                    reason: RejectReason::BreakerOpen { retry_after_ms },
+                });
+            }
+        }
         match self.router_read().route(req) {
             Ok(()) => {
                 self.metrics.record_admitted();
@@ -191,13 +253,69 @@ impl Drop for Coordinator {
     }
 }
 
-fn runner_loop(
-    _model: String,
+/// Supervisor body of the per-model runner thread.  Runs [`runner_loop`]
+/// behind a panic boundary; a panic that escapes the loop (response-path
+/// bug, injected `runner.poll` fault) triggers a *logical respawn*: the
+/// loop restarts on this same thread with exponential backoff, bounded by
+/// [`SuperviseConfig::restart_budget`].  The queue receiver is owned here
+/// and survives every respawn — mpsc receivers do not poison — so
+/// requests admitted before the crash are served by the next incarnation
+/// (requests already pulled into the crashed incarnation's batcher get
+/// disconnect errors: their reply senders died with it, exactly one
+/// error reply per request).  On budget exhaustion the receiver drops:
+/// later submits are rejected as `stopped`.
+#[allow(clippy::too_many_arguments)]
+fn supervised_runner(
+    model: String,
     rx: mpsc::Receiver<Request>,
     executor: Arc<dyn BatchExecutor>,
     cfg: BatcherConfig,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    sup: SuperviseConfig,
+    breaker: Arc<CircuitBreaker>,
+) {
+    let mut restarts: u32 = 0;
+    loop {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            runner_loop(&model, &rx, executor.as_ref(), &cfg, &metrics, &stop, &breaker)
+        }));
+        match outcome {
+            // clean exit: queue disconnected and fully drained
+            Ok(()) => return,
+            Err(payload) => {
+                if restarts >= sup.restart_budget {
+                    eprintln!(
+                        "a2q-runner-{model}: restart budget ({}) exhausted after panic: {}; \
+                         giving up — new submits will be rejected",
+                        sup.restart_budget,
+                        panic_message(payload.as_ref()),
+                    );
+                    return;
+                }
+                restarts += 1;
+                metrics.record_runner_restart();
+                // exponential backoff, sliced so drain is not held up for
+                // the full backoff when a shutdown starts mid-sleep
+                let mut left = sup.backoff_for(restarts);
+                while !left.is_zero() && !stop.load(Ordering::SeqCst) {
+                    let step = left.min(Duration::from_millis(10));
+                    thread::sleep(step);
+                    left = left.saturating_sub(step);
+                }
+            }
+        }
+    }
+}
+
+fn runner_loop(
+    _model: &str,
+    rx: &mpsc::Receiver<Request>,
+    executor: &dyn BatchExecutor,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+    breaker: &CircuitBreaker,
 ) {
     let mut batcher = DynamicBatcher::new(cfg.clone());
     let poll = cfg.max_wait.min(Duration::from_millis(1)).max(Duration::from_micros(100));
@@ -209,6 +327,11 @@ fn runner_loop(
     // used to strand requests still sitting in the router queue, whose
     // clients then saw "runner dropped reply" instead of a real answer.
     loop {
+        // chaos hook: `err` and `panic` actions both kill this loop
+        // incarnation, exercising the supervisor's respawn path
+        if let Err(e) = fault::point("runner.poll") {
+            panic!("{e}");
+        }
         // pull what's available, bounded wait to honour deadlines.  The
         // router already admitted everything arriving here (its bounded
         // queue is the single backpressure point), so the batcher never
@@ -233,7 +356,8 @@ fn runner_loop(
         }
         let force = disconnected || stop.load(Ordering::SeqCst);
         while let Some(batch) = batcher.flush(Instant::now(), force) {
-            execute_batch_isolated(batch, executor.as_ref(), &metrics);
+            let ok = execute_batch_isolated(batch, executor, metrics);
+            breaker.on_batch_result(ok);
             if !force {
                 break;
             }
@@ -258,18 +382,29 @@ fn runner_loop(
 /// keeps the runner alive and errors out every reply clone rather than
 /// leaving clients hung (already-answered receivers just see a dropped
 /// duplicate, at the cost of some over-counted errors in that rare case).
-fn execute_batch_isolated(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Metrics) {
+///
+/// Returns whether the whole batch succeeded (every sub-batch answered
+/// `Ok`) — the per-model circuit breaker counts one observation per batch.
+fn execute_batch_isolated(
+    batch: Vec<Request>,
+    executor: &dyn BatchExecutor,
+    metrics: &Metrics,
+) -> bool {
     let replies: Vec<_> = batch.iter().map(|r| r.reply.clone()).collect();
     let outcome = catch_unwind(AssertUnwindSafe(|| {
         execute_batch(batch, executor, metrics)
     }));
-    if let Err(payload) = outcome {
-        let msg = panic_message(payload.as_ref());
-        for reply in replies {
-            metrics.record_error();
-            let _ = reply.send(Err(Error::coordinator(format!(
-                "coordinator response path panicked: {msg}"
-            ))));
+    match outcome {
+        Ok(ok) => ok,
+        Err(payload) => {
+            let msg = panic_message(payload.as_ref());
+            for reply in replies {
+                metrics.record_error();
+                let _ = reply.send(Err(Error::coordinator(format!(
+                    "coordinator response path panicked: {msg}"
+                ))));
+            }
+            false
         }
     }
 }
@@ -297,7 +432,8 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Metrics) {
+fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Metrics) -> bool {
+    let mut all_ok = true;
     metrics.record_batch(batch.len());
     let batch_size = batch.len();
     // Queue wait is measured from admission to *batch* execution start.
@@ -314,9 +450,12 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
         batch.into_iter().partition(|r| r.is_update());
     for req in updates {
         let t0 = Instant::now();
-        let result = run_caught(|| match &req.payload {
-            Payload::UpdateGraph(delta) => executor.apply_delta(delta),
-            _ => unreachable!("partitioned as update"),
+        let result = run_caught(|| {
+            fault::point("executor.update")?;
+            match &req.payload {
+                Payload::UpdateGraph(delta) => executor.apply_delta(delta),
+                _ => unreachable!("partitioned as update"),
+            }
         });
         let exec_us = t0.elapsed().as_micros() as u64;
         match result {
@@ -327,7 +466,10 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
                 );
                 respond(req, Vec::new(), batch_size, batch_start, exec_us, metrics);
             }
-            Err(e) => fail_all(vec![req], e, metrics),
+            Err(e) => {
+                all_ok = false;
+                fail_all(vec![req], e, metrics);
+            }
         }
     }
     let (classify, predict) = DynamicBatcher::split_payloads(rest);
@@ -343,7 +485,10 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
             }
         }
         let t0 = Instant::now();
-        let result = run_caught(|| executor.run_node_batch(&all_ids));
+        let result = run_caught(|| {
+            fault::point("executor.classify")?;
+            executor.run_node_batch(&all_ids)
+        });
         let exec_us = t0.elapsed().as_micros() as u64;
         match result {
             // Executor output counts are untrusted: a short (or long)
@@ -353,6 +498,7 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
             // error instead; the runner keeps serving.
             Ok(outputs) if outputs.len() != all_ids.len() => {
                 let got = outputs.len();
+                all_ok = false;
                 fail_all(
                     classify,
                     Error::coordinator(format!(
@@ -371,7 +517,10 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
                     respond(req, preds, batch_size, batch_start, exec_us, metrics);
                 }
             }
-            Err(e) => fail_all(classify, e, metrics),
+            Err(e) => {
+                all_ok = false;
+                fail_all(classify, e, metrics);
+            }
         }
     }
 
@@ -395,6 +544,7 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
             // "runner dropped reply".  Fail the whole sub-batch loudly.
             Ok(outputs) if outputs.len() != want => {
                 let got = outputs.len();
+                all_ok = false;
                 fail_all(
                     predict,
                     Error::coordinator(format!(
@@ -409,9 +559,13 @@ fn execute_batch(batch: Vec<Request>, executor: &dyn BatchExecutor, metrics: &Me
                     respond(req, preds, batch_size, batch_start, exec_us, metrics);
                 }
             }
-            Err(e) => fail_all(predict, e, metrics),
+            Err(e) => {
+                all_ok = false;
+                fail_all(predict, e, metrics);
+            }
         }
     }
+    all_ok
 }
 
 fn respond(
@@ -1011,6 +1165,104 @@ mod tests {
         assert_eq!(snap.responses, admitted, "every admitted request answered");
         assert_eq!(snap.errors, 0);
         Arc::try_unwrap(c).ok().map(|c| c.shutdown());
+    }
+
+    /// Fails every batch until healed — drives the breaker open through
+    /// real runner traffic (errors, not panics: the runner itself lives).
+    struct FlakyExecutor {
+        healthy: AtomicBool,
+    }
+
+    impl BatchExecutor for FlakyExecutor {
+        fn run_node_batch(&self, node_ids: &[u32]) -> crate::error::Result<Vec<Vec<f32>>> {
+            if !self.healthy.load(Ordering::SeqCst) {
+                return Err(Error::coordinator("induced executor failure"));
+            }
+            Ok(node_ids.iter().map(|_| vec![1.0, 0.0]).collect())
+        }
+        fn run_graph_batch(
+            &self,
+            graphs: &[&SmallGraph],
+        ) -> crate::error::Result<Vec<Vec<f32>>> {
+            Ok(graphs.iter().map(|_| vec![1.0, 0.0]).collect())
+        }
+        fn capacity(&self) -> (usize, usize) {
+            (1024, 16)
+        }
+        fn out_dim(&self) -> usize {
+            2
+        }
+    }
+
+    /// Circuit breaker over live coordinator traffic: consecutive failed
+    /// batches open it (fast `BreakerOpen` rejections with a retry hint),
+    /// and once the executor heals, the half-open probe closes it again.
+    #[test]
+    fn breaker_opens_under_failing_executor_and_recovers() {
+        let mut c = Coordinator::new();
+        c.set_supervision(SuperviseConfig {
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(50),
+            ..SuperviseConfig::default()
+        });
+        let exec = Arc::new(FlakyExecutor {
+            healthy: AtomicBool::new(false),
+        });
+        c.add_model(
+            "flaky",
+            Arc::clone(&exec) as Arc<dyn BatchExecutor>,
+            batcher_cfg(),
+        );
+        assert_eq!(c.breaker_state("flaky"), Some("closed"));
+        // serialized failing submits: each is its own batch, so three
+        // consecutive failures open the breaker
+        let mut saw_breaker_rejection = false;
+        for i in 0..50 {
+            match c.try_submit("flaky", Payload::ClassifyNodes(vec![0])) {
+                Ok(rx) => {
+                    let out = rx.recv().expect("runner alive");
+                    assert!(out.is_err(), "unhealed executor replied ok");
+                }
+                Err(rej) => match rej.reason {
+                    RejectReason::BreakerOpen { retry_after_ms } => {
+                        assert!(retry_after_ms >= 1, "hint must be actionable");
+                        saw_breaker_rejection = true;
+                        break;
+                    }
+                    other => panic!("unexpected rejection {other:?} at submit {i}"),
+                },
+            }
+        }
+        assert!(saw_breaker_rejection, "breaker never opened");
+        assert_eq!(c.breaker_state("flaky"), Some("open"));
+        let snap = c.metrics();
+        assert!(snap.breaker_opens >= 1);
+        assert!(snap.breaker_rejected >= 1);
+        assert_eq!(
+            snap.breaker_states,
+            vec![("flaky".to_string(), "open".to_string())]
+        );
+
+        // heal, wait out the cooldown: the next submit is the half-open
+        // probe and its success closes the breaker
+        exec.healthy.store(true, Ordering::SeqCst);
+        thread::sleep(Duration::from_millis(60));
+        let resp = c
+            .submit_blocking("flaky", Payload::ClassifyNodes(vec![1]))
+            .expect("probe after cooldown should be admitted and succeed");
+        assert_eq!(resp.predictions.len(), 1);
+        // the probe's batch result lands just after its reply; poll briefly
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while c.breaker_state("flaky") != Some("closed") && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(c.breaker_state("flaky"), Some("closed"));
+        // service is back to normal
+        let resp = c
+            .submit_blocking("flaky", Payload::ClassifyNodes(vec![2, 3]))
+            .unwrap();
+        assert_eq!(resp.predictions.len(), 2);
+        c.shutdown();
     }
 
     /// Hot weight swap under live coordinator traffic: every classify

@@ -1,0 +1,352 @@
+//! Self-healing supervision: runner restart policy + per-model circuit
+//! breakers.
+//!
+//! The coordinator wraps every runner loop in a panic boundary
+//! (`server.rs::supervised_runner`): a panic that escapes the batch
+//! boundary — a poisoned executor, an injected `runner.poll` fault — no
+//! longer leaves the model dead behind a queue that keeps admitting.
+//! The supervisor respawns the loop with exponential backoff, bounded
+//! by a restart budget ([`SuperviseConfig::restart_budget`],
+//! `A2Q_RESTART_BUDGET`); the queue receiver survives the respawn, so
+//! requests admitted before the crash are still served by the next
+//! incarnation (mpsc receivers do not poison).
+//!
+//! Orthogonally, each model gets a [`CircuitBreaker`] fed one
+//! observation per executed batch.  After
+//! [`SuperviseConfig::breaker_threshold`] *consecutive* batch failures
+//! the breaker opens: submissions are rejected fast and on-protocol
+//! with a `retry_after_ms` covering the cooldown, instead of queueing
+//! behind an executor that is currently failing everything.  After the
+//! cooldown ([`SuperviseConfig::breaker_cooldown`]) it admits exactly
+//! one probe (half-open); the probe's batch result closes the breaker
+//! or re-opens it for another cooldown.  State transitions and fast
+//! rejections are surfaced in [`Metrics`] (`breaker_opens`,
+//! `breaker_rejected`, per-model `breaker_states`) and therefore in the
+//! wire `metrics` reply.
+
+use std::sync::Arc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+use super::metrics::Metrics;
+
+/// Restart + circuit-breaker policy (per coordinator, applied to every
+/// model registered after it is set).
+#[derive(Debug, Clone)]
+pub struct SuperviseConfig {
+    /// Respawns allowed per runner over its lifetime; on exhaustion the
+    /// model stops (later submits are rejected as `stopped`).  0 means
+    /// "never respawn" — a runner panic then behaves like pre-PR-10.
+    pub restart_budget: u32,
+    /// First respawn backoff; doubles per consecutive respawn.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Consecutive failed batches that open the breaker; 0 disables the
+    /// breaker entirely.
+    pub breaker_threshold: u32,
+    /// How long an open breaker rejects before admitting a half-open
+    /// probe; also the `retry_after_ms` hint ceiling clients see.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for SuperviseConfig {
+    fn default() -> Self {
+        SuperviseConfig {
+            restart_budget: 5,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(1),
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_millis(250),
+        }
+    }
+}
+
+impl SuperviseConfig {
+    /// Read overrides from `A2Q_RESTART_BUDGET`, `A2Q_BREAKER_THRESHOLD`
+    /// and `A2Q_BREAKER_COOLDOWN_MS`; unset knobs keep the defaults, bad
+    /// values are startup errors (same discipline as `NetConfig`).
+    pub fn from_env() -> Result<SuperviseConfig> {
+        let mut cfg = SuperviseConfig::default();
+        if let Some(v) = env_u64("A2Q_RESTART_BUDGET")? {
+            cfg.restart_budget = v as u32;
+        }
+        if let Some(v) = env_u64("A2Q_BREAKER_THRESHOLD")? {
+            cfg.breaker_threshold = v as u32;
+        }
+        if let Some(v) = env_u64("A2Q_BREAKER_COOLDOWN_MS")? {
+            if v == 0 {
+                return Err(Error::config("A2Q_BREAKER_COOLDOWN_MS must be >= 1"));
+            }
+            cfg.breaker_cooldown = Duration::from_millis(v);
+        }
+        Ok(cfg)
+    }
+
+    /// Backoff before respawn number `restart` (1-based): exponential
+    /// from `backoff_base`, clamped to `backoff_cap`.
+    pub fn backoff_for(&self, restart: u32) -> Duration {
+        let exp = restart.saturating_sub(1).min(20);
+        let d = self.backoff_base.saturating_mul(1u32 << exp);
+        d.min(self.backoff_cap)
+    }
+}
+
+fn env_u64(key: &str) -> Result<Option<u64>> {
+    match std::env::var(key) {
+        Ok(v) if !v.trim().is_empty() => v
+            .trim()
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| Error::config(format!("{key}='{v}' is not a non-negative integer"))),
+        _ => Ok(None),
+    }
+}
+
+#[derive(Debug)]
+enum BreakerState {
+    /// Normal service; counts the current run of failed batches.
+    Closed { consecutive_failures: u32 },
+    /// Fast-rejecting until `until`.
+    Open { until: Instant },
+    /// Cooldown elapsed; exactly one probe submission is admitted.
+    HalfOpen { probe_inflight: bool },
+}
+
+/// Per-model circuit breaker.  `try_submit` consults [`Self::check_reject`]
+/// before routing; the runner feeds [`Self::on_batch_result`] once per
+/// executed batch.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    model: String,
+    threshold: u32,
+    cooldown: Duration,
+    metrics: Arc<Metrics>,
+    inner: Mutex<BreakerState>,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: &SuperviseConfig, model: &str, metrics: Arc<Metrics>) -> CircuitBreaker {
+        if cfg.breaker_threshold > 0 {
+            metrics.set_breaker_state(model, "closed");
+        }
+        CircuitBreaker {
+            model: model.to_string(),
+            threshold: cfg.breaker_threshold,
+            cooldown: cfg.breaker_cooldown,
+            metrics,
+            inner: Mutex::new(BreakerState::Closed {
+                consecutive_failures: 0,
+            }),
+        }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, BreakerState> {
+        // a small enum behind a short-lived lock: salvage on poison
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// `None` admits the submission; `Some(retry_after_ms)` means the
+    /// breaker is open (or half-open with its probe already in flight)
+    /// and the caller should reject fast with that hint.
+    pub fn check_reject(&self) -> Option<u64> {
+        if self.threshold == 0 {
+            return None;
+        }
+        let mut st = self.locked();
+        loop {
+            match &mut *st {
+                BreakerState::Closed { .. } => return None,
+                BreakerState::Open { until } => {
+                    let now = Instant::now();
+                    if now < *until {
+                        let ms = until.saturating_duration_since(now).as_millis() as u64;
+                        self.metrics.record_breaker_rejected();
+                        return Some(ms.max(1));
+                    }
+                    // cooldown elapsed: half-open, re-evaluate as such
+                    *st = BreakerState::HalfOpen {
+                        probe_inflight: false,
+                    };
+                    self.metrics.set_breaker_state(&self.model, "half_open");
+                }
+                BreakerState::HalfOpen { probe_inflight } => {
+                    if *probe_inflight {
+                        // one probe at a time; suggest waiting about a
+                        // probe-round-trip, not a full cooldown
+                        let ms = (self.cooldown.as_millis() as u64 / 4).max(1);
+                        self.metrics.record_breaker_rejected();
+                        return Some(ms);
+                    }
+                    *probe_inflight = true;
+                    return None;
+                }
+            }
+        }
+    }
+
+    /// Feed one executed batch's outcome (`ok` = every sub-batch
+    /// succeeded).  Drives closed→open after `threshold` consecutive
+    /// failures and half-open→closed/open on the probe result; results
+    /// arriving while open (batches admitted before it opened) are
+    /// ignored.
+    pub fn on_batch_result(&self, ok: bool) {
+        if self.threshold == 0 {
+            return;
+        }
+        let mut st = self.locked();
+        match &mut *st {
+            BreakerState::Closed {
+                consecutive_failures,
+            } => {
+                if ok {
+                    *consecutive_failures = 0;
+                } else {
+                    *consecutive_failures += 1;
+                    if *consecutive_failures >= self.threshold {
+                        *st = BreakerState::Open {
+                            until: Instant::now() + self.cooldown,
+                        };
+                        self.metrics.record_breaker_open();
+                        self.metrics.set_breaker_state(&self.model, "open");
+                    }
+                }
+            }
+            BreakerState::HalfOpen { .. } => {
+                if ok {
+                    *st = BreakerState::Closed {
+                        consecutive_failures: 0,
+                    };
+                    self.metrics.set_breaker_state(&self.model, "closed");
+                } else {
+                    *st = BreakerState::Open {
+                        until: Instant::now() + self.cooldown,
+                    };
+                    self.metrics.record_breaker_open();
+                    self.metrics.set_breaker_state(&self.model, "open");
+                }
+            }
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// Current state tag ("closed" / "open" / "half_open").  Passive:
+    /// reports the stored state without advancing open→half-open (only
+    /// an admission attempt does that).
+    pub fn state_str(&self) -> &'static str {
+        match &*self.locked() {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfOpen { .. } => "half_open",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(threshold: u32, cooldown_ms: u64) -> SuperviseConfig {
+        SuperviseConfig {
+            breaker_threshold: threshold,
+            breaker_cooldown: Duration::from_millis(cooldown_ms),
+            ..SuperviseConfig::default()
+        }
+    }
+
+    #[test]
+    fn opens_after_threshold_consecutive_failures_only() {
+        let m = Arc::new(Metrics::default());
+        let b = CircuitBreaker::new(&cfg(3, 50), "m", Arc::clone(&m));
+        b.on_batch_result(false);
+        b.on_batch_result(false);
+        b.on_batch_result(true); // success resets the run
+        b.on_batch_result(false);
+        b.on_batch_result(false);
+        assert_eq!(b.state_str(), "closed");
+        assert!(b.check_reject().is_none());
+        b.on_batch_result(false); // third consecutive failure
+        assert_eq!(b.state_str(), "open");
+        let hint = b.check_reject().expect("open breaker rejects");
+        assert!(hint >= 1 && hint <= 50, "hint {hint} within cooldown");
+        let s = m.snapshot();
+        assert_eq!(s.breaker_opens, 1);
+        assert_eq!(s.breaker_rejected, 1);
+        assert_eq!(
+            s.breaker_states,
+            vec![("m".to_string(), "open".to_string())]
+        );
+    }
+
+    #[test]
+    fn half_open_admits_one_probe_then_closes_on_success() {
+        let m = Arc::new(Metrics::default());
+        let b = CircuitBreaker::new(&cfg(1, 20), "m", Arc::clone(&m));
+        b.on_batch_result(false);
+        assert_eq!(b.state_str(), "open");
+        std::thread::sleep(Duration::from_millis(25));
+        // cooldown elapsed: first admission is the probe...
+        assert!(b.check_reject().is_none());
+        assert_eq!(b.state_str(), "half_open");
+        // ...and the second is rejected while the probe is in flight
+        assert!(b.check_reject().is_some());
+        b.on_batch_result(true);
+        assert_eq!(b.state_str(), "closed");
+        assert!(b.check_reject().is_none());
+        assert_eq!(m.snapshot().breaker_opens, 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens_for_another_cooldown() {
+        let m = Arc::new(Metrics::default());
+        let b = CircuitBreaker::new(&cfg(1, 20), "m", Arc::clone(&m));
+        b.on_batch_result(false);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.check_reject().is_none(), "probe admitted");
+        b.on_batch_result(false);
+        assert_eq!(b.state_str(), "open");
+        assert!(b.check_reject().is_some(), "re-opened after failed probe");
+        assert_eq!(m.snapshot().breaker_opens, 2);
+    }
+
+    #[test]
+    fn results_while_open_are_ignored() {
+        let m = Arc::new(Metrics::default());
+        let b = CircuitBreaker::new(&cfg(2, 10_000), "m", Arc::clone(&m));
+        b.on_batch_result(false);
+        b.on_batch_result(false);
+        assert_eq!(b.state_str(), "open");
+        // a straggler batch admitted before the open completes fine —
+        // the breaker stays open for its cooldown regardless
+        b.on_batch_result(true);
+        assert_eq!(b.state_str(), "open");
+    }
+
+    #[test]
+    fn threshold_zero_disables_the_breaker() {
+        let m = Arc::new(Metrics::default());
+        let b = CircuitBreaker::new(&cfg(0, 10), "m", Arc::clone(&m));
+        for _ in 0..100 {
+            b.on_batch_result(false);
+            assert!(b.check_reject().is_none());
+        }
+        assert_eq!(b.state_str(), "closed");
+        assert!(m.snapshot().breaker_states.is_empty(), "disabled: no gauge");
+    }
+
+    #[test]
+    fn backoff_doubles_and_clamps() {
+        let c = SuperviseConfig {
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(100),
+            ..SuperviseConfig::default()
+        };
+        assert_eq!(c.backoff_for(1), Duration::from_millis(10));
+        assert_eq!(c.backoff_for(2), Duration::from_millis(20));
+        assert_eq!(c.backoff_for(3), Duration::from_millis(40));
+        assert_eq!(c.backoff_for(5), Duration::from_millis(100), "clamped");
+        assert_eq!(c.backoff_for(40), Duration::from_millis(100), "exp clamped");
+    }
+}

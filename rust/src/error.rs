@@ -28,6 +28,9 @@ pub enum Error {
 
     #[error("config error: {0}")]
     Config(String),
+
+    #[error("injected fault: {0}")]
+    Fault(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -50,5 +53,8 @@ impl Error {
     }
     pub fn coordinator(msg: impl Into<String>) -> Self {
         Error::Coordinator(msg.into())
+    }
+    pub fn fault(msg: impl Into<String>) -> Self {
+        Error::Fault(msg.into())
     }
 }

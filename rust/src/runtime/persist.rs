@@ -62,6 +62,7 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::graph::delta::GraphDelta;
+use crate::util::fault;
 use crate::util::json::parse;
 
 /// WAL record format version (the `ver` byte of every record).
@@ -674,6 +675,7 @@ impl Persistence {
     /// Append one delta record; returns the record's full byte length
     /// (length prefix included) so a failed commit can roll it back.
     pub fn append_delta(&mut self, delta: &GraphDelta) -> Result<u64> {
+        fault::point("persist.wal_append")?;
         let payload = delta.to_json().to_string().into_bytes();
         let len = payload.len() + WAL_HEADER;
         if len > MAX_WAL_RECORD {
@@ -721,6 +723,7 @@ impl Persistence {
     /// dir fsync → switch writer → delete the superseded generation; see
     /// the module docs for why every crash point recovers consistently.
     pub fn install_snapshot(&mut self, snap: &Snapshot) -> Result<()> {
+        fault::point("persist.snapshot")?;
         let next = self.generation + 1;
         let final_path = snapshot_path(&self.dir, next);
         let tmp_path = self.dir.join(format!("snapshot-{next}.a2qs.tmp"));

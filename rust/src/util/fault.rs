@@ -1,0 +1,418 @@
+//! Deterministic fault injection (`A2Q_FAULTS=<seed>:<spec>`).
+//!
+//! Named injection sites — `fault::point("persist.wal_append")` — are
+//! no-ops unless a schedule is armed, either programmatically
+//! ([`arm`]) or from the environment on first use.  A schedule is one
+//! replayable line, in the spirit of `A2Q_PROP_SEED`:
+//!
+//! ```text
+//! A2Q_FAULTS=<seed>:<site>=<action>@<prob>[;<site>=<action>@<prob>...]
+//! ```
+//!
+//! where `<action>` is `err` (the site returns [`Error::Fault`]),
+//! `panic` (the site panics with a message carrying the replay line),
+//! or `delay:<ms>` (the site sleeps, then succeeds), and `<prob>` is a
+//! probability in (0, 1].  Whether a given *hit* of a site fires is a
+//! pure function of `(seed, site, hit index)` — per-site hit counters
+//! make the decision sequence independent of how threads interleave
+//! *across* sites, so a chaos run is replayable from the one line even
+//! though the serving stack is concurrent.
+//!
+//! The site registry lives in the README's "Fault injection &
+//! supervision" section; a2q-lint rule R7 checks that every
+//! `fault::point("…")` call site in the tree uses a unique, registered
+//! name.  With `A2Q_FAULTS` unset every site costs one atomic load and
+//! nothing else.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Once, RwLock};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+const STATE_UNINIT: u8 = 0;
+const STATE_INERT: u8 = 1;
+const STATE_ARMED: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+static ENV_INIT: Once = Once::new();
+static SCHEDULE: RwLock<Option<Schedule>> = RwLock::new(None);
+
+/// One `site=action@prob` rule of an armed schedule.
+#[derive(Debug)]
+struct Rule {
+    site: String,
+    action: Action,
+    prob: f64,
+    /// Number of times this site has been hit since arming; the
+    /// pre-increment value indexes the deterministic fire decision.
+    hits: AtomicU64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Action {
+    Err,
+    Panic,
+    Delay(Duration),
+}
+
+#[derive(Debug)]
+struct Schedule {
+    seed: u64,
+    spec: String,
+    rules: Vec<Rule>,
+    /// Set when `A2Q_FAULTS` was present but malformed: every site then
+    /// returns this config error, so a typo surfaces loudly at the
+    /// first injection point instead of silently disarming the run.
+    broken: Option<String>,
+}
+
+fn schedule_read() -> std::sync::RwLockReadGuard<'static, Option<Schedule>> {
+    SCHEDULE.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn schedule_write() -> std::sync::RwLockWriteGuard<'static, Option<Schedule>> {
+    SCHEDULE.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Fault-injection site.  Returns `Ok(())` unless a schedule is armed
+/// and this hit of `site` fires an `err` action; a `panic` action
+/// panics (the message carries the replay line); `delay` sleeps first.
+#[inline]
+pub fn point(site: &str) -> Result<()> {
+    // fast path: one atomic load when nothing was ever armed
+    let state = STATE.load(Ordering::SeqCst);
+    if state == STATE_INERT {
+        return Ok(());
+    }
+    if state == STATE_UNINIT {
+        ENV_INIT.call_once(init_from_env);
+        if STATE.load(Ordering::SeqCst) != STATE_ARMED {
+            return Ok(());
+        }
+    }
+    fire(site)
+}
+
+/// Arm a schedule programmatically (tests, benches).  Replaces any
+/// previously armed schedule and resets all hit counters.
+pub fn arm(seed: u64, spec: &str) -> Result<()> {
+    // claim the env-init Once so a concurrent first `point` can never
+    // clobber an explicit arm with the environment's schedule
+    ENV_INIT.call_once(|| {});
+    let rules = parse_spec(spec)?;
+    *schedule_write() = Some(Schedule {
+        seed,
+        spec: spec.to_string(),
+        rules,
+        broken: None,
+    });
+    STATE.store(STATE_ARMED, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Disarm: every site becomes inert again.
+pub fn disarm() {
+    ENV_INIT.call_once(|| {});
+    *schedule_write() = None;
+    STATE.store(STATE_INERT, Ordering::SeqCst);
+}
+
+/// The replay line of the armed schedule (`A2Q_FAULTS=<seed>:<spec>`),
+/// or `None` when disarmed.  Chaos tests print this on entry so any
+/// failure is reproducible by exporting the one line.
+pub fn active() -> Option<String> {
+    if STATE.load(Ordering::SeqCst) != STATE_ARMED {
+        return None;
+    }
+    schedule_read()
+        .as_ref()
+        .map(|s| format!("A2Q_FAULTS={}:{}", s.seed, s.spec))
+}
+
+fn init_from_env() {
+    match std::env::var("A2Q_FAULTS") {
+        Ok(v) if !v.trim().is_empty() => match parse_env(v.trim()) {
+            Ok((seed, spec, rules)) => {
+                *schedule_write() = Some(Schedule {
+                    seed,
+                    spec,
+                    rules,
+                    broken: None,
+                });
+                STATE.store(STATE_ARMED, Ordering::SeqCst);
+            }
+            Err(e) => {
+                *schedule_write() = Some(Schedule {
+                    seed: 0,
+                    spec: v.trim().to_string(),
+                    rules: Vec::new(),
+                    broken: Some(format!("{e}")),
+                });
+                STATE.store(STATE_ARMED, Ordering::SeqCst);
+            }
+        },
+        _ => STATE.store(STATE_INERT, Ordering::SeqCst),
+    }
+}
+
+fn parse_env(value: &str) -> Result<(u64, String, Vec<Rule>)> {
+    let (seed_s, spec) = value.split_once(':').ok_or_else(|| {
+        Error::config(format!(
+            "A2Q_FAULTS must be '<seed>:<site>=<action>@<prob>[;...]', got '{value}'"
+        ))
+    })?;
+    let seed: u64 = seed_s.trim().parse().map_err(|_| {
+        Error::config(format!("A2Q_FAULTS seed '{seed_s}' is not a u64"))
+    })?;
+    let rules = parse_spec(spec)?;
+    Ok((seed, spec.to_string(), rules))
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<Rule>> {
+    let mut rules: Vec<Rule> = Vec::new();
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (site, rest) = part.split_once('=').ok_or_else(|| {
+            Error::config(format!("fault rule '{part}' missing '=' (want site=action@prob)"))
+        })?;
+        let site = site.trim();
+        validate_site(site)?;
+        let (action_s, prob_s) = rest.split_once('@').ok_or_else(|| {
+            Error::config(format!("fault rule '{part}' missing '@' (want site=action@prob)"))
+        })?;
+        let action = parse_action(action_s.trim())?;
+        let prob: f64 = prob_s.trim().parse().map_err(|_| {
+            Error::config(format!("fault probability '{prob_s}' is not a float"))
+        })?;
+        if !(prob > 0.0 && prob <= 1.0) {
+            return Err(Error::config(format!(
+                "fault probability {prob} out of (0, 1]"
+            )));
+        }
+        if rules.iter().any(|r| r.site == site) {
+            return Err(Error::config(format!("duplicate fault site '{site}' in spec")));
+        }
+        rules.push(Rule {
+            site: site.to_string(),
+            action,
+            prob,
+            hits: AtomicU64::new(0),
+        });
+    }
+    if rules.is_empty() {
+        return Err(Error::config("empty fault spec (no rules)"));
+    }
+    Ok(rules)
+}
+
+fn parse_action(s: &str) -> Result<Action> {
+    if s == "err" {
+        return Ok(Action::Err);
+    }
+    if s == "panic" {
+        return Ok(Action::Panic);
+    }
+    if let Some(ms) = s.strip_prefix("delay:") {
+        let ms: u64 = ms.trim().parse().map_err(|_| {
+            Error::config(format!("fault delay '{ms}' is not a millisecond count"))
+        })?;
+        return Ok(Action::Delay(Duration::from_millis(ms)));
+    }
+    Err(Error::config(format!(
+        "unknown fault action '{s}' (want err | panic | delay:<ms>)"
+    )))
+}
+
+/// Site names mirror the a2q-lint R7 registry grammar: two or more
+/// dot-separated lowercase segments, each `[a-z][a-z0-9_]*`.
+fn validate_site(site: &str) -> Result<()> {
+    let segs: Vec<&str> = site.split('.').collect();
+    let seg_ok = |s: &&str| {
+        let mut chars = s.chars();
+        matches!(chars.next(), Some('a'..='z'))
+            && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+    };
+    if segs.len() < 2 || !segs.iter().all(seg_ok) {
+        return Err(Error::config(format!(
+            "fault site '{site}' invalid (want dot-separated lowercase, e.g. persist.wal_append)"
+        )));
+    }
+    Ok(())
+}
+
+#[inline]
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn fire(site: &str) -> Result<()> {
+    let guard = schedule_read();
+    let sched = match guard.as_ref() {
+        Some(s) => s,
+        None => return Ok(()),
+    };
+    if let Some(msg) = &sched.broken {
+        return Err(Error::config(format!(
+            "A2Q_FAULTS is malformed: {msg} (value '{}')",
+            sched.spec
+        )));
+    }
+    let rule = match sched.rules.iter().find(|r| r.site == site) {
+        Some(r) => r,
+        None => return Ok(()),
+    };
+    let hit = rule.hits.fetch_add(1, Ordering::SeqCst);
+    // pure function of (seed, site, hit index): replayable regardless of
+    // thread interleaving across sites
+    let mix = sched.seed
+        ^ fnv1a(site).rotate_left(17)
+        ^ hit.wrapping_mul(0xa24baed4963ee407);
+    if Rng::new(mix).f64() >= rule.prob {
+        return Ok(());
+    }
+    let replay = format!("A2Q_FAULTS={}:{}", sched.seed, sched.spec);
+    match rule.action {
+        Action::Err => Err(Error::fault(format!(
+            "injected fault at '{site}' (hit {hit}; replay {replay})"
+        ))),
+        Action::Panic => {
+            drop(guard);
+            panic!("injected panic at '{site}' (hit {hit}; replay {replay})");
+        }
+        Action::Delay(d) => {
+            drop(guard);
+            std::thread::sleep(d);
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // Arming is process-global; serialize the tests that touch it.  The
+    // sites used here are `selftest.*` names that no production code
+    // path ever hits, so a concurrently running server test sees no
+    // injected faults even while one of these is armed.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn unarmed_sites_are_inert() {
+        let _g = locked();
+        disarm();
+        for _ in 0..100 {
+            assert!(point("selftest.alpha").is_ok());
+        }
+        assert!(active().is_none());
+    }
+
+    #[test]
+    fn err_action_fires_deterministically() {
+        let _g = locked();
+        let pattern = |seed: u64| -> Vec<bool> {
+            arm(seed, "selftest.alpha=err@0.5").unwrap();
+            let p = (0..64).map(|_| point("selftest.alpha").is_err()).collect();
+            disarm();
+            p
+        };
+        let a = pattern(42);
+        let b = pattern(42);
+        assert_eq!(a, b, "same seed must fire the same hit pattern");
+        assert!(a.iter().any(|&f| f), "p=0.5 over 64 hits should fire");
+        assert!(a.iter().any(|&f| !f), "p=0.5 over 64 hits should also pass");
+        let c = pattern(43);
+        assert_ne!(a, c, "different seed should differ somewhere");
+    }
+
+    #[test]
+    fn probability_one_always_fires_and_unlisted_sites_pass() {
+        let _g = locked();
+        arm(7, "selftest.alpha=err@1.0").unwrap();
+        for _ in 0..16 {
+            let e = point("selftest.alpha").unwrap_err();
+            let msg = format!("{e}");
+            assert!(msg.contains("selftest.alpha"), "{msg}");
+            assert!(msg.contains("A2Q_FAULTS=7:selftest.alpha=err@1.0"), "{msg}");
+            assert!(point("selftest.other_site").is_ok());
+        }
+        assert_eq!(
+            active().as_deref(),
+            Some("A2Q_FAULTS=7:selftest.alpha=err@1.0")
+        );
+        disarm();
+    }
+
+    #[test]
+    fn panic_action_panics_with_replay_line() {
+        let _g = locked();
+        arm(3, "selftest.boom=panic@1.0").unwrap();
+        let r = std::panic::catch_unwind(|| point("selftest.boom"));
+        disarm();
+        let payload = r.expect_err("panic action must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("selftest.boom"), "{msg}");
+        assert!(msg.contains("A2Q_FAULTS=3:"), "{msg}");
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_passes() {
+        let _g = locked();
+        arm(1, "selftest.slow=delay:20@1.0").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(point("selftest.slow").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        disarm();
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed() {
+        let _g = locked();
+        for bad in [
+            "",
+            "no_equals",
+            "site.a=err",          // missing @prob
+            "site.a=err@0.0",      // prob out of (0, 1]
+            "site.a=err@1.5",
+            "site.a=boom@0.5",     // unknown action
+            "site.a=delay:x@0.5",  // bad delay
+            "Site.A=err@0.5",      // uppercase site
+            "nodot=err@0.5",       // single segment
+            "site.a=err@0.5;site.a=err@0.5", // duplicate site
+        ] {
+            assert!(parse_spec(bad).is_err(), "'{bad}' should not parse");
+        }
+        let rules = parse_spec("a.b=err@0.25; c.d=panic@1.0 ;e.f=delay:5@0.5").unwrap();
+        assert_eq!(rules.len(), 3);
+        assert_eq!(rules[1].action, Action::Panic);
+        assert_eq!(rules[2].action, Action::Delay(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn env_form_parses_seed_prefix() {
+        let (seed, spec, rules) = parse_env("1337:a.b=err@0.5;c.d=delay:10@1.0").unwrap();
+        assert_eq!(seed, 1337);
+        assert_eq!(spec, "a.b=err@0.5;c.d=delay:10@1.0");
+        assert_eq!(rules.len(), 2);
+        assert!(parse_env("noseed").is_err());
+        assert!(parse_env("x:a.b=err@0.5").is_err());
+    }
+}

@@ -9,12 +9,14 @@
 //! * [`cli`]    — declarative argument parser for the `a2q` binary
 //! * [`rng`]    — SplitMix64 / xoshiro256++ PRNG (graph generators, benches)
 //! * [`bench`]  — criterion-style micro-benchmark harness with robust stats
+//! * [`fault`]  — seeded deterministic fault injection (`A2Q_FAULTS`)
 //! * [`prop`]   — mini property-testing framework (shrinking by halving)
 //! * [`stats`]  — mean/std/percentile helpers shared by bench + metrics
 //! * [`threadpool`] — fixed worker pool used by the coordinator
 
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod prop;
 pub mod rng;

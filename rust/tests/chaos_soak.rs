@@ -1,0 +1,518 @@
+//! Seeded-chaos soak: the PR 8–10 recovery claims as falsifiable
+//! properties under deterministic fault injection.
+//!
+//! Each test arms a pinned `util::fault` schedule against an in-process
+//! serving stack (synthetic native session, supervised runners, circuit
+//! breakers, TCP front end) and asserts the contracts that the fault-free
+//! suites can only claim:
+//!
+//! * **exactly-once accounting** — every offered request resolves to
+//!   exactly one outcome class (`ok`/`rejected`/`errors`/`io_errors`),
+//!   with retries counted separately;
+//! * **bounded restarts** — runner panics respawn within the configured
+//!   budget, and budget exhaustion degrades to explicit rejections;
+//! * **breaker lifecycle** — open → half-open probe → closed, surfaced
+//!   in metrics;
+//! * **bitwise parity** — the post-chaos resident state equals a
+//!   fault-free session fed exactly the acknowledged deltas.
+//!
+//! Fault arming is process-global, so every test serializes on one lock
+//! and disarms on drop (panic-safe).  On failure each assertion message
+//! carries the one-line `A2Q_FAULTS=<seed>:<spec>` replay string.
+//! Setting `A2Q_FAULTS` in the environment overrides the pinned soak
+//! schedules with yours.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use a2q::coordinator::net::{
+    run_load, LoadConfig, NetClient, NetConfig, NetServer, RetryPolicy, WireRequest,
+    WireResponse,
+};
+use a2q::coordinator::{
+    synthetic_node_session, BatchExecutor, BatcherConfig, Coordinator, NativeExecutor, Payload,
+    SuperviseConfig,
+};
+use a2q::graph::delta::GraphDelta;
+use a2q::util::fault;
+
+/// Synthetic session shape shared by the faulted server and the
+/// fault-free parity reference.
+const NODES: usize = 32;
+const SESSION_SEED: u64 = 7;
+
+/// Serializes fault arming across tests (the schedule is process-global).
+static ARM_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the arm lock and guarantees `fault::disarm()` on drop, so a
+/// failing test cannot leak its schedule into the next one.
+struct Armed {
+    _guard: MutexGuard<'static, ()>,
+    replay: String,
+}
+
+impl Armed {
+    fn new(seed: u64, spec: &str) -> Armed {
+        let guard = ARM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        fault::arm(seed, spec).expect("arm fault schedule");
+        Armed {
+            _guard: guard,
+            replay: format!("A2Q_FAULTS={seed}:{spec}"),
+        }
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn batcher() -> BatcherConfig {
+    BatcherConfig {
+        node_budget: 4096,
+        graph_slots: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 64,
+        adaptive_wait: None,
+    }
+}
+
+/// Coordinator over a deterministic native session; returns the model
+/// name the session registers under.
+fn synthetic_coordinator(sup: SuperviseConfig) -> (Coordinator, String) {
+    let (model, ds) = synthetic_node_session(NODES, SESSION_SEED).expect("synthetic session");
+    let name = model.name.clone();
+    let exec = NativeExecutor::new(model, Some(&ds)).expect("native executor");
+    let mut coord = Coordinator::new();
+    coord.set_supervision(sup);
+    coord.add_model(&name, Arc::new(exec), batcher());
+    (coord, name)
+}
+
+/// Deterministic edge-only delta `i` (node count stays fixed so parity
+/// classifies the same id range; duplicate adds merge idempotently).
+fn edge_delta(i: u32) -> GraphDelta {
+    let n = NODES as u32;
+    let src = (i * 3 + 1) % n;
+    let dst = (src + 7) % n;
+    GraphDelta {
+        add_edges: vec![(src, dst), (dst, src)],
+        ..Default::default()
+    }
+}
+
+/// Classify every node over the wire; logits as bit patterns for exact
+/// comparison.  Retries through a breaker that is still cooling down
+/// from the chaos phase (the successful probe closes it).
+fn classify_bits_net(client: &mut NetClient, model: &str) -> Vec<Vec<u32>> {
+    let req = WireRequest::Classify {
+        model: model.to_string(),
+        nodes: (0..NODES as u32).collect(),
+    };
+    let policy = RetryPolicy {
+        max_retries: 20,
+        base_backoff: Duration::from_millis(5),
+        deadline: Some(Duration::from_secs(10)),
+        ..RetryPolicy::default()
+    };
+    match client
+        .request_with_retry(&req, &policy)
+        .expect("post-chaos classify")
+    {
+        WireResponse::Ok { predictions, .. } => predictions
+            .iter()
+            .map(|p| p.output.iter().map(|v| v.to_bits()).collect())
+            .collect(),
+        other => panic!("post-chaos classify failed: {other:?}"),
+    }
+}
+
+/// The soak schedules: two pinned seeds, or the operator's
+/// `A2Q_FAULTS=<seed>:<spec>` override for replaying a failure.
+fn soak_schedules() -> Vec<(u64, String)> {
+    const SPEC: &str = "executor.update=err@0.25;executor.classify=err@0.2;runner.poll=panic@0.003";
+    if let Ok(raw) = std::env::var("A2Q_FAULTS") {
+        if let Some((seed, spec)) = raw.split_once(':') {
+            if let Ok(seed) = seed.trim().parse::<u64>() {
+                eprintln!("chaos_soak: using operator schedule from A2Q_FAULTS");
+                return vec![(seed, spec.to_string())];
+            }
+        }
+    }
+    vec![(42, SPEC.to_string()), (1337, SPEC.to_string())]
+}
+
+/// The tentpole property: under seeded executor faults + runner panics,
+/// a mixed read/write load loses nothing — every request is accounted
+/// for exactly once, restarts stay within budget, and the surviving
+/// resident state is bitwise-identical to a fault-free session fed the
+/// acknowledged deltas in order.
+#[test]
+fn seeded_soak_exactly_once_and_bitwise_parity() {
+    for (seed, spec) in soak_schedules() {
+        let armed = Armed::new(seed, &spec);
+        let replay = armed.replay.clone();
+        eprintln!("chaos_soak: soaking under {replay}");
+
+        let sup = SuperviseConfig {
+            restart_budget: 100,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(20),
+            breaker_threshold: 4,
+            breaker_cooldown: Duration::from_millis(40),
+        };
+        let (coord, model) = synthetic_coordinator(sup);
+        let srv = NetServer::start(coord, NetConfig::default()).expect("start server");
+        let addr = format!("{}", srv.local_addr());
+
+        // mixed clients: retrying readers race the sequential updater
+        let load = {
+            let addr = addr.clone();
+            let model = model.clone();
+            std::thread::spawn(move || {
+                run_load(
+                    &addr,
+                    &LoadConfig {
+                        conns: 4,
+                        requests_per_conn: 50,
+                        model,
+                        nodes_per_req: 2,
+                        node_space: NODES as u32,
+                        pace: Duration::ZERO,
+                        retry: RetryPolicy {
+                            max_retries: 6,
+                            base_backoff: Duration::from_millis(5),
+                            deadline: Some(Duration::from_secs(5)),
+                            ..RetryPolicy::default()
+                        },
+                    },
+                )
+            })
+        };
+
+        // single sequential updater.  The update path is atomic
+        // (validate + staged apply before commit) and injected update
+        // faults fire *before* the mutation, so an `Ok` reply means
+        // applied and an `Error`/`Rejected` reply means not applied —
+        // the acked list below is the exact mutation history.
+        let mut client = NetClient::connect(&addr).expect("updater connect");
+        let mut acked: Vec<GraphDelta> = Vec::new();
+        for i in 0..16u32 {
+            let delta = edge_delta(i);
+            match client.request(&WireRequest::Update {
+                model: model.clone(),
+                delta: delta.clone(),
+            }) {
+                Ok(WireResponse::Ok { .. }) => acked.push(delta),
+                Ok(WireResponse::Error { .. }) | Ok(WireResponse::Rejected { .. }) => {}
+                Ok(other) => panic!("unexpected update reply {other:?}; replay {replay}"),
+                Err(e) => panic!("updater transport failed: {e}; replay {replay}"),
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        let report = load
+            .join()
+            .expect("load thread")
+            .unwrap_or_else(|e| panic!("load run failed: {e}; replay {replay}"));
+
+        // exactly-once accounting: every offered request resolved to one
+        // outcome class; no transport drops (faults surface on-protocol)
+        assert_eq!(
+            report.ok + report.rejected + report.errors + report.io_errors,
+            report.sent,
+            "lost replies under chaos: {report:?}; replay {replay}"
+        );
+        assert_eq!(
+            report.io_errors, 0,
+            "dropped connections under chaos: {report:?}; replay {replay}"
+        );
+        assert!(
+            report.ok > 0,
+            "nothing succeeded under chaos: {report:?}; replay {replay}"
+        );
+
+        // bounded restarts, visible in the metrics surface
+        let metrics = srv.metrics_json();
+        let restarts = metrics.req_f64("runner_restarts").expect("runner_restarts");
+        assert!(
+            restarts <= 100.0,
+            "restart budget exceeded: {restarts}; replay {replay}"
+        );
+
+        // quiesce the faults, then read the surviving resident state
+        drop(armed);
+        let bits_chaos = classify_bits_net(&mut client, &model);
+        let drained = srv.drain();
+        assert_eq!(
+            drained.unreplied_in_flight, 0,
+            "drain lost admitted replies; replay {replay}"
+        );
+
+        // fault-free reference: a fresh session fed exactly the acked
+        // deltas must reproduce the chaos survivor bit-for-bit
+        let (reference, ref_model) = synthetic_coordinator(SuperviseConfig::default());
+        for delta in &acked {
+            reference
+                .submit_blocking(&ref_model, Payload::UpdateGraph(delta.clone()))
+                .unwrap_or_else(|e| panic!("reference replay failed: {e}; replay {replay}"));
+        }
+        let resp = reference
+            .submit_blocking(&ref_model, Payload::ClassifyNodes((0..NODES as u32).collect()))
+            .expect("reference classify");
+        let bits_ref: Vec<Vec<u32>> = resp
+            .predictions
+            .iter()
+            .map(|p| p.output.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        assert_eq!(
+            bits_chaos, bits_ref,
+            "post-chaos logits diverge from the acked-delta replay \
+             ({} acked delta(s)); replay {replay}",
+            acked.len()
+        );
+        reference.shutdown();
+        eprintln!(
+            "chaos_soak: seed {seed} ok — {} ok / {} rejected / {} errors / {} retries, \
+             {restarts} restart(s), {} acked delta(s)",
+            report.ok, report.rejected, report.errors, report.retries, acked.len()
+        );
+    }
+}
+
+/// Reply-write faults: the connection drops mid-reply, and retrying
+/// clients reconnect and resend until the answer lands.  Idempotent
+/// reads only — a lost reply is indistinguishable from a lost request.
+#[test]
+fn write_faults_recovered_by_reconnecting_retries() {
+    let armed = Armed::new(9001, "net.write_frame=err@0.3");
+    let replay = armed.replay.clone();
+    let (coord, model) = synthetic_coordinator(SuperviseConfig::default());
+    let srv = NetServer::start(coord, NetConfig::default()).expect("start server");
+    let report = run_load(
+        &format!("{}", srv.local_addr()),
+        &LoadConfig {
+            conns: 2,
+            requests_per_conn: 25,
+            model,
+            nodes_per_req: 2,
+            node_space: NODES as u32,
+            pace: Duration::ZERO,
+            retry: RetryPolicy {
+                max_retries: 8,
+                base_backoff: Duration::from_millis(2),
+                deadline: Some(Duration::from_secs(5)),
+                ..RetryPolicy::default()
+            },
+        },
+    )
+    .expect("load run");
+    assert_eq!(
+        report.ok + report.rejected + report.errors + report.io_errors,
+        report.sent,
+        "{report:?}; replay {replay}"
+    );
+    assert!(
+        report.ok > 0,
+        "no request survived write faults: {report:?}; replay {replay}"
+    );
+    assert!(
+        report.retries > 0,
+        "write faults at 0.3 must force retries: {report:?}; replay {replay}"
+    );
+    drop(armed);
+    srv.drain();
+}
+
+/// Runner panics respawn within the budget; once the schedule is
+/// disarmed the respawned runner serves again.
+#[test]
+fn runner_respawns_within_budget_and_recovers() {
+    let armed = Armed::new(3, "runner.poll=panic@1.0");
+    let replay = armed.replay.clone();
+    let sup = SuperviseConfig {
+        restart_budget: 50,
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(20),
+        ..SuperviseConfig::default()
+    };
+    let (coord, model) = synthetic_coordinator(sup);
+    // wait until the supervisor has respawned at least twice
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let restarts = coord.metrics().runner_restarts;
+        if restarts >= 2 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "no respawns after 10s (restarts={restarts}); replay {replay}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(armed); // disarm: the next respawn iteration runs clean
+    let resp = coord
+        .submit_blocking(&model, Payload::ClassifyNodes(vec![0, 1]))
+        .unwrap_or_else(|e| panic!("respawned runner must serve: {e}; replay {replay}"));
+    assert_eq!(resp.predictions.len(), 2);
+    let restarts = coord.metrics().runner_restarts;
+    assert!(
+        (2..=50).contains(&restarts),
+        "restarts out of bounds: {restarts}; replay {replay}"
+    );
+    coord.shutdown();
+}
+
+/// Budget exhaustion is a terminal, explicit state: the runner stops
+/// respawning and later submits are rejected as stopped — never a hang.
+#[test]
+fn restart_budget_exhaustion_degrades_to_rejections() {
+    let armed = Armed::new(4, "runner.poll=panic@1.0");
+    let replay = armed.replay.clone();
+    let sup = SuperviseConfig {
+        restart_budget: 2,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+        ..SuperviseConfig::default()
+    };
+    let (coord, model) = synthetic_coordinator(sup);
+    // the runner burns its 2 respawns, then gives up and drops its queue
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match coord.submit_blocking(&model, Payload::ClassifyNodes(vec![0])) {
+            Err(e) => {
+                let msg = format!("{e}");
+                if msg.contains("stopped") {
+                    break;
+                }
+            }
+            Ok(_) => {}
+        }
+        assert!(
+            Instant::now() < deadline,
+            "exhausted runner never became a stopped rejection; replay {replay}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        coord.metrics().runner_restarts,
+        2,
+        "exactly the budgeted respawns must have happened; replay {replay}"
+    );
+    drop(armed);
+    coord.shutdown();
+}
+
+/// Breaker lifecycle under total executor failure: consecutive failed
+/// batches open it, open rejects fast with a retry hint, and after the
+/// cooldown a successful half-open probe closes it again.
+#[test]
+fn breaker_opens_then_probe_closes_after_faults_clear() {
+    let armed = Armed::new(5, "executor.classify=err@1.0");
+    let replay = armed.replay.clone();
+    let sup = SuperviseConfig {
+        breaker_threshold: 2,
+        breaker_cooldown: Duration::from_millis(100),
+        ..SuperviseConfig::default()
+    };
+    let (coord, model) = synthetic_coordinator(sup);
+    // every batch fails: two serial submits trip the threshold
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while coord.breaker_state(&model) != Some("open") {
+        let _ = coord.submit_blocking(&model, Payload::ClassifyNodes(vec![0]));
+        assert!(
+            Instant::now() < deadline,
+            "breaker never opened under total failure; replay {replay}"
+        );
+    }
+    // open = fast rejection carrying the breaker reason
+    let err = coord
+        .submit_blocking(&model, Payload::ClassifyNodes(vec![0]))
+        .expect_err("open breaker must reject");
+    assert!(
+        format!("{err}").contains("circuit breaker open"),
+        "got '{err}'; replay {replay}"
+    );
+    assert!(coord.metrics().breaker_opens >= 1);
+
+    // faults clear; past the cooldown one probe closes the breaker
+    drop(armed);
+    std::thread::sleep(Duration::from_millis(150));
+    let resp = coord
+        .submit_blocking(&model, Payload::ClassifyNodes(vec![0, 1]))
+        .unwrap_or_else(|e| panic!("half-open probe must pass: {e}; replay {replay}"));
+    assert_eq!(resp.predictions.len(), 2);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while coord.breaker_state(&model) != Some("closed") {
+        assert!(
+            Instant::now() < deadline,
+            "breaker never closed after successful probe; replay {replay}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    coord.shutdown();
+}
+
+/// WAL-append faults reject the delta before commit: the resident state
+/// and the logits are untouched, and the same delta applies cleanly once
+/// the schedule is disarmed.
+#[test]
+fn wal_append_fault_rejects_delta_without_corruption() {
+    let armed = Armed::new(6, "persist.wal_append=err@1.0");
+    let replay = armed.replay.clone();
+    let dir = std::env::temp_dir().join(format!("a2q_chaos_wal_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let (model, ds) = synthetic_node_session(NODES, SESSION_SEED).expect("synthetic session");
+    let exec = NativeExecutor::new(model, Some(&ds)).expect("native executor");
+    let cfg = a2q::runtime::PersistConfig::new(&dir);
+    let (exec, _report) = exec.with_persistence(cfg).expect("attach persistence");
+
+    let before = exec.run_node_batch(&[0, 1, 2]).expect("pre-fault classify");
+    let err = exec
+        .apply_delta(&edge_delta(0))
+        .expect_err("armed wal_append must reject the delta");
+    assert!(
+        format!("{err}").contains("injected fault"),
+        "got '{err}'; replay {replay}"
+    );
+    let after = exec.run_node_batch(&[0, 1, 2]).expect("post-fault classify");
+    let bits = |rows: &[Vec<f32>]| -> Vec<Vec<u32>> {
+        rows.iter()
+            .map(|r| r.iter().map(|v| v.to_bits()).collect())
+            .collect()
+    };
+    assert_eq!(
+        bits(&before),
+        bits(&after),
+        "rejected delta mutated resident state; replay {replay}"
+    );
+
+    drop(armed);
+    exec.apply_delta(&edge_delta(0))
+        .unwrap_or_else(|e| panic!("disarmed delta must apply: {e}; replay {replay}"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// With no schedule armed and no `A2Q_FAULTS`, every site is inert: the
+/// full serve path behaves exactly as the fault-free suites assert.
+#[test]
+fn sites_inert_when_nothing_armed() {
+    if std::env::var("A2Q_FAULTS").is_ok() {
+        eprintln!("chaos_soak: skipping inertness check (A2Q_FAULTS is set)");
+        return;
+    }
+    let _guard = ARM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::disarm();
+    assert!(fault::active().is_none());
+    let (coord, model) = synthetic_coordinator(SuperviseConfig::default());
+    let srv = NetServer::start(coord, NetConfig::default()).expect("start server");
+    let mut client = NetClient::connect(format!("{}", srv.local_addr())).expect("connect");
+    match client.classify(&model, vec![0, 1, 2]).expect("classify") {
+        WireResponse::Ok { predictions, .. } => assert_eq!(predictions.len(), 3),
+        other => panic!("inert server must serve: {other:?}"),
+    }
+    let report = srv.drain();
+    assert_eq!(report.unreplied_in_flight, 0);
+}

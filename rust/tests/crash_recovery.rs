@@ -161,6 +161,7 @@ fn kill_nine_mid_load_then_restart_serves_identical_logits() {
                 nodes_per_req: 2,
                 node_space: nodes,
                 pace: Duration::ZERO,
+                ..LoadConfig::default()
             },
         )
     });
@@ -192,6 +193,7 @@ fn kill_nine_mid_load_then_restart_serves_identical_logits() {
             nodes_per_req: 2,
             node_space: nodes,
             pace: Duration::ZERO,
+            ..LoadConfig::default()
         },
     )
     .expect("post-restore load");

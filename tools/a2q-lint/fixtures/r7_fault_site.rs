@@ -1,0 +1,40 @@
+//! R7 fixture: `fault::point` site names must appear in the README
+//! fault-site table and be unique — expected findings: one unregistered
+//! site, one duplicate use of a registered site.
+
+mod fault {
+    pub fn point(_site: &str) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Registered in `README_knobs.md` and used once here: clean.
+pub fn registered_site() -> Result<(), String> {
+    fault::point("fixture.registered")
+}
+
+/// Missing from the fixture fault-site table: R7.
+pub fn unregistered_site() -> Result<(), String> {
+    fault::point("fixture.unregistered")
+}
+
+/// Second use of `fixture.registered`: R7 (an `A2Q_FAULTS` schedule
+/// could no longer target one site unambiguously).
+pub fn duplicate_site() -> Result<(), String> {
+    fault::point("fixture.registered")
+}
+
+/// The escape hatch suppresses the finding when it carries a reason.
+pub fn allowed_site() -> Result<(), String> {
+    // a2q-lint: allow(fault-registry) fixture demonstrating the escape hatch
+    fault::point("fixture.not_in_table")
+}
+
+#[cfg(test)]
+mod tests {
+    /// Test-only sites are exempt: tests arm throwaway names.
+    #[test]
+    fn test_lines_are_exempt() {
+        super::fault::point("selftest.throwaway").unwrap();
+    }
+}

@@ -5,26 +5,29 @@
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
-use crate::rules::{check_file, readme_knobs, Finding};
+use crate::rules::{
+    check_file, cross_file_fault_duplicates, fault_points, readme_fault_sites, readme_knobs,
+    Finding,
+};
 
 fn fixture_path(rel: &str) -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(rel)
 }
 
-fn knobs_from(readme: &Path) -> BTreeSet<String> {
+fn registries_from(readme: &Path) -> (BTreeSet<String>, BTreeSet<String>) {
     let text = std::fs::read_to_string(readme)
         .unwrap_or_else(|e| panic!("read {}: {e}", readme.display()));
-    readme_knobs(&text)
+    (readme_knobs(&text), readme_fault_sites(&text))
 }
 
-/// Lint one fixture against the fixture knob registry.
+/// Lint one fixture against the fixture knob/fault-site registries.
 fn run_fixture(rel: &str) -> Vec<Finding> {
     let path = fixture_path(rel);
     let src = std::fs::read_to_string(&path)
         .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
-    let knobs = knobs_from(&fixture_path("README_knobs.md"));
+    let (knobs, sites) = registries_from(&fixture_path("README_knobs.md"));
     let display = path.to_string_lossy().replace('\\', "/");
-    check_file(&display, &src, &knobs)
+    check_file(&display, &src, &knobs, &sites)
 }
 
 fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
@@ -88,6 +91,36 @@ fn r6_fixture_trips_unregistered_knob_only() {
 }
 
 #[test]
+fn r7_fixture_trips_unregistered_and_duplicate_sites() {
+    let f = run_fixture("r7_fault_site.rs");
+    assert_eq!(rules_of(&f), ["R7", "R7"], "findings: {f:?}");
+    assert!(
+        f[0].message.contains("not registered"),
+        "message: {}",
+        f[0].message
+    );
+    assert!(
+        f[1].message.contains("already used"),
+        "message: {}",
+        f[1].message
+    );
+}
+
+#[test]
+fn r7_cross_file_duplicates_flag_second_file_only() {
+    let src_a = "pub fn a() { fault::point(\"fixture.registered\").unwrap(); }\n";
+    let src_b = "pub fn b() { fault::point(\"fixture.registered\").unwrap(); }\n";
+    let per_file = vec![
+        ("a.rs".to_string(), fault_points(src_a)),
+        ("b.rs".to_string(), fault_points(src_b)),
+    ];
+    let f = cross_file_fault_duplicates(&per_file);
+    assert_eq!(rules_of(&f), ["R7"], "findings: {f:?}");
+    assert_eq!(f[0].path, "b.rs");
+    assert!(f[0].message.contains("a.rs"), "message: {}", f[0].message);
+}
+
+#[test]
 fn r0_fixture_trips_allow_marker_without_reason() {
     let f = run_fixture("r0_bad_allow.rs");
     assert_eq!(rules_of(&f), ["R0"], "findings: {f:?}");
@@ -101,22 +134,26 @@ fn clean_fixture_passes() {
 }
 
 /// Acceptance criterion: the real tree is lint-clean against the real
-/// README knob table (all allows carrying written reasons).
+/// README knob and fault-site tables (all allows carrying written
+/// reasons, every fault site registered and globally unique).
 #[test]
 fn real_tree_is_lint_clean() {
     let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
-    let knobs = knobs_from(&repo.join("README.md"));
+    let (knobs, sites) = registries_from(&repo.join("README.md"));
     let mut files = Vec::new();
     for root in ["rust/src", "rust/tests"] {
         collect(&repo.join(root), &mut files);
     }
     assert!(!files.is_empty(), "no sources found under {}", repo.display());
     let mut findings = Vec::new();
+    let mut per_file_points = Vec::new();
     for f in &files {
         let src = std::fs::read_to_string(f).unwrap_or_else(|e| panic!("read {f:?}: {e}"));
         let display = f.to_string_lossy().replace('\\', "/");
-        findings.extend(check_file(&display, &src, &knobs));
+        findings.extend(check_file(&display, &src, &knobs, &sites));
+        per_file_points.push((display, fault_points(&src)));
     }
+    findings.extend(cross_file_fault_duplicates(&per_file_points));
     let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
     assert!(
         findings.is_empty(),

@@ -18,7 +18,10 @@ mod rules;
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
-use rules::{check_file, readme_knobs, Finding};
+use rules::{
+    check_file, cross_file_fault_duplicates, fault_points, readme_fault_sites, readme_knobs,
+    Finding,
+};
 
 struct Opts {
     readme: PathBuf,
@@ -83,23 +86,28 @@ fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Lint every `.rs` file under `roots` against the `readme` knob registry.
-/// Returns `(findings, files_scanned)`.
+/// Lint every `.rs` file under `roots` against the `readme` knob and
+/// fault-site registries.  Returns `(findings, files_scanned)`.
 fn lint(roots: &[PathBuf], readme: &Path) -> Result<(Vec<Finding>, usize), String> {
     let readme_text = std::fs::read_to_string(readme)
         .map_err(|e| format!("cannot read knob registry {}: {e}", readme.display()))?;
     let knobs: BTreeSet<String> = readme_knobs(&readme_text);
+    let sites: BTreeSet<String> = readme_fault_sites(&readme_text);
     let mut files = Vec::new();
     for root in roots {
         collect_rs(root, &mut files).map_err(|e| format!("walking {}: {e}", root.display()))?;
     }
     let mut findings = Vec::new();
+    let mut per_file_points = Vec::new();
     for f in &files {
         let src = std::fs::read_to_string(f)
             .map_err(|e| format!("cannot read {}: {e}", f.display()))?;
         let display = f.to_string_lossy().replace('\\', "/");
-        findings.extend(check_file(&display, &src, &knobs));
+        findings.extend(check_file(&display, &src, &knobs, &sites));
+        per_file_points.push((display, fault_points(&src)));
     }
+    // R7 cross-file pass: a site name reused in a different file
+    findings.extend(cross_file_fault_duplicates(&per_file_points));
     Ok((findings, files.len()))
 }
 

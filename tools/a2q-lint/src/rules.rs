@@ -1,4 +1,4 @@
-//! The six repo-specific rules (plus R0, marker hygiene).  Each rule is a
+//! The seven repo-specific rules (plus R0, marker hygiene).  Each rule is a
 //! pass over the scrubbed token stream from [`crate::lexer`]:
 //!
 //! * **R1 `undocumented-unsafe`** — every `unsafe` block/fn/impl carries a
@@ -20,6 +20,10 @@
 //!   Acquire/Release is the floor).
 //! * **R6 `env-registry`** — every `A2Q_*` env var read via `env::var`
 //!   must appear in the README knob table.
+//! * **R7 `fault-registry`** — every `fault::point("<site>")` name must
+//!   appear in the README fault-site table, and site names must be
+//!   unique across the tree (a duplicated name makes `A2Q_FAULTS`
+//!   schedules ambiguous).
 //!
 //! Escape hatch: `// a2q-lint: allow(<rule>[, <rule>…]) <reason>` on the
 //! offending line (or alone on the line above) suppresses a finding; a
@@ -37,6 +41,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("R4", "panic-path"),
     ("R5", "relaxed-ordering"),
     ("R6", "env-registry"),
+    ("R7", "fault-registry"),
 ];
 
 #[derive(Debug)]
@@ -438,6 +443,146 @@ fn r6_env_registry(
     }
 }
 
+/// Whether a string is a valid fault-site name: two or more
+/// dot-separated `[a-z][a-z0-9_]*` segments (the same grammar
+/// `util::fault::validate_site` enforces at runtime).
+fn site_name(v: &str) -> bool {
+    let segs: Vec<&str> = v.split('.').collect();
+    segs.len() >= 2
+        && segs.iter().all(|seg| {
+            let mut ch = seg.chars();
+            matches!(ch.next(), Some(c) if c.is_ascii_lowercase())
+                && ch.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        })
+}
+
+/// `fault::point("<site>")` call sites in a file, as `(line, site)`,
+/// excluding test-only lines (tests use throwaway `selftest.*` names).
+pub fn fault_points(src: &str) -> Vec<(usize, String)> {
+    let s = scrub(src);
+    let toks = tokenize(&s.code);
+    let mut out = Vec::new();
+    for idx in 0..toks.len() {
+        if toks[idx].word() != Some("fault") {
+            continue;
+        }
+        let call = toks.get(idx + 1).and_then(|t| t.sym()) == Some(':')
+            && toks.get(idx + 2).and_then(|t| t.sym()) == Some(':')
+            && toks.get(idx + 3).and_then(|t| t.word()) == Some("point")
+            && toks.get(idx + 4).and_then(|t| t.sym()) == Some('(');
+        if !call {
+            continue;
+        }
+        let line = toks[idx + 3].line;
+        if s.is_test_line(line) {
+            continue;
+        }
+        // the site literal: first string on this line or the next two
+        // (rustfmt may wrap the call)
+        if let Some((l, v)) = s
+            .strings
+            .iter()
+            .find(|(l, _)| *l >= line && *l <= line + 2)
+        {
+            out.push((*l, v.clone()));
+        }
+    }
+    out
+}
+
+fn r7_fault_registry(
+    path: &str,
+    src: &str,
+    sites: &BTreeSet<String>,
+    allows: &Allows,
+    findings: &mut Vec<Finding>,
+) {
+    let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+    for (line, name) in fault_points(src) {
+        if allows.permits(line, "fault-registry") {
+            continue;
+        }
+        if !sites.contains(&name) {
+            findings.push(Finding {
+                rule: "R7",
+                slug: "fault-registry",
+                path: path.to_string(),
+                line,
+                message: format!(
+                    "fault site `{name}` is not registered in the README fault-site table"
+                ),
+            });
+        }
+        if let Some(first) = seen.get(&name) {
+            findings.push(Finding {
+                rule: "R7",
+                slug: "fault-registry",
+                path: path.to_string(),
+                line,
+                message: format!(
+                    "fault site `{name}` already used at line {first}; site names must be \
+                     unique so `A2Q_FAULTS` schedules are unambiguous"
+                ),
+            });
+        } else {
+            seen.insert(name, line);
+        }
+    }
+}
+
+/// Cross-file uniqueness (within-file duplicates are caught by
+/// [`check_file`]): a site name used in two different files is a finding
+/// against every file after the first, in scan order.
+pub fn cross_file_fault_duplicates(per_file: &[(String, Vec<(usize, String)>)]) -> Vec<Finding> {
+    let mut first_use: BTreeMap<String, String> = BTreeMap::new();
+    let mut findings = Vec::new();
+    for (path, points) in per_file {
+        for (line, name) in points {
+            match first_use.get(name) {
+                None => {
+                    first_use.insert(name.clone(), path.clone());
+                }
+                Some(origin) if origin != path => findings.push(Finding {
+                    rule: "R7",
+                    slug: "fault-registry",
+                    path: path.clone(),
+                    line: *line,
+                    message: format!(
+                        "fault site `{name}` already used in {origin}; site names must be \
+                         unique so `A2Q_FAULTS` schedules are unambiguous"
+                    ),
+                }),
+                Some(_) => {} // same-file duplicate: check_file reported it
+            }
+        }
+    }
+    findings
+}
+
+/// Parse the registered fault-site names out of the README's markdown
+/// table rows: backticked dotted-lowercase tokens in lines starting
+/// with `|` (mirrors [`readme_knobs`]).
+pub fn readme_fault_sites(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in text.lines() {
+        let t = line.trim_start();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let mut rest = t;
+        while let Some(p) = rest.find('`') {
+            let tail = &rest[p + 1..];
+            let Some(q) = tail.find('`') else { break };
+            let tok = &tail[..q];
+            if site_name(tok) {
+                out.insert(tok.to_string());
+            }
+            rest = &tail[q + 1..];
+        }
+    }
+    out
+}
+
 /// Parse the registered knob names out of the README's markdown table rows
 /// (lines starting with `|` that mention an `A2Q_*` name).
 pub fn readme_knobs(text: &str) -> BTreeSet<String> {
@@ -460,8 +605,14 @@ pub fn readme_knobs(text: &str) -> BTreeSet<String> {
     out
 }
 
-/// Run every rule over one file.  `knobs` is the README registry (R6).
-pub fn check_file(path: &str, src: &str, knobs: &BTreeSet<String>) -> Vec<Finding> {
+/// Run every rule over one file.  `knobs` is the README knob registry
+/// (R6); `sites` the README fault-site registry (R7).
+pub fn check_file(
+    path: &str,
+    src: &str,
+    knobs: &BTreeSet<String>,
+    sites: &BTreeSet<String>,
+) -> Vec<Finding> {
     let s = scrub(src);
     let toks = tokenize(&s.code);
     let mut findings = Vec::new();
@@ -476,6 +627,7 @@ pub fn check_file(path: &str, src: &str, knobs: &BTreeSet<String>) -> Vec<Findin
     }
     r5_relaxed_ordering(path, &toks, &allows, &mut findings);
     r6_env_registry(path, &s, &toks, knobs, &allows, &mut findings);
+    r7_fault_registry(path, src, sites, &allows, &mut findings);
     findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     findings
 }
